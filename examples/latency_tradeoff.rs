@@ -1,0 +1,98 @@
+//! The Sec. 6 latency/throughput trade-off framework, end to end:
+//! build the l_inst lookup table from the timing model, serve requests
+//! with per-burst throughput requirements through the streaming server,
+//! and show the latency the LUT buys at each target (Figs. 11/12).
+//!
+//! ```sh
+//! cargo run --release --example latency_tradeoff
+//! ```
+
+use equalizer::coordinator::instance::{DecimatorInstance, EqualizerInstance, PjrtInstance};
+use equalizer::coordinator::seqlen::SeqLenOptimizer;
+use equalizer::coordinator::server::EqualizerServer;
+use equalizer::coordinator::sim::simulate;
+use equalizer::equalizer::weights::CnnTopologyCfg;
+use equalizer::prelude::*;
+use equalizer::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = CnnTopologyCfg::SELECTED;
+
+    // ---- the LUT the paper deploys on the FPGA (Fig. 11) -------------
+    let model = TimingModel::new(64, cfg.vp, cfg.layers, cfg.kernel, 200e6);
+    let opt = SeqLenOptimizer::new(model);
+    println!("== l_inst optimization, N_i=64 @ 200 MHz (T_max {:.1} Gsa/s) ==\n", model.t_max() / 1e9);
+    println!("{:>12} {:>10} {:>12} {:>14}", "T_req Gsa/s", "l_inst", "lambda us", "T_net Gsa/s");
+    let targets: Vec<f64> = [10.0, 20.0, 40.0, 60.0, 80.0, 90.0, 100.0]
+        .iter()
+        .map(|g| g * 1e9)
+        .collect();
+    for row in opt.build_lut(&targets) {
+        println!(
+            "{:>12.0} {:>10} {:>12.2} {:>14.2}",
+            row.t_req / 1e9,
+            row.l_inst,
+            row.lambda_s * 1e6,
+            row.t_net / 1e9
+        );
+    }
+    println!("\npaper anchor: T_req=80 Gsa/s -> l_inst 7320, lambda 17.5 us");
+
+    // ---- validate the model against the cycle-approximate sim --------
+    println!("\n== timing model vs cycle simulation (Fig. 12 excerpt) ==");
+    println!("{:>6} {:>8} {:>12} {:>12} {:>12} {:>12}", "N_i", "l_inst", "lam_mod us", "lam_sim us", "Tnet_mod", "Tnet_sim");
+    for n_i in [2usize, 8, 64] {
+        let m = TimingModel::new(n_i, cfg.vp, cfg.layers, cfg.kernel, 200e6);
+        for l_inst in [2048usize, 7320] {
+            let sim = simulate(&m, l_inst, 16 * n_i);
+            println!(
+                "{:>6} {:>8} {:>12.2} {:>12.2} {:>12.2} {:>12.2}",
+                n_i,
+                l_inst,
+                m.lambda_sym_s(l_inst) * 1e6,
+                sim.lambda_sym_s * 1e6,
+                m.t_net(l_inst) / 1e9,
+                sim.t_net / 1e9
+            );
+        }
+    }
+
+    // ---- runtime selection through the streaming server --------------
+    println!("\n== per-request l_inst selection (streaming server) ==");
+    let instances: Vec<Box<dyn EqualizerInstance + Send>> =
+        match ArtifactRegistry::discover(&args.str_or("artifacts", "artifacts")) {
+            Ok(reg) => {
+                let entry = reg.best_model("cnn", "imdd", 4096)?;
+                (0..2)
+                    .map(|_| Ok(Box::new(PjrtInstance::load(entry)?) as Box<_>))
+                    .collect::<anyhow::Result<_>>()?
+            }
+            Err(_) => {
+                println!("(artifacts not built; using decimator instances)");
+                (0..2)
+                    .map(|_| Box::new(DecimatorInstance { width: 4096, n_os: 2 }) as Box<_>)
+                    .collect()
+            }
+        };
+    let o_act = cfg.o_act_samples();
+    let lut_targets: Vec<f64> = (1..=100).map(|i| i as f64 * 1e9).collect();
+    let server = EqualizerServer::new(instances, o_act, cfg.n_os, &opt, &lut_targets)?;
+    let handle = server.spawn();
+
+    let data = ImddChannel::default().transmit(20_000, 3);
+    for t_req in [Some(10e9), Some(60e9), Some(95e9), None] {
+        let resp = handle.call(data.rx.clone(), t_req)?;
+        let mut ber = BerCounter::new();
+        ber.update(&resp.soft_symbols, &data.symbols);
+        println!(
+            "t_req {:>12}  -> l_inst {:>6}  wall {:>8.1} us  BER {:.3e}",
+            t_req.map(|t| format!("{:.0} Gsa/s", t / 1e9)).unwrap_or_else(|| "none".into()),
+            resp.l_inst,
+            resp.elapsed_us,
+            ber.ber()
+        );
+    }
+    handle.shutdown();
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Quickstart: load a compiled equalizer artifact and run it on a
+//! simulated burst — the smallest possible end-to-end round trip.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use equalizer::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Discover the AOT artifacts (built once by `make artifacts`;
+    //    Python never runs after this point).
+    let registry = ArtifactRegistry::discover("artifacts")?;
+    let engine = Engine::new(&registry)?;
+    println!("PJRT platform: {}", engine.platform_name());
+
+    // 2. Pick the CNN equalizer for the optical channel at a 1024-sample
+    //    sub-sequence width and compile it.
+    let entry = registry.best_model("cnn", "imdd", 1024)?;
+    let model = engine.load(entry)?;
+    println!("loaded {} (width {})", entry.name, model.width());
+
+    // 3. Simulate a burst of the 40 GBd IM/DD channel (Sec. 2.1).
+    let channel = ImddChannel::default();
+    let data = channel.transmit(512, 7); // 512 symbols = 1024 samples
+
+    // 4. Equalize and decide.
+    let soft = model.run_f32(&data.rx)?;
+    let mut ber = BerCounter::new();
+    // Skip the receptive-field border (the coordinator's ORM does this
+    // automatically in streaming mode — see optical_40gbd.rs).
+    ber.update(&soft[68..soft.len() - 68], &data.symbols[68..soft.len() - 68]);
+
+    println!(
+        "equalized {} symbols, {} errors, BER = {:.3e}",
+        ber.total(),
+        ber.errors(),
+        ber.ber()
+    );
+    Ok(())
+}

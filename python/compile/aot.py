@@ -1,0 +1,340 @@
+"""AOT export: train the selected equalizers and lower them to HLO text.
+
+This is the only bridge between the Python build path and the Rust
+request path.  For every model variant and input-width bucket it emits
+``artifacts/<name>.hlo.txt`` plus a ``manifest.json`` the Rust artifact
+registry consumes, and ``weights_*.json`` for the bit-accurate Rust
+fixed-point datapath.
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate
+links) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Trained weights are cached under ``artifacts/weights_*.json`` so
+``make artifacts`` is cheap on re-runs; delete the cache to retrain.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import channels, model, train
+
+# Input-width buckets (receiver samples) exported per model.  The Rust
+# coordinator picks the bucket matching its sub-sequence length
+# l_ol = l_inst + 2*o_act; all are divisible by 2*V_p = 16.
+WIDTH_BUCKETS = [256, 512, 1024, 2048, 4096, 8192]
+BATCHED = [(1024, 8)]  # (width, batch) variants for the batching ablation
+
+# Default fixed-point formats if no QAT artifact is present (Sec. 4
+# result: ~13 bit weights, ~10 bit activations).
+DEFAULT_BITS = {
+    "w0": (3, 10), "w1": (3, 10), "w2": (3, 10), "w3": (3, 10), "w4": (3, 10),
+    "a_in": (4, 6), "a0": (4, 6), "a1": (4, 6), "a2": (4, 6), "a3": (4, 6), "a4": (4, 6),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer ELIDES big weight
+    # literals as `constant({...})`, which the xla_extension 0.5.1 text
+    # parser silently turns into zeros/garbage — the baked weights must
+    # be printed in full.
+    return comp.as_hlo_text(True)
+
+
+def _tolist(t) -> list:
+    return np.asarray(t).tolist()
+
+
+def save_weights(path: str, params: dict, bn_state: dict, cfg: model.CnnConfig, ber: float) -> None:
+    folded = model.cnn_fold_bn(
+        {k: v for k, v in params.items() if k != "cfg"}, bn_state, cfg
+    )
+    out = {
+        "cfg": dataclasses.asdict(cfg),
+        "ber": ber,
+        "raw": {k: _tolist(v) for k, v in params.items() if k != "cfg"},
+        "bn": {k: _tolist(v) for k, v in bn_state.items()},
+        "folded": {
+            k: _tolist(v) for k, v in folded.items() if k != "cfg"
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(out, f)
+
+
+def load_weights(path: str) -> tuple[dict, dict, model.CnnConfig, float]:
+    with open(path) as f:
+        d = json.load(f)
+    cfg = model.CnnConfig(**d["cfg"])
+    params = {k: jnp.asarray(v) for k, v in d["raw"].items()}
+    bn = {k: jnp.asarray(v) for k, v in d["bn"].items()}
+    return params, bn, cfg, d["ber"]
+
+
+def train_or_load_cnn(
+    art: str, channel: str, iters: int, n_sym: int
+) -> tuple[dict, dict, model.CnnConfig, float]:
+    cache = os.path.join(art, f"weights_cnn_{channel}.json")
+    if os.path.exists(cache):
+        print(f"[aot] using cached {cache}")
+        return load_weights(cache)
+    cfg = model.SELECTED
+    print(f"[aot] training CNN {cfg} on {channel} ({iters} iters)...")
+    data = channels.make_dataset(channel, n_sym, seed=0)
+    eval_data = channels.make_dataset(channel, n_sym // 2, seed=1000)
+    t0 = time.time()
+    r = train.train_cnn(cfg, data, iters=iters, seq_sym=256, eval_data=eval_data)
+    print(f"[aot] trained in {time.time()-t0:.1f}s, BER={r.ber:.3e}")
+    save_weights(cache, r.params, r.bn_state, cfg, r.ber)
+    return (
+        {k: v for k, v in r.params.items() if k != "cfg"},
+        r.bn_state,
+        cfg,
+        r.ber,
+    )
+
+
+def train_or_load_fir(art: str, channel: str, iters: int, n_sym: int, taps: int = 57):
+    cache = os.path.join(art, f"weights_fir_{channel}.json")
+    cfg = model.FirConfig(taps=taps)
+    if os.path.exists(cache):
+        with open(cache) as f:
+            d = json.load(f)
+        return {"w": jnp.asarray(d["w"])}, model.FirConfig(**d["cfg"]), d["ber"]
+    print(f"[aot] training FIR M={taps} on {channel}...")
+    data = channels.make_dataset(channel, n_sym, seed=0)
+    eval_data = channels.make_dataset(channel, n_sym // 2, seed=1000)
+    r = train.train_fir(cfg, data, iters=iters, eval_data=eval_data)
+    print(f"[aot] FIR BER={r.ber:.3e}")
+    with open(cache, "w") as f:
+        json.dump({"cfg": dataclasses.asdict(cfg), "w": _tolist(r.params["w"]), "ber": r.ber}, f)
+    return r.params, cfg, r.ber
+
+
+def train_or_load_volterra(art: str, channel: str, iters: int, n_sym: int, m=(25, 3, 3)):
+    cache = os.path.join(art, f"weights_volterra_{channel}.json")
+    cfg = model.VolterraConfig(m1=m[0], m2=m[1], m3=m[2])
+    if os.path.exists(cache):
+        with open(cache) as f:
+            d = json.load(f)
+        return (
+            {k: jnp.asarray(v) for k, v in d["params"].items()},
+            model.VolterraConfig(**d["cfg"]),
+            d["ber"],
+        )
+    print(f"[aot] training Volterra {m} on {channel}...")
+    data = channels.make_dataset(channel, n_sym, seed=0)
+    eval_data = channels.make_dataset(channel, n_sym // 2, seed=1000)
+    r = train.train_volterra(cfg, data, iters=iters, eval_data=eval_data)
+    print(f"[aot] Volterra BER={r.ber:.3e}")
+    with open(cache, "w") as f:
+        json.dump(
+            {
+                "cfg": dataclasses.asdict(cfg),
+                "params": {k: _tolist(v) for k, v in r.params.items()},
+                "ber": r.ber,
+            },
+            f,
+        )
+    return r.params, cfg, r.ber
+
+
+def qat_bits(art: str, channel: str, cfg: model.CnnConfig) -> dict[str, tuple[int, int]]:
+    """Learned fixed-point formats from the QAT artifact, or defaults."""
+    path = os.path.join(art, f"qat_bits_{channel}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return {k: tuple(v) for k, v in json.load(f).items()}
+    return {k: v for k, v in DEFAULT_BITS.items()}
+
+
+def export(lowered_fn, example, name: str, art: str, manifest: list, meta: dict) -> None:
+    lowered = jax.jit(lowered_fn).lower(example)
+    text = to_hlo_text(lowered)
+    path = os.path.join(art, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(
+        {
+            "name": name,
+            "path": f"{name}.hlo.txt",
+            "input_shape": list(example.shape),
+            **meta,
+        }
+    )
+    print(f"[aot] wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt", help="sentinel path (Makefile)")
+    ap.add_argument("--iters", type=int, default=int(os.environ.get("EQ_AOT_ITERS", "8000")))
+    ap.add_argument("--n-sym", type=int, default=200_000)
+    ap.add_argument("--widths", default=",".join(map(str, WIDTH_BUCKETS)))
+    args = ap.parse_args()
+
+    art = os.path.dirname(os.path.abspath(args.out)) or "../artifacts"
+    os.makedirs(art, exist_ok=True)
+    widths = [int(w) for w in args.widths.split(",")]
+    manifest: list[dict] = []
+
+    # Training sweeps run on the jnp oracle for speed; the *exported*
+    # graphs below keep EQ_USE_PALLAS=1 so the L1 Pallas kernel is what
+    # actually lowers into the artifacts.
+    os.environ["EQ_USE_PALLAS"] = "0"
+
+    # --- optical (IM/DD) models -------------------------------------
+    params, bn, cfg, cnn_ber = train_or_load_cnn(art, "imdd", args.iters, args.n_sym)
+    folded = model.cnn_fold_bn(params, bn, cfg)
+    fir_p, fir_cfg, fir_ber = train_or_load_fir(art, "imdd", max(800, args.iters // 2), args.n_sym)
+    vol_p, vol_cfg, vol_ber = train_or_load_volterra(
+        art, "imdd", max(800, args.iters // 2), args.n_sym
+    )
+
+    # --- magnetic recording (Proakis-B) model ------------------------
+    params_mr, bn_mr, cfg_mr, cnn_mr_ber = train_or_load_cnn(
+        art, "proakis", max(1000, args.iters // 2), args.n_sym // 2
+    )
+    folded_mr = model.cnn_fold_bn(params_mr, bn_mr, cfg_mr)
+
+    os.environ["EQ_USE_PALLAS"] = "1"
+    bits = qat_bits(art, "imdd", cfg)
+
+    for w in widths:
+        example = jax.ShapeDtypeStruct((w,), jnp.float32)
+        export(
+            lambda x: (model.cnn_forward_folded(folded, x, cfg),),
+            example,
+            f"cnn_imdd_w{w}",
+            art,
+            manifest,
+            {"model": "cnn", "channel": "imdd", "vp": cfg.vp,
+             "out_symbols": cfg.out_symbols(w), "quant": False, "batch": 1},
+        )
+
+    # Quantized variant (static Pallas fake-quant baked in) — numerics
+    # reference for the Rust fixed-point datapath.
+    for w in [1024]:
+        example = jax.ShapeDtypeStruct((w,), jnp.float32)
+        export(
+            lambda x: (model.cnn_forward_folded(folded, x, cfg, quant_bits=bits),),
+            example,
+            f"cnn_imdd_quant_w{w}",
+            art,
+            manifest,
+            {"model": "cnn_quant", "channel": "imdd", "vp": cfg.vp,
+             "out_symbols": cfg.out_symbols(w), "quant": True, "batch": 1,
+             "bits": {k: list(v) for k, v in bits.items()}},
+        )
+
+    # Batched variants for the platform-comparison harness.
+    for w, b in BATCHED:
+        example = jax.ShapeDtypeStruct((b, w), jnp.float32)
+        export(
+            lambda x: (jax.vmap(lambda xi: model.cnn_forward_folded(folded, xi, cfg))(x),),
+            example,
+            f"cnn_imdd_w{w}_b{b}",
+            art,
+            manifest,
+            {"model": "cnn", "channel": "imdd", "vp": cfg.vp,
+             "out_symbols": cfg.out_symbols(w), "quant": False, "batch": b},
+        )
+
+    # Baselines.
+    for w in [1024, 4096]:
+        example = jax.ShapeDtypeStruct((w,), jnp.float32)
+        export(
+            lambda x: (model.fir_forward(fir_p, x, fir_cfg),),
+            example,
+            f"fir_imdd_w{w}",
+            art,
+            manifest,
+            {"model": "fir", "channel": "imdd", "taps": fir_cfg.taps,
+             "out_symbols": w // 2, "quant": False, "batch": 1},
+        )
+    example = jax.ShapeDtypeStruct((1024,), jnp.float32)
+    export(
+        lambda x: (model.volterra_forward(vol_p, x, vol_cfg),),
+        example,
+        "volterra_imdd_w1024",
+        art,
+        manifest,
+        {"model": "volterra", "channel": "imdd",
+         "m": [vol_cfg.m1, vol_cfg.m2, vol_cfg.m3],
+         "out_symbols": 512, "quant": False, "batch": 1},
+    )
+
+    # Magnetic-recording CNN (LP scenario).
+    for w in [1024]:
+        example = jax.ShapeDtypeStruct((w,), jnp.float32)
+        export(
+            lambda x: (model.cnn_forward_folded(folded_mr, x, cfg_mr),),
+            example,
+            f"cnn_proakis_w{w}",
+            art,
+            manifest,
+            {"model": "cnn", "channel": "proakis", "vp": cfg_mr.vp,
+             "out_symbols": cfg_mr.out_symbols(w), "quant": False, "batch": 1},
+        )
+
+    # Numeric test vectors: the Rust integration tests replay these
+    # through PJRT and the native datapath (tests/artifact_numerics.rs).
+    rng = np.random.RandomState(123)
+    xv = rng.randn(1024).astype(np.float32)
+    tv = {"x": xv.tolist(), "outputs": {}}
+    tv["outputs"]["cnn_imdd_w1024"] = _tolist(
+        model.cnn_forward_folded(folded, jnp.asarray(xv), cfg)
+    )
+    tv["outputs"]["cnn_imdd_quant_w1024"] = _tolist(
+        model.cnn_forward_folded(folded, jnp.asarray(xv), cfg, quant_bits=bits)
+    )
+    tv["outputs"]["fir_imdd_w1024"] = _tolist(
+        model.fir_forward(fir_p, jnp.asarray(xv), fir_cfg)
+    )
+    tv["outputs"]["volterra_imdd_w1024"] = _tolist(
+        model.volterra_forward(vol_p, jnp.asarray(xv), vol_cfg)
+    )
+    with open(os.path.join(art, "testvectors.json"), "w") as f:
+        json.dump(tv, f)
+
+    with open(os.path.join(art, "manifest.json"), "w") as f:
+        json.dump(
+            {
+                "models": manifest,
+                "ber": {
+                    "cnn_imdd": cnn_ber,
+                    "fir_imdd": fir_ber,
+                    "volterra_imdd": vol_ber,
+                    "cnn_proakis": cnn_mr_ber,
+                },
+                "selected_cfg": dataclasses.asdict(cfg),
+            },
+            f,
+            indent=1,
+        )
+
+    # Sentinel for the Makefile dependency.
+    with open(args.out, "w") as f:
+        f.write(open(os.path.join(art, f"cnn_imdd_w{widths[0]}.hlo.txt")).read())
+    print(f"[aot] manifest with {len(manifest)} models -> {art}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

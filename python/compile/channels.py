@@ -1,0 +1,221 @@
+"""Communication-channel simulators used to generate training data.
+
+Two channels, matching the paper (Sec. 2):
+
+* :func:`imdd` — 40 GBd PAM-2 intensity-modulation / direct-detection
+  optical link.  The paper captures this channel experimentally; we
+  simulate the same impairment mechanism: an RRC-shaped PAM-2 drive
+  signal modulates the optical *field*, chromatic dispersion (CD) of a
+  31.5 km standard single-mode fiber is applied as an all-pass filter in
+  the field domain, and a photodiode performs square-law detection
+  ``y = |e|^2``.  Because CD acts on the field while detection is on the
+  intensity, the composite channel is *nonlinear* — exactly the effect
+  the CNN equalizer exploits and a linear FIR cannot invert (DESIGN.md
+  §3, substitution table).
+
+* :func:`proakis_b` — the simulated "magnetic recording" channel of
+  Sec. 2.2: raised-cosine pulse shaping, discrete impulse response
+  ``h = [0.407, 0.815, 0.407]`` (Proakis-B), additive white Gaussian
+  noise.  Linear by construction.
+
+Both run at an oversampling factor ``N_os = 2`` and use a
+Mersenne-Twister PRBS (numpy ``RandomState`` == MT19937), following the
+paper's recommendation of [18].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+N_OS = 2  # oversampling factor used throughout the paper
+
+# Physical constants / fiber parameters (Sec. 2.1)
+_C_LIGHT = 299_792_458.0  # m/s
+_LAMBDA = 1550e-9  # m
+_D_CD = 16e-6  # s/m^2  (= 16 ps / (nm km))
+_FIBER_KM = 31.5
+_BAUD = 40e9  # 40 GBd
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelData:
+    """One simulated transmission: receiver samples + ground-truth symbols.
+
+    ``rx`` has ``N_os`` samples per symbol and is aligned so that sample
+    ``N_os * i`` corresponds to symbol ``i`` (timing recovery is assumed
+    ideal, as in the paper's offline pipeline).
+    """
+
+    rx: np.ndarray  # float32 (n_sym * N_os,)
+    symbols: np.ndarray  # float32 (n_sym,)  in {-1, +1}
+    name: str
+
+
+def prbs(n_sym: int, seed: int) -> np.ndarray:
+    """Mersenne-Twister PAM-2 pseudo-random symbol sequence in {-1, +1}."""
+    rng = np.random.RandomState(seed)  # MT19937, per the paper
+    return (2.0 * rng.randint(0, 2, size=n_sym) - 1.0).astype(np.float32)
+
+
+def rrc_taps(beta: float, span: int, sps: int) -> np.ndarray:
+    """Root-raised-cosine filter taps (unit energy).
+
+    ``span`` is the filter length in symbols, ``sps`` samples per symbol.
+    """
+    n = span * sps
+    t = (np.arange(n) - n / 2.0) / sps  # time in symbol periods
+    taps = np.zeros(n)
+    for i, ti in enumerate(t):
+        if abs(ti) < 1e-9:
+            taps[i] = 1.0 - beta + 4.0 * beta / np.pi
+        elif beta > 0 and abs(abs(4.0 * beta * ti) - 1.0) < 1e-9:
+            taps[i] = (beta / np.sqrt(2.0)) * (
+                (1.0 + 2.0 / np.pi) * np.sin(np.pi / (4.0 * beta))
+                + (1.0 - 2.0 / np.pi) * np.cos(np.pi / (4.0 * beta))
+            )
+        else:
+            num = np.sin(np.pi * ti * (1.0 - beta)) + 4.0 * beta * ti * np.cos(
+                np.pi * ti * (1.0 + beta)
+            )
+            den = np.pi * ti * (1.0 - (4.0 * beta * ti) ** 2)
+            taps[i] = num / den
+    return (taps / np.sqrt(np.sum(taps**2))).astype(np.float64)
+
+
+def rc_taps(beta: float, span: int, sps: int) -> np.ndarray:
+    """Raised-cosine filter taps (used by the Proakis-B setup)."""
+    n = span * sps
+    t = (np.arange(n) - n / 2.0) / sps
+    taps = np.sinc(t) * np.cos(np.pi * beta * t)
+    den = 1.0 - (2.0 * beta * t) ** 2
+    # L'Hopital at the singular points
+    sing = np.abs(den) < 1e-9
+    taps = np.where(sing, (np.pi / 4.0) * np.sinc(1.0 / (2.0 * beta)), taps / np.where(sing, 1.0, den))
+    return (taps / np.max(np.abs(taps))).astype(np.float64)
+
+
+def _cd_filter(n_fft: int, fs: float, length_km: float) -> np.ndarray:
+    """Frequency response of chromatic dispersion over ``length_km``.
+
+    All-pass: ``H(w) = exp(-j * beta2/2 * w^2 * L)`` with
+    ``beta2 = -D lambda^2 / (2 pi c)``.
+    """
+    beta2 = -_D_CD * _LAMBDA**2 / (2.0 * np.pi * _C_LIGHT)
+    freqs = np.fft.fftfreq(n_fft, d=1.0 / fs)
+    w = 2.0 * np.pi * freqs
+    return np.exp(-0.5j * beta2 * (length_km * 1e3) * w**2)
+
+
+def _upsample(symbols: np.ndarray, sps: int) -> np.ndarray:
+    up = np.zeros(len(symbols) * sps)
+    up[::sps] = symbols
+    return up
+
+
+def imdd(
+    n_sym: int,
+    seed: int = 0,
+    snr_db: float = 25.0,
+    fiber_km: float = _FIBER_KM,
+    rrc_beta: float = 0.2,
+    rrc_span: int = 32,
+    mod_index: float = 0.7,
+) -> ChannelData:
+    """Simulate the 40 GBd PAM-2 IM/DD link of Sec. 2.1.
+
+    Pipeline: PRBS -> upsample (N_os) -> RRC -> MZM at quadrature
+    (field = sqrt-intensity mapping linearized around the bias point)
+    -> CD all-pass on the field -> photodiode ``|e|^2`` -> AWGN ->
+    normalization.  Receiver noise is set by ``snr_db`` measured on the
+    detected signal, matching the paper's "transceiver noise and CD
+    remain as the impairing effects".
+    """
+    syms = prbs(n_sym, seed)
+    fs = _BAUD * N_OS
+
+    drive = np.convolve(_upsample(syms, N_OS), rrc_taps(rrc_beta, rrc_span, N_OS), "same")
+    # MZM biased at quadrature: field amplitude cos(pi/4 * (1 - m*v)) —
+    # keeps both the intensity modulation and the residual field
+    # nonlinearity of a real modulator.  m scales the drive swing.
+    m = mod_index
+    field = np.cos(0.25 * np.pi * (1.0 - m * np.clip(drive, -1.5, 1.5)))
+    # Chromatic dispersion acts on the optical field.
+    field_disp = np.fft.ifft(np.fft.fft(field) * _cd_filter(len(field), fs, fiber_km))
+    # Square-law detection: CD ∘ |.|^2 is the nonlinear composite.
+    photo = np.abs(field_disp) ** 2
+    photo = photo - photo.mean()
+    photo = photo / photo.std()
+
+    sig_pow = np.mean(photo**2)
+    noise = np.random.RandomState(seed + 1).normal(
+        0.0, np.sqrt(sig_pow / 10 ** (snr_db / 10.0)), size=photo.shape
+    )
+    rx = (photo + noise).astype(np.float32)
+    # Align: RRC ("same" mode) keeps the symbol at sample N_os*i.
+    return ChannelData(rx=rx, symbols=syms, name="imdd")
+
+
+# Proakis-B impulse response (symbol-spaced), Sec. 2.2
+H_PROAKIS_B = np.array([0.407, 0.815, 0.407])
+
+
+def proakis_b(
+    n_sym: int,
+    seed: int = 0,
+    snr_db: float = 20.0,
+    rc_beta: float = 0.3,
+    rc_span: int = 16,
+) -> ChannelData:
+    """Simulate the Proakis-B 'magnetic recording' channel of Sec. 2.2.
+
+    Symbols -> RC pulse shaping (N_os = 2) -> T-spaced channel IR
+    ``[0.407, 0.815, 0.407]`` -> AWGN at ``snr_db`` (paper models the
+    bad-quality channel at 20 dB).
+    """
+    syms = prbs(n_sym, seed)
+    shaped = np.convolve(_upsample(syms, N_OS), rc_taps(rc_beta, rc_span, N_OS), "same")
+    # Upsample the T-spaced channel IR to the N_os grid (zeros between taps).
+    h_up = np.zeros((len(H_PROAKIS_B) - 1) * N_OS + 1)
+    h_up[::N_OS] = H_PROAKIS_B
+    chan = np.convolve(shaped, h_up, "same")
+    chan = chan / np.std(chan)
+
+    sig_pow = np.mean(chan**2)
+    noise = np.random.RandomState(seed + 1).normal(
+        0.0, np.sqrt(sig_pow / 10 ** (snr_db / 10.0)), size=chan.shape
+    )
+    rx = (chan + noise).astype(np.float32)
+    return ChannelData(rx=rx, symbols=syms, name="proakis_b")
+
+
+def make_dataset(
+    channel: str,
+    n_sym: int,
+    seed: int = 0,
+    snr_db: float | None = None,
+) -> ChannelData:
+    """Dispatch helper used by train / dse / aot."""
+    if channel == "imdd":
+        return imdd(n_sym, seed=seed, snr_db=snr_db if snr_db is not None else 25.0)
+    if channel in ("proakis", "proakis_b"):
+        return proakis_b(n_sym, seed=seed, snr_db=snr_db if snr_db is not None else 20.0)
+    raise ValueError(f"unknown channel {channel!r}")
+
+
+def windows(
+    data: ChannelData, seq_sym: int, stride_sym: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Cut a transmission into training windows.
+
+    Returns ``(x, y)`` with ``x: (n, seq_sym * N_os)`` receiver samples
+    and ``y: (n, seq_sym)`` transmitted symbols.
+    """
+    stride_sym = stride_sym or seq_sym
+    n = (len(data.symbols) - seq_sym) // stride_sym + 1
+    xs = np.stack(
+        [data.rx[i * stride_sym * N_OS : i * stride_sym * N_OS + seq_sym * N_OS] for i in range(n)]
+    )
+    ys = np.stack([data.symbols[i * stride_sym : i * stride_sym + seq_sym] for i in range(n)])
+    return xs.astype(np.float32), ys.astype(np.float32)

@@ -1,0 +1,137 @@
+"""Pallas strided 1-D convolution — the L1 compute hot-spot.
+
+Every layer of the equalizer CNN is one call of this kernel, so the
+whole network lowers to a chain of these plus element-wise glue.
+
+Hardware adaptation (DESIGN.md §2): the paper's FPGA datapath unrolls
+the kernel (K), input-channel (I_c) and output-channel (O_c) loops into
+a spatial MAC array producing one output group per clock.  On a TPU the
+same insight — keep all short axes resident, feed a matrix unit — maps
+to an im2col formulation: each grid step materializes a
+``(TILE, K * C_in)`` patch matrix in VMEM and multiplies it against the
+``(K * C_in, C_out)`` weight matrix on the MXU.  The sequence axis is
+tiled by the grid (the analogue of the paper's streaming pipeline); the
+input signal is kept VMEM-resident because BlockSpec cannot express the
+overlapping strided windows directly (receptive fields of adjacent
+tiles overlap by ``K - stride`` samples).  For the paper's topology
+(C <= 5, K = 9, sub-sequences of a few thousand samples) the resident
+signal is tens of KiB — far below the ~16 MiB VMEM budget; the VMEM
+footprint analysis lives in DESIGN.md §7 and EXPERIMENTS.md §Perf.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom calls; interpret mode lowers to plain HLO which the Rust runtime
+(xla crate, PJRT CPU) executes directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default number of output positions computed per grid step.  128 keeps
+# the patch matrix MXU-shaped ((128, K*C_in) x (K*C_in, C_out)).
+DEFAULT_TILE = 128
+
+
+def _conv1d_kernel(x_ref, w_ref, b_ref, o_ref, *, stride, k, tile, relu):
+    """One grid step: produce ``(C_out, tile)`` output positions.
+
+    ``x_ref`` holds the whole (already zero-padded) input ``(C_in, Wp)``;
+    ``w_ref`` is ``(C_out, C_in, K)``; ``o_ref`` is the ``(C_out, tile)``
+    output block for this step.
+    """
+    ti = pl.program_id(0)
+    span = (tile - 1) * stride + k
+    # Receptive field of this output tile: [ti*tile*stride, ... + span).
+    xblk = pl.load(x_ref, (slice(None), pl.ds(ti * tile * stride, span)))
+
+    # im2col: (C_in, tile, K) gather -> (tile, C_in*K) patch matrix.
+    pos = jnp.arange(tile)[:, None] * stride + jnp.arange(k)[None, :]
+    patches = jnp.transpose(xblk[:, pos], (1, 0, 2)).reshape(tile, -1)
+
+    # (C_out, C_in, K) -> (C_in*K, C_out): the MXU-side operand.
+    wmat = jnp.transpose(w_ref[...], (1, 2, 0)).reshape(-1, o_ref.shape[0])
+
+    out = jnp.dot(patches, wmat, preferred_element_type=jnp.float32)
+    out = out + b_ref[...][None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.T
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "relu", "tile"))
+def conv1d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    stride: int,
+    padding: int,
+    relu: bool = False,
+    tile: int = DEFAULT_TILE,
+) -> jnp.ndarray:
+    """Strided padded 1-D convolution via the Pallas kernel.
+
+    Same contract as :func:`compile.kernels.ref.conv1d` (the oracle):
+    ``x (C_in, W)``, ``w (C_out, C_in, K)``, ``b (C_out,)`` ->
+    ``(C_out, W_out)``.
+    """
+    c_in, width = x.shape
+    c_out, c_in_w, k = w.shape
+    assert c_in == c_in_w, (c_in, c_in_w)
+    w_out = (width + 2 * padding - k) // stride + 1
+    assert w_out >= 1, "input shorter than kernel"
+
+    tile = min(tile, w_out)
+    n_tiles = -(-w_out // tile)  # ceil
+    w_out_pad = n_tiles * tile
+
+    # Zero-pad: `padding` on the left; on the right enough for both the
+    # convolution padding and the tile overshoot.
+    span_last = ((w_out_pad - 1) * stride + k) - width - padding
+    xp = jnp.pad(x, ((0, 0), (padding, max(span_last, padding))))
+
+    out = pl.pallas_call(
+        functools.partial(_conv1d_kernel, stride=stride, k=k, tile=tile, relu=relu),
+        grid=(n_tiles,),
+        in_specs=[
+            # Whole padded signal resident (see module docstring).
+            pl.BlockSpec(xp.shape, lambda i: (0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((c_out, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((c_out, w_out_pad), jnp.float32),
+        interpret=True,
+    )(xp, w, b)
+    return out[:, :w_out]
+
+
+def vmem_bytes(c_in: int, width: int, k: int, c_out: int, stride: int, tile: int = DEFAULT_TILE) -> int:
+    """Static VMEM footprint estimate of one grid step (f32).
+
+    Used by the perf analysis (EXPERIMENTS.md §Perf) — resident signal +
+    weights + patch matrix + output block.
+    """
+    span = (tile - 1) * stride + k
+    resident = c_in * (width + 2 * k) * 4
+    weights = c_out * c_in * k * 4
+    patches = tile * c_in * k * 4 + c_in * span * 4
+    out = c_out * tile * 4
+    return resident + weights + patches + out
+
+
+def mxu_utilization(c_in: int, k: int, c_out: int, tile: int = DEFAULT_TILE) -> float:
+    """Estimated MXU utilization of the im2col matmul.
+
+    A 128x128 MXU tile performs 128*128*128 MACs per pass; the kernel's
+    matmul is (tile, c_in*k) x (c_in*k, c_out).  Utilization is the
+    fraction of the systolic array doing useful work (both contraction
+    and output-channel axes are narrow for this topology — the paper's
+    FPGA sidesteps this with a bespoke array; on TPU the roofline is
+    bounded by these ratios).
+    """
+    kk = c_in * k
+    return (min(tile, 128) / 128.0) * (min(kk, 128) / 128.0) * (min(c_out, 128) / 128.0)

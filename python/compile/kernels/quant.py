@@ -1,0 +1,56 @@
+"""Pallas fixed-point fake-quantization kernel.
+
+Element-wise quantize-to-Q(m.n): round to ``frac_bits`` fractional bits
+and saturate to the signed range of ``int_bits`` integer bits.  This is
+the numeric behaviour of the FPGA datapath (Sec. 4): values live in
+fixed-point format with independent integer/fraction widths per tensor.
+
+The *trainable* (fractional-bit-width, interpolated) variant used by
+quantization-aware training lives in ``ref.fake_quant`` — bit widths are
+traced there.  This kernel is the inference-path version with static
+integer widths; it is what ``aot.py`` bakes into the exported HLO of the
+quantized model.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import round_ties_even
+
+
+def _quant_kernel(x_ref, o_ref, *, scale, lo, hi):
+    x = x_ref[...]
+    # round_ties_even, not jnp.round: the round-nearest-even HLO op is
+    # rejected by the Rust runtime's XLA 0.5.1 (see ref.round_ties_even).
+    o_ref[...] = jnp.clip(round_ties_even(x * scale) / scale, lo, hi)
+
+
+@functools.partial(jax.jit, static_argnames=("int_bits", "frac_bits"))
+def fake_quant(x: jnp.ndarray, int_bits: int, frac_bits: int) -> jnp.ndarray:
+    """Quantize ``x`` to signed Q(int_bits.frac_bits) fixed point.
+
+    Matches ``ref.fake_quant`` exactly when the widths are integers.
+    """
+    scale = float(2.0**frac_bits)
+    lo = -float(2.0 ** (int_bits - 1))
+    hi = float(2.0 ** (int_bits - 1)) - 1.0 / scale
+    flat = x.reshape(-1)
+    # Pad to a lane-friendly multiple; element-wise so padding is inert.
+    n = flat.shape[0]
+    tile = 1024
+    n_pad = -(-n // tile) * tile
+    flat = jnp.pad(flat, (0, n_pad - n))
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, scale=scale, lo=lo, hi=hi),
+        grid=(n_pad // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=True,
+    )(flat)
+    return out[:n].reshape(x.shape)

@@ -1,0 +1,131 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this
+package must match its oracle to float tolerance (pytest + hypothesis
+sweeps in ``python/tests/test_kernel.py``).  They are also what the JAX
+model falls back to when ``EQ_USE_PALLAS=0``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def round_ties_even(v: jnp.ndarray) -> jnp.ndarray:
+    """Round half to even, built from floor/where only.
+
+    Numerically identical to ``jnp.round``, but ``jnp.round`` lowers to
+    the ``round-nearest-even`` HLO op which the xla_extension 0.5.1
+    runtime (the Rust PJRT client) does not implement — it raises a C++
+    exception at compile time.  floor/select lower to universally
+    supported ops, so this form is safe to bake into artifacts.
+    """
+    f = jnp.floor(v)
+    d = v - f
+    r = jnp.floor(v + 0.5)
+    # Exact .5 ties go to the even neighbour: f if f even, else f + 1.
+    r_tie = f + jnp.mod(f, 2.0)
+    return jnp.where(d == 0.5, r_tie, r)
+
+
+def conv1d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    stride: int,
+    padding: int,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """Strided, padded 1-D convolution (cross-correlation).
+
+    Args:
+      x: ``(C_in, W)`` input feature map.
+      w: ``(C_out, C_in, K)`` kernel.
+      b: ``(C_out,)`` bias.
+      stride: output stride.
+      padding: symmetric zero padding on the width axis.
+      relu: fuse a ReLU on the output.
+
+    Returns:
+      ``(C_out, W_out)`` with ``W_out = (W + 2*padding - K)//stride + 1``.
+    """
+    out = lax.conv_general_dilated(
+        x[None],  # (1, C_in, W)
+        w,  # (C_out, C_in, K)
+        window_strides=(stride,),
+        padding=[(padding, padding)],
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    )[0] + b[:, None]
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def fake_quant(x: jnp.ndarray, int_bits: float, frac_bits: float) -> jnp.ndarray:
+    """Fixed-point fake quantization to Q(int_bits.frac_bits), signed.
+
+    Rounds to the nearest representable value and saturates at the
+    format's range — the arithmetic the FPGA datapath performs (Sec. 4).
+    Bit widths may be fractional: the value is the linear interpolation
+    between the two adjacent integer-width quantizations, which is what
+    makes the bit widths trainable (the paper's differentiable
+    interpolation).
+    """
+
+    def q(i, f):
+        scale = 2.0**f
+        lo = -(2.0 ** (i - 1.0))
+        hi = 2.0 ** (i - 1.0) - 1.0 / scale
+        return jnp.clip(round_ties_even(x * scale) / scale, lo, hi)
+
+    i0, f0 = jnp.floor(int_bits), jnp.floor(frac_bits)
+    wi, wf = int_bits - i0, frac_bits - f0
+    # Bilinear interpolation across the four adjacent integer formats.
+    return (
+        (1 - wi) * (1 - wf) * q(i0, f0)
+        + (1 - wi) * wf * q(i0, f0 + 1)
+        + wi * (1 - wf) * q(i0 + 1, f0)
+        + wi * wf * q(i0 + 1, f0 + 1)
+    )
+
+
+def fir(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Linear feed-forward equalizer, Eq. (1): centered FIR of M taps.
+
+    ``x: (W,)`` samples, ``w: (M,)`` taps -> ``(W,)`` output (same
+    length; zero-padded borders).
+    """
+    m = w.shape[0]
+    return conv1d(x[None], w[None, None, :], jnp.zeros((1,)), 1, (m - 1) // 2)[0][
+        : x.shape[0]
+    ]
+
+
+def volterra(
+    x: jnp.ndarray,
+    w0: jnp.ndarray,
+    w1: jnp.ndarray,
+    w2: jnp.ndarray,
+    w3: jnp.ndarray,
+) -> jnp.ndarray:
+    """Order-3 Volterra equalizer (Sec. 3.3), evaluated per output sample.
+
+    ``w1: (M1,)``, ``w2: (M2, M2)``, ``w3: (M3, M3, M3)``.  Memory
+    windows are centered; borders are zero-padded.  Pass size-1
+    all-zero kernels to disable an order (paper's ``M_p = 1`` case).
+    """
+    n = x.shape[0]
+
+    def win(m):
+        half = m // 2
+        xp = jnp.pad(x, (half, half))
+        idx = jnp.arange(n)[:, None] + jnp.arange(m)[None, :]
+        return xp[idx]  # (n, m)
+
+    y = jnp.full((n,), w0)
+    x1 = win(w1.shape[0])
+    y = y + x1 @ w1
+    x2 = win(w2.shape[0])
+    y = y + jnp.einsum("na,nb,ab->n", x2, x2, w2)
+    x3 = win(w3.shape[0])
+    y = y + jnp.einsum("na,nb,nc,abc->n", x3, x3, x3, w3)
+    return y

@@ -1,0 +1,331 @@
+"""L2 — the equalizer models as JAX computations.
+
+Three model families, matching the paper's design-space exploration
+(Sec. 3): the CNN equalizer built from the topology template of Fig. 1,
+the linear FIR feed-forward equalizer (Sec. 3.2) and the order-3
+Volterra equalizer (Sec. 3.3).
+
+The CNN forward pass calls the L1 Pallas kernel
+(:mod:`compile.kernels.conv1d`) for every convolutional layer; set
+``EQ_USE_PALLAS=0`` to fall back to the pure-jnp oracle (useful for
+fast training sweeps — identical numerics, checked by pytest).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv1d as pallas_conv1d
+from .kernels import ref
+
+N_OS = 2
+
+Params = dict[str, Any]
+
+
+def _use_pallas() -> bool:
+    return os.environ.get("EQ_USE_PALLAS", "1") != "0"
+
+
+def _conv(x, w, b, stride, padding, relu, use_pallas=None):
+    if use_pallas if use_pallas is not None else _use_pallas():
+        return pallas_conv1d.conv1d(x, w, b, stride, padding, relu=relu)
+    return ref.conv1d(x, w, b, stride, padding, relu=relu)
+
+
+# ---------------------------------------------------------------------------
+# CNN equalizer (Fig. 1 topology template)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    """Topology template hyper-parameters (Sec. 3.1).
+
+    ``L`` conv layers of kernel size ``K``; hidden feature maps have
+    ``C`` channels; ``V_p`` symbols are produced per network pass.
+    Strides: first layer ``V_p``, middle layers 1, last layer ``N_os``.
+    """
+
+    vp: int = 8
+    layers: int = 3
+    kernel: int = 9
+    channels: int = 5
+    n_os: int = N_OS
+
+    @property
+    def padding(self) -> int:
+        return (self.kernel - 1) // 2
+
+    def mac_per_symbol(self) -> float:
+        """Average MAC operations per equalized symbol (paper's formula)."""
+        k, c, l, vp = self.kernel, self.channels, self.layers, self.vp
+        return k * c / vp + (l - 2) * k * c * c / vp + k * c / self.n_os
+
+    def receptive_field_symbols(self) -> int:
+        """Overlap symbols needed at each border (Sec. 6.1, o_sym)."""
+        return (self.kernel - 1) * (1 + self.vp * (self.layers - 1)) // 2
+
+    def out_symbols(self, in_samples: int) -> int:
+        """Symbols produced for an input of ``in_samples`` samples."""
+        w = in_samples
+        for stride in self.strides():
+            w = (w + 2 * self.padding - self.kernel) // stride + 1
+        return w * self.vp
+
+    def strides(self) -> list[int]:
+        return [self.vp] + [1] * (self.layers - 2) + [self.n_os]
+
+    def layer_channels(self) -> list[tuple[int, int]]:
+        """(C_in, C_out) per layer: 1 -> C -> ... -> C -> V_p."""
+        chans = [1] + [self.channels] * (self.layers - 1)
+        outs = [self.channels] * (self.layers - 1) + [self.vp]
+        return list(zip(chans, outs))
+
+
+SELECTED = CnnConfig(vp=8, layers=3, kernel=9, channels=5)
+"""The model chosen by the paper's DSE (Fig. 3): V_p=8, L=3, K=9, C=5."""
+
+
+def cnn_init(cfg: CnnConfig, key: jax.Array) -> Params:
+    """He-initialized parameters + BatchNorm state for the template."""
+    params: Params = {"cfg": dataclasses.asdict(cfg)}
+    for li, (cin, cout) in enumerate(cfg.layer_channels()):
+        key, sub = jax.random.split(key)
+        fan_in = cin * cfg.kernel
+        params[f"w{li}"] = jax.random.normal(sub, (cout, cin, cfg.kernel)) * np.sqrt(
+            2.0 / fan_in
+        )
+        params[f"b{li}"] = jnp.zeros((cout,))
+        if li < cfg.layers - 1:  # BN after every layer but the last
+            params[f"bn{li}_gamma"] = jnp.ones((cout,))
+            params[f"bn{li}_beta"] = jnp.zeros((cout,))
+    return params
+
+
+def cnn_bn_state(cfg: CnnConfig) -> Params:
+    state: Params = {}
+    for li, (_, cout) in enumerate(cfg.layer_channels()[:-1]):
+        state[f"bn{li}_mean"] = jnp.zeros((cout,))
+        state[f"bn{li}_var"] = jnp.ones((cout,))
+    return state
+
+
+def cnn_forward_batch(
+    params: Params,
+    state: Params,
+    xb: jnp.ndarray,
+    cfg: CnnConfig,
+    train: bool = False,
+    momentum: float = 0.1,
+    quant: Params | None = None,
+    use_pallas: bool | None = None,
+) -> tuple[jnp.ndarray, Params]:
+    """Batched forward pass ``xb: (B, W)`` -> symbols ``(B, W//N_os)``.
+
+    Training always passes ``use_pallas=False``: the Pallas interpret
+    path has no reverse-mode AD rule, and the oracle is numerically
+    identical (pytest-enforced).  Inference/export defaults to the env
+    switch ``EQ_USE_PALLAS``.
+
+    BatchNorm statistics are taken over (batch, width) — the paper's
+    software training setup — with running averages maintained in
+    ``state`` for inference.  ``quant`` optionally carries per-tensor
+    bit widths ``{f"w{li}": (int_bits, frac_bits), f"a{li}": ..,
+    "a_in": ..}`` for quantization-aware evaluation (``ref.fake_quant``
+    — differentiable in the widths).
+    """
+    feat = xb[:, None, :]  # (B, 1, W)
+    new_state = dict(state)
+    strides = cfg.strides()
+
+    def maybe_q(t, key_):
+        if quant is None or key_ not in quant:
+            return t
+        ib, fb = quant[key_]
+        return ref.fake_quant(t, ib, fb)
+
+    conv_b = jax.vmap(
+        lambda f, w_, b_, s_, p_, r_: _conv(f, w_, b_, s_, p_, r_, use_pallas=use_pallas),
+        in_axes=(0, None, None, None, None, None),
+    )
+
+    feat = maybe_q(feat, "a_in")
+    for li in range(cfg.layers):
+        last = li == cfg.layers - 1
+        w = maybe_q(params[f"w{li}"], f"w{li}")
+        b = maybe_q(params[f"b{li}"], f"w{li}")
+        feat = conv_b(feat, w, b, strides[li], cfg.padding, False)
+        if not last:
+            if train:
+                mean = jnp.mean(feat, axis=(0, 2))
+                var = jnp.var(feat, axis=(0, 2))
+                new_state[f"bn{li}_mean"] = (
+                    (1 - momentum) * state[f"bn{li}_mean"] + momentum * mean
+                )
+                new_state[f"bn{li}_var"] = (
+                    (1 - momentum) * state[f"bn{li}_var"] + momentum * var
+                )
+            else:
+                mean = state[f"bn{li}_mean"]
+                var = state[f"bn{li}_var"]
+            feat = (feat - mean[None, :, None]) / jnp.sqrt(var[None, :, None] + 1e-5)
+            feat = (
+                feat * params[f"bn{li}_gamma"][None, :, None]
+                + params[f"bn{li}_beta"][None, :, None]
+            )
+            feat = jnp.maximum(feat, 0.0)
+        feat = maybe_q(feat, f"a{li}")
+
+    # (B, V_p, W_last) -> interleave channels: column j carries symbols
+    # j*V_p .. j*V_p+V_p-1 (Fig. 1: flatten so each element is a symbol).
+    return jnp.transpose(feat, (0, 2, 1)).reshape(feat.shape[0], -1), new_state
+
+
+def cnn_forward(
+    params: Params,
+    state: Params,
+    x: jnp.ndarray,
+    cfg: CnnConfig,
+    train: bool = False,
+    momentum: float = 0.1,
+    quant: Params | None = None,
+    use_pallas: bool | None = None,
+) -> tuple[jnp.ndarray, Params]:
+    """Single-sequence wrapper of :func:`cnn_forward_batch` (``x: (W,)``)."""
+    out, new_state = cnn_forward_batch(
+        params,
+        state,
+        x[None, :],
+        cfg,
+        train=train,
+        momentum=momentum,
+        quant=quant,
+        use_pallas=use_pallas,
+    )
+    return out[0], new_state
+
+
+def cnn_fold_bn(params: Params, state: Params, cfg: CnnConfig) -> Params:
+    """Fold BatchNorm scale/shift into conv weights for inference.
+
+    This is what the FPGA datapath executes (one MAC array per layer, no
+    separate normalization stage): w' = w * g / sqrt(v + eps),
+    b' = (b - m) * g / sqrt(v + eps) + beta.
+    """
+    folded: Params = {"cfg": params.get("cfg")}
+    for li in range(cfg.layers):
+        w, b = params[f"w{li}"], params[f"b{li}"]
+        if li < cfg.layers - 1:
+            g = params[f"bn{li}_gamma"]
+            beta = params[f"bn{li}_beta"]
+            m = state[f"bn{li}_mean"]
+            v = state[f"bn{li}_var"]
+            scale = g / jnp.sqrt(v + 1e-5)
+            w = w * scale[:, None, None]
+            b = (b - m) * scale + beta
+        folded[f"w{li}"] = w
+        folded[f"b{li}"] = b
+    return folded
+
+
+def cnn_forward_folded(
+    params: Params,
+    x: jnp.ndarray,
+    cfg: CnnConfig,
+    quant_bits: dict[str, tuple[int, int]] | None = None,
+) -> jnp.ndarray:
+    """Inference pass with BN folded (the exported / FPGA graph).
+
+    ``quant_bits`` applies static integer Q(m.n) fake quantization —
+    the exact arithmetic the Rust fixed-point datapath mirrors
+    bit-for-bit.  The export uses ``ref.fake_quant`` (numerically
+    identical to the Pallas quant kernel, pytest-enforced): the old
+    xla_extension 0.5.1 runtime crashes on modules containing multiple
+    Pallas-lowered call graphs from the same kernel, and the ref
+    formulation lowers to plain elementwise HLO.
+    """
+    feat = x[None, :]
+    strides = cfg.strides()
+
+    def maybe_q(t, key_):
+        if quant_bits is None or key_ not in quant_bits:
+            return t
+        ib, fb = quant_bits[key_]
+        return ref.fake_quant(t, float(int(ib)), float(int(fb)))
+
+    feat = maybe_q(feat, "a_in")
+    for li in range(cfg.layers):
+        last = li == cfg.layers - 1
+        w = maybe_q(params[f"w{li}"], f"w{li}")
+        b = maybe_q(params[f"b{li}"], f"w{li}")
+        feat = _conv(feat, w, b, strides[li], cfg.padding, relu=not last)
+        feat = maybe_q(feat, f"a{li}")
+    return feat.T.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Linear FIR equalizer (Sec. 3.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FirConfig:
+    taps: int = 25
+    n_os: int = N_OS
+
+    def mac_per_symbol(self) -> float:
+        # M MACs per output sample; every N_os-th sample is a symbol,
+        # but only symbol-position outputs need computing -> M per symbol
+        # ... the paper counts MACs to calculate one output *symbol*.
+        return float(self.taps)
+
+
+def fir_init(cfg: FirConfig, key: jax.Array) -> Params:
+    w = jnp.zeros((cfg.taps,)).at[cfg.taps // 2].set(1.0)
+    w = w + 0.01 * jax.random.normal(key, (cfg.taps,))
+    return {"w": w}
+
+
+def fir_forward(params: Params, x: jnp.ndarray, cfg: FirConfig) -> jnp.ndarray:
+    """Equalize samples then decimate to symbol rate (Eq. 1)."""
+    y = ref.fir(x, params["w"])
+    return y[:: cfg.n_os]
+
+
+# ---------------------------------------------------------------------------
+# Volterra equalizer (Sec. 3.3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VolterraConfig:
+    m1: int = 25
+    m2: int = 9
+    m3: int = 3
+    n_os: int = N_OS
+
+    def mac_per_symbol(self) -> float:
+        return float(self.m1 + self.m2**2 + self.m3**3)
+
+
+def volterra_init(cfg: VolterraConfig, key: jax.Array) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    w1 = jnp.zeros((cfg.m1,)).at[cfg.m1 // 2].set(1.0)
+    return {
+        "w0": jnp.zeros(()),
+        "w1": w1 + 0.01 * jax.random.normal(k1, (cfg.m1,)),
+        "w2": 0.001 * jax.random.normal(k2, (cfg.m2, cfg.m2)),
+        "w3": 0.0001 * jax.random.normal(k3, (cfg.m3, cfg.m3, cfg.m3)),
+    }
+
+
+def volterra_forward(params: Params, x: jnp.ndarray, cfg: VolterraConfig) -> jnp.ndarray:
+    y = ref.volterra(x, params["w0"], params["w1"], params["w2"], params["w3"])
+    return y[:: cfg.n_os]

@@ -1,0 +1,326 @@
+"""Automatic quantization: learnable per-layer bit widths (Sec. 4).
+
+Follows the BitPruning-style approach the paper adapts [20]: the loss
+is augmented with a bit-width penalty
+
+    loss = MSE + QLF * (B_p + B_a) / 2
+
+where ``B_p`` / ``B_a`` are the average bit widths of the trainable
+parameters / activations, and each width is a *continuous* trainable
+value made differentiable by interpolating between the adjacent
+integer-width quantizations (``ref.fake_quant``).  Unlike [20], the
+integer and fraction widths are learned *separately*, so the learned
+format maps 1:1 onto the fixed-point hardware datapath (no runtime
+scaling).
+
+Training runs in the paper's three phases (Fig. 5/6):
+  1. full-precision training (widths pinned at 16.16),
+  2. bit-width-aware training (widths + weights trained jointly),
+  3. fine-tuning (widths frozen at the next-highest integer).
+
+Gradient flow: ``round`` is a.e. flat, so a straight-through estimator
+carries the data gradient while the interpolation coefficients carry
+the width gradient — ``fake_quant_ste`` below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import channels, model, train
+from .kernels import ref
+
+Params = dict[str, Any]
+
+BITS_MIN, BITS_MAX = 1.0, 16.0
+
+# Captured before any monkeypatching (train_qat temporarily swaps
+# ``ref.fake_quant`` for the STE variant so the model picks it up).
+_FAKE_QUANT = ref.fake_quant
+
+
+def fake_quant_ste(x: jnp.ndarray, int_bits, frac_bits) -> jnp.ndarray:
+    """Interpolated fixed-point quantization with straight-through data grad.
+
+    Numerically equals ``ref.fake_quant``; d/dx == 1 (STE), d/dbits flows
+    through the interpolation coefficients.
+    """
+    y = _FAKE_QUANT(x, int_bits, frac_bits)
+    return y + x - jax.lax.stop_gradient(x)
+
+
+def clip_bits(b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(b, BITS_MIN, BITS_MAX)
+
+
+@dataclasses.dataclass
+class QatResult:
+    params: Params
+    bn_state: Params
+    bits: dict[str, tuple[int, int]]  # frozen integer widths per tensor
+    history: list[dict]  # per-log-step: iter, phase, avg bits, ber
+    ber: float
+
+
+def init_bit_params(cfg: model.CnnConfig) -> Params:
+    """One (int, frac) width pair per weight tensor and per activation."""
+    bits: Params = {}
+    for li in range(cfg.layers):
+        bits[f"w{li}"] = jnp.array([16.0, 16.0])  # [int, frac]: paper starts 16.16
+        bits[f"a{li}"] = jnp.array([16.0, 16.0])
+    bits["a_in"] = jnp.array([16.0, 16.0])
+    return bits
+
+
+def _quant_spec(bits: Params) -> dict[str, tuple[jnp.ndarray, jnp.ndarray]]:
+    return {k: (clip_bits(v)[0], clip_bits(v)[1]) for k, v in bits.items()}
+
+
+def avg_bits(bits: Params, prefix: str) -> jnp.ndarray:
+    vals = [jnp.sum(clip_bits(v)) for k, v in bits.items() if k.startswith(prefix)]
+    return jnp.stack(vals).mean()
+
+
+def frozen_bits(bits: Params) -> dict[str, tuple[int, int]]:
+    """Phase-3 freeze: each width fixed to the next-highest integer."""
+    out = {}
+    for k, v in bits.items():
+        b = np.asarray(clip_bits(v))
+        out[k] = (int(np.ceil(b[0])), int(np.ceil(b[1])))
+    return out
+
+
+def train_qat(
+    cfg: model.CnnConfig,
+    data: channels.ChannelData,
+    qlf: float = 5e-4,
+    iters_fp: int = 800,
+    iters_bits: int = 1200,
+    iters_ft: int = 600,
+    batch: int = 32,
+    seq_sym: int = 128,
+    lr: float = 1e-3,
+    bits_lr: float = 0.05,
+    seed: int = 0,
+    eval_every: int = 100,
+    eval_data: channels.ChannelData | None = None,
+) -> QatResult:
+    """Three-phase quantization-aware training of the CNN equalizer."""
+    x_all, y_all = channels.windows(data, seq_sym)
+    params = model.cnn_init(cfg, jax.random.PRNGKey(seed))
+    cfg_meta = params.pop("cfg")
+    bn_state = model.cnn_bn_state(cfg)
+    bits = init_bit_params(cfg)
+    ev = eval_data or data
+
+    def loss_quant(p, bt, s, xb, yb, use_qlf):
+        spec = _quant_spec(bt)
+        pred, new_s = model.cnn_forward_batch(p, s, xb, cfg, train=True, quant=spec, use_pallas=False)
+        mse = jnp.mean((pred - yb) ** 2)
+        bp = avg_bits(bt, "w")
+        ba = (avg_bits(bt, "a") * cfg.layers + jnp.sum(clip_bits(bt["a_in"]))) / (
+            cfg.layers + 1
+        )
+        return mse + use_qlf * (bp + ba) / 2.0, new_s
+
+    # Patch the model's quantizer to the STE variant for training.
+    orig_fq = ref.fake_quant
+    ref.fake_quant = fake_quant_ste  # type: ignore[assignment]
+    try:
+        history: list[dict] = []
+        opt_p = train.adam_init(params)
+        opt_b = train.adam_init(bits)
+
+        @jax.jit
+        def step_fp(p, s, om, ov, ot, xb, yb):
+            def lf(p_):
+                pred, new_s = model.cnn_forward_batch(p_, s, xb, cfg, train=True, use_pallas=False)
+                return jnp.mean((pred - yb) ** 2), new_s
+
+            (loss, new_s), g = jax.value_and_grad(lf, has_aux=True)(p)
+            new_p, opt = train.adam_update(p, g, train.AdamState(om, ov, ot), lr=lr)
+            return new_p, new_s, opt.m, opt.v, opt.step, loss
+
+        @jax.jit
+        def step_bits(p, bt, s, pm, pv, pt, bm, bv, bt_step, xb, yb):
+            (loss, new_s), (gp, gb) = jax.value_and_grad(
+                lambda p_, b_: loss_quant(p_, b_, s, xb, yb, qlf), argnums=(0, 1), has_aux=True
+            )(p, bt)
+            new_p, op = train.adam_update(p, gp, train.AdamState(pm, pv, pt), lr=lr)
+            new_b, ob = train.adam_update(bt, gb, train.AdamState(bm, bv, bt_step), lr=bits_lr)
+            return new_p, new_b, new_s, op.m, op.v, op.step, ob.m, ob.v, ob.step, loss
+
+        gen = train._batches(x_all, y_all, batch, seed)
+
+        def log(it, phase, cur_bits_spec):
+            b_eval = eval_quant(params, bn_state, cfg, ev, cur_bits_spec)
+            ba = float(
+                np.mean(
+                    [np.sum(np.clip(np.asarray(v), BITS_MIN, BITS_MAX)) for k, v in bits.items() if k.startswith("a")]
+                )
+            )
+            bp = float(
+                np.mean(
+                    [np.sum(np.clip(np.asarray(v), BITS_MIN, BITS_MAX)) for k, v in bits.items() if k.startswith("w")]
+                )
+            )
+            history.append(
+                {"iter": it, "phase": phase, "b_act": ba, "b_par": bp, "ber": b_eval}
+            )
+
+        pm, pv, pt = opt_p.m, opt_p.v, opt_p.step
+        # -------- Phase 1: full precision --------
+        for it in range(iters_fp):
+            xb, yb = next(gen)
+            params, bn_state, pm, pv, pt, _ = step_fp(params, bn_state, pm, pv, pt, xb, yb)
+            if it % eval_every == 0:
+                log(it, 1, None)
+
+        # -------- Phase 2: bit-width-aware --------
+        bm, bv, bts = opt_b.m, opt_b.v, opt_b.step
+        for it in range(iters_bits):
+            xb, yb = next(gen)
+            params, bits, bn_state, pm, pv, pt, bm, bv, bts, _ = step_bits(
+                params, bits, bn_state, pm, pv, pt, bm, bv, bts, xb, yb
+            )
+            if it % eval_every == 0:
+                log(iters_fp + it, 2, _quant_spec(bits))
+
+        # -------- Phase 3: fine-tune with frozen integer widths --------
+        frozen = frozen_bits(bits)
+        frozen_spec = {k: (jnp.float32(v[0]), jnp.float32(v[1])) for k, v in frozen.items()}
+
+        @jax.jit
+        def step_ft(p, s, om, ov, ot, xb, yb):
+            def lf(p_):
+                pred, new_s = model.cnn_forward_batch(
+                    p_, s, xb, cfg, train=True, quant=frozen_spec, use_pallas=False
+                )
+                return jnp.mean((pred - yb) ** 2), new_s
+
+            (loss, new_s), g = jax.value_and_grad(lf, has_aux=True)(p)
+            new_p, opt = train.adam_update(p, g, train.AdamState(om, ov, ot), lr=lr * 0.3)
+            return new_p, new_s, opt.m, opt.v, opt.step, loss
+
+        for it in range(iters_ft):
+            xb, yb = next(gen)
+            params, bn_state, pm, pv, pt, _ = step_ft(params, bn_state, pm, pv, pt, xb, yb)
+            if it % eval_every == 0:
+                # Bits are frozen: log the integer widths.
+                sp = {k: (jnp.float32(v[0]), jnp.float32(v[1])) for k, v in frozen.items()}
+                b_eval = eval_quant(params, bn_state, cfg, ev, sp)
+                ba = float(np.mean([v[0] + v[1] for k, v in frozen.items() if k.startswith("a")]))
+                bp = float(np.mean([v[0] + v[1] for k, v in frozen.items() if k.startswith("w")]))
+                history.append(
+                    {"iter": iters_fp + iters_bits + it, "phase": 3, "b_act": ba, "b_par": bp, "ber": b_eval}
+                )
+    finally:
+        ref.fake_quant = orig_fq  # type: ignore[assignment]
+
+    final_ber = eval_quant(
+        params,
+        bn_state,
+        cfg,
+        ev,
+        {k: (jnp.float32(v[0]), jnp.float32(v[1])) for k, v in frozen.items()},
+    )
+    params["cfg"] = cfg_meta
+    return QatResult(
+        params=params, bn_state=bn_state, bits=frozen, history=history, ber=final_ber
+    )
+
+
+def eval_quant(
+    params: Params,
+    bn_state: Params,
+    cfg: model.CnnConfig,
+    data: channels.ChannelData,
+    quant_spec,
+    seq_sym: int = 256,
+    max_windows: int = 64,
+) -> float:
+    p = {k: v for k, v in params.items() if k != "cfg"}
+    x_all, y_all = channels.windows(data, seq_sym)
+    x_all, y_all = x_all[:max_windows], y_all[:max_windows]
+
+    @jax.jit
+    def fwd(xb):
+        return model.cnn_forward_batch(
+            p, bn_state, xb, cfg, train=False, quant=quant_spec, use_pallas=False
+        )[0]
+
+    preds = np.asarray(fwd(jnp.asarray(x_all)))
+    o = min(cfg.receptive_field_symbols(), preds.shape[1] // 4)
+    return train.ber(preds[:, o:-o or None].reshape(-1), y_all[:, o:-o or None].reshape(-1))
+
+
+def save_history(history: list[dict], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+
+
+def main() -> None:
+    """Regenerate Figs. 5/6: bit-width and BER trajectories per QLF.
+
+    Writes ``artifacts/qat_history_<channel>.json`` (one trajectory per
+    QLF, the two figures' series) and ``qat_bits_<channel>.json`` (the
+    learned formats from the smallest-QLF run — consumed by ``aot.py``
+    for the quantized artifact).
+    """
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("--channel", default="imdd", choices=["imdd", "proakis"])
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--qlfs", default="0.5,0.005,0.0005")
+    ap.add_argument("--iters-fp", type=int, default=2000)
+    ap.add_argument("--iters-bits", type=int, default=2000)
+    ap.add_argument("--iters-ft", type=int, default=1000)
+    ap.add_argument("--n-sym", type=int, default=120_000)
+    args = ap.parse_args()
+
+    os.environ.setdefault("EQ_USE_PALLAS", "0")
+    cfg = model.SELECTED
+    data = channels.make_dataset(args.channel, args.n_sym, seed=0)
+    ev = channels.make_dataset(args.channel, args.n_sym // 2, seed=1000)
+
+    histories = {}
+    final_bits = None
+    fp_ref_ber = None
+    for qlf in [float(q) for q in args.qlfs.split(",")]:
+        print(f"[qat] QLF={qlf}")
+        r = train_qat(
+            cfg,
+            data,
+            qlf=qlf,
+            iters_fp=args.iters_fp,
+            iters_bits=args.iters_bits,
+            iters_ft=args.iters_ft,
+            eval_data=ev,
+        )
+        histories[str(qlf)] = r.history
+        print(f"[qat] QLF={qlf}: final BER {r.ber:.3e}, bits {r.bits}")
+        final_bits = r.bits  # smallest QLF runs last -> least aggressive
+        fp_ref_ber = r.history[len(r.history) // 3]["ber"]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    with open(os.path.join(args.out_dir, f"qat_history_{args.channel}.json"), "w") as f:
+        json.dump({"channel": args.channel, "fp_ref_ber": fp_ref_ber, "runs": histories}, f, indent=1)
+    # Learned formats are written under a side name: the exported
+    # quantized artifact keeps the paper's Sec. 4 operating point
+    # (Q3.10 weights / Q4.6 activations) unless the user promotes the
+    # learned file to qat_bits_<channel>.json.
+    with open(os.path.join(args.out_dir, f"qat_bits_learned_{args.channel}.json"), "w") as f:
+        json.dump({k: list(v) for k, v in final_bits.items()}, f, indent=1)
+    print(f"[qat] wrote histories + bits to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

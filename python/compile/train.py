@@ -1,0 +1,250 @@
+"""Build-time training: MSE + Adam, as in the paper (Sec. 3.4).
+
+optax is not available in this image, so Adam is implemented directly;
+it is the textbook algorithm (Kingma & Ba) with bias correction, which
+is also what the paper uses for all three equalizer families.
+
+All training happens at build time (``make artifacts`` / the DSE
+sweeps); nothing here ever runs on the Rust request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import channels, model
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdamState:
+    m: Params
+    v: Params
+    step: int
+
+
+def adam_init(params: Params) -> AdamState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamState(m=zeros, v=jax.tree.map(jnp.zeros_like, params), step=0)
+
+
+def adam_update(
+    params: Params,
+    grads: Params,
+    state: AdamState,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> tuple[Params, AdamState]:
+    step = state.step + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state.v, grads)
+    mhat_scale = 1.0 / (1 - b1**step)
+    vhat_scale = 1.0 / (1 - b2**step)
+    new = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new, AdamState(m=m, v=v, step=step)
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+
+def ber(pred_sym: np.ndarray, true_sym: np.ndarray) -> float:
+    """Bit error ratio for PAM-2 after nearest-symbol decision (sign)."""
+    dec = np.where(np.asarray(pred_sym) >= 0.0, 1.0, -1.0)
+    return float(np.mean(dec != np.asarray(true_sym)))
+
+
+# ---------------------------------------------------------------------------
+# Training loops
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Params
+    bn_state: Params
+    ber: float
+    loss_curve: list[float]
+
+
+def _batches(x: np.ndarray, y: np.ndarray, batch: int, seed: int):
+    rng = np.random.RandomState(seed)
+    n = x.shape[0]
+    while True:
+        idx = rng.randint(0, n, size=batch)
+        yield x[idx], y[idx]
+
+
+def train_cnn(
+    cfg: model.CnnConfig,
+    data: channels.ChannelData,
+    iters: int = 4000,
+    batch: int = 64,
+    seq_sym: int = 128,
+    lr: float = 1e-3,
+    seed: int = 0,
+    eval_data: channels.ChannelData | None = None,
+) -> TrainResult:
+    """Supervised MSE training of the CNN template on one channel."""
+    x_all, y_all = channels.windows(data, seq_sym)
+    params = model.cnn_init(cfg, jax.random.PRNGKey(seed))
+    bn_state = model.cnn_bn_state(cfg)
+    cfg_meta = params.pop("cfg")
+    opt = adam_init(params)
+
+    def loss_fn(p, s, xb, yb):
+        pred, new_s = model.cnn_forward_batch(p, s, xb, cfg, train=True, use_pallas=False)
+        return jnp.mean((pred - yb) ** 2), new_s
+
+    @jax.jit
+    def step(p, s, o_m, o_v, o_t, xb, yb):
+        (loss, new_s), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, s, xb, yb)
+        new_p, new_opt = adam_update(p, grads, AdamState(o_m, o_v, o_t), lr=lr)
+        return new_p, new_s, new_opt.m, new_opt.v, new_opt.step, loss
+
+    curve: list[float] = []
+    gen = _batches(x_all, y_all, batch, seed)
+    m, v, t = opt.m, opt.v, opt.step
+    for it in range(iters):
+        xb, yb = next(gen)
+        params, bn_state, m, v, t, loss = step(params, bn_state, m, v, t, xb, yb)
+        if it % 50 == 0:
+            curve.append(float(loss))
+
+    ev = eval_data or data
+    b = eval_cnn(params, bn_state, cfg, ev)
+    params["cfg"] = cfg_meta
+    return TrainResult(params=params, bn_state=bn_state, ber=b, loss_curve=curve)
+
+
+def eval_cnn(
+    params: Params,
+    bn_state: Params,
+    cfg: model.CnnConfig,
+    data: channels.ChannelData,
+    seq_sym: int = 512,
+) -> float:
+    p = {k: v for k, v in params.items() if k != "cfg"}
+    x_all, y_all = channels.windows(data, seq_sym)
+
+    @jax.jit
+    def fwd(xb):
+        return model.cnn_forward_batch(p, bn_state, xb, cfg, train=False, use_pallas=False)[0]
+
+    preds = np.asarray(fwd(jnp.asarray(x_all)))
+    # Discard half a receptive field at each border (the coordinator's
+    # OGM/ORM does the same on the Rust side).
+    o = min(cfg.receptive_field_symbols(), preds.shape[1] // 4)
+    return ber(preds[:, o:-o or None].reshape(-1), y_all[:, o:-o or None].reshape(-1))
+
+
+def train_fir(
+    cfg: model.FirConfig,
+    data: channels.ChannelData,
+    iters: int = 1500,
+    batch: int = 32,
+    seq_sym: int = 128,
+    lr: float = 2e-3,
+    seed: int = 0,
+    eval_data: channels.ChannelData | None = None,
+) -> TrainResult:
+    """MSE/Adam training of the linear equalizer (Sec. 3.2)."""
+    x_all, y_all = channels.windows(data, seq_sym)
+    params = model.fir_init(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    def loss_fn(p, xb, yb):
+        pred = jax.vmap(lambda x: model.fir_forward(p, x, cfg))(xb)
+        return jnp.mean((pred - yb) ** 2)
+
+    @jax.jit
+    def step(p, o_m, o_v, o_t, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb)
+        new_p, new_opt = adam_update(p, grads, AdamState(o_m, o_v, o_t), lr=lr)
+        return new_p, new_opt.m, new_opt.v, new_opt.step, loss
+
+    curve: list[float] = []
+    gen = _batches(x_all, y_all, batch, seed)
+    m, v, t = opt.m, opt.v, opt.step
+    for it in range(iters):
+        xb, yb = next(gen)
+        params, m, v, t, loss = step(params, m, v, t, xb, yb)
+        if it % 50 == 0:
+            curve.append(float(loss))
+
+    ev = eval_data or data
+    b = eval_generic(lambda x: model.fir_forward(params, x, cfg), cfg.taps // (2 * 2) + 1, ev)
+    return TrainResult(params=params, bn_state={}, ber=b, loss_curve=curve)
+
+
+def train_volterra(
+    cfg: model.VolterraConfig,
+    data: channels.ChannelData,
+    iters: int = 1500,
+    batch: int = 32,
+    seq_sym: int = 128,
+    lr: float = 2e-3,
+    seed: int = 0,
+    eval_data: channels.ChannelData | None = None,
+) -> TrainResult:
+    """MSE/Adam training of the order-3 Volterra equalizer (Sec. 3.3)."""
+    x_all, y_all = channels.windows(data, seq_sym)
+    params = model.volterra_init(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    def loss_fn(p, xb, yb):
+        pred = jax.vmap(lambda x: model.volterra_forward(p, x, cfg))(xb)
+        return jnp.mean((pred - yb) ** 2)
+
+    @jax.jit
+    def step(p, o_m, o_v, o_t, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb)
+        new_p, new_opt = adam_update(p, grads, AdamState(o_m, o_v, o_t), lr=lr)
+        return new_p, new_opt.m, new_opt.v, new_opt.step, loss
+
+    curve: list[float] = []
+    gen = _batches(x_all, y_all, batch, seed)
+    m, v, t = opt.m, opt.v, opt.step
+    for it in range(iters):
+        xb, yb = next(gen)
+        params, m, v, t, loss = step(params, m, v, t, xb, yb)
+        if it % 50 == 0:
+            curve.append(float(loss))
+
+    ev = eval_data or data
+    half = max(cfg.m1, cfg.m2, cfg.m3) // (2 * 2) + 1
+    b = eval_generic(lambda x: model.volterra_forward(params, x, cfg), half, ev)
+    return TrainResult(params=params, bn_state={}, ber=b, loss_curve=curve)
+
+
+def eval_generic(
+    fwd: Callable[[jnp.ndarray], jnp.ndarray],
+    border_sym: int,
+    data: channels.ChannelData,
+    seq_sym: int = 512,
+) -> float:
+    x_all, y_all = channels.windows(data, seq_sym)
+    f = jax.jit(jax.vmap(fwd))
+    preds = np.asarray(f(jnp.asarray(x_all)))
+    o = min(border_sym, preds.shape[1] // 4)
+    return ber(preds[:, o:-o or None].reshape(-1), y_all[:, o:-o or None].reshape(-1))

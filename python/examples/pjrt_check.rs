@@ -1,0 +1,17 @@
+// debug: compare PJRT output against the python test vector
+use equalizer::runtime::{ArtifactRegistry, Engine};
+use equalizer::util::json;
+fn main() -> anyhow::Result<()> {
+    let reg = ArtifactRegistry::discover("artifacts")?;
+    let engine = Engine::cpu()?;
+    let m = engine.load(reg.exact("cnn_imdd_w1024")?)?;
+    let tv = json::parse_file("artifacts/testvec_cnn_imdd.json")?;
+    let (x, _) = tv.req("x")?.as_tensor_f32()?;
+    let (y_ref, _) = tv.req("y")?.as_tensor_f32()?;
+    let y = m.run_f32(&x)?;
+    let maxdiff = y.iter().zip(&y_ref).map(|(a,b)| (a-b).abs()).fold(0.0f32, f32::max);
+    println!("len {} vs {}, maxdiff {}", y.len(), y_ref.len(), maxdiff);
+    println!("first 8 rust:   {:?}", &y[..8]);
+    println!("first 8 python: {:?}", &y_ref[..8]);
+    Ok(())
+}

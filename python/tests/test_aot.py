@@ -1,0 +1,66 @@
+"""AOT bridge: HLO-text export of the Pallas-lowered graphs."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def folded():
+    cfg = model.SELECTED
+    params = model.cnn_init(cfg, jax.random.PRNGKey(0))
+    params.pop("cfg")
+    bn = model.cnn_bn_state(cfg)
+    return model.cnn_fold_bn(params, bn, cfg), cfg
+
+
+class TestHloExport:
+    def test_text_no_custom_call(self, folded):
+        """interpret=True Pallas must lower to plain HLO — the CPU PJRT
+        client in the Rust runtime cannot execute Mosaic custom-calls."""
+        os.environ["EQ_USE_PALLAS"] = "1"
+        f, cfg = folded
+        lowered = jax.jit(lambda x: (model.cnn_forward_folded(f, x, cfg),)).lower(
+            jax.ShapeDtypeStruct((256,), jnp.float32)
+        )
+        text = aot.to_hlo_text(lowered)
+        assert "custom-call" not in text
+        assert "HloModule" in text
+        assert "f32[256]" in text  # parameter shape visible
+        assert "f32[128]" in text  # output symbols
+
+    def test_quant_variant_exports(self, folded):
+        os.environ["EQ_USE_PALLAS"] = "1"
+        f, cfg = folded
+        bits = {k: (4, 8) for k in ["a_in", "w0", "a0", "w1", "a1", "w2", "a2"]}
+        lowered = jax.jit(
+            lambda x: (model.cnn_forward_folded(f, x, cfg, quant_bits=bits),)
+        ).lower(jax.ShapeDtypeStruct((256,), jnp.float32))
+        text = aot.to_hlo_text(lowered)
+        assert "custom-call" not in text
+
+    def test_weight_roundtrip(self, folded, tmp_path):
+        _, cfg = folded
+        params = model.cnn_init(cfg, jax.random.PRNGKey(1))
+        cfg_meta = params.pop("cfg")
+        params["cfg"] = cfg_meta
+        bn = model.cnn_bn_state(cfg)
+        p = tmp_path / "w.json"
+        aot.save_weights(str(p), params, bn, cfg, ber=1e-3)
+        p2, bn2, cfg2, ber = aot.load_weights(str(p))
+        assert cfg2 == cfg and ber == 1e-3
+        import numpy as np
+
+        np.testing.assert_allclose(
+            np.asarray(p2["w0"]), np.asarray(params["w0"]), atol=1e-7
+        )
+
+    def test_default_bits_cover_selected(self):
+        cfg = model.SELECTED
+        for li in range(cfg.layers):
+            assert f"w{li}" in aot.DEFAULT_BITS
+            assert f"a{li}" in aot.DEFAULT_BITS

@@ -1,0 +1,136 @@
+"""Channel-simulator properties (Sec. 2 substrates)."""
+
+import numpy as np
+import pytest
+
+from compile import channels
+
+
+class TestPrbs:
+    def test_deterministic(self):
+        a = channels.prbs(1000, seed=7)
+        b = channels.prbs(1000, seed=7)
+        np.testing.assert_array_equal(a, b)
+
+    def test_binary_and_balanced(self):
+        s = channels.prbs(20000, seed=0)
+        assert set(np.unique(s)) == {-1.0, 1.0}
+        assert abs(s.mean()) < 0.05
+
+    def test_seed_changes_sequence(self):
+        assert not np.array_equal(channels.prbs(100, 0), channels.prbs(100, 1))
+
+
+class TestFilters:
+    def test_rrc_unit_energy(self):
+        taps = channels.rrc_taps(0.2, 32, 2)
+        assert np.sum(taps**2) == pytest.approx(1.0, abs=1e-9)
+
+    def test_rrc_symmetric(self):
+        taps = channels.rrc_taps(0.2, 16, 2)
+        np.testing.assert_allclose(taps[1:], taps[1:][::-1], atol=1e-9)
+
+    def test_rc_nyquist_zero_crossings(self):
+        """RC pulse is ~0 at nonzero symbol-spaced offsets (ISI-free)."""
+        sps = 2
+        taps = channels.rc_taps(0.3, 16, sps)
+        center = len(taps) // 2
+        for k in range(1, 6):
+            assert abs(taps[center + k * sps]) < 1e-6
+
+
+class TestImdd:
+    def test_shapes_and_rate(self):
+        d = channels.imdd(5000, seed=0)
+        assert d.rx.shape == (5000 * channels.N_OS,)
+        assert d.symbols.shape == (5000,)
+        assert d.rx.dtype == np.float32
+
+    def test_normalized(self):
+        d = channels.imdd(20000, seed=0)
+        assert abs(float(d.rx.mean())) < 0.05
+        assert float(d.rx.std()) == pytest.approx(1.0, abs=0.1)
+
+    def test_symbol_correlation(self):
+        """Symbol-position samples must carry symbol information."""
+        d = channels.imdd(20000, seed=0)
+        sym_samples = d.rx[:: channels.N_OS]
+        c = np.corrcoef(sym_samples, d.symbols)[0, 1]
+        assert abs(c) > 0.3, f"rx decorrelated from symbols (c={c})"
+
+    def test_nonlinear_residual(self):
+        """CD + square-law must leave an ISI floor a 1-tap scaler can't fix.
+
+        The best single-coefficient linear estimate of the symbols from
+        the aligned samples must still misdetect some symbols at 20 dB —
+        the nonlinearity the CNN exists to fix.
+        """
+        d = channels.imdd(40000, seed=0, snr_db=30.0)
+        x = d.rx[:: channels.N_OS]
+        a = float(np.dot(x, d.symbols) / np.dot(x, x))
+        dec = np.where(a * x >= 0, 1.0, -1.0)
+        ber = np.mean(dec != d.symbols)
+        assert ber > 1e-3
+
+    def test_dispersion_spreads_energy(self):
+        """Longer fiber -> more ISI -> lower symbol-sample correlation."""
+        c = []
+        for km in [1.0, 31.5]:
+            d = channels.imdd(20000, seed=0, fiber_km=km, snr_db=40.0)
+            c.append(abs(np.corrcoef(d.rx[:: channels.N_OS], d.symbols)[0, 1]))
+        assert c[1] < c[0]
+
+    def test_deterministic(self):
+        a = channels.imdd(1000, seed=3)
+        b = channels.imdd(1000, seed=3)
+        np.testing.assert_array_equal(a.rx, b.rx)
+
+
+class TestProakisB:
+    def test_shapes(self):
+        d = channels.proakis_b(5000, seed=0)
+        assert d.rx.shape == (10000,)
+        assert d.symbols.shape == (5000,)
+
+    def test_impulse_response_is_proakis_b(self):
+        np.testing.assert_allclose(channels.H_PROAKIS_B, [0.407, 0.815, 0.407])
+
+    def test_linear_channel_is_linear(self):
+        """Superposition: rx(a+b) == rx(a) + rx(b) (noise-free)."""
+        import compile.channels as ch
+
+        def tx(symbols):
+            shaped = np.convolve(
+                ch._upsample(symbols, ch.N_OS), ch.rc_taps(0.3, 16, ch.N_OS), "same"
+            )
+            h_up = np.zeros((len(ch.H_PROAKIS_B) - 1) * ch.N_OS + 1)
+            h_up[:: ch.N_OS] = ch.H_PROAKIS_B
+            return np.convolve(shaped, h_up, "same")
+
+        rng = np.random.RandomState(0)
+        a = rng.randn(500)
+        b = rng.randn(500)
+        np.testing.assert_allclose(tx(a + b), tx(a) + tx(b), atol=1e-9)
+
+    def test_snr_controls_noise(self):
+        lo = channels.proakis_b(5000, seed=0, snr_db=5.0)
+        hi = channels.proakis_b(5000, seed=0, snr_db=30.0)
+        # Same symbols, different noise level: high-SNR rx correlates better.
+        c_lo = abs(np.corrcoef(lo.rx[::2], lo.symbols)[0, 1])
+        c_hi = abs(np.corrcoef(hi.rx[::2], hi.symbols)[0, 1])
+        assert c_hi > c_lo
+
+
+class TestWindows:
+    def test_shapes_and_alignment(self):
+        d = channels.proakis_b(4000, seed=0)
+        x, y = channels.windows(d, seq_sym=128)
+        assert x.shape[1] == 256 and y.shape[1] == 128
+        assert x.shape[0] == y.shape[0] == 4000 // 128
+        np.testing.assert_array_equal(y[0], d.symbols[:128])
+        np.testing.assert_array_equal(x[1], d.rx[256:512])
+
+    def test_overlapping_stride(self):
+        d = channels.proakis_b(1000, seed=0)
+        x, y = channels.windows(d, seq_sym=100, stride_sym=50)
+        assert x.shape[0] == (1000 - 100) // 50 + 1

@@ -1,0 +1,176 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core numeric signal of the build path — the exported HLO
+artifacts contain the Pallas lowering, so any mismatch here would ship
+into the Rust runtime.  hypothesis sweeps shapes/strides/padding.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv1d as pallas_conv
+from compile.kernels import quant as pallas_quant
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+class TestConv1d:
+    @given(
+        cin=st.integers(1, 6),
+        cout=st.integers(1, 9),
+        k=st.sampled_from([3, 9, 15, 21]),
+        width=st.integers(32, 400),
+        stride=st.sampled_from([1, 2, 4, 8, 16]),
+        relu=st.booleans(),
+    )
+    def test_matches_ref(self, cin, cout, k, width, stride, relu):
+        if width + 2 * ((k - 1) // 2) < k:
+            return
+        x = _rand(0, (cin, width))
+        w = _rand(1, (cout, cin, k))
+        b = _rand(2, (cout,))
+        pad = (k - 1) // 2
+        got = pallas_conv.conv1d(x, w, b, stride, pad, relu=relu)
+        want = ref.conv1d(x, w, b, stride, pad, relu=relu)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+    def test_zero_padding_cases(self):
+        x = _rand(0, (2, 64))
+        w = _rand(1, (3, 2, 9))
+        b = jnp.zeros((3,))
+        got = pallas_conv.conv1d(x, w, b, 1, 0)
+        want = ref.conv1d(x, w, b, 1, 0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+    def test_identity_kernel(self):
+        """A centered delta kernel must reproduce the input."""
+        x = _rand(0, (1, 128))
+        w = jnp.zeros((1, 1, 9)).at[0, 0, 4].set(1.0)
+        out = pallas_conv.conv1d(x, w, jnp.zeros((1,)), 1, 4)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-5)
+
+    def test_stride_decimates(self):
+        x = _rand(0, (1, 128))
+        w = jnp.zeros((1, 1, 9)).at[0, 0, 4].set(1.0)
+        out = pallas_conv.conv1d(x, w, jnp.zeros((1,)), 2, 4)
+        np.testing.assert_allclose(np.asarray(out)[0], np.asarray(x)[0, ::2], atol=1e-5)
+
+    def test_bias_and_relu(self):
+        x = _rand(0, (1, 64))
+        w = jnp.zeros((2, 1, 3))
+        b = jnp.array([1.5, -1.5])
+        out = pallas_conv.conv1d(x, w, b, 1, 1, relu=True)
+        assert np.allclose(np.asarray(out)[0], 1.5)
+        assert np.allclose(np.asarray(out)[1], 0.0)
+
+    def test_tile_boundary_widths(self):
+        """Widths straddling the 128 tile: 127/128/129 outputs."""
+        for width in [127, 128, 129, 255, 257]:
+            x = _rand(3, (2, width))
+            w = _rand(4, (2, 2, 9))
+            b = _rand(5, (2,))
+            got = pallas_conv.conv1d(x, w, b, 1, 4)
+            want = ref.conv1d(x, w, b, 1, 4)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+    def test_vmem_estimate_positive(self):
+        assert pallas_conv.vmem_bytes(5, 1024, 9, 5, 1) > 0
+        assert 0 < pallas_conv.mxu_utilization(5, 9, 5) <= 1.0
+
+
+class TestFakeQuant:
+    @given(
+        ib=st.integers(1, 8),
+        fb=st.integers(0, 12),
+        n=st.integers(1, 500),
+    )
+    def test_matches_ref_integer_widths(self, ib, fb, n):
+        x = _rand(7, (n,)) * 4.0
+        got = pallas_quant.fake_quant(x, ib, fb)
+        want = ref.fake_quant(x, float(ib), float(fb))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+    @given(ib=st.integers(2, 8), fb=st.integers(1, 10))
+    def test_idempotent(self, ib, fb):
+        x = _rand(8, (64,)) * 2.0
+        q1 = pallas_quant.fake_quant(x, ib, fb)
+        q2 = pallas_quant.fake_quant(q1, ib, fb)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-7)
+
+    def test_saturation(self):
+        x = jnp.array([100.0, -100.0])
+        q = np.asarray(pallas_quant.fake_quant(x, 4, 4))
+        assert q[0] == pytest.approx(8.0 - 1.0 / 16.0)
+        assert q[1] == pytest.approx(-8.0)
+
+    def test_grid_resolution(self):
+        """All outputs land on the Q(m.n) grid."""
+        x = _rand(9, (256,))
+        q = np.asarray(pallas_quant.fake_quant(x, 3, 5))
+        np.testing.assert_allclose(q * 32, np.round(q * 32), atol=1e-6)
+
+    def test_interpolated_between_integer_widths(self):
+        """Fractional widths interpolate monotonically in error."""
+        x = _rand(10, (512,))
+        e = []
+        for fb in [4.0, 4.5, 5.0]:
+            q = ref.fake_quant(x, 8.0, fb)
+            e.append(float(jnp.mean((q - x) ** 2)))
+        assert e[0] >= e[1] >= e[2]
+
+
+class TestVolterraRef:
+    def test_first_order_equals_fir(self):
+        x = _rand(11, (100,))
+        w1 = _rand(12, (9,))
+        y_v = ref.volterra(x, jnp.zeros(()), w1, jnp.zeros((1, 1)), jnp.zeros((1, 1, 1)))
+        y_f = ref.fir(x, w1)
+        np.testing.assert_allclose(np.asarray(y_v), np.asarray(y_f), atol=1e-4)
+
+    def test_second_order_square(self):
+        """w2 = delta at center -> y = x^2 (plus first-order zero)."""
+        x = _rand(13, (50,))
+        w2 = jnp.zeros((3, 3)).at[1, 1].set(1.0)
+        y = ref.volterra(x, jnp.zeros(()), jnp.zeros((1,)), w2, jnp.zeros((1, 1, 1)))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x) ** 2, atol=1e-4)
+
+    def test_third_order_cube(self):
+        x = _rand(14, (50,))
+        w3 = jnp.zeros((3, 3, 3)).at[1, 1, 1].set(1.0)
+        y = ref.volterra(x, jnp.zeros(()), jnp.zeros((1,)), jnp.zeros((1, 1)), w3)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x) ** 3, atol=1e-4)
+
+    def test_bias(self):
+        x = jnp.zeros((10,))
+        y = ref.volterra(
+            x, jnp.float32(2.5), jnp.zeros((1,)), jnp.zeros((1, 1)), jnp.zeros((1, 1, 1))
+        )
+        np.testing.assert_allclose(np.asarray(y), 2.5)
+
+
+class TestRoundTiesEven:
+    """round_ties_even replaces jnp.round in the export path (the
+    round-nearest-even HLO op aborts the Rust runtime's XLA 0.5.1)."""
+
+    @given(st.lists(st.floats(-100, 100, width=32), min_size=1, max_size=200))
+    def test_matches_jnp_round(self, vals):
+        x = jnp.asarray(vals, dtype=jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(ref.round_ties_even(x)), np.asarray(jnp.round(x))
+        )
+
+    def test_exact_ties(self):
+        x = jnp.asarray([0.5, 1.5, 2.5, -0.5, -1.5, -2.5])
+        np.testing.assert_array_equal(
+            np.asarray(ref.round_ties_even(x)), [0.0, 2.0, 2.0, -0.0, -2.0, -2.0]
+        )

@@ -1,0 +1,142 @@
+"""L2 model properties: topology template, BN folding, MAC accounting."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+os.environ.setdefault("EQ_USE_PALLAS", "0")  # oracle path: fast, identical
+
+from compile import model
+
+
+def _mk(cfg, seed=0):
+    params = model.cnn_init(cfg, jax.random.PRNGKey(seed))
+    params.pop("cfg")
+    return params, model.cnn_bn_state(cfg)
+
+
+class TestTopologyTemplate:
+    @pytest.mark.parametrize("vp", [1, 2, 4, 8, 16])
+    @pytest.mark.parametrize("layers", [3, 4, 5])
+    def test_output_symbol_count(self, vp, layers):
+        """Every grid config maps W input samples to W/N_os symbols."""
+        cfg = model.CnnConfig(vp=vp, layers=layers, kernel=9, channels=3)
+        params, bn = _mk(cfg)
+        w_in = 32 * vp  # divisible by 2*vp
+        x = jax.random.normal(jax.random.PRNGKey(1), (w_in,))
+        y, _ = model.cnn_forward(params, bn, x, cfg)
+        assert y.shape == (w_in // cfg.n_os,)
+        assert cfg.out_symbols(w_in) == w_in // cfg.n_os
+
+    @pytest.mark.parametrize("k", [9, 15, 21])
+    def test_kernel_sizes(self, k):
+        cfg = model.CnnConfig(vp=4, layers=3, kernel=k, channels=3)
+        params, bn = _mk(cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (256,))
+        y, _ = model.cnn_forward(params, bn, x, cfg)
+        assert y.shape == (128,)
+
+    def test_strides_structure(self):
+        cfg = model.CnnConfig(vp=8, layers=5, kernel=9, channels=4)
+        assert cfg.strides() == [8, 1, 1, 1, 2]
+
+    def test_layer_channels(self):
+        cfg = model.SELECTED
+        assert cfg.layer_channels() == [(1, 5), (5, 5), (5, 8)]
+
+    def test_mac_per_symbol_paper_formula(self):
+        """Selected model: 9*5/8 + 1*9*5*5/8 + 9*5/2 = 56.25."""
+        assert model.SELECTED.mac_per_symbol() == pytest.approx(56.25)
+
+    def test_receptive_field_selected(self):
+        """o_sym for (K=9, V_p=8, L=3): (9-1)(1+8*2)/2 = 68."""
+        assert model.SELECTED.receptive_field_symbols() == 68
+
+    def test_batch_forward_matches_single(self):
+        cfg = model.SELECTED
+        params, bn = _mk(cfg)
+        xb = jax.random.normal(jax.random.PRNGKey(2), (3, 256))
+        yb, _ = model.cnn_forward_batch(params, bn, xb, cfg)
+        for i in range(3):
+            yi, _ = model.cnn_forward(params, bn, xb[i], cfg)
+            np.testing.assert_allclose(np.asarray(yb[i]), np.asarray(yi), atol=1e-5)
+
+
+class TestBnFolding:
+    def test_folded_equals_inference(self):
+        """conv+BN+ReLU (running stats) == foldedconv+ReLU, bitwise-close."""
+        cfg = model.SELECTED
+        params, bn = _mk(cfg)
+        # Non-trivial BN state
+        for k in bn:
+            key = jax.random.PRNGKey(hash(k) % 2**31)
+            if "mean" in k:
+                bn[k] = 0.3 * jax.random.normal(key, bn[k].shape)
+            else:
+                bn[k] = 0.5 + jax.random.uniform(key, bn[k].shape)
+        params["bn0_gamma"] = 1.0 + 0.1 * jnp.arange(5, dtype=jnp.float32)
+        params["bn0_beta"] = 0.05 * jnp.arange(5, dtype=jnp.float32)
+
+        x = jax.random.normal(jax.random.PRNGKey(3), (512,))
+        y_ref, _ = model.cnn_forward(params, bn, x, cfg, train=False)
+        folded = model.cnn_fold_bn(params, bn, cfg)
+        y_fold = model.cnn_forward_folded(folded, x, cfg)
+        np.testing.assert_allclose(np.asarray(y_fold), np.asarray(y_ref), atol=1e-4)
+
+    def test_fold_preserves_shapes(self):
+        cfg = model.CnnConfig(vp=2, layers=4, kernel=15, channels=4)
+        params, bn = _mk(cfg)
+        folded = model.cnn_fold_bn(params, bn, cfg)
+        for li, (cin, cout) in enumerate(cfg.layer_channels()):
+            assert folded[f"w{li}"].shape == (cout, cin, cfg.kernel)
+            assert folded[f"b{li}"].shape == (cout,)
+
+
+class TestQuantForward:
+    def test_quant_close_to_fp_at_wide_widths(self):
+        cfg = model.SELECTED
+        params, bn = _mk(cfg)
+        folded = model.cnn_fold_bn(params, bn, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(4), (256,))
+        y_fp = model.cnn_forward_folded(folded, x, cfg)
+        bits = {k: (8, 14) for k in ["a_in", "w0", "a0", "w1", "a1", "w2", "a2"]}
+        y_q = model.cnn_forward_folded(folded, x, cfg, quant_bits=bits)
+        np.testing.assert_allclose(np.asarray(y_q), np.asarray(y_fp), atol=2e-3)
+
+    def test_narrow_quant_changes_output(self):
+        cfg = model.SELECTED
+        params, bn = _mk(cfg)
+        folded = model.cnn_fold_bn(params, bn, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(4), (256,))
+        y_fp = model.cnn_forward_folded(folded, x, cfg)
+        bits = {k: (2, 2) for k in ["a_in", "w0", "a0", "w1", "a1", "w2", "a2"]}
+        y_q = model.cnn_forward_folded(folded, x, cfg, quant_bits=bits)
+        assert float(jnp.max(jnp.abs(y_q - y_fp))) > 1e-3
+
+
+class TestFir:
+    def test_identity_taps(self):
+        cfg = model.FirConfig(taps=9)
+        w = jnp.zeros((9,)).at[4].set(1.0)
+        x = jax.random.normal(jax.random.PRNGKey(5), (64,))
+        y = model.fir_forward({"w": w}, x, cfg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x)[::2], atol=1e-6)
+
+    def test_mac_count(self):
+        assert model.FirConfig(taps=57).mac_per_symbol() == 57.0
+
+
+class TestVolterra:
+    def test_mac_count(self):
+        cfg = model.VolterraConfig(m1=25, m2=3, m3=3)
+        assert cfg.mac_per_symbol() == 25 + 9 + 27
+
+    def test_forward_shape(self):
+        cfg = model.VolterraConfig(m1=9, m2=3, m3=3)
+        params = model.volterra_init(cfg, jax.random.PRNGKey(6))
+        x = jax.random.normal(jax.random.PRNGKey(7), (128,))
+        y = model.volterra_forward(params, x, cfg)
+        assert y.shape == (64,)

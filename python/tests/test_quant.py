@@ -1,0 +1,104 @@
+"""Quantization-aware training mechanics (Sec. 4)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+os.environ.setdefault("EQ_USE_PALLAS", "0")
+
+from compile import channels, model, quant
+from compile.kernels import ref
+
+
+class TestSte:
+    def test_value_matches_ref(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64,)) * 3
+        a = quant.fake_quant_ste(x, 4.0, 6.0)
+        b = ref.fake_quant(x, 4.0, 6.0)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+    def test_data_gradient_is_identity(self):
+        g = jax.grad(lambda x: jnp.sum(quant.fake_quant_ste(x, 4.0, 6.0)))(
+            jax.random.normal(jax.random.PRNGKey(1), (16,))
+        )
+        np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-6)
+
+    def test_bits_gradient_nonzero(self):
+        """Width gradient must flow (the paper's differentiable widths)."""
+        x = jax.random.normal(jax.random.PRNGKey(2), (256,))
+
+        def err(fb):
+            q = quant.fake_quant_ste(x, 8.0, fb)
+            return jnp.mean((q - x) ** 2)
+
+        g = jax.grad(err)(3.5)
+        assert abs(float(g)) > 0.0
+
+    def test_more_frac_bits_less_error(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (512,))
+        errs = [
+            float(jnp.mean((ref.fake_quant(x, 8.0, fb) - x) ** 2))
+            for fb in [2.0, 4.0, 8.0, 12.0]
+        ]
+        assert errs == sorted(errs, reverse=True)
+
+
+class TestBitBookkeeping:
+    def test_init_is_32_bits(self):
+        bits = quant.init_bit_params(model.SELECTED)
+        for v in bits.values():
+            assert float(jnp.sum(v)) == 32.0
+
+    def test_frozen_bits_ceil(self):
+        bits = {"w0": jnp.array([2.3, 9.1])}
+        assert quant.frozen_bits(bits) == {"w0": (3, 10)}
+
+    def test_frozen_bits_clip(self):
+        bits = {"w0": jnp.array([0.2, 20.0])}
+        assert quant.frozen_bits(bits) == {"w0": (1, 16)}
+
+    def test_avg_bits(self):
+        bits = {
+            "w0": jnp.array([4.0, 8.0]),
+            "w1": jnp.array([2.0, 6.0]),
+            "a0": jnp.array([1.0, 1.0]),
+        }
+        assert float(quant.avg_bits(bits, "w")) == pytest.approx(10.0)
+
+
+class TestQatEndToEnd:
+    @pytest.fixture(scope="class")
+    def result(self):
+        data = channels.proakis_b(12000, seed=0, snr_db=25.0)
+        ev = channels.proakis_b(6000, seed=99, snr_db=25.0)
+        cfg = model.CnnConfig(vp=4, layers=3, kernel=9, channels=3)
+        return quant.train_qat(
+            cfg,
+            data,
+            qlf=5e-3,
+            iters_fp=150,
+            iters_bits=250,
+            iters_ft=100,
+            eval_every=100,
+            eval_data=ev,
+        )
+
+    def test_bits_decrease(self, result):
+        """QLF pressure must push widths below the 32-bit start."""
+        phase2 = [h for h in result.history if h["phase"] >= 2]
+        assert phase2[-1]["b_act"] < 32.0
+        assert phase2[-1]["b_par"] < 32.0
+
+    def test_history_covers_three_phases(self, result):
+        assert {h["phase"] for h in result.history} == {1, 2, 3}
+
+    def test_frozen_bits_are_integers(self, result):
+        for ib, fb in result.bits.values():
+            assert isinstance(ib, int) and isinstance(fb, int)
+            assert 1 <= ib <= 16 and 1 <= fb <= 16
+
+    def test_ber_sane(self, result):
+        assert 0.0 <= result.ber <= 0.5

@@ -1,0 +1,81 @@
+"""Training-loop behaviour (build-time, Sec. 3.4): Adam, convergence."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+os.environ.setdefault("EQ_USE_PALLAS", "0")
+
+from compile import channels, model, train
+
+
+class TestAdam:
+    def test_quadratic_convergence(self):
+        params = {"x": jnp.array([5.0, -3.0])}
+        st = train.adam_init(params)
+        for _ in range(400):
+            g = {"x": 2.0 * params["x"]}
+            params, st = train.adam_update(params, g, st, lr=0.05)
+        np.testing.assert_allclose(np.asarray(params["x"]), 0.0, atol=1e-2)
+
+    def test_bias_correction_first_step(self):
+        """First update magnitude ~ lr regardless of gradient scale."""
+        for scale in [1e-3, 1.0, 1e3]:
+            params = {"x": jnp.array(0.0)}
+            st = train.adam_init(params)
+            new, _ = train.adam_update(params, {"x": jnp.array(scale)}, st, lr=0.01)
+            assert float(new["x"]) == pytest.approx(-0.01, rel=1e-3)
+
+
+class TestBer:
+    def test_perfect(self):
+        s = channels.prbs(1000, 0)
+        assert train.ber(s, s) == 0.0
+
+    def test_inverted(self):
+        s = channels.prbs(1000, 0)
+        assert train.ber(-s, s) == 1.0
+
+    def test_soft_decisions(self):
+        assert train.ber(np.array([0.1, -0.9]), np.array([1.0, 1.0])) == 0.5
+
+
+@pytest.fixture(scope="module")
+def proakis_data():
+    return channels.proakis_b(20000, seed=0, snr_db=25.0), channels.proakis_b(
+        8000, seed=99, snr_db=25.0
+    )
+
+
+class TestTrainingLoops:
+    def test_fir_learns_channel(self, proakis_data):
+        """A linear channel must be nearly invertible by the FIR."""
+        data, ev = proakis_data
+        r = train.train_fir(model.FirConfig(taps=25), data, iters=400, eval_data=ev)
+        assert r.ber < 0.05
+        assert r.loss_curve[-1] < r.loss_curve[0]
+
+    def test_cnn_loss_decreases(self, proakis_data):
+        data, ev = proakis_data
+        cfg = model.CnnConfig(vp=4, layers=3, kernel=9, channels=3)
+        r = train.train_cnn(cfg, data, iters=250, eval_data=ev)
+        assert r.loss_curve[-1] < r.loss_curve[0]
+        assert 0.0 <= r.ber <= 0.5
+
+    def test_volterra_loss_decreases(self, proakis_data):
+        data, ev = proakis_data
+        cfg = model.VolterraConfig(m1=9, m2=3, m3=1)
+        r = train.train_volterra(cfg, data, iters=200, eval_data=ev)
+        assert r.loss_curve[-1] < r.loss_curve[0]
+
+    def test_cnn_deterministic_given_seed(self, proakis_data):
+        data, ev = proakis_data
+        cfg = model.CnnConfig(vp=2, layers=3, kernel=9, channels=3)
+        r1 = train.train_cnn(cfg, data, iters=30, seed=5, eval_data=ev)
+        r2 = train.train_cnn(cfg, data, iters=30, seed=5, eval_data=ev)
+        w1 = np.asarray(r1.params["w0"])
+        w2 = np.asarray(r2.params["w0"])
+        np.testing.assert_allclose(w1, w2, atol=1e-6)

@@ -1,0 +1,80 @@
+//! Bench + figures: FPGA resource/power models (regenerates Table 1 and
+//! Figs. 8a/8b), plus an instance-count ablation on the XCVU13P.
+
+use equalizer::equalizer::weights::CnnTopologyCfg;
+use equalizer::hw::device::{XC7S25, XCVU13P};
+use equalizer::hw::dop::Dop;
+use equalizer::hw::power::{ht_power_w, lp_power_w, lp_throughput_baud};
+use equalizer::hw::resource::{ht_design, lp_design, mac_sym_max};
+use equalizer::util::bench::{header, Bencher};
+
+fn main() {
+    let cfg = CnnTopologyCfg::SELECTED;
+
+    println!("=== Table 1: XCVU13P utilization, 64 instances ===");
+    let u = ht_design(&cfg, 64);
+    let pct = u.utilization(&XCVU13P);
+    println!("resource   modeled          (%)    paper          (%)");
+    println!("LUT        {:>9}  {:>8.2}    1176156   68.06", u.luts, pct.lut_pct);
+    println!("FF         {:>9}  {:>8.2}    1050179   30.39", u.ffs, pct.ff_pct);
+    println!("DSP        {:>9}  {:>8.2}       9648   78.52", u.dsps, pct.dsp_pct);
+    println!("BRAM       {:>9}  {:>8.2}       2118   78.79", u.brams, pct.bram_pct);
+    println!(
+        "MAC_sym ceiling @40GBd: {:.1}  (selected model: {:.2})",
+        mac_sym_max(&XCVU13P, 40e9),
+        cfg.mac_per_symbol()
+    );
+
+    println!("\n=== ablation: utilization vs instance count ===");
+    println!("{:>6} {:>8} {:>8} {:>8} {:>8} {:>6}", "N_i", "LUT%", "FF%", "DSP%", "BRAM%", "fits");
+    for n_i in [8u64, 16, 32, 64, 96, 128] {
+        let u = ht_design(&cfg, n_i);
+        let p = u.utilization(&XCVU13P);
+        println!(
+            "{:>6} {:>8.1} {:>8.1} {:>8.1} {:>8.1} {:>6}",
+            n_i,
+            p.lut_pct,
+            p.ff_pct,
+            p.dsp_pct,
+            p.bram_pct,
+            u.fits(&XCVU13P)
+        );
+    }
+
+    println!("\n=== Fig. 8a: resource utilization vs DOP (XC7S25) ===");
+    println!("{:>6} {:>8} {:>8} {:>8} {:>8}", "DOP", "LUT%", "FF%", "DSP%", "BRAM%");
+    for dop in Dop::paper_sweep(&cfg) {
+        let u = lp_design(&cfg, dop, &XC7S25).utilization(&XC7S25);
+        println!(
+            "{:>6} {:>8.1} {:>8.1} {:>8.1} {:>8.1}",
+            dop.total(),
+            u.lut_pct,
+            u.ff_pct,
+            u.dsp_pct,
+            u.bram_pct
+        );
+    }
+
+    println!("\n=== Fig. 8b: power + throughput vs DOP (XC7S25) ===");
+    println!("{:>6} {:>12} {:>10}", "DOP", "Tput Mbit/s", "Power W");
+    for dop in Dop::paper_sweep(&cfg) {
+        println!(
+            "{:>6} {:>12.1} {:>10.3}",
+            dop.total(),
+            lp_throughput_baud(&cfg, dop, &XC7S25) / 1e6,
+            lp_power_w(&cfg, dop, &XC7S25)
+        );
+    }
+    println!("(paper: 4-110 Mbit/s, 0.1-0.2 W)");
+    println!("\nHT power (64 inst): {:.1} W", ht_power_w(&cfg, 64, &XCVU13P));
+
+    header("model evaluation cost");
+    let b = Bencher::default();
+    b.bench("ht_design(64)", || ht_design(&cfg, 64));
+    b.bench("lp_design sweep (5 DOPs)", || {
+        Dop::paper_sweep(&cfg)
+            .into_iter()
+            .map(|d| lp_design(&cfg, d, &XC7S25))
+            .collect::<Vec<_>>()
+    });
+}

@@ -1,0 +1,109 @@
+//! L3 hot-path benchmarks (§Perf): PJRT execution per width bucket, the
+//! full coordinator pipeline (sequential vs per-instance threads), the
+//! native fixed-point datapath, the stream-partitioning bookkeeping in
+//! isolation, and the channel simulators.  EXPERIMENTS.md §Perf records
+//! the before/after of each optimization against these numbers.
+
+use equalizer::channel::{imdd::ImddChannel, proakis::ProakisBChannel, Channel};
+use equalizer::coordinator::instance::{PjrtInstance, SharedPjrtInstance};
+use equalizer::coordinator::pipeline::EqualizerPipeline;
+use equalizer::coordinator::{msm, ogm, ssm};
+use equalizer::equalizer::cnn::FixedPointCnn;
+use equalizer::equalizer::weights::{CnnTopologyCfg, CnnWeights};
+use equalizer::fixedpoint::QuantSpec;
+use equalizer::runtime::{ArtifactRegistry, Engine};
+use equalizer::util::bench::{header, Bencher};
+
+fn main() {
+    let b = Bencher::default();
+    let cfg = CnnTopologyCfg::SELECTED;
+
+    // ---- channel simulators (substrate cost) -------------------------
+    header("channel simulators (64k symbols)");
+    let imdd = ImddChannel::default();
+    let m_imdd = b.bench("imdd_transmit_64k", || imdd.transmit(65_536, 1));
+    println!("    -> {:.2} Msym/s", m_imdd.throughput(65_536.0) / 1e6);
+    let pro = ProakisBChannel::default();
+    b.bench("proakis_transmit_64k", || pro.transmit(65_536, 1));
+
+    // ---- stream partitioning bookkeeping alone ------------------------
+    header("coordinator bookkeeping (no compute)");
+    let data = imdd.transmit(1 << 17, 2);
+    b.bench("ogm_make_chunks l_inst=888 o=68", || {
+        ogm::make_chunks(&data.rx, 888, 68)
+    });
+    let chunks = ogm::make_chunks(&data.rx, 888, 68);
+    b.bench("ssm_distribute n_i=64", || ssm::distribute(&chunks, 64));
+    let queues = ssm::distribute(&chunks, 64);
+    let fake_outs: Vec<Vec<Vec<f32>>> =
+        queues.iter().map(|q| q.iter().map(|_| vec![0.0f32; 512]).collect()).collect();
+    b.bench("msm_collect n_i=64", || msm::collect(&fake_outs, chunks.len()));
+
+    // ---- native fixed-point datapath ----------------------------------
+    let weights_path = format!("{}/artifacts/weights_cnn_imdd.json", env!("CARGO_MANIFEST_DIR"));
+    if let Ok(weights) = CnnWeights::load(&weights_path) {
+        header("native datapath (1024-sample chunk)");
+        let x: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.1).sin()).collect();
+        let float_cnn = FixedPointCnn::new(weights.clone(), None);
+        let mm = b.bench("native_cnn_f32", || float_cnn.forward(&x));
+        println!("    -> {:.2} Msym/s", mm.throughput(512.0) / 1e6);
+        let q_cnn = FixedPointCnn::new(weights, Some(QuantSpec::paper_default(cfg.layers)));
+        b.bench("native_cnn_quantized", || q_cnn.forward(&x));
+    }
+
+    // ---- PJRT execution per bucket ------------------------------------
+    let art_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let Ok(reg) = ArtifactRegistry::discover(&art_dir) else {
+        println!("\n(artifacts not built; PJRT benches skipped)");
+        return;
+    };
+    let engine = Engine::cpu().expect("PJRT");
+    header("PJRT executable (per chunk)");
+    for width in reg.buckets("cnn", "imdd", false) {
+        let model = engine.load(reg.best_model("cnn", "imdd", width).unwrap()).unwrap();
+        let x = vec![0.3f32; width];
+        let m = b.bench(&format!("pjrt_cnn w={width}"), || model.run_f32(&x).unwrap());
+        println!("    -> {:.2} Msym/s", m.throughput(width as f64 / 2.0) / 1e6);
+    }
+    if let Ok(e) = reg.exact("cnn_imdd_w1024_b8") {
+        let model = engine.load(e).unwrap();
+        let x = vec![0.3f32; 8 * 1024];
+        let m = b.bench("pjrt_cnn w=1024 batch=8", || model.run_f32(&x).unwrap());
+        println!("    -> {:.2} Msym/s", m.throughput(8.0 * 512.0) / 1e6);
+    }
+    if let Ok(e) = reg.exact("cnn_imdd_quant_w1024") {
+        let model = engine.load(e).unwrap();
+        let x = vec![0.3f32; 1024];
+        b.bench("pjrt_cnn_quant w=1024", || model.run_f32(&x).unwrap());
+    }
+
+    // ---- full pipeline: sequential vs threaded ------------------------
+    header("full pipeline, 128k symbols (bucket 4096)");
+    let data = imdd.transmit(1 << 17, 3);
+    let o_act = cfg.o_act_samples();
+    for n_i in [1usize, 2, 4, 8] {
+        let entry = reg.best_model("cnn", "imdd", 4096).unwrap();
+        let l_inst = entry.width() - 2 * o_act;
+        let workers: Vec<PjrtInstance> =
+            (0..n_i).map(|_| PjrtInstance::load(entry).unwrap()).collect();
+        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os).unwrap();
+        let m = b.bench(&format!("pipeline_threads(own client) n_i={n_i}"), || {
+            pipe.equalize_parallel(&data.rx).unwrap()
+        });
+        println!("    -> {:.2} Msym/s", m.throughput((data.rx.len() / 2) as f64) / 1e6);
+    }
+    // §Perf optimization: N instances sharing ONE PJRT client, run
+    // sequentially — the client's internal thread pool supplies the
+    // parallelism without client-per-instance oversubscription.
+    for n_i in [1usize, 4] {
+        let entry = reg.best_model("cnn", "imdd", 4096).unwrap();
+        let l_inst = entry.width() - 2 * o_act;
+        let workers: Vec<SharedPjrtInstance> =
+            (0..n_i).map(|_| SharedPjrtInstance::load(&engine, entry).unwrap()).collect();
+        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os).unwrap();
+        let m = b.bench(&format!("pipeline_shared_client n_i={n_i}"), || {
+            pipe.equalize(&data.rx).unwrap()
+        });
+        println!("    -> {:.2} Msym/s", m.throughput((data.rx.len() / 2) as f64) / 1e6);
+    }
+}

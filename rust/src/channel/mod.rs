@@ -1,0 +1,103 @@
+//! Communication-channel simulators (Sec. 2 substrates).
+//!
+//! The paper's high-throughput channel is an *experimental* 40 GBd PAM-2
+//! IM/DD optical link; the low-cost channel is the simulated Proakis-B
+//! "magnetic recording" channel.  Both are rebuilt here so the Rust
+//! coordinator can generate live receiver streams on the serving side —
+//! mirroring the Python build-time simulators in
+//! `python/compile/channels.py` (same impairment mechanisms, same
+//! oversampling, Mersenne-Twister PRBS per the paper's reference [18]).
+
+pub mod awgn;
+pub mod fft;
+pub mod filter;
+pub mod imdd;
+pub mod mt19937;
+pub mod proakis;
+
+/// Oversampling factor used throughout the paper (N_os).
+pub const N_OS: usize = 2;
+
+/// One simulated transmission: receiver samples plus ground truth.
+///
+/// `rx` carries `N_OS` samples per symbol, aligned so sample `N_OS * i`
+/// corresponds to symbol `i` (ideal timing recovery, as in the paper's
+/// offline pipeline).
+#[derive(Debug, Clone)]
+pub struct ChannelData {
+    /// Received samples at `N_OS` x symbol rate, normalized.
+    pub rx: Vec<f32>,
+    /// Transmitted PAM-2 symbols in {-1, +1}.
+    pub symbols: Vec<f32>,
+}
+
+/// A channel model that can synthesize transmissions.
+pub trait Channel {
+    /// Simulate `n_sym` symbols with the given PRBS seed.
+    fn transmit(&self, n_sym: usize, seed: u32) -> ChannelData;
+    /// Human-readable channel name (matches artifact naming).
+    fn name(&self) -> &'static str;
+}
+
+/// PAM-2 PRBS in {-1, +1} from a Mersenne-Twister stream (paper [18]).
+pub fn prbs(n_sym: usize, seed: u32) -> Vec<f32> {
+    let mut mt = mt19937::Mt19937::new(seed);
+    (0..n_sym)
+        .map(|_| if mt.next_u32() & 0x8000_0000 != 0 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+/// Upsample symbols by `sps` (zeros between symbols).
+pub fn upsample(symbols: &[f32], sps: usize) -> Vec<f32> {
+    let mut out = vec![0.0; symbols.len() * sps];
+    for (i, &s) in symbols.iter().enumerate() {
+        out[i * sps] = s;
+    }
+    out
+}
+
+/// Remove mean and scale to unit standard deviation, in place.
+pub fn normalize(x: &mut [f32]) {
+    let n = x.len() as f64;
+    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    let std = var.sqrt().max(1e-12);
+    for v in x.iter_mut() {
+        *v = ((*v as f64 - mean) / std) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prbs_is_deterministic() {
+        assert_eq!(prbs(256, 7), prbs(256, 7));
+        assert_ne!(prbs(256, 7), prbs(256, 8));
+    }
+
+    #[test]
+    fn prbs_is_binary_and_balanced() {
+        let s = prbs(20_000, 0);
+        assert!(s.iter().all(|&v| v == 1.0 || v == -1.0));
+        let mean: f32 = s.iter().sum::<f32>() / s.len() as f32;
+        assert!(mean.abs() < 0.05, "unbalanced: {mean}");
+    }
+
+    #[test]
+    fn upsample_places_symbols() {
+        let u = upsample(&[1.0, -1.0], 2);
+        assert_eq!(u, vec![1.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn normalize_zero_mean_unit_std() {
+        let mut x: Vec<f32> = (0..1000).map(|i| (i as f32) * 0.01 + 3.0).collect();
+        normalize(&mut x);
+        let mean: f32 = x.iter().sum::<f32>() / x.len() as f32;
+        let var: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+        assert!(mean.abs() < 1e-4);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,126 @@
+//! Proakis-B "magnetic recording" channel (Sec. 2.2).
+//!
+//! Linear bad-quality channel with T-spaced impulse response
+//! `h = [0.407, 0.815, 0.407]` (Proakis, Digital Communications,
+//! Ch. 9.4-3), raised-cosine pulse shaping and AWGN at 20 dB — the
+//! paper's low-cost / low-power application scenario.
+
+use super::awgn::add_awgn;
+use super::filter::{convolve_same, rc_taps};
+use super::{normalize, prbs, upsample, Channel, ChannelData, N_OS};
+
+/// The Proakis-B discrete impulse response (symbol-spaced).
+pub const H_PROAKIS_B: [f64; 3] = [0.407, 0.815, 0.407];
+
+/// Proakis-B channel parameters.
+#[derive(Debug, Clone)]
+pub struct ProakisBChannel {
+    /// Receiver SNR in dB (paper models the bad channel at 20 dB).
+    pub snr_db: f64,
+    /// RC roll-off.
+    pub rc_beta: f64,
+    /// RC span in symbols.
+    pub rc_span: usize,
+}
+
+impl Default for ProakisBChannel {
+    fn default() -> Self {
+        Self { snr_db: 20.0, rc_beta: 0.3, rc_span: 16 }
+    }
+}
+
+impl Channel for ProakisBChannel {
+    fn transmit(&self, n_sym: usize, seed: u32) -> ChannelData {
+        let symbols = prbs(n_sym, seed);
+        let up = upsample(&symbols, N_OS);
+        let up_f64: Vec<f64> = up.iter().map(|&v| v as f64).collect();
+        let shaped = convolve_same(&up_f64, &rc_taps(self.rc_beta, self.rc_span, N_OS));
+
+        // T-spaced channel IR on the N_os grid (zeros between taps).
+        let mut h_up = vec![0.0; (H_PROAKIS_B.len() - 1) * N_OS + 1];
+        for (i, &h) in H_PROAKIS_B.iter().enumerate() {
+            h_up[i * N_OS] = h;
+        }
+        let mut chan = convolve_same(&shaped, &h_up);
+        let n = chan.len() as f64;
+        let var = chan.iter().map(|v| v * v).sum::<f64>() / n;
+        let std = var.sqrt().max(1e-12);
+        for v in chan.iter_mut() {
+            *v /= std;
+        }
+
+        add_awgn(&mut chan, self.snr_db, seed.wrapping_add(1));
+        let mut rx: Vec<f32> = chan.iter().map(|&v| v as f32).collect();
+        normalize(&mut rx);
+        ChannelData { rx, symbols }
+    }
+
+    fn name(&self) -> &'static str {
+        "proakis"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let d = ProakisBChannel::default().transmit(3000, 0);
+        assert_eq!(d.rx.len(), 6000);
+        assert_eq!(d.symbols.len(), 3000);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ch = ProakisBChannel::default();
+        assert_eq!(ch.transmit(500, 1).rx, ch.transmit(500, 1).rx);
+    }
+
+    #[test]
+    fn linearity_of_noise_free_chain() {
+        // Superposition on the symbol->rx map (noise-free, fixed seeds
+        // only differ in symbol sequence) is implied by convolution;
+        // verify via impulse response extraction: a single +1 symbol in
+        // a zero sequence must produce the RC*h_up response.
+        let _ch = ProakisBChannel { snr_db: 200.0, ..Default::default() };
+        // With snr 200 dB the noise is negligible.
+        let d = ProakisBChannel { snr_db: 200.0, ..Default::default() }.transmit(2000, 0);
+        // Reconstruct rx from symbols by direct convolution and compare.
+        let up: Vec<f64> = {
+            let u = upsample(&d.symbols, N_OS);
+            u.iter().map(|&v| v as f64).collect()
+        };
+        let shaped = convolve_same(&up, &rc_taps(0.3, 16, N_OS));
+        let mut h_up = vec![0.0; 5];
+        h_up[0] = H_PROAKIS_B[0];
+        h_up[2] = H_PROAKIS_B[1];
+        h_up[4] = H_PROAKIS_B[2];
+        let chan = convolve_same(&shaped, &h_up);
+        // rx is a normalized version of chan: correlation must be ~1.
+        let rx: Vec<f64> = d.rx.iter().map(|&v| v as f64).collect();
+        let num: f64 = rx.iter().zip(&chan).map(|(a, b)| a * b).sum();
+        let da: f64 = rx.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let db: f64 = chan.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(num / (da * db) > 0.999, "chain mismatch: {}", num / (da * db));
+    }
+
+    #[test]
+    fn snr_affects_quality() {
+        let lo = ProakisBChannel { snr_db: 5.0, ..Default::default() }.transmit(4000, 0);
+        let hi = ProakisBChannel { snr_db: 30.0, ..Default::default() }.transmit(4000, 0);
+        let c = |d: &ChannelData| {
+            let xs: Vec<f64> = d.rx.iter().step_by(2).map(|&v| v as f64).collect();
+            let ys: Vec<f64> = d.symbols.iter().map(|&v| v as f64).collect();
+            let n = xs.len() as f64;
+            let mx = xs.iter().sum::<f64>() / n;
+            let my = ys.iter().sum::<f64>() / n;
+            let cov: f64 =
+                xs.iter().zip(&ys).map(|(a, b)| (a - mx) * (b - my)).sum::<f64>() / n;
+            let sx = (xs.iter().map(|a| (a - mx).powi(2)).sum::<f64>() / n).sqrt();
+            let sy = (ys.iter().map(|b| (b - my).powi(2)).sum::<f64>() / n).sqrt();
+            (cov / (sx * sy)).abs()
+        };
+        assert!(c(&hi) > c(&lo));
+    }
+}

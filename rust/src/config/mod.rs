@@ -1,0 +1,209 @@
+//! Configuration system: JSON-backed run configs for the CLI, examples
+//! and benches.
+//!
+//! A `RunConfig` describes one deployment of the equalizer: which
+//! channel, the parallelism (N_i), clock, sequence-length policy and
+//! workload size.  Defaults reproduce the paper's high-throughput
+//! scenario (64 instances at 200 MHz, 40 GBd).
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub use crate::equalizer::weights::CnnTopologyCfg as CnnTopology;
+
+/// Which channel to generate/serve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelKind {
+    Imdd,
+    Proakis,
+}
+
+impl ChannelKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ChannelKind::Imdd => "imdd",
+            ChannelKind::Proakis => "proakis",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "imdd" => Ok(ChannelKind::Imdd),
+            "proakis" | "proakis_b" => Ok(ChannelKind::Proakis),
+            other => Err(anyhow!("unknown channel {other:?}")),
+        }
+    }
+}
+
+/// Sequence-length policy (Sec. 6.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SeqLenPolicy {
+    /// Fixed l_inst in samples.
+    Fixed { l_inst: usize },
+    /// Pick minimal l_inst meeting a net-throughput constraint (samples/s).
+    Optimize { t_req: f64 },
+}
+
+/// One full deployment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Channel to equalize.
+    pub channel: ChannelKind,
+    /// Artifact directory with HLO + weight files.
+    pub artifacts_dir: String,
+    /// Number of parallel CNN instances (N_i).
+    pub instances: usize,
+    /// Modeled FPGA clock (Hz) for the timing model.
+    pub f_clk_hz: f64,
+    /// Sequence-length policy.
+    pub seqlen: SeqLenPolicy,
+    /// Workload: symbols to stream in examples/benches.
+    pub n_symbols: usize,
+    /// Channel SNR override (dB).
+    pub snr_db: Option<f64>,
+    /// Use the quantized model variant.
+    pub quantized: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            channel: ChannelKind::Imdd,
+            artifacts_dir: "artifacts".to_string(),
+            instances: 64,
+            f_clk_hz: 200e6,
+            seqlen: SeqLenPolicy::Optimize { t_req: 80e9 },
+            n_symbols: 1 << 20,
+            snr_db: None,
+            quantized: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// The paper's low-power scenario (Proakis-B on the XC7S25).
+    pub fn low_power() -> Self {
+        Self {
+            channel: ChannelKind::Proakis,
+            instances: 1,
+            f_clk_hz: 100e6,
+            seqlen: SeqLenPolicy::Fixed { l_inst: 512 },
+            n_symbols: 1 << 16,
+            ..Self::default()
+        }
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_json(&json::parse_file(path)?)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        let seqlen = match v.get("seqlen") {
+            None => d.seqlen,
+            Some(s) => match s.req("mode")?.as_str() {
+                Some("fixed") => SeqLenPolicy::Fixed {
+                    l_inst: s.req("l_inst")?.as_usize().ok_or_else(|| anyhow!("l_inst"))?,
+                },
+                Some("optimize") => SeqLenPolicy::Optimize {
+                    t_req: s.req("t_req")?.as_f64().ok_or_else(|| anyhow!("t_req"))?,
+                },
+                other => return Err(anyhow!("unknown seqlen mode {other:?}")),
+            },
+        };
+        Ok(Self {
+            channel: match v.get("channel").and_then(Json::as_str) {
+                None => d.channel,
+                Some(s) => ChannelKind::parse(s)?,
+            },
+            artifacts_dir: v
+                .get("artifacts_dir")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+            instances: v.get("instances").and_then(Json::as_usize).unwrap_or(d.instances),
+            f_clk_hz: v.get("f_clk_hz").and_then(Json::as_f64).unwrap_or(d.f_clk_hz),
+            seqlen,
+            n_symbols: v.get("n_symbols").and_then(Json::as_usize).unwrap_or(d.n_symbols),
+            snr_db: v.get("snr_db").and_then(Json::as_f64),
+            quantized: v.get("quantized").and_then(Json::as_bool).unwrap_or(d.quantized),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("channel".into(), Json::Str(self.channel.as_str().into()));
+        m.insert("artifacts_dir".into(), Json::Str(self.artifacts_dir.clone()));
+        m.insert("instances".into(), Json::Num(self.instances as f64));
+        m.insert("f_clk_hz".into(), Json::Num(self.f_clk_hz));
+        m.insert("n_symbols".into(), Json::Num(self.n_symbols as f64));
+        m.insert("quantized".into(), Json::Bool(self.quantized));
+        if let Some(snr) = self.snr_db {
+            m.insert("snr_db".into(), Json::Num(snr));
+        }
+        let mut s = BTreeMap::new();
+        match self.seqlen {
+            SeqLenPolicy::Fixed { l_inst } => {
+                s.insert("mode".into(), Json::Str("fixed".into()));
+                s.insert("l_inst".into(), Json::Num(l_inst as f64));
+            }
+            SeqLenPolicy::Optimize { t_req } => {
+                s.insert("mode".into(), Json::Str("optimize".into()));
+                s.insert("t_req".into(), Json::Num(t_req));
+            }
+        }
+        m.insert("seqlen".into(), Json::Obj(s));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_ht_scenario() {
+        let c = RunConfig::default();
+        assert_eq!(c.instances, 64);
+        assert_eq!(c.f_clk_hz, 200e6);
+        assert_eq!(c.channel, ChannelKind::Imdd);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in [RunConfig::default(), RunConfig::low_power()] {
+            let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back, cfg);
+        }
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = json::parse(r#"{"instances": 8, "quantized": true}"#).unwrap();
+        let c = RunConfig::from_json(&v).unwrap();
+        assert_eq!(c.instances, 8);
+        assert!(c.quantized);
+        assert_eq!(c.channel, ChannelKind::Imdd);
+        assert_eq!(c.seqlen, SeqLenPolicy::Optimize { t_req: 80e9 });
+    }
+
+    #[test]
+    fn seqlen_modes() {
+        let v = json::parse(r#"{"seqlen": {"mode": "fixed", "l_inst": 512}}"#).unwrap();
+        assert_eq!(
+            RunConfig::from_json(&v).unwrap().seqlen,
+            SeqLenPolicy::Fixed { l_inst: 512 }
+        );
+        let v = json::parse(r#"{"seqlen": {"mode": "warp"}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn channel_parse() {
+        assert_eq!(ChannelKind::parse("imdd").unwrap(), ChannelKind::Imdd);
+        assert_eq!(ChannelKind::parse("proakis_b").unwrap(), ChannelKind::Proakis);
+        assert!(ChannelKind::parse("awgn").is_err());
+    }
+}

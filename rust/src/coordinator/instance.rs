@@ -1,0 +1,158 @@
+//! One CNN worker instance.
+//!
+//! The FPGA places `N_i` identical CNN engines; here an instance is
+//! anything that maps a sub-sequence of receiver samples to soft
+//! symbols: the PJRT-compiled HLO artifact (the serving hot path), the
+//! native bit-accurate datapath (quantization validation / simulator
+//! functional model), or a trivial decimator (plumbing tests).
+
+use crate::equalizer::cnn::FixedPointCnn;
+use crate::runtime::CompiledModel;
+use anyhow::Result;
+
+/// A worker that equalizes fixed-width sub-sequences.
+///
+/// `Send` is *not* required: shared-client PJRT instances
+/// ([`SharedPjrtInstance`]) are intentionally single-threaded — the
+/// CPU PJRT client parallelizes each execute internally, and measured
+/// end-to-end throughput is higher with one shared client than with
+/// one client per instance (EXPERIMENTS.md §Perf).  The threaded
+/// pipeline path requires `Send` instances ([`PjrtInstance`]).
+pub trait EqualizerInstance {
+    /// Expected input width in samples.
+    fn width(&self) -> usize;
+    /// samples -> soft symbols (length = width / N_os).
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>>;
+}
+
+impl<T: EqualizerInstance + ?Sized> EqualizerInstance for Box<T> {
+    fn width(&self) -> usize {
+        (**self).width()
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+        (**self).process(chunk)
+    }
+}
+
+/// PJRT-compiled artifact instance (the real request path).
+///
+/// Owns its *own* PJRT client and executable: the `xla` crate's handles
+/// are `Rc`-based (not `Send`), so each instance is a self-contained
+/// island whose reference counts are only ever touched by the thread
+/// that currently owns the whole struct.  This mirrors the hardware —
+/// one engine per instance, no shared state.
+pub struct PjrtInstance {
+    /// Keep the client alive for the executable's lifetime.
+    _engine: crate::runtime::Engine,
+    model: CompiledModel,
+}
+
+impl PjrtInstance {
+    /// Create a dedicated client and compile the artifact into it.
+    pub fn load(entry: &crate::runtime::artifact::ArtifactEntry) -> Result<Self> {
+        let engine = crate::runtime::Engine::cpu()?;
+        let model = engine.load(entry)?;
+        Ok(Self { _engine: engine, model })
+    }
+}
+
+// SAFETY: every Rc inside `_engine`/`model` was created by this
+// instance's own client and never escapes the struct; ownership moves
+// the island wholesale, so the non-atomic refcounts are only accessed
+// by one thread at a time.  PJRT CPU execution itself is thread-safe.
+unsafe impl Send for PjrtInstance {}
+
+impl EqualizerInstance for PjrtInstance {
+    fn width(&self) -> usize {
+        self.model.width()
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+        self.model.run_f32(chunk)
+    }
+}
+
+/// Shared-client PJRT instance: compiled on a caller-owned [`Engine`]'s
+/// client, so N instances share one XLA thread pool (the fast CPU
+/// configuration; see §Perf).  Not `Send` — use with the sequential
+/// pipeline path.
+pub struct SharedPjrtInstance {
+    model: CompiledModel,
+}
+
+impl SharedPjrtInstance {
+    pub fn new(model: CompiledModel) -> Self {
+        Self { model }
+    }
+
+    /// Compile `entry` on the shared `engine`.
+    pub fn load(
+        engine: &crate::runtime::Engine,
+        entry: &crate::runtime::artifact::ArtifactEntry,
+    ) -> Result<Self> {
+        Ok(Self { model: engine.load(entry)? })
+    }
+}
+
+impl EqualizerInstance for SharedPjrtInstance {
+    fn width(&self) -> usize {
+        self.model.width()
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+        self.model.run_f32(chunk)
+    }
+}
+
+/// Native fixed-point datapath instance.
+pub struct NativeInstance {
+    cnn: FixedPointCnn,
+    width: usize,
+}
+
+impl NativeInstance {
+    pub fn new(cnn: FixedPointCnn, width: usize) -> Self {
+        Self { cnn, width }
+    }
+}
+
+impl EqualizerInstance for NativeInstance {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(chunk.len() == self.width, "chunk width {} != {}", chunk.len(), self.width);
+        Ok(self.cnn.forward(chunk))
+    }
+}
+
+/// Test instance: decimate by `n_os` (an "equalizer" with no memory).
+pub struct DecimatorInstance {
+    pub width: usize,
+    pub n_os: usize,
+}
+
+impl EqualizerInstance for DecimatorInstance {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+        Ok(chunk.iter().step_by(self.n_os).copied().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decimator_halves() {
+        let mut d = DecimatorInstance { width: 8, n_os: 2 };
+        assert_eq!(d.width(), 8);
+        let y = d.process(&[0.0, 9.0, 1.0, 9.0, 2.0, 9.0, 3.0, 9.0]).unwrap();
+        assert_eq!(y, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 coordinator — the paper's architecture contribution as software.
+//!
+//! The FPGA design (Sec. 5) reaches 40+ GBd by partitioning the receive
+//! stream across `N_i` parallel CNN instances through a binary tree of
+//! split-stream modules (SSM), with overlap-generate/remove (OGM/ORM)
+//! compensating the receptive-field interdependence at sub-sequence
+//! borders, and merge-stream modules (MSM) restoring order.  Sequence
+//! length per instance (`l_inst`) trades latency against net throughput
+//! (Sec. 6), governed by an analytic timing model and a lookup-table
+//! framework.
+//!
+//! This module is that architecture, re-hosted: [`ogm`]/[`orm`] do the
+//! overlap bookkeeping, [`ssm`]/[`msm`] the tree routing, [`instance`]
+//! wraps one CNN worker (PJRT executable or native datapath),
+//! [`pipeline`] composes them, [`timing`] is the paper's Sec. 6.1
+//! model, [`sim`] the cycle-approximate simulator it is validated
+//! against (Fig. 12), [`seqlen`] the Sec. 6.2 optimization framework,
+//! and [`server`] a tokio streaming front-end.
+
+pub mod instance;
+pub mod msm;
+pub mod ogm;
+pub mod orm;
+pub mod pipeline;
+pub mod seqlen;
+pub mod server;
+pub mod sim;
+pub mod ssm;
+pub mod timing;

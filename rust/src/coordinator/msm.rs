@@ -1,0 +1,76 @@
+//! Merge-stream module tree (MSM, Sec. 5.3) — inverse of the SSM tree.
+//!
+//! `N_i - 1` MSMs mirror the SSM hierarchy and interleave the instance
+//! output streams back into original chunk order.  Functionally: given
+//! per-instance output queues (in the order [`super::ssm::distribute`]
+//! filled them), re-emit chunks by ascending stream index.
+
+use super::ssm::route;
+
+/// Reassemble per-instance outputs into stream order.
+///
+/// `per_instance[i]` holds instance `i`'s outputs in its queue order;
+/// `total` is the overall chunk count.  Panics if the queues are not a
+/// consistent SSM distribution of `total` chunks.
+pub fn collect<T: Clone>(per_instance: &[Vec<T>], total: usize) -> Vec<T> {
+    let n_i = per_instance.len();
+    let mut cursors = vec![0usize; n_i];
+    let mut out = Vec::with_capacity(total);
+    for chunk_idx in 0..total {
+        let inst = route(chunk_idx, n_i);
+        let c = cursors[inst];
+        assert!(
+            c < per_instance[inst].len(),
+            "instance {inst} queue exhausted at chunk {chunk_idx}"
+        );
+        out.push(per_instance[inst][c].clone());
+        cursors[inst] += 1;
+    }
+    for (i, (&c, q)) in cursors.iter().zip(per_instance).enumerate() {
+        assert_eq!(c, q.len(), "instance {i} has {} unconsumed outputs", q.len() - c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ssm::distribute;
+    use super::*;
+
+    #[test]
+    fn split_then_merge_is_identity() {
+        let chunks: Vec<u32> = (0..96).collect();
+        for n_i in [1usize, 2, 4, 8, 16, 32] {
+            let queues_idx = distribute(&chunks, n_i);
+            let per_instance: Vec<Vec<u32>> = queues_idx
+                .iter()
+                .map(|q| q.iter().map(|&i| chunks[i]).collect())
+                .collect();
+            assert_eq!(collect(&per_instance, chunks.len()), chunks, "n_i = {n_i}");
+        }
+    }
+
+    #[test]
+    fn uneven_chunk_count_roundtrips() {
+        // 13 chunks over 4 instances: queues have different lengths.
+        let chunks: Vec<u32> = (0..13).collect();
+        let queues_idx = distribute(&chunks, 4);
+        let per_instance: Vec<Vec<u32>> =
+            queues_idx.iter().map(|q| q.iter().map(|&i| chunks[i]).collect()).collect();
+        assert_eq!(collect(&per_instance, 13), chunks);
+    }
+
+    #[test]
+    #[should_panic(expected = "queue exhausted")]
+    fn missing_output_detected() {
+        let per_instance: Vec<Vec<u32>> = vec![vec![0], vec![]];
+        collect(&per_instance, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "unconsumed")]
+    fn extra_output_detected() {
+        let per_instance: Vec<Vec<u32>> = vec![vec![0, 2], vec![1]];
+        collect(&per_instance, 2);
+    }
+}

@@ -1,0 +1,111 @@
+//! Overlap-generate module (OGM, Sec. 5.3).
+//!
+//! Splitting the stream across instances breaks the receptive-field
+//! context at sub-sequence borders; the OGM prepends/appends `o_act`
+//! samples of the neighbouring sub-sequences (zero-padded at the stream
+//! edges) so the per-instance BER stays flat across the border region.
+
+/// Cut `x` into chunks of `l_inst` samples, each extended by `o_act`
+/// overlap on both sides: chunk `i` covers
+/// `[i*l_inst - o_act, (i+1)*l_inst + o_act)`, zero-padded outside `x`.
+/// The tail chunk is zero-padded up to full length, with the valid
+/// sample count returned alongside.
+pub fn make_chunks(x: &[f32], l_inst: usize, o_act: usize) -> Vec<Chunk> {
+    assert!(l_inst > 0, "l_inst must be positive");
+    let n_chunks = x.len().div_ceil(l_inst);
+    let l_ol = l_inst + 2 * o_act;
+    let mut out = Vec::with_capacity(n_chunks);
+    for i in 0..n_chunks {
+        let mut data = vec![0.0f32; l_ol];
+        let logical_start = (i * l_inst) as isize - o_act as isize;
+        for (j, slot) in data.iter_mut().enumerate() {
+            let src = logical_start + j as isize;
+            if src >= 0 && (src as usize) < x.len() {
+                *slot = x[src as usize];
+            }
+        }
+        let valid = (x.len() - i * l_inst).min(l_inst);
+        out.push(Chunk { index: i, data, valid });
+    }
+    out
+}
+
+/// One overlapped sub-sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chunk {
+    /// Position in the original stream (chunk order).
+    pub index: usize,
+    /// `l_inst + 2*o_act` samples.
+    pub data: Vec<f32>,
+    /// Valid payload samples (< l_inst only for the tail chunk).
+    pub valid: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_multiple_no_overlap() {
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let c = make_chunks(&x, 4, 0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].data, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(c[1].data, vec![4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(c[1].valid, 4);
+    }
+
+    #[test]
+    fn overlap_copies_neighbours() {
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let c = make_chunks(&x, 4, 2);
+        assert_eq!(c[1].data, vec![2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn borders_zero_padded() {
+        let x: Vec<f32> = (1..=4).map(|i| i as f32).collect();
+        let c = make_chunks(&x, 4, 2);
+        assert_eq!(c[0].data, vec![0.0, 0.0, 1.0, 2.0, 3.0, 4.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn tail_chunk_partial() {
+        let x: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let c = make_chunks(&x, 4, 1);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[2].valid, 2);
+        // Chunk 2 covers [7, 13): samples 7,8,9 then zeros.
+        assert_eq!(c[2].data, vec![7.0, 8.0, 9.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn property_chunks_cover_stream_exactly() {
+        // Every stream sample appears in exactly one chunk payload, at
+        // payload offset o_act + (index - chunk*l_inst).
+        crate::util::prop::check(40, |g| {
+            let l_inst = g.usize_in(4, 300);
+            let o_act = g.usize_in(0, 80);
+            let len = g.usize_in(1, 2000);
+            let x: Vec<f32> = (0..len).map(|i| i as f32).collect();
+            let chunks = make_chunks(&x, l_inst, o_act);
+            assert_eq!(chunks.len(), len.div_ceil(l_inst));
+            let mut covered = 0usize;
+            for c in &chunks {
+                for j in 0..c.valid {
+                    assert_eq!(c.data[o_act + j], (c.index * l_inst + j) as f32);
+                }
+                covered += c.valid;
+            }
+            assert_eq!(covered, len);
+        });
+    }
+
+    #[test]
+    fn all_chunks_same_length() {
+        let x = vec![1.0f32; 1000];
+        let c = make_chunks(&x, 300, 50);
+        assert!(c.iter().all(|ch| ch.data.len() == 400));
+        assert_eq!(c.len(), 4);
+    }
+}

@@ -1,0 +1,75 @@
+//! Overlap-remove module (ORM, Sec. 5.3).
+//!
+//! Inverse of the OGM on the *symbol* side: each instance outputs
+//! `l_ol / N_os` soft symbols; the ORM discards the `o_act / N_os`
+//! border symbols contributed by the overlap and concatenates the
+//! payloads back into one stream of `l_in / N_os` symbols.
+
+/// Strip per-chunk overlap symbols and concatenate.
+///
+/// * `outputs` — per-chunk soft-symbol vectors, in stream order;
+/// * `o_act_sym` — overlap per border in symbols (`o_act / N_os`);
+/// * `valid_sym` — per-chunk payload symbols (`chunk.valid / N_os`).
+pub fn merge_outputs(outputs: &[Vec<f32>], o_act_sym: usize, valid_sym: &[usize]) -> Vec<f32> {
+    assert_eq!(outputs.len(), valid_sym.len(), "chunk count mismatch");
+    let total: usize = valid_sym.iter().sum();
+    let mut out = Vec::with_capacity(total);
+    for (chunk_out, &valid) in outputs.iter().zip(valid_sym) {
+        assert!(
+            chunk_out.len() >= o_act_sym + valid,
+            "chunk output too short: {} < {} + {}",
+            chunk_out.len(),
+            o_act_sym,
+            valid
+        );
+        out.extend_from_slice(&chunk_out[o_act_sym..o_act_sym + valid]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_borders() {
+        let outputs = vec![vec![9.0, 1.0, 2.0, 9.0], vec![8.0, 3.0, 4.0, 8.0]];
+        assert_eq!(merge_outputs(&outputs, 1, &[2, 2]), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_overlap_concatenates() {
+        let outputs = vec![vec![1.0, 2.0], vec![3.0]];
+        assert_eq!(merge_outputs(&outputs, 0, &[2, 1]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn tail_chunk_truncated() {
+        let outputs = vec![vec![0.0, 1.0, 2.0, 0.0], vec![0.0, 3.0, 0.0, 0.0]];
+        assert_eq!(merge_outputs(&outputs, 1, &[2, 1]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk count mismatch")]
+    fn mismatched_lengths_panic() {
+        merge_outputs(&[vec![1.0]], 0, &[1, 1]);
+    }
+
+    /// OGM ∘ identity-equalizer ∘ ORM == decimation of the input: the
+    /// partition bookkeeping must be lossless end to end.
+    #[test]
+    fn roundtrip_with_identity_instance() {
+        use crate::coordinator::ogm::make_chunks;
+        let n_os = 2;
+        let x: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let (l_inst, o_act) = (96, 16);
+        let chunks = make_chunks(&x, l_inst, o_act);
+        // "Equalizer" that just decimates its chunk by N_os.
+        let outputs: Vec<Vec<f32>> =
+            chunks.iter().map(|c| c.data.iter().step_by(n_os).copied().collect()).collect();
+        let valid: Vec<usize> = chunks.iter().map(|c| c.valid / n_os).collect();
+        let merged = merge_outputs(&outputs, o_act / n_os, &valid);
+        let expect: Vec<f32> = x.iter().step_by(n_os).copied().collect();
+        assert_eq!(merged, expect);
+    }
+}

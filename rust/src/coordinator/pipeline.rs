@@ -1,0 +1,237 @@
+//! The composed equalization pipeline:
+//! OGM -> SSM tree -> N_i instances -> MSM tree -> ORM.
+//!
+//! Functionally faithful to the FPGA dataflow (Sec. 5.3): identical
+//! chunking, routing, overlap bookkeeping and ordering.  Supports
+//! sequential execution (deterministic, for tests/validation) and a
+//! threaded mode with one OS thread per instance (the serving
+//! configuration — each instance owns its compiled executable, mirroring
+//! one hardware engine).
+
+use super::instance::EqualizerInstance;
+use super::{msm, ogm, orm, ssm};
+use anyhow::Result;
+
+/// Given a desired `l_inst` and the artifact width buckets, pick the
+/// smallest bucket that fits `l_inst + 2*o_act` and return
+/// `(bucket, actual_l_inst)` — the larger actual `l_inst` can only
+/// improve net throughput (Eq. 4).
+pub fn plan_bucket(
+    desired_l_inst: usize,
+    o_act: usize,
+    buckets: &[usize],
+) -> Option<(usize, usize)> {
+    let need = desired_l_inst + 2 * o_act;
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b >= need && b > 2 * o_act)
+        .min()
+        .map(|b| (b, b - 2 * o_act))
+}
+
+/// A configured pipeline over `N_i` worker instances.
+///
+/// Generic over the instance type: `Box<dyn EqualizerInstance>` (the
+/// default) for heterogeneous/shared-client workers (sequential
+/// execution), or any `Send` instance type (e.g.
+/// [`super::instance::PjrtInstance`]) to unlock
+/// [`EqualizerPipeline::equalize_parallel`].
+pub struct EqualizerPipeline<I: EqualizerInstance = Box<dyn EqualizerInstance>> {
+    instances: Vec<I>,
+    l_inst: usize,
+    o_act: usize,
+    n_os: usize,
+}
+
+impl<I: EqualizerInstance> EqualizerPipeline<I> {
+    /// `instances` must all accept `l_inst + 2*o_act`-sample chunks.
+    pub fn new(
+        instances: Vec<I>,
+        l_inst: usize,
+        o_act: usize,
+        n_os: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(!instances.is_empty(), "need at least one instance");
+        anyhow::ensure!(instances.len().is_power_of_two(), "N_i must be a power of two");
+        anyhow::ensure!(l_inst % n_os == 0, "l_inst must be divisible by N_os");
+        anyhow::ensure!(o_act % n_os == 0, "o_act must be divisible by N_os");
+        let l_ol = l_inst + 2 * o_act;
+        for (i, inst) in instances.iter().enumerate() {
+            anyhow::ensure!(
+                inst.width() == l_ol,
+                "instance {i} width {} != l_ol {l_ol}",
+                inst.width()
+            );
+        }
+        Ok(Self { instances, l_inst, o_act, n_os })
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn l_inst(&self) -> usize {
+        self.l_inst
+    }
+
+    pub fn o_act(&self) -> usize {
+        self.o_act
+    }
+
+    pub fn l_ol(&self) -> usize {
+        self.l_inst + 2 * self.o_act
+    }
+
+    /// Equalize a sample stream into soft symbols (sequential).
+    pub fn equalize(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let chunks = ogm::make_chunks(x, self.l_inst, self.o_act);
+        let queues = ssm::distribute(&chunks, self.instances.len());
+
+        let mut per_instance: Vec<Vec<Vec<f32>>> = Vec::with_capacity(self.instances.len());
+        for (inst, queue) in self.instances.iter_mut().zip(&queues) {
+            let mut outs = Vec::with_capacity(queue.len());
+            for &ci in queue {
+                outs.push(inst.process(&chunks[ci].data)?);
+            }
+            per_instance.push(outs);
+        }
+
+        let ordered = msm::collect(&per_instance, chunks.len());
+        let valid: Vec<usize> = chunks.iter().map(|c| c.valid / self.n_os).collect();
+        Ok(orm::merge_outputs(&ordered, self.o_act / self.n_os, &valid))
+    }
+
+    /// Equalize a sample stream, one thread per instance.
+    ///
+    /// Requires `Send` instances (one PJRT client per worker).  NOTE:
+    /// on the CPU substrate the shared-client sequential path is
+    /// usually faster — the XLA client already parallelizes each
+    /// execute internally, so extra clients only contend
+    /// (EXPERIMENTS.md §Perf keeps both measurements).
+    pub fn equalize_parallel(&mut self, x: &[f32]) -> Result<Vec<f32>>
+    where
+        I: Send,
+    {
+        let chunks = ogm::make_chunks(x, self.l_inst, self.o_act);
+        let queues = ssm::distribute(&chunks, self.instances.len());
+        let n_os = self.n_os;
+        let o_act = self.o_act;
+
+        let mut per_instance: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.instances.len()];
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for (inst, queue) in self.instances.iter_mut().zip(&queues) {
+                let chunks = &chunks;
+                handles.push(scope.spawn(move || -> Result<Vec<Vec<f32>>> {
+                    let mut outs = Vec::with_capacity(queue.len());
+                    for &ci in queue {
+                        outs.push(inst.process(&chunks[ci].data)?);
+                    }
+                    Ok(outs)
+                }));
+            }
+            for (i, h) in handles.into_iter().enumerate() {
+                per_instance[i] = h.join().map_err(|_| anyhow::anyhow!("instance thread panicked"))??;
+            }
+            Ok(())
+        })?;
+
+        let ordered = msm::collect(&per_instance, chunks.len());
+        let valid: Vec<usize> = chunks.iter().map(|c| c.valid / n_os).collect();
+        Ok(orm::merge_outputs(&ordered, o_act / n_os, &valid))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::instance::DecimatorInstance;
+    use super::*;
+
+    fn decimator_pipeline(
+        n_i: usize,
+        l_inst: usize,
+        o_act: usize,
+    ) -> EqualizerPipeline<DecimatorInstance> {
+        let instances: Vec<DecimatorInstance> = (0..n_i)
+            .map(|_| DecimatorInstance { width: l_inst + 2 * o_act, n_os: 2 })
+            .collect();
+        EqualizerPipeline::new(instances, l_inst, o_act, 2).unwrap()
+    }
+
+    #[test]
+    fn identity_roundtrip_across_instance_counts() {
+        let x: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.1).sin()).collect();
+        let expect: Vec<f32> = x.iter().step_by(2).copied().collect();
+        for n_i in [1usize, 2, 4, 16] {
+            let mut p = decimator_pipeline(n_i, 256, 32);
+            assert_eq!(p.equalize(&x).unwrap(), expect, "n_i = {n_i}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let x: Vec<f32> = (0..8192).map(|i| (i as f32 * 0.31).cos()).collect();
+        let mut p1 = decimator_pipeline(8, 512, 64);
+        let mut p2 = decimator_pipeline(8, 512, 64);
+        assert_eq!(p1.equalize(&x).unwrap(), p2.equalize_parallel(&x).unwrap());
+    }
+
+    #[test]
+    fn non_multiple_stream_length() {
+        // 1000 samples with l_inst 256: tail chunk is partial.
+        let x: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let mut p = decimator_pipeline(4, 256, 16);
+        let y = p.equalize(&x).unwrap();
+        assert_eq!(y.len(), 500);
+        assert_eq!(y[499], 998.0);
+    }
+
+    #[test]
+    fn plan_bucket_picks_smallest_fit() {
+        let buckets = [256usize, 512, 1024, 2048, 4096, 8192];
+        assert_eq!(plan_bucket(768, 128, &buckets), Some((1024, 768)));
+        assert_eq!(plan_bucket(800, 128, &buckets), Some((2048, 1792)));
+        // o_act alone exceeding every bucket -> None.
+        assert_eq!(plan_bucket(1, 8192, &buckets), None);
+    }
+
+    #[test]
+    fn width_mismatch_rejected() {
+        let instances = vec![DecimatorInstance { width: 100, n_os: 2 }];
+        assert!(EqualizerPipeline::new(instances, 256, 32, 2).is_err());
+    }
+
+    #[test]
+    fn property_roundtrip_random_geometry() {
+        // For random l_inst/o_act/stream length/instance count, the
+        // OGM -> SSM -> decimate -> MSM -> ORM composition must equal
+        // direct decimation of the stream (lossless partitioning).
+        crate::util::prop::check(40, |g| {
+            let n_i = 1usize << g.usize_in(0, 4);
+            let l_inst = g.usize_in(8, 200) * 2;
+            let o_act = g.usize_in(0, 40) * 2;
+            let len = g.usize_in(1, 40) * l_inst + g.usize_in(0, 20) * 2;
+            let x = g.vec_f32(len, -3.0, 3.0);
+            let mut p = decimator_pipeline_n(n_i, l_inst, o_act);
+            let y = p.equalize(&x).unwrap();
+            let expect: Vec<f32> = x.iter().step_by(2).copied().collect();
+            assert_eq!(y, expect, "n_i={n_i} l_inst={l_inst} o_act={o_act} len={len}");
+        });
+    }
+
+    fn decimator_pipeline_n(
+        n_i: usize,
+        l_inst: usize,
+        o_act: usize,
+    ) -> EqualizerPipeline<DecimatorInstance> {
+        decimator_pipeline(n_i, l_inst, o_act)
+    }
+
+    #[test]
+    fn non_pow2_rejected() {
+        let instances: Vec<DecimatorInstance> =
+            (0..3).map(|_| DecimatorInstance { width: 320, n_os: 2 }).collect();
+        assert!(EqualizerPipeline::new(instances, 256, 32, 2).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Sequence-length optimization framework (Sec. 6.2, Fig. 11).
+//!
+//! Throughput is a hard constraint, latency the objective: pick the
+//! minimal `l_inst` whose net throughput (Eq. 4) meets `T_req`.  The
+//! paper deploys this as an on-FPGA lookup table produced by a
+//! LUT-generator fed from the timing model; [`SeqLenOptimizer::build_lut`]
+//! is that generator, and [`SeqLenOptimizer::lookup`] the runtime path
+//! (O(log n) over the table, selectable per sequence).
+
+use super::timing::TimingModel;
+
+/// Closed-form + table-based l_inst selection.
+#[derive(Debug, Clone)]
+pub struct SeqLenOptimizer {
+    model: TimingModel,
+    /// l_inst granularity in samples (stream width divisibility; the
+    /// paper rounds to the V_p grid).
+    pub granularity: usize,
+}
+
+/// One LUT row: minimum l_inst for a required net throughput.
+#[derive(Debug, Clone, Copy)]
+pub struct LutRow {
+    pub t_req: f64,
+    pub l_inst: usize,
+    pub lambda_s: f64,
+    pub t_net: f64,
+}
+
+impl SeqLenOptimizer {
+    pub fn new(model: TimingModel) -> Self {
+        Self { model, granularity: model.vp }
+    }
+
+    pub fn model(&self) -> &TimingModel {
+        &self.model
+    }
+
+    /// Minimal `l_inst` with `T_net(l_inst) >= t_req`, or `None` if the
+    /// requirement exceeds `T_max` (Sec. 6.2).  Inverts Eq. (4):
+    /// `l_inst >= 2 o_act / (T_max/T_req - 1)`, rounded up to the grid.
+    pub fn min_l_inst(&self, t_req: f64) -> Option<usize> {
+        let t_max = self.model.t_max();
+        if t_req >= t_max || t_req <= 0.0 {
+            return None;
+        }
+        let exact = 2.0 * self.model.o_act() as f64 / (t_max / t_req - 1.0);
+        let g = self.granularity as f64;
+        let mut l = ((exact / g).ceil() * g) as usize;
+        l = l.max(self.granularity);
+        // Guard against FP edge: enforce the constraint exactly.
+        while self.model.t_net(l) < t_req {
+            l += self.granularity;
+        }
+        Some(l)
+    }
+
+    /// The paper's LUT-generator: rows for a grid of throughput targets.
+    pub fn build_lut(&self, targets: &[f64]) -> Vec<LutRow> {
+        targets
+            .iter()
+            .filter_map(|&t_req| {
+                self.min_l_inst(t_req).map(|l_inst| LutRow {
+                    t_req,
+                    l_inst,
+                    lambda_s: self.model.lambda_sym_s(l_inst),
+                    t_net: self.model.t_net(l_inst),
+                })
+            })
+            .collect()
+    }
+
+    /// Runtime lookup: smallest tabulated l_inst meeting `t_req`
+    /// (binary search; table must be sorted by `t_req`, as built).
+    pub fn lookup(lut: &[LutRow], t_req: f64) -> Option<LutRow> {
+        let idx = lut.partition_point(|r| r.t_req < t_req);
+        lut.get(idx).or_else(|| lut.last().filter(|r| r.t_req >= t_req)).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opt() -> SeqLenOptimizer {
+        SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6))
+    }
+
+    #[test]
+    fn paper_anchor_80gsamples_gives_7320() {
+        // Sec. 7.2: minimal l_inst for 80 Gsamples/s net is 7320.
+        let l = opt().min_l_inst(80e9).unwrap();
+        assert_eq!(l, 7320);
+    }
+
+    #[test]
+    fn result_is_minimal_on_grid() {
+        let o = opt();
+        let l = o.min_l_inst(80e9).unwrap();
+        assert!(o.model.t_net(l) >= 80e9);
+        assert!(o.model.t_net(l - o.granularity) < 80e9, "not minimal");
+    }
+
+    #[test]
+    fn unreachable_targets_rejected() {
+        let o = opt();
+        assert!(o.min_l_inst(102.4e9).is_none()); // == T_max
+        assert!(o.min_l_inst(200e9).is_none());
+        assert!(o.min_l_inst(-1.0).is_none());
+    }
+
+    #[test]
+    fn monotone_in_target() {
+        let o = opt();
+        let mut prev = 0;
+        for t in [10e9, 40e9, 60e9, 80e9, 95e9, 100e9] {
+            let l = o.min_l_inst(t).unwrap();
+            assert!(l >= prev, "l_inst must grow with T_req");
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn lut_roundtrip() {
+        let o = opt();
+        let targets: Vec<f64> = (1..=100).map(|i| i as f64 * 1e9).collect();
+        let lut = o.build_lut(&targets);
+        assert!(lut.len() >= 99); // everything below T_max resolves
+        let row = SeqLenOptimizer::lookup(&lut, 80e9).unwrap();
+        assert_eq!(row.l_inst, 7320);
+        // A tabulated target above T_max is absent.
+        assert!(SeqLenOptimizer::lookup(&lut, 102.4e9).is_none());
+    }
+
+    #[test]
+    fn lut_rows_satisfy_their_targets() {
+        let o = opt();
+        let lut = o.build_lut(&[20e9, 50e9, 90e9]);
+        for row in lut {
+            assert!(row.t_net >= row.t_req);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Streaming server front-end (std threads + channels; tokio is not
+//! vendored in this offline image — the request loop is a dedicated
+//! worker thread, which also matches the hardware model: one engine
+//! complex owning its instances).
+//!
+//! Serving shape: clients submit sample bursts over an mpsc channel;
+//! the coordinator chunks them (OGM), fans work out to instance workers
+//! (SSM semantics), restores order (MSM), strips overlap (ORM) and
+//! replies per burst with soft symbols + timing.  Each burst may carry
+//! its own throughput requirement and the server picks `l_inst` from
+//! the LUT — the paper's runtime sequence-length selection (Fig. 11).
+
+use super::seqlen::{LutRow, SeqLenOptimizer};
+use super::{msm, ogm, orm, ssm};
+use crate::coordinator::instance::EqualizerInstance;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One equalization request.
+pub struct EqualizeRequest {
+    /// Receiver samples (N_os per symbol).
+    pub samples: Vec<f32>,
+    /// Optional per-request net-throughput requirement (samples/s);
+    /// the server selects l_inst from the LUT (Fig. 11).
+    pub t_req: Option<f64>,
+    /// Reply channel.
+    pub reply: mpsc::Sender<EqualizeResponse>,
+}
+
+/// Server reply.
+#[derive(Debug)]
+pub struct EqualizeResponse {
+    pub soft_symbols: Vec<f32>,
+    /// l_inst used for this burst (samples).
+    pub l_inst: usize,
+    /// Wall-clock processing time.
+    pub elapsed_us: f64,
+}
+
+/// Streaming server around a fixed set of instances (`Send`: the
+/// request loop runs on its own thread).
+pub struct EqualizerServer<I: EqualizerInstance + Send + 'static = Box<dyn EqualizerInstance + Send>> {
+    instances: Vec<I>,
+    /// Width every instance accepts (= max l_ol).
+    l_ol: usize,
+    o_act: usize,
+    n_os: usize,
+    lut: Vec<LutRow>,
+    default_l_inst: usize,
+}
+
+/// Handle to a running server thread.
+pub struct ServerHandle {
+    pub tx: mpsc::Sender<EqualizeRequest>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// Close the request channel and wait for the loop to drain.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        let _ = self.join.join();
+    }
+
+    /// Convenience: send one request and wait for the reply.
+    pub fn call(&self, samples: Vec<f32>, t_req: Option<f64>) -> Result<EqualizeResponse> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(EqualizeRequest { samples, t_req, reply })
+            .map_err(|_| anyhow::anyhow!("server closed"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped reply"))
+    }
+}
+
+impl<I: EqualizerInstance + Send + 'static> EqualizerServer<I> {
+    pub fn new(
+        instances: Vec<I>,
+        o_act: usize,
+        n_os: usize,
+        optimizer: &SeqLenOptimizer,
+        lut_targets: &[f64],
+    ) -> Result<Self> {
+        anyhow::ensure!(!instances.is_empty());
+        let l_ol = instances[0].width();
+        for inst in &instances {
+            anyhow::ensure!(inst.width() == l_ol, "instance width mismatch");
+        }
+        anyhow::ensure!(l_ol > 2 * o_act, "l_ol must exceed the overlap");
+        Ok(Self {
+            instances,
+            l_ol,
+            o_act,
+            n_os,
+            lut: optimizer.build_lut(lut_targets),
+            default_l_inst: l_ol - 2 * o_act,
+        })
+    }
+
+    /// Pick l_inst for a request: LUT hit if a requirement is given and
+    /// achievable with this fixed artifact width, else the full payload.
+    fn pick_l_inst(&self, t_req: Option<f64>) -> usize {
+        let max_payload = self.l_ol - 2 * self.o_act;
+        let grid = self.n_os;
+        match t_req {
+            None => self.default_l_inst,
+            Some(t) => SeqLenOptimizer::lookup(&self.lut, t)
+                .map(|row| row.l_inst.min(max_payload).next_multiple_of(grid).min(max_payload))
+                .unwrap_or(max_payload),
+        }
+    }
+
+    fn process(&mut self, samples: &[f32], l_inst: usize) -> Result<Vec<f32>> {
+        // Chunk with the requested payload, then zero-extend every chunk
+        // to the fixed instance width (the FPGA pads the stream tail).
+        let mut chunks = ogm::make_chunks(samples, l_inst, self.o_act);
+        for c in &mut chunks {
+            c.data.resize(self.l_ol, 0.0);
+        }
+        let queues = ssm::distribute(&chunks, self.instances.len());
+        let mut per_instance: Vec<Vec<Vec<f32>>> = Vec::with_capacity(self.instances.len());
+        for (inst, queue) in self.instances.iter_mut().zip(&queues) {
+            let mut outs = Vec::with_capacity(queue.len());
+            for &ci in queue {
+                outs.push(inst.process(&chunks[ci].data)?);
+            }
+            per_instance.push(outs);
+        }
+        let ordered = msm::collect(&per_instance, chunks.len());
+        let valid: Vec<usize> = chunks.iter().map(|c| c.valid / self.n_os).collect();
+        Ok(orm::merge_outputs(&ordered, self.o_act / self.n_os, &valid))
+    }
+
+    /// Spawn the request loop on its own thread.
+    pub fn spawn(mut self) -> ServerHandle {
+        let (tx, rx) = mpsc::channel::<EqualizeRequest>();
+        let join = std::thread::spawn(move || {
+            while let Ok(req) = rx.recv() {
+                let l_inst = self.pick_l_inst(req.t_req);
+                let t0 = Instant::now();
+                let result = self.process(&req.samples, l_inst);
+                let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
+                let resp = match result {
+                    Ok(soft_symbols) => EqualizeResponse { soft_symbols, l_inst, elapsed_us },
+                    Err(_) => EqualizeResponse { soft_symbols: vec![], l_inst, elapsed_us },
+                };
+                let _ = req.reply.send(resp);
+            }
+        });
+        ServerHandle { tx, join }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::instance::DecimatorInstance;
+    use crate::coordinator::timing::TimingModel;
+
+    fn server(n_i: usize, l_ol: usize, o_act: usize) -> EqualizerServer {
+        let instances: Vec<Box<dyn EqualizerInstance + Send>> = (0..n_i)
+            .map(|_| Box::new(DecimatorInstance { width: l_ol, n_os: 2 }) as Box<_>)
+            .collect();
+        let model = TimingModel::new(64, 8, 3, 9, 200e6);
+        let opt = SeqLenOptimizer::new(model);
+        let targets: Vec<f64> = (1..=100).map(|i| i as f64 * 1e9).collect();
+        EqualizerServer::new(instances, o_act, 2, &opt, &targets).unwrap()
+    }
+
+    #[test]
+    fn serve_roundtrip() {
+        let h = server(4, 512, 64).spawn();
+        let samples: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+        let resp = h.call(samples, None).unwrap();
+        assert_eq!(resp.soft_symbols.len(), 2048);
+        assert_eq!(resp.soft_symbols[0], 0.0);
+        assert_eq!(resp.soft_symbols[2047], 4094.0);
+        assert!(resp.elapsed_us > 0.0);
+        h.shutdown();
+    }
+
+    #[test]
+    fn per_request_throughput_requirement() {
+        let h = server(4, 2048, 128).spawn();
+        // Low requirement -> small l_inst from the LUT (lower latency).
+        let low = h.call(vec![0.0; 8192], Some(10e9)).unwrap();
+        // High requirement -> larger l_inst.
+        let high = h.call(vec![0.0; 8192], Some(90e9)).unwrap();
+        assert!(low.l_inst < high.l_inst, "{} !< {}", low.l_inst, high.l_inst);
+        h.shutdown();
+    }
+
+    #[test]
+    fn sequential_requests_keep_order() {
+        let h = server(2, 256, 32).spawn();
+        for round in 0..5 {
+            let samples: Vec<f32> = (0..1024).map(|i| (i + round) as f32).collect();
+            let resp = h.call(samples, None).unwrap();
+            assert_eq!(resp.soft_symbols[0], round as f32);
+        }
+        h.shutdown();
+    }
+}

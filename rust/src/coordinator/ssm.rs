@@ -1,0 +1,94 @@
+//! Split-stream module tree (SSM, Sec. 5.3).
+//!
+//! The paper arranges `N_i - 1` SSMs as a binary tree; each SSM writes
+//! incoming sub-sequences alternately to its two outputs.  A chunk with
+//! stream index `i` therefore descends the tree by the bits of `i`
+//! LSB-first, landing on instance `bit_reverse(i mod N_i)` — the
+//! hierarchical round-robin the paper describes.  (The hierarchy exists
+//! for routability on the FPGA; functionally it is this permutation.)
+
+/// Instance index a chunk lands on after `log2(n_i)` SSM stages.
+pub fn route(chunk_index: usize, n_i: usize) -> usize {
+    assert!(n_i.is_power_of_two(), "binary SSM tree requires power-of-two N_i");
+    let bits = n_i.trailing_zeros();
+    let mut idx = chunk_index % n_i;
+    let mut out = 0usize;
+    for _ in 0..bits {
+        out = (out << 1) | (idx & 1);
+        idx >>= 1;
+    }
+    out
+}
+
+/// Distribute chunks over `n_i` instance queues in SSM-tree order.
+/// Returns per-instance lists of chunk indices (into the input slice).
+pub fn distribute<T>(chunks: &[T], n_i: usize) -> Vec<Vec<usize>> {
+    let mut queues = vec![Vec::new(); n_i];
+    for i in 0..chunks.len() {
+        queues[route(i, n_i)].push(i);
+    }
+    queues
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_instances_alternate() {
+        // One SSM: even chunks left, odd chunks right.
+        assert_eq!(route(0, 2), 0);
+        assert_eq!(route(1, 2), 1);
+        assert_eq!(route(2, 2), 0);
+    }
+
+    #[test]
+    fn four_instances_bit_reversed() {
+        // chunk 1 goes right at stage 0 then left: instance 0b10 = 2.
+        assert_eq!(route(0, 4), 0);
+        assert_eq!(route(1, 4), 2);
+        assert_eq!(route(2, 4), 1);
+        assert_eq!(route(3, 4), 3);
+        assert_eq!(route(4, 4), 0);
+    }
+
+    #[test]
+    fn one_instance_identity() {
+        for i in 0..10 {
+            assert_eq!(route(i, 1), 0);
+        }
+    }
+
+    #[test]
+    fn distribution_is_balanced() {
+        let chunks: Vec<u32> = (0..1024).collect();
+        for n_i in [2usize, 8, 64] {
+            let queues = distribute(&chunks, n_i);
+            assert!(queues.iter().all(|q| q.len() == 1024 / n_i));
+        }
+    }
+
+    #[test]
+    fn every_chunk_routed_exactly_once() {
+        let chunks: Vec<u32> = (0..100).collect();
+        let queues = distribute(&chunks, 8);
+        let mut seen = vec![false; 100];
+        for q in &queues {
+            for &i in q {
+                assert!(!seen[i], "chunk {i} routed twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn queues_preserve_stream_order() {
+        // Within one instance the chunk indices must be increasing —
+        // the FPGA stream cannot reorder.
+        let chunks: Vec<u32> = (0..256).collect();
+        for q in distribute(&chunks, 16) {
+            assert!(q.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

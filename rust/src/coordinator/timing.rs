@@ -1,0 +1,159 @@
+//! Analytic timing model (Sec. 6.1).
+//!
+//! All lengths are in *samples* (the paper's `V_p` counts samples per
+//! cycle: `T_max = N_i * V_p * f_clk` = 102.4 Gsamples/s for the
+//! 64-instance design).  Anchors from the paper, reproduced by the unit
+//! tests below:
+//!
+//! * `o_sym = (K-1)(1 + V_p (L-1)) / 2 = 68` for the selected model;
+//! * `o_act = nextEven(ceil(o_sym / (V_p N_i))) * V_p * N_i = 1024`
+//!   samples at `N_i = 64`;
+//! * minimal `l_inst` for 80 Gsamples/s is 7320, giving
+//!   `lambda_sym ~= 17.5 us` (Sec. 7.1/7.2).
+
+
+/// Static description of one deployment for timing purposes.
+#[derive(Debug, Clone, Copy)]
+pub struct TimingModel {
+    /// Parallel CNN instances (power of two; the SSM tree is binary).
+    pub n_i: usize,
+    /// Samples produced per instance-cycle (the topology's V_p).
+    pub vp: usize,
+    /// Layers L and kernel K of the topology (for o_sym).
+    pub layers: usize,
+    pub kernel: usize,
+    /// Clock frequency in Hz.
+    pub f_clk_hz: f64,
+}
+
+impl TimingModel {
+    pub fn new(n_i: usize, vp: usize, layers: usize, kernel: usize, f_clk_hz: f64) -> Self {
+        assert!(n_i.is_power_of_two(), "SSM tree requires power-of-two N_i");
+        Self { n_i, vp, layers, kernel, f_clk_hz }
+    }
+
+    /// Receptive-field half-width in samples (the paper's o_sym).
+    pub fn o_sym(&self) -> usize {
+        (self.kernel - 1) * (1 + self.vp * (self.layers - 1)) / 2
+    }
+
+    /// Actual per-border overlap after stream-width alignment:
+    /// `nextEven(ceil(o_sym / (V_p N_i))) * V_p * N_i` samples.
+    pub fn o_act(&self) -> usize {
+        let unit = self.vp * self.n_i;
+        let blocks = self.o_sym().div_ceil(unit);
+        let blocks_even = if blocks % 2 == 0 { blocks } else { blocks + 1 };
+        // nextEven of a value >= 1 is at least 2.
+        blocks_even.max(2) * unit
+    }
+
+    /// Sub-sequence length including overlap.
+    pub fn l_ol(&self, l_inst: usize) -> usize {
+        l_inst + 2 * self.o_act()
+    }
+
+    /// Pipeline-fill time (Eq. before (3)):
+    /// `t_init = log2(N_i) * l_ol / (2 V_p f_clk)`.
+    pub fn t_init_s(&self, l_inst: usize) -> f64 {
+        let stages = (self.n_i as f64).log2();
+        stages * self.l_ol(l_inst) as f64 / (2.0 * self.vp as f64 * self.f_clk_hz)
+    }
+
+    /// Maximum symbol latency (Eq. 3): dominated by `t_init`.
+    pub fn lambda_sym_s(&self, l_inst: usize) -> f64 {
+        self.t_init_s(l_inst)
+    }
+
+    /// Time to process one full sequence of `l_in` samples (Sec. 6.1).
+    pub fn t_p_s(&self, l_in: usize, l_inst: usize) -> f64 {
+        let chunks = l_in as f64 / (l_inst as f64 * self.n_i as f64);
+        chunks * self.l_ol(l_inst) as f64 / (self.vp as f64 * self.f_clk_hz)
+    }
+
+    /// Theoretical ceiling `T_max = N_i V_p f_clk` (samples/s).
+    pub fn t_max(&self) -> f64 {
+        self.n_i as f64 * self.vp as f64 * self.f_clk_hz
+    }
+
+    /// Net throughput (Eq. 4), samples/s.
+    pub fn t_net(&self, l_inst: usize) -> f64 {
+        self.t_max() / (1.0 + 2.0 * self.o_act() as f64 / l_inst as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_ht() -> TimingModel {
+        TimingModel::new(64, 8, 3, 9, 200e6)
+    }
+
+    #[test]
+    fn o_sym_selected_is_68() {
+        assert_eq!(paper_ht().o_sym(), 68);
+    }
+
+    #[test]
+    fn o_act_at_64_instances_is_1024() {
+        assert_eq!(paper_ht().o_act(), 1024);
+    }
+
+    #[test]
+    fn paper_anchor_l_inst_7320() {
+        // Sec. 7.2: l_inst = 7320 gives T_net >= 80 Gsamples/s and
+        // lambda ~= 17.5 us.
+        let m = paper_ht();
+        assert!(m.t_net(7320) >= 80e9, "T_net(7320) = {:.3e}", m.t_net(7320));
+        let lambda_us = m.lambda_sym_s(7320) * 1e6;
+        assert!((lambda_us - 17.5).abs() < 0.2, "lambda = {lambda_us} us");
+    }
+
+    #[test]
+    fn t_max_is_102_4_gsamples() {
+        assert!((paper_ht().t_max() - 102.4e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn throughput_monotone_saturating() {
+        let m = paper_ht();
+        let mut prev = 0.0;
+        for l in [512usize, 1024, 4096, 16384, 65536] {
+            let t = m.t_net(l);
+            assert!(t > prev);
+            assert!(t < m.t_max());
+            prev = t;
+        }
+        // Saturation: big l_inst approaches T_max.
+        assert!(m.t_net(1 << 22) > 0.999 * m.t_max());
+    }
+
+    #[test]
+    fn latency_linear_in_l_inst() {
+        let m = paper_ht();
+        let a = m.lambda_sym_s(1000);
+        let b = m.lambda_sym_s(2000);
+        let c = m.lambda_sym_s(3000);
+        assert!((2.0 * b - a - c).abs() < 1e-12, "not affine");
+        assert!(b > a);
+    }
+
+    #[test]
+    fn more_instances_higher_latency_and_throughput() {
+        // Fig. 12: both lambda and T grow with N_i at fixed l_inst.
+        let l = 4096;
+        let m2 = TimingModel::new(2, 8, 3, 9, 200e6);
+        let m8 = TimingModel::new(8, 8, 3, 9, 200e6);
+        let m64 = TimingModel::new(64, 8, 3, 9, 200e6);
+        assert!(m8.lambda_sym_s(l) > m2.lambda_sym_s(l));
+        assert!(m64.lambda_sym_s(l) > m8.lambda_sym_s(l));
+        assert!(m8.t_net(l) > m2.t_net(l));
+        assert!(m64.t_net(l) > m8.t_net(l));
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn non_pow2_instances_rejected() {
+        TimingModel::new(6, 8, 3, 9, 200e6);
+    }
+}

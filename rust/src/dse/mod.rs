@@ -1,0 +1,9 @@
+//! Design-space-exploration result processing (Figs. 2 and 4).
+//!
+//! The training sweep itself runs at build time (`python -m compile.dse`
+//! writes `artifacts/dse_*.json`); this module loads those results,
+//! computes Pareto fronts, applies the hardware-aware complexity
+//! ceiling (Sec. 3.4) and renders the figure tables.
+
+pub mod pareto;
+pub mod report;

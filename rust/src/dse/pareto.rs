@@ -1,0 +1,91 @@
+//! Pareto-front extraction over (complexity, BER) points.
+
+/// One trained configuration from the DSE sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DsePoint {
+    pub family: String,
+    pub label: String,
+    pub mac_per_symbol: f64,
+    pub ber: f64,
+}
+
+/// Points not dominated by any other: no other point has both lower (or
+/// equal) complexity *and* lower (or equal) BER with one strict.
+/// Returned sorted by complexity ascending — the dotted/solid/dashed
+/// front lines of Fig. 2.
+pub fn pareto_front(points: &[DsePoint]) -> Vec<DsePoint> {
+    let mut sorted: Vec<&DsePoint> = points.iter().collect();
+    sorted.sort_by(|a, b| {
+        a.mac_per_symbol
+            .partial_cmp(&b.mac_per_symbol)
+            .unwrap()
+            .then(a.ber.partial_cmp(&b.ber).unwrap())
+    });
+    let mut front: Vec<DsePoint> = Vec::new();
+    let mut best_ber = f64::INFINITY;
+    for p in sorted {
+        if p.ber < best_ber {
+            best_ber = p.ber;
+            front.push(p.clone());
+        }
+    }
+    front
+}
+
+/// The configuration the paper selects: lowest BER among points whose
+/// complexity satisfies the hardware ceiling (Sec. 3.5).
+pub fn select(points: &[DsePoint], mac_ceiling: f64) -> Option<DsePoint> {
+    points
+        .iter()
+        .filter(|p| p.mac_per_symbol <= mac_ceiling)
+        .min_by(|a, b| a.ber.partial_cmp(&b.ber).unwrap())
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(mac: f64, ber: f64) -> DsePoint {
+        DsePoint { family: "cnn".into(), label: format!("{mac}/{ber}"), mac_per_symbol: mac, ber }
+    }
+
+    #[test]
+    fn dominated_points_removed() {
+        let pts = vec![pt(10.0, 1e-2), pt(20.0, 1e-3), pt(15.0, 5e-2), pt(30.0, 1e-4)];
+        let front = pareto_front(&pts);
+        let labels: Vec<f64> = front.iter().map(|p| p.mac_per_symbol).collect();
+        assert_eq!(labels, vec![10.0, 20.0, 30.0]); // 15.0 dominated by 10.0
+    }
+
+    #[test]
+    fn front_is_monotone() {
+        let pts: Vec<DsePoint> = (0..50)
+            .map(|i| pt((i % 10) as f64 * 7.0 + 3.0, 1e-2 / ((i + 1) as f64)))
+            .collect();
+        let front = pareto_front(&pts);
+        for w in front.windows(2) {
+            assert!(w[1].mac_per_symbol > w[0].mac_per_symbol);
+            assert!(w[1].ber < w[0].ber);
+        }
+    }
+
+    #[test]
+    fn select_respects_ceiling() {
+        let pts = vec![pt(10.0, 1e-2), pt(50.0, 1e-3), pt(500.0, 1e-5)];
+        let sel = select(&pts, 100.0).unwrap();
+        assert_eq!(sel.mac_per_symbol, 50.0);
+    }
+
+    #[test]
+    fn select_none_when_all_too_big() {
+        let pts = vec![pt(500.0, 1e-5)];
+        assert!(select(&pts, 100.0).is_none());
+    }
+
+    #[test]
+    fn single_point_is_front() {
+        let pts = vec![pt(1.0, 0.1)];
+        assert_eq!(pareto_front(&pts), pts);
+    }
+}

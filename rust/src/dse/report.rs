@@ -1,0 +1,162 @@
+//! Load `artifacts/dse_*.json` (the Python sweep output) and render the
+//! Fig. 2 / Fig. 4 tables.
+
+use super::pareto::{pareto_front, select, DsePoint};
+use crate::hw::device::Device;
+use crate::hw::resource::mac_sym_max;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Parsed DSE sweep file.
+#[derive(Debug)]
+pub struct DseFile {
+    pub channel: String,
+    pub iters: u64,
+    pub seeds: u64,
+    pub results: Vec<DseEntry>,
+}
+
+/// One trained configuration row.
+#[derive(Debug)]
+pub struct DseEntry {
+    pub family: String,
+    pub config: String,
+    pub mac_per_symbol: f64,
+    pub ber: f64,
+}
+
+impl DseFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let root = json::parse_file(path.as_ref())?;
+        let results = root
+            .req("results")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("results must be an array"))?
+            .iter()
+            .map(|e| {
+                Ok(DseEntry {
+                    family: e.req("family")?.as_str().ok_or_else(|| anyhow!("family"))?.into(),
+                    config: e.req("config")?.render(),
+                    mac_per_symbol: e
+                        .req("mac_per_symbol")?
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("mac_per_symbol"))?,
+                    ber: e.req("ber")?.as_f64().ok_or_else(|| anyhow!("ber"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            channel: root.req("channel")?.as_str().unwrap_or("?").into(),
+            iters: root.get("iters").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            seeds: root.get("seeds").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            results,
+        })
+    }
+
+    pub fn points(&self, family: &str) -> Vec<DsePoint> {
+        self.results
+            .iter()
+            .filter(|e| e.family == family)
+            .map(|e| DsePoint {
+                family: e.family.clone(),
+                label: e.config.clone(),
+                mac_per_symbol: e.mac_per_symbol,
+                ber: e.ber.max(1e-7), // log-axis floor: 0 errors observed
+            })
+            .collect()
+    }
+}
+
+/// The Fig. 2 / Fig. 4 report: per-family Pareto fronts plus the
+/// hardware-constrained selection.
+pub struct FigureReport {
+    pub channel: String,
+    pub fronts: Vec<(String, Vec<DsePoint>)>,
+    pub ceiling: f64,
+    pub selected: Option<DsePoint>,
+}
+
+impl FigureReport {
+    pub fn build(file: &DseFile, dev: &Device, t_req_baud: f64) -> Self {
+        let ceiling = mac_sym_max(dev, t_req_baud);
+        let mut fronts = Vec::new();
+        for family in ["cnn", "fir", "volterra"] {
+            let pts = file.points(family);
+            if !pts.is_empty() {
+                fronts.push((family.to_string(), pareto_front(&pts)));
+            }
+        }
+        let selected = select(&file.points("cnn"), ceiling);
+        Self { channel: file.channel.clone(), fronts, ceiling, selected }
+    }
+
+    /// Text rendering (the "rows/series the paper reports").
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "channel={}  MAC ceiling (DSP*f_clk*1.2/T_req) = {:.1}\n",
+            self.channel, self.ceiling
+        ));
+        for (family, front) in &self.fronts {
+            out.push_str(&format!("-- {family} Pareto front --\n"));
+            for p in front {
+                out.push_str(&format!(
+                    "  mac/sym {:8.1}  BER {:9.3e}  {}\n",
+                    p.mac_per_symbol, p.ber, p.label
+                ));
+            }
+        }
+        if let Some(sel) = &self.selected {
+            out.push_str(&format!(
+                "SELECTED (lowest BER under ceiling): mac/sym {:.1} BER {:.3e} {}\n",
+                sel.mac_per_symbol, sel.ber, sel.label
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::device::XCVU13P;
+
+    fn sample_file() -> DseFile {
+        let text = r#"{
+          "channel": "imdd", "iters": 100, "seeds": 1, "full": false,
+          "results": [
+            {"family": "cnn", "config": {"vp": 8}, "mac_per_symbol": 56.25, "ber": 1e-3},
+            {"family": "cnn", "config": {"vp": 4}, "mac_per_symbol": 120.0, "ber": 5e-4},
+            {"family": "fir", "config": {"taps": 57}, "mac_per_symbol": 57.0, "ber": 4e-3},
+            {"family": "volterra", "config": {"m1": 25}, "mac_per_symbol": 61.0, "ber": 8e-3}
+          ]
+        }"#;
+        let tmp = std::env::temp_dir().join("dse_test_sample.json");
+        std::fs::write(&tmp, text).unwrap();
+        DseFile::load(&tmp).unwrap()
+    }
+
+    #[test]
+    fn parse_and_report() {
+        let f = sample_file();
+        assert_eq!(f.results.len(), 4);
+        let rep = FigureReport::build(&f, &XCVU13P, 40e9);
+        assert_eq!(rep.fronts.len(), 3);
+        let sel = rep.selected.as_ref().unwrap();
+        assert_eq!(sel.mac_per_symbol, 56.25); // 120 exceeds the 73.7 ceiling
+        let text = rep.render();
+        assert!(text.contains("SELECTED"));
+        assert!(text.contains("cnn Pareto front"));
+    }
+
+    #[test]
+    fn ber_floor_applied() {
+        let text = r#"{"channel":"x","results":[
+            {"family":"cnn","config":{},"mac_per_symbol":1,"ber":0}]}"#;
+        let tmp = std::env::temp_dir().join("dse_test_floor.json");
+        std::fs::write(&tmp, text).unwrap();
+        let f = DseFile::load(&tmp).unwrap();
+        assert!(f.points("cnn")[0].ber > 0.0);
+    }
+}

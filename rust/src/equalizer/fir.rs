@@ -1,0 +1,78 @@
+//! Linear feed-forward equalizer (Sec. 3.2, Eq. 1) — the conventional
+//! baseline the paper compares against.
+
+use super::weights::FirWeights;
+
+/// FIR equalizer: centered M-tap filter + decimation to symbol rate.
+#[derive(Debug, Clone)]
+pub struct FirEqualizer {
+    taps: Vec<f32>,
+    n_os: usize,
+}
+
+impl FirEqualizer {
+    pub fn new(taps: Vec<f32>, n_os: usize) -> Self {
+        Self { taps, n_os }
+    }
+
+    pub fn from_weights(w: &FirWeights) -> Self {
+        Self::new(w.w.clone(), w.cfg.n_os)
+    }
+
+    pub fn num_taps(&self) -> usize {
+        self.taps.len()
+    }
+
+    /// Eq. (1): y_i = sum_m x_{i+m} w(m + M*), then every `n_os`-th
+    /// output sample is a symbol estimate.
+    pub fn equalize(&self, x: &[f32]) -> Vec<f32> {
+        let m = self.taps.len();
+        let half = (m - 1) / 2;
+        let n = x.len();
+        let mut out = Vec::with_capacity(n / self.n_os);
+        let mut i = 0usize;
+        while i < n {
+            let mut acc = 0.0f32;
+            for (t, &w) in self.taps.iter().enumerate() {
+                let idx = i as isize + t as isize - half as isize;
+                if idx >= 0 && (idx as usize) < n {
+                    acc += x[idx as usize] * w;
+                }
+            }
+            out.push(acc);
+            i += self.n_os;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_filter_decimates() {
+        let mut taps = vec![0.0f32; 9];
+        taps[4] = 1.0;
+        let eq = FirEqualizer::new(taps, 2);
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        assert_eq!(eq.equalize(&x), vec![0.0, 2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 14.0]);
+    }
+
+    #[test]
+    fn averaging_filter() {
+        let eq = FirEqualizer::new(vec![0.5, 0.5, 0.0], 1);
+        // half = 1: y_i = 0.5*x_{i-1} + 0.5*x_i
+        let y = eq.equalize(&[2.0, 4.0, 6.0]);
+        assert_eq!(y, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn border_zero_padding() {
+        let mut taps = vec![0.0f32; 5];
+        taps[0] = 1.0; // y_i = x_{i-2}
+        let eq = FirEqualizer::new(taps, 1);
+        let y = eq.equalize(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![0.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,28 @@
+//! Equalizer datapaths (native Rust).
+//!
+//! These mirror the compute of the AOT artifacts: [`cnn::FixedPointCnn`]
+//! is the bit-accurate model of the FPGA datapath (fixed-point Q(m.n)
+//! arithmetic per tensor, Sec. 4/5), [`fir::FirEqualizer`] and
+//! [`volterra::VolterraEqualizer`] are the paper's baselines (Secs. 3.2,
+//! 3.3).  The hot serving path runs the PJRT-compiled HLO ([`crate::runtime`]);
+//! the native datapaths exist to (a) validate the quantized numerics
+//! bit-for-bit against the Pallas fake-quant artifact and (b) serve as
+//! the cycle-approximate simulator's functional model.
+
+pub mod cnn;
+pub mod fir;
+pub mod volterra;
+pub mod weights;
+
+/// Map soft symbol estimates onto the nearest PAM-2 constellation point.
+pub fn decide_pam2(soft: &[f32]) -> Vec<f32> {
+    soft.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn decisions() {
+        assert_eq!(super::decide_pam2(&[0.3, -0.1, 0.0]), vec![1.0, -1.0, 1.0]);
+    }
+}

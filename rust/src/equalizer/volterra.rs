@@ -1,0 +1,133 @@
+//! Order-3 Volterra equalizer (Sec. 3.3) — the nonlinear baseline.
+
+/// Volterra kernels up to order 3 with centered memory windows.
+#[derive(Debug, Clone)]
+pub struct VolterraEqualizer {
+    pub w0: f32,
+    /// First-order taps, length M1.
+    pub w1: Vec<f32>,
+    /// Second-order kernel, (M2, M2) row-major.
+    pub w2: Vec<f32>,
+    pub m2: usize,
+    /// Third-order kernel, (M3, M3, M3) row-major.
+    pub w3: Vec<f32>,
+    pub m3: usize,
+    pub n_os: usize,
+}
+
+impl VolterraEqualizer {
+    /// MAC operations per output symbol (the paper's complexity measure).
+    pub fn mac_per_symbol(&self) -> f64 {
+        (self.w1.len() + self.m2 * self.m2 + self.m3 * self.m3 * self.m3) as f64
+    }
+
+    fn window(x: &[f32], i: usize, m: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let half = m / 2;
+        (0..m).map(move |t| {
+            let idx = i as isize + t as isize - half as isize;
+            let v = if idx >= 0 && (idx as usize) < x.len() { x[idx as usize] } else { 0.0 };
+            (t, v)
+        })
+    }
+
+    /// Equalize samples -> symbol-rate soft estimates.
+    pub fn equalize(&self, x: &[f32]) -> Vec<f32> {
+        let n = x.len();
+        let mut out = Vec::with_capacity(n / self.n_os);
+        let mut i = 0usize;
+        while i < n {
+            let mut acc = self.w0;
+            for (t, v) in Self::window(x, i, self.w1.len()) {
+                acc += v * self.w1[t];
+            }
+            if self.m2 > 0 {
+                let w2win: Vec<f32> = Self::window(x, i, self.m2).map(|(_, v)| v).collect();
+                for (a, &va) in w2win.iter().enumerate() {
+                    if va == 0.0 {
+                        continue;
+                    }
+                    for (b, &vb) in w2win.iter().enumerate() {
+                        acc += va * vb * self.w2[a * self.m2 + b];
+                    }
+                }
+            }
+            if self.m3 > 0 {
+                let w3win: Vec<f32> = Self::window(x, i, self.m3).map(|(_, v)| v).collect();
+                for (a, &va) in w3win.iter().enumerate() {
+                    if va == 0.0 {
+                        continue;
+                    }
+                    for (b, &vb) in w3win.iter().enumerate() {
+                        let vab = va * vb;
+                        for (c, &vc) in w3win.iter().enumerate() {
+                            acc += vab * vc * self.w3[(a * self.m3 + b) * self.m3 + c];
+                        }
+                    }
+                }
+            }
+            out.push(acc);
+            i += self.n_os;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> VolterraEqualizer {
+        VolterraEqualizer {
+            w0: 0.0,
+            w1: vec![0.0; 3],
+            w2: vec![0.0; 9],
+            m2: 3,
+            w3: vec![0.0; 27],
+            m3: 3,
+            n_os: 1,
+        }
+    }
+
+    #[test]
+    fn bias_only() {
+        let mut eq = base();
+        eq.w0 = 1.5;
+        assert_eq!(eq.equalize(&[0.0, 0.0]), vec![1.5, 1.5]);
+    }
+
+    #[test]
+    fn first_order_is_fir() {
+        let mut eq = base();
+        eq.w1 = vec![0.0, 1.0, 0.0];
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(eq.equalize(&x), x);
+    }
+
+    #[test]
+    fn second_order_squares() {
+        let mut eq = base();
+        eq.w2[1 * 3 + 1] = 1.0; // center x center
+        assert_eq!(eq.equalize(&[2.0, -3.0]), vec![4.0, 9.0]);
+    }
+
+    #[test]
+    fn third_order_cubes() {
+        let mut eq = base();
+        eq.w3[(1 * 3 + 1) * 3 + 1] = 1.0;
+        assert_eq!(eq.equalize(&[2.0, -2.0]), vec![8.0, -8.0]);
+    }
+
+    #[test]
+    fn decimation() {
+        let mut eq = base();
+        eq.w1 = vec![0.0, 1.0, 0.0];
+        eq.n_os = 2;
+        assert_eq!(eq.equalize(&[1.0, 2.0, 3.0, 4.0]), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn mac_count() {
+        let eq = base();
+        assert_eq!(eq.mac_per_symbol(), (3 + 9 + 27) as f64);
+    }
+}

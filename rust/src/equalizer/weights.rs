@@ -1,0 +1,220 @@
+//! Loader for the trained-weight artifacts (`artifacts/weights_*.json`).
+//!
+//! The Python build path (`python/compile/aot.py`) trains the equalizers
+//! and serializes both the raw parameters and the BatchNorm-folded
+//! inference weights.  The Rust datapaths consume the *folded* form —
+//! exactly what the FPGA executes (one MAC array per layer, no separate
+//! normalization stage).
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// CNN topology hyper-parameters (matches `python CnnConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CnnTopologyCfg {
+    pub vp: usize,
+    pub layers: usize,
+    pub kernel: usize,
+    pub channels: usize,
+    pub n_os: usize,
+}
+
+impl CnnTopologyCfg {
+    /// The paper's selected model (Fig. 3).
+    pub const SELECTED: CnnTopologyCfg =
+        CnnTopologyCfg { vp: 8, layers: 3, kernel: 9, channels: 5, n_os: 2 };
+
+    pub fn padding(&self) -> usize {
+        (self.kernel - 1) / 2
+    }
+
+    /// Per-layer strides: [V_p, 1, ..., 1, N_os].
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.layers];
+        s[0] = self.vp;
+        s[self.layers - 1] = self.n_os;
+        s
+    }
+
+    /// Per-layer (C_in, C_out): 1 -> C -> ... -> C -> V_p.
+    pub fn layer_channels(&self) -> Vec<(usize, usize)> {
+        (0..self.layers)
+            .map(|l| {
+                let cin = if l == 0 { 1 } else { self.channels };
+                let cout = if l == self.layers - 1 { self.vp } else { self.channels };
+                (cin, cout)
+            })
+            .collect()
+    }
+
+    /// Paper's average MAC operations per equalized symbol.
+    pub fn mac_per_symbol(&self) -> f64 {
+        let (k, c, l, vp) =
+            (self.kernel as f64, self.channels as f64, self.layers as f64, self.vp as f64);
+        k * c / vp + (l - 2.0) * k * c * c / vp + k * c / self.n_os as f64
+    }
+
+    /// Receptive-field overlap in symbols (Sec. 6.1, o_sym).
+    pub fn overlap_symbols(&self) -> usize {
+        (self.kernel - 1) * (1 + self.vp * (self.layers - 1)) / 2
+    }
+
+    /// Software o_act: the receptive field rounded up to the network's
+    /// total decimation grid (`V_p * N_os` samples) so every chunk sees
+    /// the same convolution phase the model was trained on.  (The
+    /// hardware o_act of Sec. 6.1 additionally rounds to the
+    /// `V_p * N_i` stream width — that only matters for stream timing.)
+    pub fn o_act_samples(&self) -> usize {
+        self.overlap_symbols().next_multiple_of(self.vp * self.n_os)
+    }
+
+    /// Output symbols for `in_samples` input samples.
+    pub fn out_symbols(&self, in_samples: usize) -> usize {
+        let mut w = in_samples;
+        for stride in self.strides() {
+            w = (w + 2 * self.padding() - self.kernel) / stride + 1;
+        }
+        w * self.vp
+    }
+}
+
+/// One convolutional layer's folded weights.
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    /// `(c_out, c_in, k)` row-major flattened.
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+}
+
+impl ConvLayer {
+    #[inline]
+    pub fn weight(&self, o: usize, i: usize, k: usize) -> f32 {
+        self.w[(o * self.c_in + i) * self.k + k]
+    }
+}
+
+/// Folded CNN weights + topology, as loaded from the artifact.
+#[derive(Debug, Clone)]
+pub struct CnnWeights {
+    pub cfg: CnnTopologyCfg,
+    pub layers: Vec<ConvLayer>,
+    /// Training-time eval BER recorded by the build path.
+    pub train_ber: f64,
+}
+
+impl CnnTopologyCfg {
+    /// Parse from a JSON object `{"vp": .., "layers": .., ...}`.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            vp: v.req("vp")?.as_usize().ok_or_else(|| anyhow!("vp"))?,
+            layers: v.req("layers")?.as_usize().ok_or_else(|| anyhow!("layers"))?,
+            kernel: v.req("kernel")?.as_usize().ok_or_else(|| anyhow!("kernel"))?,
+            channels: v.req("channels")?.as_usize().ok_or_else(|| anyhow!("channels"))?,
+            n_os: v.req("n_os")?.as_usize().ok_or_else(|| anyhow!("n_os"))?,
+        })
+    }
+}
+
+impl CnnWeights {
+    /// Load `artifacts/weights_cnn_<channel>.json`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let root = json::parse_file(path.as_ref())?;
+        let cfg = CnnTopologyCfg::from_json(root.req("cfg")?)?;
+        let ber = root.req("ber")?.as_f64().ok_or_else(|| anyhow!("ber"))?;
+        let folded = root.req("folded")?;
+        let mut layers = Vec::new();
+        for l in 0..cfg.layers {
+            let (w, dims) = folded.req(&format!("w{l}"))?.as_tensor_f32()?;
+            anyhow::ensure!(dims.len() == 3, "w{l} must be 3-D, got {dims:?}");
+            let (b, bdims) = folded.req(&format!("b{l}"))?.as_tensor_f32()?;
+            anyhow::ensure!(bdims.len() == 1 && b.len() == dims[0], "bias mismatch layer {l}");
+            layers.push(ConvLayer { w, b, c_in: dims[1], c_out: dims[0], k: dims[2] });
+        }
+        Ok(Self { cfg, layers, train_ber: ber })
+    }
+}
+
+/// FIR taps artifact (`weights_fir_<channel>.json`).
+#[derive(Debug, Clone)]
+pub struct FirWeights {
+    pub cfg: FirCfg,
+    pub w: Vec<f32>,
+    pub ber: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct FirCfg {
+    pub taps: usize,
+    pub n_os: usize,
+}
+
+impl FirWeights {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let root = json::parse_file(path.as_ref())?;
+        let cfg_v = root.req("cfg")?;
+        let (w, _) = root.req("w")?.as_tensor_f32()?;
+        Ok(Self {
+            cfg: FirCfg {
+                taps: cfg_v.req("taps")?.as_usize().ok_or_else(|| anyhow!("taps"))?,
+                n_os: cfg_v.req("n_os")?.as_usize().ok_or_else(|| anyhow!("n_os"))?,
+            },
+            w,
+            ber: root.req("ber")?.as_f64().ok_or_else(|| anyhow!("ber"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selected_topology_constants() {
+        let c = CnnTopologyCfg::SELECTED;
+        assert_eq!(c.strides(), vec![8, 1, 2]);
+        assert_eq!(c.layer_channels(), vec![(1, 5), (5, 5), (5, 8)]);
+        assert!((c.mac_per_symbol() - 56.25).abs() < 1e-9);
+        assert_eq!(c.overlap_symbols(), 68);
+        assert_eq!(c.padding(), 4);
+    }
+
+    #[test]
+    fn out_symbols_matches_python() {
+        let c = CnnTopologyCfg::SELECTED;
+        assert_eq!(c.out_symbols(1024), 512);
+        assert_eq!(c.out_symbols(256), 128);
+        assert_eq!(c.out_symbols(8192), 4096);
+    }
+
+    #[test]
+    fn load_weights_artifact_if_present() {
+        // Integration: if `make artifacts` has run, parse the real file.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/weights_cnn_imdd.json");
+        if std::path::Path::new(path).exists() {
+            let w = CnnWeights::load(path).expect("parse artifact");
+            assert_eq!(w.cfg, CnnTopologyCfg::SELECTED);
+            assert_eq!(w.layers.len(), 3);
+            assert_eq!(w.layers[0].c_in, 1);
+            assert_eq!(w.layers[2].c_out, 8);
+            assert!(w.train_ber > 0.0 && w.train_ber < 0.5);
+        }
+    }
+
+    #[test]
+    fn conv_layer_indexing() {
+        let layer = ConvLayer {
+            w: (0..2 * 3 * 4).map(|i| i as f32).collect(),
+            b: vec![0.0; 2],
+            c_in: 3,
+            c_out: 2,
+            k: 4,
+        };
+        assert_eq!(layer.weight(0, 0, 0), 0.0);
+        assert_eq!(layer.weight(1, 2, 3), 23.0);
+        assert_eq!(layer.weight(1, 0, 0), 12.0);
+    }
+}

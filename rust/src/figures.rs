@@ -1,0 +1,272 @@
+//! Figure/table regeneration harness (`repro figures <which>`).
+//!
+//! Each function prints the rows/series of one paper artifact
+//! (DESIGN.md §5 experiment index).  Shapes — who wins, by what factor,
+//! where crossovers fall — are the reproduction target; EXPERIMENTS.md
+//! records paper-vs-measured.
+
+use equalizer::coordinator::seqlen::SeqLenOptimizer;
+use equalizer::coordinator::sim::simulate;
+use equalizer::coordinator::timing::TimingModel;
+use equalizer::dse::report::{DseFile, FigureReport};
+use equalizer::equalizer::weights::CnnTopologyCfg;
+use equalizer::hw::device::{XC7S25, XCVU13P};
+use equalizer::hw::dop::Dop;
+use equalizer::hw::platform;
+use equalizer::hw::power::{ht_power_w, lp_power_w, lp_throughput_baud};
+use equalizer::hw::resource::{ht_design, lp_design, mac_sym_max};
+use anyhow::Result;
+use equalizer::channel::{imdd::ImddChannel, Channel};
+use equalizer::metrics::ber::BerCounter;
+use equalizer::runtime::{ArtifactRegistry, Engine};
+
+pub fn run(which: &str, artifacts: &str) -> Result<()> {
+    match which {
+        "fig2" => fig2(artifacts),
+        "fig4" => fig4(artifacts),
+        "fig8a" => fig8a(),
+        "fig8b" => fig8b(),
+        "fig12" => fig12(),
+        "fig13" => fig13(),
+        "fig14" => fig14(),
+        "fig15" => fig15(),
+        "table1" => table1(),
+        "snr" => snr_sweep(artifacts),
+        "all" => {
+            for f in [
+                "fig2", "fig4", "fig8a", "fig8b", "fig12", "fig13", "fig14", "fig15", "table1",
+                "snr",
+            ] {
+                println!("================ {f} ================");
+                if let Err(e) = run(f, artifacts) {
+                    println!("({f} skipped: {e})");
+                }
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown figure {other}"),
+    }
+}
+
+fn selected() -> CnnTopologyCfg {
+    CnnTopologyCfg::SELECTED
+}
+
+/// Fig. 2: DSE scatter + Pareto fronts, optical channel.
+fn fig2(artifacts: &str) -> Result<()> {
+    let file = DseFile::load(format!("{artifacts}/dse_imdd.json"))?;
+    let rep = FigureReport::build(&file, &XCVU13P, 40e9);
+    print!("{}", rep.render());
+    Ok(())
+}
+
+/// Fig. 4: same comparison on the Proakis-B channel.
+fn fig4(artifacts: &str) -> Result<()> {
+    let file = DseFile::load(format!("{artifacts}/dse_proakis.json"))?;
+    let rep = FigureReport::build(&file, &XC7S25, 100e6);
+    print!("{}", rep.render());
+    Ok(())
+}
+
+/// Fig. 8a: resource utilization vs DOP on the XC7S25.
+fn fig8a() -> Result<()> {
+    let cfg = selected();
+    println!("{:>6} {:>8} {:>8} {:>8} {:>8}", "DOP", "LUT%", "FF%", "DSP%", "BRAM%");
+    for dop in Dop::paper_sweep(&cfg) {
+        let u = lp_design(&cfg, dop, &XC7S25).utilization(&XC7S25);
+        println!(
+            "{:>6} {:>8.1} {:>8.1} {:>8.1} {:>8.1}",
+            dop.total(),
+            u.lut_pct,
+            u.ff_pct,
+            u.dsp_pct,
+            u.bram_pct
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 8b: dynamic power + throughput vs DOP on the XC7S25.
+fn fig8b() -> Result<()> {
+    let cfg = selected();
+    println!("{:>6} {:>12} {:>10}", "DOP", "Tput Mbit/s", "Power W");
+    for dop in Dop::paper_sweep(&cfg) {
+        println!(
+            "{:>6} {:>12.1} {:>10.3}",
+            dop.total(),
+            lp_throughput_baud(&cfg, dop, &XC7S25) / 1e6,
+            lp_power_w(&cfg, dop, &XC7S25)
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 12: timing model vs cycle-approximate simulation.
+fn fig12() -> Result<()> {
+    let cfg = selected();
+    for n_i in [2usize, 8, 64] {
+        let m = TimingModel::new(n_i, cfg.vp, cfg.layers, cfg.kernel, 200e6);
+        println!("-- N_i = {n_i} (T_max {:.1} Gsa/s) --", m.t_max() / 1e9);
+        println!(
+            "{:>8} {:>12} {:>12} {:>8} {:>12} {:>12} {:>8}",
+            "l_inst", "lam_mod us", "lam_sim us", "err%", "Tnet_mod G", "Tnet_sim G", "err%"
+        );
+        for l_inst in [1024usize, 2048, 4096, 7320, 16384, 32768] {
+            let sim = simulate(&m, l_inst, (16 * n_i).max(64));
+            let lam_m = m.lambda_sym_s(l_inst) * 1e6;
+            let lam_s = sim.lambda_sym_s * 1e6;
+            let tn_m = m.t_net(l_inst) / 1e9;
+            let tn_s = sim.t_net / 1e9;
+            println!(
+                "{:>8} {:>12.2} {:>12.2} {:>8.1} {:>12.2} {:>12.2} {:>8.1}",
+                l_inst,
+                lam_m,
+                lam_s,
+                (lam_s - lam_m).abs() / lam_m * 100.0,
+                tn_m,
+                tn_s,
+                (tn_s - tn_m).abs() / tn_m * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+const SPB_GRID: [u64; 10] =
+    [8, 64, 400, 1_000, 10_000, 100_000, 1_000_000, 10_000_000, 100_000_000, 1_000_000_000];
+
+/// HT FPGA net throughput (samples/s -> symbols/s) at its fixed SPB=512.
+fn ht_fpga_throughput_baud() -> f64 {
+    let cfg = selected();
+    let m = TimingModel::new(64, cfg.vp, cfg.layers, cfg.kernel, 200e6);
+    let opt = SeqLenOptimizer::new(m);
+    let l = opt.min_l_inst(80e9).unwrap();
+    m.t_net(l) / cfg.n_os as f64 // samples/s -> symbols/s
+}
+
+/// Fig. 13: throughput vs symbols-per-batch across platforms.
+fn fig13() -> Result<()> {
+    let cfg = selected();
+    let ht = ht_fpga_throughput_baud();
+    let lp = lp_throughput_baud(
+        &cfg,
+        *Dop::paper_sweep(&cfg).last().unwrap(),
+        &XC7S25,
+    );
+    println!("{:>12} | {:>11} {:>11} {:>11} {:>11} {:>11} | {:>11} {:>11}",
+        "SPB", "RTX-PT", "RTX-TRT", "AGX-PT", "AGX-TRT", "CPU", "HT-FPGA", "LP-FPGA");
+    for spb in SPB_GRID {
+        print!("{spb:>12} |");
+        for p in platform::ALL {
+            print!(" {:>11.3e}", p.throughput(spb));
+        }
+        // FPGA throughput is architecture-fixed (SPB 512 / 8).
+        println!(" | {:>11.3e} {:>11.3e}", ht, lp);
+    }
+    println!(
+        "\nanchor: HT-FPGA / RTX-TRT @400SPB = {:.0}x (paper: ~4500x)",
+        ht / platform::RTX_TENSORRT.throughput(400)
+    );
+    Ok(())
+}
+
+/// Fig. 14: latency vs SPB.
+fn fig14() -> Result<()> {
+    let cfg = selected();
+    let m = TimingModel::new(64, cfg.vp, cfg.layers, cfg.kernel, 200e6);
+    let opt = SeqLenOptimizer::new(m);
+    let l = opt.min_l_inst(80e9).unwrap();
+    let ht_lat = m.lambda_sym_s(l);
+    // LP FPGA: SPB fixed at 8 symbols; latency = pipeline depth at the
+    // engine rate.
+    let lp_lat = 8.0 * 2.0 / lp_throughput_baud(&cfg, *Dop::paper_sweep(&cfg).last().unwrap(), &XC7S25) / 2.0;
+    println!("{:>12} | {:>11} {:>11} {:>11} {:>11} {:>11} | {:>11} {:>11}",
+        "SPB", "RTX-PT", "RTX-TRT", "AGX-PT", "AGX-TRT", "CPU", "HT-FPGA", "LP-FPGA");
+    for spb in SPB_GRID {
+        print!("{spb:>12} |");
+        for p in platform::ALL {
+            print!(" {:>11.3e}", p.latency(spb));
+        }
+        println!(" | {:>11.3e} {:>11.3e}", ht_lat, lp_lat);
+    }
+    println!(
+        "\nanchor: AGX-TRT / HT-FPGA @1e6 SPB = {:.0}x (paper: up to 52x)",
+        platform::AGX_TENSORRT.latency(1_000_000) / ht_lat
+    );
+    Ok(())
+}
+
+/// Fig. 15: power vs SPB.
+fn fig15() -> Result<()> {
+    let cfg = selected();
+    let ht = ht_power_w(&cfg, 64, &XCVU13P);
+    let lp = lp_power_w(&cfg, *Dop::paper_sweep(&cfg).last().unwrap(), &XC7S25);
+    println!("{:>12} | {:>11} {:>11} {:>11} {:>11} {:>11} | {:>11} {:>11}",
+        "SPB", "RTX-PT", "RTX-TRT", "AGX-PT", "AGX-TRT", "CPU", "HT-FPGA", "LP-FPGA");
+    for spb in SPB_GRID {
+        print!("{spb:>12} |");
+        for p in platform::ALL {
+            print!(" {:>11.1}", p.power(spb));
+        }
+        println!(" | {:>11.1} {:>11.3}", ht, lp);
+    }
+    Ok(())
+}
+
+/// Table 1: XCVU13P utilization at 64 instances.
+fn table1() -> Result<()> {
+    let u = ht_design(&selected(), 64);
+    let pct = u.utilization(&XCVU13P);
+    println!("resource   modeled          (%)    paper          (%)");
+    println!("LUT        {:>9}  {:>8.2}    1176156   68.06", u.luts, pct.lut_pct);
+    println!("FF         {:>9}  {:>8.2}    1050179   30.39", u.ffs, pct.ff_pct);
+    println!("DSP        {:>9}  {:>8.2}       9648   78.52", u.dsps, pct.dsp_pct);
+    println!("BRAM       {:>9}  {:>8.2}       2118   78.79", u.brams, pct.bram_pct);
+    println!(
+        "\nMAC_sym ceiling @40GBd: {:.1} (selected model: {:.2})",
+        mac_sym_max(&XCVU13P, 40e9),
+        selected().mac_per_symbol()
+    );
+    Ok(())
+}
+
+
+/// Extension experiment: BER vs receiver SNR for the trained CNN, FIR
+/// and Volterra artifacts on fresh IM/DD realizations.  Not a paper
+/// figure — the standard communications ablation that localizes where
+/// the CNN's nonlinearity compensation pays (DESIGN.md §6: at high SNR
+/// the FIR hits its nonlinearity floor while the CNN keeps improving).
+fn snr_sweep(artifacts: &str) -> Result<()> {
+    let reg = ArtifactRegistry::discover(artifacts)?;
+    let engine = Engine::cpu()?;
+    let models = ["cnn_imdd_w1024", "fir_imdd_w1024", "volterra_imdd_w1024"];
+    let compiled: Vec<_> = models
+        .iter()
+        .map(|n| engine.load(reg.exact(n)?))
+        .collect::<Result<_>>()?;
+
+    println!("{:>8} {:>12} {:>12} {:>12}", "SNR dB", "CNN", "FIR-57", "Volterra");
+    for snr in [10.0, 15.0, 20.0, 25.0, 30.0, 35.0] {
+        let ch = ImddChannel { snr_db: snr, ..Default::default() };
+        let data = ch.transmit(60_000, 77);
+        print!("{snr:>8.0}");
+        for m in &compiled {
+            let w = m.width();
+            let mut ber = BerCounter::new();
+            let mut start = 0;
+            while start + w <= data.rx.len() {
+                let y = m.run_f32(&data.rx[start..start + w])?;
+                let sym0 = start / 2;
+                let n = y.len();
+                ber.update(&y[80..n - 80], &data.symbols[sym0 + 80..sym0 + n - 80]);
+                start += w;
+            }
+            print!(" {:>12.3e}", ber.ber());
+        }
+        println!();
+    }
+    println!("
+(training point: 25 dB — mismatch at other SNRs is expected and");
+    println!(" mirrors the paper's fixed-operating-point deployment)");
+    Ok(())
+}

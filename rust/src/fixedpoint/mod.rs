@@ -1,0 +1,186 @@
+//! Signed fixed-point Q(m.n) arithmetic — the FPGA datapath numerics.
+//!
+//! On the paper's FPGA every value is a fixed-point word with an
+//! independently chosen integer width `m` and fraction width `n`
+//! (Sec. 4: the automatic quantization learns `m`/`n` *separately* so no
+//! runtime scaling is needed).  This module provides the exact
+//! round-to-nearest / saturate semantics the Python fake-quantization
+//! kernel (`python/compile/kernels/quant.py`) models, so the Rust
+//! bit-accurate CNN datapath reproduces the quantized HLO artifact
+//! bit-for-bit.
+
+
+/// A fixed-point format: `int_bits` integer bits (including sign) and
+/// `frac_bits` fractional bits; total word length `int_bits + frac_bits`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    pub int_bits: u8,
+    pub frac_bits: u8,
+}
+
+impl QFormat {
+    pub const fn new(int_bits: u8, frac_bits: u8) -> Self {
+        Self { int_bits, frac_bits }
+    }
+
+    /// Total word length in bits.
+    pub fn width(&self) -> u32 {
+        self.int_bits as u32 + self.frac_bits as u32
+    }
+
+    /// Quantization step 2^-frac_bits.
+    pub fn step(&self) -> f64 {
+        (2.0_f64).powi(-(self.frac_bits as i32))
+    }
+
+    /// Smallest representable value: -2^(int_bits-1).
+    pub fn min_value(&self) -> f64 {
+        -(2.0_f64).powi(self.int_bits as i32 - 1)
+    }
+
+    /// Largest representable value: 2^(int_bits-1) - 2^-frac_bits.
+    pub fn max_value(&self) -> f64 {
+        (2.0_f64).powi(self.int_bits as i32 - 1) - self.step()
+    }
+
+    /// Quantize: round-to-nearest (ties to even, matching `jnp.round`
+    /// banker's rounding) then saturate.  This mirrors
+    /// `ref.fake_quant` / the Pallas kernel exactly.
+    pub fn quantize(&self, x: f64) -> f64 {
+        let scale = (2.0_f64).powi(self.frac_bits as i32);
+        let rounded = round_ties_even(x * scale) / scale;
+        rounded.clamp(self.min_value(), self.max_value())
+    }
+
+    /// Quantize an f32 (the artifact dtype).
+    pub fn quantize_f32(&self, x: f32) -> f32 {
+        self.quantize(x as f64) as f32
+    }
+
+    /// Integer code of a quantized value (two's-complement range check).
+    pub fn to_code(&self, x: f64) -> i64 {
+        (self.quantize(x) * (2.0_f64).powi(self.frac_bits as i32)).round() as i64
+    }
+}
+
+/// Round half to even, like IEEE-754 / `jnp.round` (Rust's `f64::round`
+/// rounds half *away from zero*, which would diverge from the artifact).
+pub fn round_ties_even(x: f64) -> f64 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // Exact tie: pick the even neighbour.
+        let lo = x.floor();
+        let hi = x.ceil();
+        if (lo as i64) % 2 == 0 {
+            lo
+        } else {
+            hi
+        }
+    } else {
+        r
+    }
+}
+
+/// Per-tensor fixed-point formats of the quantized CNN (one entry per
+/// weight tensor `w{l}` and activation `a_in`/`a{l}`) — the shape of the
+/// QAT output `qat_bits_*.json` and of `manifest.json`'s `bits`.
+#[derive(Debug, Clone, Default)]
+pub struct QuantSpec(pub std::collections::BTreeMap<String, QFormat>);
+
+impl QuantSpec {
+    pub fn get(&self, key: &str) -> Option<QFormat> {
+        self.0.get(key).copied()
+    }
+
+    /// The paper's Sec. 4 result: ~13 bit weights (Q3.10), ~10 bit
+    /// activations (Q4.6).
+    pub fn paper_default(layers: usize) -> Self {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("a_in".to_string(), QFormat::new(4, 6));
+        for l in 0..layers {
+            m.insert(format!("w{l}"), QFormat::new(3, 10));
+            m.insert(format!("a{l}"), QFormat::new(4, 6));
+        }
+        Self(m)
+    }
+
+    /// Average weight word length (B_p in the paper's loss).
+    pub fn avg_weight_bits(&self) -> f64 {
+        let ws: Vec<u32> =
+            self.0.iter().filter(|(k, _)| k.starts_with('w')).map(|(_, q)| q.width()).collect();
+        ws.iter().sum::<u32>() as f64 / ws.len().max(1) as f64
+    }
+
+    /// Average activation word length (B_a).
+    pub fn avg_act_bits(&self) -> f64 {
+        let asz: Vec<u32> =
+            self.0.iter().filter(|(k, _)| k.starts_with('a')).map(|(_, q)| q.width()).collect();
+        asz.iter().sum::<u32>() as f64 / asz.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_q4_4() {
+        let q = QFormat::new(4, 4);
+        assert_eq!(q.min_value(), -8.0);
+        assert_eq!(q.max_value(), 8.0 - 0.0625);
+        assert_eq!(q.width(), 8);
+    }
+
+    #[test]
+    fn quantize_rounds_to_grid() {
+        let q = QFormat::new(3, 5); // step 1/32
+        let v = q.quantize(0.337);
+        assert_eq!(v * 32.0, (v * 32.0).round());
+        assert!((v - 0.337).abs() <= q.step() / 2.0 + 1e-12);
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let q = QFormat::new(4, 4);
+        assert_eq!(q.quantize(100.0), q.max_value());
+        assert_eq!(q.quantize(-100.0), -8.0);
+    }
+
+    #[test]
+    fn ties_to_even_matches_jnp_round() {
+        // jnp.round(0.5) == 0.0, jnp.round(1.5) == 2.0, jnp.round(2.5) == 2.0
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(1.4), 1.0);
+        assert_eq!(round_ties_even(-1.6), -2.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        let q = QFormat::new(4, 6);
+        for i in -100..100 {
+            let x = i as f64 * 0.073;
+            let once = q.quantize(x);
+            assert_eq!(q.quantize(once), once);
+        }
+    }
+
+    #[test]
+    fn codes_fit_word_length() {
+        let q = QFormat::new(3, 5);
+        for i in -1000..1000 {
+            let code = q.to_code(i as f64 * 0.01);
+            assert!(code >= -(1 << 7) && code < (1 << 7), "code {code} overflows Q3.5");
+        }
+    }
+
+    #[test]
+    fn paper_default_widths() {
+        let spec = QuantSpec::paper_default(3);
+        assert_eq!(spec.avg_weight_bits(), 13.0);
+        assert_eq!(spec.avg_act_bits(), 10.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! FPGA device resource inventories.
+
+
+/// An FPGA part's available resources.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    /// 36 Kb block RAMs.
+    pub brams: u64,
+    /// Achievable clock for this architecture (paper: timing violations
+    /// above 200 MHz on the VU13P design).
+    pub f_clk_hz: f64,
+}
+
+/// Xilinx XCVU13P — the paper's high-throughput target.
+///
+/// Totals back-derived from Table 1 (absolute vs %% utilization):
+/// 1 176 156 / 68.06% = 1 728 000 LUTs, etc.
+pub const XCVU13P: Device = Device {
+    name: "XCVU13P",
+    luts: 1_728_000,
+    ffs: 3_456_000,
+    dsps: 12_288,
+    brams: 2_688,
+    f_clk_hz: 200e6,
+};
+
+/// Xilinx XC7S25 (Spartan-7) — the paper's low-cost / low-power target.
+pub const XC7S25: Device = Device {
+    name: "XC7S25",
+    luts: 14_600,
+    ffs: 29_200,
+    dsps: 80,
+    brams: 45,
+    f_clk_hz: 100e6,
+};
+
+impl Device {
+    pub fn by_name(name: &str) -> Option<Device> {
+        match name {
+            "XCVU13P" => Some(XCVU13P),
+            "XC7S25" => Some(XC7S25),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_totals_are_consistent() {
+        // Table 1: 68.06% == 1 176 156 LUTs etc. — the percentages the
+        // paper reports must reproduce from these totals.
+        assert_eq!((1_176_156.0_f64 / XCVU13P.luts as f64 * 100.0).round() as i64, 68);
+        assert_eq!((1_050_179.0_f64 / XCVU13P.ffs as f64 * 100.0).round() as i64, 30);
+        assert_eq!((9_648.0_f64 / XCVU13P.dsps as f64 * 100.0).round() as i64, 79);
+        assert_eq!((2_118.0_f64 / XCVU13P.brams as f64 * 100.0).round() as i64, 79);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(Device::by_name("XC7S25"), Some(XC7S25));
+        assert!(Device::by_name("nope").is_none());
+    }
+}

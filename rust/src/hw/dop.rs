@@ -1,0 +1,111 @@
+//! Degree-of-parallelism semantics (Sec. 5.2).
+//!
+//! Per instance, parallelism applies to input channels (`DOP_I`), output
+//! channels (`DOP_O`) and the kernel (`DOP_K`), with
+//! `DOP = DOP_I * DOP_O * DOP_K`, constrained by
+//! `I_c % DOP_I == 0`, `O_c % DOP_O == 0`, `DOP_K in {1, K}`.
+
+use crate::equalizer::weights::CnnTopologyCfg;
+
+/// A concrete parallelism assignment for the convolution engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dop {
+    pub i: usize,
+    pub o: usize,
+    pub k: usize,
+}
+
+impl Dop {
+    pub fn total(&self) -> usize {
+        self.i * self.o * self.k
+    }
+
+    /// Is this assignment legal for the topology (Sec. 5.2 constraints)?
+    ///
+    /// The hidden layers have `I_c = O_c = C`; the constraint set the
+    /// paper states uses the hidden-layer channel count and the kernel.
+    pub fn valid_for(&self, cfg: &CnnTopologyCfg) -> bool {
+        let c = cfg.channels;
+        let divides = |n: usize, d: usize| d >= 1 && n % d == 0;
+        divides(c, self.i) && (divides(c, self.o) || divides(cfg.vp, self.o))
+            && (self.k == 1 || self.k == cfg.kernel)
+    }
+
+    /// Enumerate all legal DOPs for a topology, ascending by total.
+    pub fn enumerate(cfg: &CnnTopologyCfg) -> Vec<Dop> {
+        let mut divs_c: Vec<usize> = (1..=cfg.channels).filter(|d| cfg.channels % d == 0).collect();
+        let mut divs_o: Vec<usize> = divs_c.clone();
+        divs_o.extend((1..=cfg.vp).filter(|d| cfg.vp % d == 0));
+        divs_o.sort_unstable();
+        divs_o.dedup();
+        divs_c.sort_unstable();
+        let mut out = Vec::new();
+        for &i in &divs_c {
+            for &o in &divs_o {
+                for k in [1, cfg.kernel] {
+                    let d = Dop { i, o, k };
+                    if d.valid_for(cfg) {
+                        out.push(d);
+                    }
+                }
+            }
+        }
+        out.sort_by_key(|d| d.total());
+        out.dedup_by_key(|d| d.total());
+        out
+    }
+
+    /// The paper's Fig. 8 sweep points for the selected topology.
+    pub fn paper_sweep(cfg: &CnnTopologyCfg) -> Vec<Dop> {
+        [1usize, 5, 10, 25, 225]
+            .iter()
+            .filter_map(|&t| Self::enumerate(cfg).into_iter().find(|d| d.total() == t))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_multiply() {
+        assert_eq!(Dop { i: 5, o: 5, k: 9 }.total(), 225);
+    }
+
+    #[test]
+    fn paper_dops_exist_for_selected() {
+        let cfg = CnnTopologyCfg::SELECTED;
+        let sweep = Dop::paper_sweep(&cfg);
+        let totals: Vec<usize> = sweep.iter().map(|d| d.total()).collect();
+        // The paper lists DOP in {1, 5, 10, 25, 225} for this topology.
+        assert_eq!(totals, vec![1, 5, 10, 25, 225]);
+    }
+
+    #[test]
+    fn kernel_dop_is_binary() {
+        let cfg = CnnTopologyCfg::SELECTED;
+        assert!(!Dop { i: 1, o: 1, k: 3 }.valid_for(&cfg));
+        assert!(Dop { i: 1, o: 1, k: 9 }.valid_for(&cfg));
+        assert!(Dop { i: 1, o: 1, k: 1 }.valid_for(&cfg));
+    }
+
+    #[test]
+    fn channel_divisibility() {
+        let cfg = CnnTopologyCfg::SELECTED; // C = 5
+        assert!(!Dop { i: 3, o: 1, k: 1 }.valid_for(&cfg));
+        assert!(Dop { i: 5, o: 5, k: 1 }.valid_for(&cfg));
+    }
+
+    #[test]
+    fn enumerate_sorted_unique() {
+        let cfg = CnnTopologyCfg::SELECTED;
+        let all = Dop::enumerate(&cfg);
+        let totals: Vec<usize> = all.iter().map(|d| d.total()).collect();
+        let mut sorted = totals.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(totals, sorted);
+        assert!(totals.contains(&1) && totals.contains(&225));
+    }
+}

@@ -1,0 +1,16 @@
+//! FPGA resource/power models and platform performance models.
+//!
+//! The paper evaluates on Vivado place-and-route results (Table 1,
+//! Fig. 8) and on measured GPU/CPU baselines (Figs. 13-15).  Neither a
+//! Xilinx toolchain nor the GPUs are available here, so these are
+//! *analytic models calibrated to the paper's published data points*
+//! (DESIGN.md §3): the resource model reproduces Table 1 at N_i = 64 by
+//! construction and is then exercised across N_i / DOP for the sweeps;
+//! the platform models use the classic launch-overhead + roofline
+//! saturation form that produces the paper's reported shapes.
+
+pub mod device;
+pub mod dop;
+pub mod platform;
+pub mod power;
+pub mod resource;

@@ -1,0 +1,155 @@
+//! Platform performance models for the Figs. 13-15 comparison.
+//!
+//! The paper measures an Nvidia RTX 2080 Ti (PyTorch and TensorRT), an
+//! Nvidia AGX Xavier (PyTorch and TensorRT) and an Intel i9-9900KF.
+//! None of that hardware exists here, so each platform is a
+//! launch-overhead + roofline model (DESIGN.md §3):
+//!
+//!   T(spb)      = spb / (t_launch + spb / rate_peak)   [sym/s]
+//!   lambda(spb) = t_launch + spb / rate_peak            [s]
+//!   P(spb)      = P_idle + (P_max - P_idle) * T(spb)/rate_peak
+//!
+//! Constants are calibrated to the paper's reported anchors: TensorRT
+//! ~10x PyTorch at low SPB; RTX-TRT peaks at 12 GBd; the HT FPGA is
+//! ~4500x faster than RTX-TRT at 400 SPB; GPU/CPU latency ~5x the HT
+//! FPGA's at low SPB and up to 52x at high SPB; CPU peaks at 93 W, GPU
+//! at 250 W.  The FPGA entries are *not* models — they come from the
+//! timing model / measured pipeline (Sec. 6) and the power model.
+
+
+/// A modeled conventional platform.
+#[derive(Debug, Clone, Copy)]
+pub struct PlatformModel {
+    pub name: &'static str,
+    /// Fixed per-batch overhead (kernel launch, host sync) in seconds.
+    pub t_launch_s: f64,
+    /// Saturated symbol rate (symbols/second).
+    pub rate_peak: f64,
+    pub p_idle_w: f64,
+    pub p_max_w: f64,
+}
+
+impl PlatformModel {
+    /// Throughput in symbols/s at a given batch size (symbols per batch).
+    pub fn throughput(&self, spb: u64) -> f64 {
+        let spb = spb as f64;
+        spb / (self.t_launch_s + spb / self.rate_peak)
+    }
+
+    /// Per-batch latency in seconds.
+    pub fn latency(&self, spb: u64) -> f64 {
+        self.t_launch_s + spb as f64 / self.rate_peak
+    }
+
+    /// Power draw at a given batch size.
+    pub fn power(&self, spb: u64) -> f64 {
+        self.p_idle_w + (self.p_max_w - self.p_idle_w) * self.throughput(spb) / self.rate_peak
+    }
+}
+
+/// RTX 2080 Ti running the PyTorch model.
+pub const RTX_PYTORCH: PlatformModel = PlatformModel {
+    name: "RTX 2080 Ti (PyTorch)",
+    t_launch_s: 400e-6,
+    rate_peak: 1.3e9,
+    p_idle_w: 55.0,
+    p_max_w: 250.0,
+};
+
+/// RTX 2080 Ti with the TensorRT-optimized engine.
+pub const RTX_TENSORRT: PlatformModel = PlatformModel {
+    name: "RTX 2080 Ti (TensorRT)",
+    t_launch_s: 42e-6,
+    rate_peak: 12.0e9,
+    p_idle_w: 55.0,
+    p_max_w: 250.0,
+};
+
+/// AGX Xavier running PyTorch.
+pub const AGX_PYTORCH: PlatformModel = PlatformModel {
+    name: "AGX Xavier (PyTorch)",
+    t_launch_s: 1.2e-3,
+    rate_peak: 0.12e9,
+    p_idle_w: 9.0,
+    p_max_w: 30.0,
+};
+
+/// AGX Xavier with TensorRT.
+pub const AGX_TENSORRT: PlatformModel = PlatformModel {
+    name: "AGX Xavier (TensorRT)",
+    t_launch_s: 120e-6,
+    rate_peak: 1.1e9,
+    p_idle_w: 9.0,
+    p_max_w: 30.0,
+};
+
+/// Intel i9-9900KF (vectorized CPU inference).
+pub const CPU_I9: PlatformModel = PlatformModel {
+    name: "Core i9-9900KF",
+    t_launch_s: 60e-6,
+    rate_peak: 0.25e9,
+    p_idle_w: 28.0,
+    p_max_w: 93.0,
+};
+
+/// All modeled platforms, in the paper's legend order.
+pub const ALL: [PlatformModel; 5] =
+    [RTX_PYTORCH, RTX_TENSORRT, AGX_PYTORCH, AGX_TENSORRT, CPU_I9];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_ramps_then_saturates() {
+        for p in ALL {
+            let low = p.throughput(16);
+            let mid = p.throughput(10_000);
+            let hi = p.throughput(100_000_000);
+            assert!(low < mid && mid <= hi, "{}", p.name);
+            assert!(hi <= p.rate_peak * 1.0001);
+            assert!(hi >= p.rate_peak * 0.9, "{} saturates below peak", p.name);
+        }
+    }
+
+    #[test]
+    fn tensorrt_an_order_faster_at_low_spb() {
+        // Paper Sec. 7.3.1: ~1 order of magnitude at low batch sizes.
+        let r = RTX_TENSORRT.throughput(100) / RTX_PYTORCH.throughput(100);
+        assert!((5.0..20.0).contains(&r), "RTX TRT/PT = {r}");
+        let a = AGX_TENSORRT.throughput(100) / AGX_PYTORCH.throughput(100);
+        assert!((5.0..20.0).contains(&a), "AGX TRT/PT = {a}");
+    }
+
+    #[test]
+    fn ht_fpga_4500x_anchor() {
+        // Paper: HT FPGA (40.96 GBd net at 512 SPB) ~4500x RTX-TRT at
+        // 400 SPB.
+        let fpga = 40.96e9;
+        let ratio = fpga / RTX_TENSORRT.throughput(400);
+        assert!((2000.0..8000.0).contains(&ratio), "anchor ratio {ratio}");
+    }
+
+    #[test]
+    fn rtx_trt_peak_12gbd() {
+        assert!((RTX_TENSORRT.throughput(1_000_000_000) / 1e9 - 12.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn power_between_idle_and_max() {
+        for p in ALL {
+            for spb in [1u64, 1000, 1_000_000] {
+                let w = p.power(spb);
+                assert!(w >= p.p_idle_w && w <= p.p_max_w, "{} {w}", p.name);
+            }
+        }
+        assert!((CPU_I9.power(u64::MAX / 2) - 93.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn latency_grows_with_batch() {
+        for p in ALL {
+            assert!(p.latency(100_000) > p.latency(100));
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Power models (Fig. 8b, Fig. 15).
+//!
+//! Stand-in for Vivado's power estimator / PyJoules / jetson-stats
+//! (DESIGN.md §3): dynamic power scales with active MAC throughput,
+//! `P = P_static + e_mac * MACs_per_second`, with constants calibrated
+//! to the paper's endpoints (LP design 0.1 -> 0.2 W across the DOP
+//! sweep; HT design approximately 2x the AGX Xavier's envelope).
+
+use super::device::Device;
+use super::dop::Dop;
+use super::resource::macs_per_cycle_full;
+use crate::equalizer::weights::CnnTopologyCfg;
+
+/// Energy per MAC-op (J) for the LP fabric (13x10-bit fixed point).
+const E_MAC_LP: f64 = 4.5e-12;
+/// Energy per MAC for the HT fabric (UltraScale+, higher toggle rates,
+/// wide streams).
+const E_MAC_HT: f64 = 9.5e-12;
+/// Static power of the Spartan-7 design (clock tree + config).
+const P_STATIC_LP: f64 = 0.094;
+/// Static power of the VU13P design (serdes, clocking, BRAM standby).
+const P_STATIC_HT: f64 = 7.0;
+
+/// LP design dynamic power at a given DOP (one instance).
+pub fn lp_power_w(_cfg: &CnnTopologyCfg, dop: Dop, dev: &Device) -> f64 {
+    // Shared engine: DOP MACs toggle per cycle.
+    let macs_per_s = dop.total() as f64 * dev.f_clk_hz;
+    P_STATIC_LP + E_MAC_LP * macs_per_s
+}
+
+/// LP design net throughput in symbols/s at a given DOP: the engine
+/// needs `ceil(layer_macs / DOP)` cycles per layer per pass of
+/// `V_p` symbols (Sec. 5.2 time-multiplexed engine).
+pub fn lp_throughput_baud(cfg: &CnnTopologyCfg, dop: Dop, dev: &Device) -> f64 {
+    let pass_samples = cfg.vp * cfg.n_os;
+    let mut w = pass_samples;
+    let mut cycles = 0u64;
+    for (l, stride) in cfg.strides().iter().enumerate() {
+        let w_out = w / stride; // pass-granular (padding amortized away)
+        let (cin, cout) = cfg.layer_channels()[l];
+        let layer_macs = (w_out.max(1) * cin * cout * cfg.kernel) as u64;
+        // The engine cannot exploit more parallelism than the layer has.
+        let eff_dop = (dop.total() as u64).min(layer_macs);
+        cycles += layer_macs.div_ceil(eff_dop);
+        w = w_out;
+    }
+    cfg.vp as f64 * dev.f_clk_hz / cycles as f64
+}
+
+/// HT design power with `n_i` full-DOP instances.
+pub fn ht_power_w(cfg: &CnnTopologyCfg, n_i: u64, dev: &Device) -> f64 {
+    let macs_per_s = macs_per_cycle_full(cfg) * n_i as f64 * dev.f_clk_hz;
+    P_STATIC_HT + E_MAC_HT * macs_per_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::device::{XC7S25, XCVU13P};
+
+    #[test]
+    fn lp_power_range_matches_fig8b() {
+        // Paper: one XC7S25 instance spans ~0.1 W .. ~0.2 W across DOPs.
+        let cfg = CnnTopologyCfg::SELECTED;
+        let sweep = Dop::paper_sweep(&cfg);
+        let p_min = lp_power_w(&cfg, sweep[0], &XC7S25);
+        let p_max = lp_power_w(&cfg, *sweep.last().unwrap(), &XC7S25);
+        assert!((0.08..=0.12).contains(&p_min), "P(DOP=1) = {p_min}");
+        assert!((0.15..=0.45).contains(&p_max), "P(DOP=225) = {p_max}");
+    }
+
+    #[test]
+    fn lp_throughput_monotone_and_in_mbit_range() {
+        // Paper: ~4 .. ~110 Mbit/s across the DOP sweep (PAM-2: 1 bit/sym).
+        let cfg = CnnTopologyCfg::SELECTED;
+        let sweep = Dop::paper_sweep(&cfg);
+        let t: Vec<f64> = sweep.iter().map(|&d| lp_throughput_baud(&cfg, d, &XC7S25)).collect();
+        for w in t.windows(2) {
+            assert!(w[1] > w[0], "throughput must grow with DOP: {t:?}");
+        }
+        assert!(t[0] > 0.3e6 && t[0] < 10e6, "low end {:.2e}", t[0]);
+        assert!(*t.last().unwrap() > 50e6 && *t.last().unwrap() < 400e6);
+    }
+
+    #[test]
+    fn ht_power_plausible() {
+        // Fig. 15: HT FPGA ~2x the AGX (~15 W envelope) and far below the
+        // 250 W GPU.
+        let p = ht_power_w(&CnnTopologyCfg::SELECTED, 64, &XCVU13P);
+        assert!((20.0..60.0).contains(&p), "HT power {p} W");
+    }
+
+    #[test]
+    fn power_scales_with_instances() {
+        let cfg = CnnTopologyCfg::SELECTED;
+        assert!(ht_power_w(&cfg, 64, &XCVU13P) > ht_power_w(&cfg, 8, &XCVU13P));
+    }
+}

@@ -1,0 +1,202 @@
+//! FPGA resource model (Table 1, Fig. 8a).
+//!
+//! Analytic stand-in for Vivado place-and-route (DESIGN.md §3): counts
+//! MAC engines, pipeline registers, stream-module buffers and control
+//! per instance and per SSM/MSM, with constants calibrated so the
+//! 64-instance XCVU13P design reproduces the paper's Table 1 and the
+//! XC7S25 DOP sweep reproduces the Fig. 8a shape (DSPs exhausted at
+//! DOP 225 -> MAC overflow into LUTs; parameters move from BRAM into
+//! LUTs at high DOP).
+
+use super::device::Device;
+use super::dop::Dop;
+use crate::equalizer::weights::CnnTopologyCfg;
+
+/// Resource usage of one design point.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceUsage {
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    pub brams: u64,
+}
+
+impl ResourceUsage {
+    pub fn utilization(&self, dev: &Device) -> ResourceUtilization {
+        ResourceUtilization {
+            lut_pct: 100.0 * self.luts as f64 / dev.luts as f64,
+            ff_pct: 100.0 * self.ffs as f64 / dev.ffs as f64,
+            dsp_pct: 100.0 * self.dsps as f64 / dev.dsps as f64,
+            bram_pct: 100.0 * self.brams as f64 / dev.brams as f64,
+        }
+    }
+
+    pub fn fits(&self, dev: &Device) -> bool {
+        self.luts <= dev.luts && self.ffs <= dev.ffs && self.dsps <= dev.dsps && self.brams <= dev.brams
+    }
+}
+
+/// Percent-of-device view (the paper's Table 1 / Fig. 8a axis).
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceUtilization {
+    pub lut_pct: f64,
+    pub ff_pct: f64,
+    pub dsp_pct: f64,
+    pub bram_pct: f64,
+}
+
+// ---- calibration constants (see module docs) -----------------------------
+
+/// Fraction of MAC units mapped to DSP slices; the remainder goes to
+/// LUT fabric (the paper's x1.2 headroom factor in Sec. 3.4).
+const DSP_SHARE: f64 = 0.67;
+/// LUTs per LUT-fabric MAC (13x10-bit multiplier + adder).
+const LUT_PER_MAC: u64 = 110;
+/// Control/addressing LUTs per CNN instance.
+const LUT_INSTANCE_CTRL: u64 = 3_600;
+/// LUTs per stream module (SSM or MSM, incl. OGM/ORM amortized).
+const LUT_STREAM: u64 = 2_500;
+/// Static infrastructure (clocking, AXI, I/O).
+const LUT_BASE: u64 = 90_000;
+/// Pipeline registers per instance (per MAC-stage flop chains).
+const FF_PER_INSTANCE: u64 = 14_200;
+/// Registers per stream module.
+const FF_STREAM: u64 = 1_000;
+const FF_BASE: u64 = 15_000;
+/// 36 Kb BRAMs per stream module (sub-sequence double buffers).
+const BRAM_STREAM: u64 = 16;
+/// BRAMs per instance (weight/line buffers) in the HT design.
+const BRAM_INSTANCE: f64 = 1.5;
+const BRAM_BASE: u64 = 6;
+
+/// MAC operations the engine performs per clock cycle for one instance
+/// producing `V_p` samples/cycle (the HT configuration, Sec. 5.1).
+pub fn macs_per_cycle_full(cfg: &CnnTopologyCfg) -> f64 {
+    // One pass consumes V_p * N_os samples and produces V_p symbols in
+    // N_os... the streaming engine sustains V_p samples/cycle, i.e.
+    // V_p / N_os symbols/cycle at MAC_sym MACs per symbol.
+    cfg.mac_per_symbol() * cfg.vp as f64 / cfg.n_os as f64
+}
+
+/// High-throughput design: `n_i` fully parallel instances plus the
+/// SSM/MSM partition tree (2 * (n_i - 1) stream modules).
+pub fn ht_design(cfg: &CnnTopologyCfg, n_i: u64) -> ResourceUsage {
+    let macs = macs_per_cycle_full(cfg);
+    let dsp_per_inst = macs * DSP_SHARE;
+    let lut_macs_per_inst = (macs * (1.0 - DSP_SHARE)).ceil() as u64;
+    let stream_modules = if n_i > 1 { 2 * (n_i - 1) } else { 0 };
+
+    ResourceUsage {
+        dsps: (dsp_per_inst * n_i as f64).round() as u64,
+        luts: LUT_BASE
+            + n_i * (lut_macs_per_inst * LUT_PER_MAC + LUT_INSTANCE_CTRL)
+            + stream_modules * LUT_STREAM,
+        ffs: FF_BASE + n_i * FF_PER_INSTANCE + stream_modules * FF_STREAM,
+        brams: BRAM_BASE + (n_i as f64 * BRAM_INSTANCE).round() as u64 + stream_modules * BRAM_STREAM,
+    }
+}
+
+/// Low-power design: one instance with a reduced-DOP engine on a small
+/// device (Fig. 8a).  `dev` bounds the DSP pool; overflow MACs go to
+/// LUTs; trainable parameters live in BRAM at small DOP and in LUTs at
+/// large DOP (observed Vivado HLS behaviour, Sec. 5.2).
+pub fn lp_design(cfg: &CnnTopologyCfg, dop: Dop, dev: &Device) -> ResourceUsage {
+    // One shared conv engine time-multiplexed across layers (the LP
+    // design point; the HT design instead pipelines one engine per
+    // layer, Sec. 5.1).
+    let macs = dop.total() as u64;
+    let dsps = macs.min(dev.dsps);
+    let overflow = macs - dsps;
+
+    let params: u64 = cfg
+        .layer_channels()
+        .iter()
+        .map(|&(ci, co)| (ci * co * cfg.kernel + co) as u64)
+        .sum();
+    // 13-bit words: ~2.8 params per LUT as distributed RAM.
+    let (param_brams, param_luts) =
+        if dop.total() <= 25 { ((params * 13).div_ceil(36_000) + 7, 0) } else { (1, params / 2) };
+
+    ResourceUsage {
+        dsps,
+        luts: 1_200 + dop.total() as u64 * 14 + overflow * LUT_PER_MAC + param_luts,
+        ffs: 2_400 + macs * 60,
+        brams: 2 + param_brams,
+    }
+}
+
+/// Paper's hardware-aware complexity ceiling (Sec. 3.4):
+/// `MAC_sym,max = DSP_avail / T_req * f_clk * 1.2`.
+pub fn mac_sym_max(dev: &Device, t_req_baud: f64) -> f64 {
+    dev.dsps as f64 / t_req_baud * dev.f_clk_hz * 1.2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::device::{XC7S25, XCVU13P};
+
+    #[test]
+    fn table1_reproduction() {
+        // Paper Table 1 (64 instances on XCVU13P):
+        //   LUT 1 176 156 (68.06%), FF 1 050 179 (30.39%),
+        //   DSP 9 648 (78.52%), BRAM 2 118 (78.79%).
+        let u = ht_design(&CnnTopologyCfg::SELECTED, 64);
+        let pct = u.utilization(&XCVU13P);
+        assert_eq!(u.dsps, 9_648, "DSP calibrated exactly");
+        assert!((pct.lut_pct - 68.06).abs() < 5.0, "LUT {:.1}%", pct.lut_pct);
+        assert!((pct.ff_pct - 30.39).abs() < 5.0, "FF {:.1}%", pct.ff_pct);
+        assert!((pct.bram_pct - 78.79).abs() < 5.0, "BRAM {:.1}%", pct.bram_pct);
+        assert!(u.fits(&XCVU13P));
+    }
+
+    #[test]
+    fn ht_scales_with_instances() {
+        let cfg = CnnTopologyCfg::SELECTED;
+        let u32 = ht_design(&cfg, 32);
+        let u64_ = ht_design(&cfg, 64);
+        assert!(u64_.dsps > u32.dsps && u64_.luts > u32.luts && u64_.brams > u32.brams);
+        // 128 instances must NOT fit (the paper could not go beyond 64).
+        assert!(!ht_design(&cfg, 128).fits(&XCVU13P));
+    }
+
+    #[test]
+    fn lp_dop225_overflows_luts() {
+        // Fig. 8a: at DOP 225 all DSPs are used and LUTs exceed 100%.
+        let cfg = CnnTopologyCfg::SELECTED;
+        let dop = Dop { i: 5, o: 5, k: 9 };
+        let u = lp_design(&cfg, dop, &XC7S25);
+        assert_eq!(u.dsps, XC7S25.dsps);
+        assert!(u.utilization(&XC7S25).lut_pct > 100.0);
+    }
+
+    #[test]
+    fn lp_small_dops_fit_and_use_bram() {
+        let cfg = CnnTopologyCfg::SELECTED;
+        for t in [1usize, 5, 10, 25] {
+            let dop = Dop::enumerate(&cfg).into_iter().find(|d| d.total() == t).unwrap();
+            let u = lp_design(&cfg, dop, &XC7S25);
+            assert!(u.fits(&XC7S25), "DOP {t} should fit");
+            assert!(u.brams >= 8, "params in BRAM at DOP {t}");
+        }
+    }
+
+    #[test]
+    fn lp_resources_monotone_in_dop() {
+        let cfg = CnnTopologyCfg::SELECTED;
+        let sweep = Dop::paper_sweep(&cfg);
+        let luts: Vec<u64> = sweep.iter().map(|&d| lp_design(&cfg, d, &XC7S25).luts).collect();
+        for w in luts.windows(2) {
+            assert!(w[1] >= w[0], "LUTs must grow with DOP: {luts:?}");
+        }
+    }
+
+    #[test]
+    fn mac_ceiling_matches_fig2_line() {
+        // 12288 DSP / 40 GBd * 200 MHz * 1.2 = 73.7 -> the paper's Fig. 2
+        // red line sits near the selected model's 56.25 MAC/sym.
+        let ceiling = mac_sym_max(&XCVU13P, 40e9);
+        assert!(ceiling > 56.25, "selected model must satisfy the ceiling: {ceiling}");
+        assert!(ceiling < 200.0);
+    }
+}

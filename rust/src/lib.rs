@@ -1,0 +1,56 @@
+//! # equalizer — CNN-based equalization for communications
+//!
+//! Reproduction of *"CNN-Based Equalization for Communications: Achieving
+//! Gigabit Throughput with a Flexible FPGA Hardware Architecture"*
+//! (Ney et al., 2024) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is **Layer 3**: the streaming coordinator that embodies the
+//! paper's architecture contribution — stream partitioning across parallel
+//! CNN instances (SSM/MSM trees with overlap handling), the analytic
+//! timing model and its cycle-approximate validation simulator, the
+//! sequence-length optimization framework, and the FPGA resource/power
+//! models — plus every substrate the evaluation needs (channel simulators,
+//! bit-accurate fixed-point datapaths, platform performance models, and
+//! offline stand-ins for JSON/bench/property-test tooling).
+//!
+//! The CNN itself is compiled ahead of time: JAX/Pallas (build-time
+//! Python) lowers the trained network to HLO text in `artifacts/`, which
+//! [`runtime`] loads and executes through the PJRT C API (`xla` crate).
+//! Python never runs on the request path.
+//!
+//! ```no_run
+//! use equalizer::prelude::*;
+//!
+//! let registry = ArtifactRegistry::discover("artifacts")?;
+//! let engine = Engine::new(&registry)?;
+//! let exe = engine.load(registry.best_model("cnn", "imdd", 1024)?)?;
+//! let y = exe.run_f32(&vec![0.0_f32; 1024])?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod channel;
+pub mod config;
+pub mod coordinator;
+pub mod dse;
+pub mod equalizer;
+pub mod fixedpoint;
+pub mod hw;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::channel::{imdd::ImddChannel, proakis::ProakisBChannel, Channel};
+    pub use crate::config::{CnnTopology, RunConfig};
+    pub use crate::coordinator::instance::{
+        EqualizerInstance, NativeInstance, PjrtInstance, SharedPjrtInstance,
+    };
+    pub use crate::coordinator::{
+        pipeline::EqualizerPipeline, seqlen::SeqLenOptimizer, timing::TimingModel,
+    };
+    pub use crate::equalizer::{cnn::FixedPointCnn, fir::FirEqualizer, weights::CnnWeights};
+    pub use crate::hw::{device::Device, dop::Dop};
+    pub use crate::metrics::ber::BerCounter;
+    pub use crate::runtime::{ArtifactRegistry, Engine};
+}

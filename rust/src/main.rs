@@ -1,0 +1,259 @@
+//! `repro` — CLI for the CNN-equalizer reproduction.
+//!
+//! Subcommands map to the paper's evaluation (DESIGN.md §5): `figures`
+//! regenerates each table/figure, `equalize` runs the full pipeline on
+//! a simulated channel, `timing`/`seqlen` expose the Sec. 6 framework.
+
+use anyhow::Result;
+use equalizer::channel::{imdd::ImddChannel, proakis::ProakisBChannel, Channel};
+use equalizer::config::RunConfig;
+use equalizer::coordinator::instance::{PjrtInstance, SharedPjrtInstance};
+use equalizer::coordinator::pipeline::EqualizerPipeline;
+use equalizer::coordinator::seqlen::SeqLenOptimizer;
+use equalizer::coordinator::timing::TimingModel;
+use equalizer::equalizer::weights::CnnTopologyCfg;
+use equalizer::metrics::ber::BerCounter;
+use equalizer::runtime::{ArtifactRegistry, Engine};
+use equalizer::util::cli::Args;
+
+mod figures;
+
+const USAGE: &str = "\
+repro — CNN-based equalization (Ney et al. 2024) reproduction
+
+USAGE: repro <command> [options]
+
+COMMANDS:
+  info      [--artifacts DIR]                          artifact inventory
+  equalize  [--artifacts DIR] [--channel imdd|proakis]
+            [--instances N] [--symbols N] [--l-inst N]
+            [--quant] [--own-clients]                  end-to-end BER run
+  timing    [--instances N] [--l-inst N] [--f-clk HZ]  Sec. 6.1 model
+  seqlen    [--instances N] [--target SAMPLES/S]       Sec. 6.2 framework
+  figures   <fig2|fig4|fig8a|fig8b|fig12|fig13|fig14|
+             fig15|table1|snr|all> [--artifacts DIR]   regenerate results
+  serve     [--artifacts DIR] [--instances N]
+            [--requests N] [--spb SYMBOLS]             streaming-server demo
+  config    [--profile high-throughput|low-power]      print JSON config
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "info" => info(&args),
+        "equalize" => equalize(&args),
+        "timing" => timing(&args),
+        "seqlen" => seqlen(&args),
+        "serve" => serve(&args),
+        "figures" => {
+            let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+            figures::run(which, &args.str_or("artifacts", "artifacts"))
+        }
+        "config" => {
+            let cfg = match args.str_or("profile", "high-throughput").as_str() {
+                "low-power" => RunConfig::low_power(),
+                _ => RunConfig::default(),
+            };
+            println!("{}", cfg.to_json().render());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let reg = ArtifactRegistry::discover(args.str_or("artifacts", "artifacts"))?;
+    let engine = Engine::new(&reg)?;
+    println!("PJRT platform: {}", engine.platform_name());
+    println!("artifacts dir: {}", reg.dir.display());
+    for m in &reg.models {
+        println!(
+            "  {:28} model={:9} channel={:8} width={:6} batch={} quant={}",
+            m.name,
+            m.model,
+            m.channel,
+            m.width(),
+            m.batch,
+            m.quant
+        );
+    }
+    for (k, v) in &reg.train_ber {
+        println!("  train BER {k}: {v:.3e}");
+    }
+    Ok(())
+}
+
+fn equalize(args: &Args) -> Result<()> {
+    let reg = ArtifactRegistry::discover(args.str_or("artifacts", "artifacts"))?;
+    let _ = Engine::new(&reg)?; // fail fast if PJRT unavailable
+    let channel = args.str_or("channel", "imdd");
+    let instances = args.usize_or("instances", 4)?.next_power_of_two();
+    let symbols = args.usize_or("symbols", 1 << 17)?;
+    let desired_l_inst = args.usize_or("l-inst", 768)?;
+    let quant = args.flag("quant");
+
+    let cfg = CnnTopologyCfg::SELECTED;
+    // Software overlap: receptive field rounded to the stream grid (the
+    // full hardware o_act only matters for stream widths, Sec. 6.1).
+    let o_act = cfg.o_act_samples();
+    let model_name = "cnn";
+    let buckets = reg.buckets(model_name, &channel, quant);
+    anyhow::ensure!(!buckets.is_empty(), "no {model_name}/{channel} quant={quant} artifacts");
+    let (bucket, l_inst) = equalizer::coordinator::pipeline::plan_bucket(desired_l_inst, o_act, &buckets)
+        .ok_or_else(|| anyhow::anyhow!("no bucket fits l_inst={desired_l_inst} o_act={o_act}"))?;
+    println!("bucket width {bucket}, l_inst {l_inst}, o_act {o_act}, instances {instances}");
+
+    let entry = reg
+        .models
+        .iter()
+        .find(|m| {
+            m.model == model_name && m.channel == channel && m.quant == quant
+                && m.batch == 1 && m.width() == bucket
+        })
+        .ok_or_else(|| anyhow::anyhow!("artifact disappeared"))?;
+    let data = match channel.as_str() {
+        "imdd" => ImddChannel::default().transmit(symbols, 42),
+        _ => ProakisBChannel::default().transmit(symbols, 42),
+    };
+    // Shared-client sequential dispatch is the fast CPU configuration
+    // (EXPERIMENTS.md §Perf); --own-clients runs the
+    // one-client-per-instance threaded mode instead.
+    let t0 = std::time::Instant::now();
+    let soft = if args.flag("own-clients") {
+        let workers: Vec<PjrtInstance> = (0..instances)
+            .map(|_| PjrtInstance::load(entry))
+            .collect::<Result<_>>()?;
+        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os)?;
+        pipe.equalize_parallel(&data.rx)?
+    } else {
+        let engine = Engine::cpu()?;
+        let workers: Vec<SharedPjrtInstance> = (0..instances)
+            .map(|_| SharedPjrtInstance::load(&engine, entry))
+            .collect::<Result<_>>()?;
+        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os)?;
+        pipe.equalize(&data.rx)?
+    };
+    let dt = t0.elapsed();
+    let mut ber = BerCounter::new();
+    ber.update(&soft, &data.symbols);
+    println!(
+        "equalized {} symbols in {:.2} ms  ({:.2} Msym/s software)",
+        soft.len(),
+        dt.as_secs_f64() * 1e3,
+        soft.len() as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!("BER = {:.3e} (+-{:.1e})", ber.ber(), ber.ci95());
+    Ok(())
+}
+
+/// Streaming-server demo: N requests with randomized per-request
+/// throughput requirements; reports the l_inst the LUT selected and the
+/// wall-clock latency distribution.
+fn serve(args: &Args) -> Result<()> {
+    use equalizer::channel::mt19937::Mt19937;
+    use equalizer::coordinator::server::EqualizerServer;
+    use equalizer::coordinator::instance::EqualizerInstance;
+    use equalizer::metrics::stats::LatencyStats;
+
+    let reg = ArtifactRegistry::discover(args.str_or("artifacts", "artifacts"))?;
+    let n_i = args.usize_or("instances", 2)?;
+    let n_requests = args.usize_or("requests", 16)?;
+    let spb = args.usize_or("spb", 8192)?;
+
+    let cfg = CnnTopologyCfg::SELECTED;
+    let entry = reg.best_model("cnn", "imdd", 4096)?;
+    let instances: Vec<Box<dyn EqualizerInstance + Send>> = (0..n_i)
+        .map(|_| Ok(Box::new(PjrtInstance::load(entry)?) as Box<_>))
+        .collect::<Result<_>>()?;
+    let o_act = cfg.o_act_samples();
+    let model = TimingModel::new(64, cfg.vp, cfg.layers, cfg.kernel, 200e6);
+    let opt = SeqLenOptimizer::new(model);
+    let targets: Vec<f64> = (1..=100).map(|i| i as f64 * 1e9).collect();
+    let server = EqualizerServer::new(instances, o_act, cfg.n_os, &opt, &targets)?;
+    let handle = server.spawn();
+
+    println!("serving {n_requests} bursts of {spb} symbols over {n_i} instances");
+    let data = ImddChannel::default().transmit(spb * n_requests, 99);
+    let mut lat = LatencyStats::new();
+    let mut ber = BerCounter::new();
+    let mut rng = Mt19937::new(5);
+    for r in 0..n_requests {
+        let t_req = if r % 3 == 0 {
+            None
+        } else {
+            Some(10e9 + rng.next_f64() * 85e9)
+        };
+        let burst = data.rx[r * spb * 2..(r + 1) * spb * 2].to_vec();
+        let resp = handle.call(burst, t_req)?;
+        ber.update(&resp.soft_symbols, &data.symbols[r * spb..r * spb + resp.soft_symbols.len()]);
+        lat.record_us(resp.elapsed_us);
+        println!(
+            "  req {r:>3}  t_req {:>9}  l_inst {:>6}  {:>9.1} us",
+            t_req.map(|t| format!("{:.0}G", t / 1e9)).unwrap_or_else(|| "-".into()),
+            resp.l_inst,
+            resp.elapsed_us
+        );
+    }
+    handle.shutdown();
+    println!(
+        "
+BER {:.3e}   latency p50 {:.1} us  p99 {:.1} us",
+        ber.ber(),
+        lat.percentile_us(50.0),
+        lat.percentile_us(99.0)
+    );
+    Ok(())
+}
+
+fn timing(args: &Args) -> Result<()> {
+    let cfg = CnnTopologyCfg::SELECTED;
+    let m = TimingModel::new(
+        args.usize_or("instances", 64)?,
+        cfg.vp,
+        cfg.layers,
+        cfg.kernel,
+        args.f64_or("f-clk", 200e6)?,
+    );
+    let l_inst = args.usize_or("l-inst", 7320)?;
+    println!("o_sym  = {} samples", m.o_sym());
+    println!("o_act  = {} samples", m.o_act());
+    println!("l_ol   = {} samples", m.l_ol(l_inst));
+    println!("T_max  = {:.2} Gsamples/s", m.t_max() / 1e9);
+    println!("T_net  = {:.2} Gsamples/s", m.t_net(l_inst) / 1e9);
+    println!("lambda = {:.2} us", m.lambda_sym_s(l_inst) * 1e6);
+    Ok(())
+}
+
+fn seqlen(args: &Args) -> Result<()> {
+    let cfg = CnnTopologyCfg::SELECTED;
+    let m = TimingModel::new(
+        args.usize_or("instances", 64)?,
+        cfg.vp,
+        cfg.layers,
+        cfg.kernel,
+        args.f64_or("f-clk", 200e6)?,
+    );
+    let target = args.f64_or("target", 80e9)?;
+    let opt = SeqLenOptimizer::new(m);
+    match opt.min_l_inst(target) {
+        Some(l) => println!(
+            "minimal l_inst = {l} samples  (T_net {:.2} Gsa/s, lambda {:.2} us)",
+            m.t_net(l) / 1e9,
+            m.lambda_sym_s(l) * 1e6
+        ),
+        None => println!(
+            "target {:.2} Gsa/s unreachable: T_max = {:.2} Gsa/s",
+            target / 1e9,
+            m.t_max() / 1e9
+        ),
+    }
+    Ok(())
+}

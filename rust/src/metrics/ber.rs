@@ -1,0 +1,107 @@
+//! Bit-error-ratio accounting (PAM-2 hard decisions).
+
+/// Streaming BER counter.
+#[derive(Debug, Default, Clone)]
+pub struct BerCounter {
+    errors: u64,
+    total: u64,
+}
+
+impl BerCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Compare soft estimates against transmitted symbols (sign decision).
+    pub fn update(&mut self, soft: &[f32], reference: &[f32]) {
+        assert_eq!(soft.len(), reference.len(), "length mismatch");
+        for (&s, &r) in soft.iter().zip(reference) {
+            let dec = if s >= 0.0 { 1.0 } else { -1.0 };
+            if dec != r {
+                self.errors += 1;
+            }
+            self.total += 1;
+        }
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn ber(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.errors as f64 / self.total as f64
+        }
+    }
+
+    /// 95% Wilson confidence interval half-width — used to decide whether
+    /// a measured BER difference is meaningful in EXPERIMENTS.md.
+    pub fn ci95(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let n = self.total as f64;
+        let p = self.ber();
+        1.96 * (p * (1.0 - p) / n).sqrt()
+    }
+
+    pub fn merge(&mut self, other: &BerCounter) {
+        self.errors += other.errors;
+        self.total += other.total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_errors() {
+        let mut c = BerCounter::new();
+        c.update(&[0.9, -0.2, 0.1, -0.8], &[1.0, 1.0, -1.0, -1.0]);
+        assert_eq!(c.errors(), 2);
+        assert_eq!(c.total(), 4);
+        assert_eq!(c.ber(), 0.5);
+    }
+
+    #[test]
+    fn zero_boundary_decides_plus_one() {
+        let mut c = BerCounter::new();
+        c.update(&[0.0], &[1.0]);
+        assert_eq!(c.errors(), 0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = BerCounter::new();
+        a.update(&[1.0], &[-1.0]);
+        let mut b = BerCounter::new();
+        b.update(&[1.0, 1.0], &[1.0, 1.0]);
+        a.merge(&b);
+        assert_eq!(a.total(), 3);
+        assert_eq!(a.errors(), 1);
+    }
+
+    #[test]
+    fn ci_shrinks_with_samples() {
+        let mut small = BerCounter::new();
+        small.update(&vec![1.0; 100], &vec![-1.0; 100]);
+        small.update(&vec![1.0; 100], &vec![1.0; 100]);
+        let mut large = BerCounter::new();
+        large.update(&vec![1.0; 10_000], &vec![-1.0; 10_000]);
+        large.update(&vec![1.0; 10_000], &vec![1.0; 10_000]);
+        assert!(large.ci95() < small.ci95());
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        BerCounter::new().update(&[1.0], &[1.0, 1.0]);
+    }
+}

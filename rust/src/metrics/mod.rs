@@ -1,0 +1,4 @@
+//! Measurement substrates: BER counting and latency/throughput statistics.
+
+pub mod ber;
+pub mod stats;

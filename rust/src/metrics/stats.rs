@@ -1,0 +1,98 @@
+//! Latency / throughput statistics for the serving benchmarks.
+
+use std::time::Duration;
+
+/// Accumulates per-request latency samples and derives percentiles.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    /// Percentile in [0, 100] by nearest-rank on the sorted samples.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.samples_us.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Throughput helper: symbols processed over a wall-clock window.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    pub symbols: u64,
+    pub seconds: f64,
+}
+
+impl Throughput {
+    /// Symbols (== bits, PAM-2) per second.
+    pub fn baud(&self) -> f64 {
+        self.symbols as f64 / self.seconds
+    }
+
+    pub fn gbaud(&self) -> f64 {
+        self.baud() / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut s = LatencyStats::new();
+        for i in 1..=100 {
+            s.record_us(i as f64);
+        }
+        assert_eq!(s.percentile_us(0.0), 1.0);
+        assert_eq!(s.percentile_us(100.0), 100.0);
+        assert!((s.percentile_us(50.0) - 50.0).abs() <= 1.0);
+        assert!((s.mean_us() - 50.5).abs() < 1e-9);
+        assert_eq!(s.max_us(), 100.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean_us(), 0.0);
+        assert_eq!(s.percentile_us(99.0), 0.0);
+    }
+
+    #[test]
+    fn throughput_units() {
+        let t = Throughput { symbols: 80_000_000_000, seconds: 2.0 };
+        assert!((t.gbaud() - 40.0).abs() < 1e-9);
+    }
+}

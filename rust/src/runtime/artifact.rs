@@ -1,0 +1,188 @@
+//! Artifact registry: the Rust view of `artifacts/manifest.json`.
+//!
+//! `python/compile/aot.py` exports every model variant at several
+//! input-width buckets; the registry resolves (model family, channel,
+//! required width) to the smallest bucket that fits — the runtime
+//! analogue of the paper's per-sequence model selection (Sec. 6.2).
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+/// One exported model from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: String,
+    pub input_shape: Vec<usize>,
+    pub model: String,
+    pub channel: String,
+    pub out_symbols: usize,
+    pub quant: bool,
+    pub batch: usize,
+    /// Absolute path, filled at load time.
+    pub abs_path: PathBuf,
+}
+
+impl ArtifactEntry {
+    /// Input width in samples (last axis of the input shape).
+    pub fn width(&self) -> usize {
+        *self.input_shape.last().expect("non-scalar input")
+    }
+
+    fn from_json(v: &Json, dir: &Path) -> Result<Self> {
+        let path = v.req("path")?.as_str().ok_or_else(|| anyhow!("path"))?.to_string();
+        let input_shape = v
+            .req("input_shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("input_shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            name: v.req("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
+            abs_path: dir.join(&path),
+            path,
+            input_shape,
+            model: v.req("model")?.as_str().ok_or_else(|| anyhow!("model"))?.to_string(),
+            channel: v.req("channel")?.as_str().ok_or_else(|| anyhow!("channel"))?.to_string(),
+            out_symbols: v.get("out_symbols").and_then(Json::as_usize).unwrap_or(0),
+            quant: v.get("quant").and_then(Json::as_bool).unwrap_or(false),
+            batch: v.get("batch").and_then(Json::as_usize).unwrap_or(1),
+        })
+    }
+}
+
+/// All models exported by the build path.
+#[derive(Debug)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub models: Vec<ArtifactEntry>,
+    pub train_ber: std::collections::BTreeMap<String, f64>,
+}
+
+impl ArtifactRegistry {
+    /// Read `<dir>/manifest.json`.
+    pub fn discover(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        anyhow::ensure!(
+            manifest_path.exists(),
+            "{} not found — run `make artifacts` first",
+            manifest_path.display()
+        );
+        let root = json::parse_file(&manifest_path)?;
+        let mut models = Vec::new();
+        for m in root.req("models")?.as_arr().ok_or_else(|| anyhow!("models"))? {
+            let entry = ArtifactEntry::from_json(m, &dir)?;
+            anyhow::ensure!(
+                entry.abs_path.exists(),
+                "artifact missing: {}",
+                entry.abs_path.display()
+            );
+            models.push(entry);
+        }
+        let mut train_ber = std::collections::BTreeMap::new();
+        if let Some(Json::Obj(map)) = root.get("ber") {
+            for (k, v) in map {
+                if let Some(x) = v.as_f64() {
+                    train_ber.insert(k.clone(), x);
+                }
+            }
+        }
+        Ok(Self { dir, models, train_ber })
+    }
+
+    /// All width buckets for a (model, channel, quant, batch=1) family,
+    /// ascending.
+    pub fn buckets(&self, model: &str, channel: &str, quant: bool) -> Vec<usize> {
+        let mut w: Vec<usize> = self
+            .models
+            .iter()
+            .filter(|m| m.model == model && m.channel == channel && m.quant == quant && m.batch == 1)
+            .map(|m| m.width())
+            .collect();
+        w.sort_unstable();
+        w
+    }
+
+    /// Smallest single-sequence artifact with width >= `min_width`.
+    pub fn best_model(&self, model: &str, channel: &str, min_width: usize) -> Result<&ArtifactEntry> {
+        self.models
+            .iter()
+            .filter(|m| {
+                m.model == model && m.channel == channel && m.batch == 1 && m.width() >= min_width
+            })
+            .min_by_key(|m| m.width())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for model={model} channel={channel} width>={min_width} in {}",
+                    self.dir.display()
+                )
+            })
+    }
+
+    /// Exact lookup by artifact name.
+    pub fn exact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Option<ArtifactRegistry> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        ArtifactRegistry::discover(dir).ok()
+    }
+
+    #[test]
+    fn discovers_manifest_when_built() {
+        let Some(reg) = registry() else { return };
+        assert!(!reg.models.is_empty());
+        assert!(reg.train_ber.contains_key("cnn_imdd"));
+    }
+
+    #[test]
+    fn bucket_selection_rounds_up() {
+        let Some(reg) = registry() else { return };
+        let m = reg.best_model("cnn", "imdd", 700).unwrap();
+        assert_eq!(m.width(), 1024, "700 should land in the 1024 bucket");
+        let m = reg.best_model("cnn", "imdd", 1024).unwrap();
+        assert_eq!(m.width(), 1024);
+        let m = reg.best_model("cnn", "imdd", 1025).unwrap();
+        assert_eq!(m.width(), 2048);
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let Some(reg) = registry() else { return };
+        assert!(reg.best_model("transformer", "imdd", 1).is_err());
+        assert!(reg.best_model("cnn", "imdd", 1 << 30).is_err());
+    }
+
+    #[test]
+    fn buckets_ascending() {
+        let Some(reg) = registry() else { return };
+        let b = reg.buckets("cnn", "imdd", false);
+        assert!(b.len() >= 4);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn entry_from_json_defaults() {
+        let v = json::parse(
+            r#"{"name":"m","path":"m.hlo.txt","input_shape":[512],
+                "model":"cnn","channel":"imdd"}"#,
+        )
+        .unwrap();
+        let e = ArtifactEntry::from_json(&v, Path::new("/tmp")).unwrap();
+        assert_eq!(e.width(), 512);
+        assert_eq!(e.batch, 1);
+        assert!(!e.quant);
+    }
+}

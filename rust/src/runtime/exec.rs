@@ -1,0 +1,55 @@
+//! A compiled model: PJRT executable + artifact metadata.
+
+use super::artifact::ArtifactEntry;
+use anyhow::Result;
+
+/// A PJRT-compiled equalizer model ready to execute.
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ArtifactEntry,
+}
+
+impl CompiledModel {
+    pub fn new(exe: xla::PjRtLoadedExecutable, entry: ArtifactEntry) -> Self {
+        Self { exe, entry }
+    }
+
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    /// Expected input width (samples).
+    pub fn width(&self) -> usize {
+        self.entry.width()
+    }
+
+    /// Run one sub-sequence: `x.len()` must equal `width()`.
+    ///
+    /// The artifacts are lowered with `return_tuple=True`, so the output
+    /// is a 1-tuple of the soft-symbol vector.
+    pub fn run_f32(&self, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == self.width() * self.entry.batch,
+            "input length {} != expected {} (batch {})",
+            x.len(),
+            self.width() * self.entry.batch,
+            self.entry.batch
+        );
+        let lit = if self.entry.batch == 1 {
+            xla::Literal::vec1(x)
+        } else {
+            xla::Literal::vec1(x)
+                .reshape(&[self.entry.batch as i64, self.width() as i64])
+                .map_err(|e| anyhow::anyhow!("reshape: {e}"))?
+        };
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        let inner = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple unwrap: {e}"))?;
+        inner.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+    }
+}

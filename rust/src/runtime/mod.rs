@@ -1,0 +1,66 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
+//! request path.
+//!
+//! This is the only place the `xla` crate is touched.  The flow follows
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//! HLO *text* is the interchange format (jax >= 0.5 emits 64-bit
+//! instruction ids in serialized protos, which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids).
+//!
+//! Python never runs here: artifacts are produced once by
+//! `make artifacts` and the binary is self-contained afterwards.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::ArtifactRegistry;
+pub use exec::CompiledModel;
+
+use anyhow::Result;
+use std::path::Path;
+
+/// A PJRT CPU client that compiles HLO-text artifacts into executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client for models from `registry`.
+    pub fn new(_registry: &ArtifactRegistry) -> Result<Self> {
+        Self::cpu()
+    }
+
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT client: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it for this client.
+    pub fn load(&self, entry: &artifact::ArtifactEntry) -> Result<CompiledModel> {
+        self.load_path(entry.abs_path.clone(), entry.clone())
+    }
+
+    /// Compile an HLO text file with explicit metadata.
+    pub fn load_path(
+        &self,
+        path: impl AsRef<Path>,
+        entry: artifact::ArtifactEntry,
+    ) -> Result<CompiledModel> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(CompiledModel::new(exe, entry))
+    }
+}

@@ -1,0 +1,148 @@
+//! Micro-benchmark harness (criterion is not vendored offline).
+//!
+//! Warmup + timed iterations with mean/stddev/min reporting, plus a
+//! throughput helper.  Used by every target in `rust/benches/`
+//! (`harness = false` binaries).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "{:44} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            fmt_dur(self.min),
+            self.iters
+        );
+    }
+
+    /// items/s given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with fixed time budgets.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    max_iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup: Duration::from_millis(300), measure: Duration::from_secs(2), max_iters: 10_000 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self { warmup: Duration::from_millis(50), measure: Duration::from_millis(400), max_iters: 2_000 }
+    }
+
+    /// Run `f` repeatedly; returns stats over per-iteration wall time.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        // Warmup.
+        let t0 = Instant::now();
+        let mut warm_iters = 0u32;
+        while t0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            black_box(f());
+            warm_iters += 1;
+        }
+
+        // Measure.
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure && (samples.len() as u32) < self.max_iters {
+            let s = Instant::now();
+            black_box(f());
+            samples.push(s.elapsed());
+        }
+        if samples.is_empty() {
+            let s = Instant::now();
+            black_box(f());
+            samples.push(s.elapsed());
+        }
+
+        let n = samples.len() as f64;
+        let mean_ns = samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / n;
+        let var = samples
+            .iter()
+            .map(|d| (d.as_nanos() as f64 - mean_ns).powi(2))
+            .sum::<f64>()
+            / n;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len() as u32,
+            mean: Duration::from_nanos(mean_ns as u64),
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+            min: *samples.iter().min().unwrap(),
+        };
+        m.report();
+        m
+    }
+}
+
+/// Print the standard bench table header.
+pub fn header(title: &str) {
+    println!("\n### {title}");
+    println!("{:44} {:>12} {:>12} {:>12}", "benchmark", "mean", "stddev", "min");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher { warmup: Duration::from_millis(1), measure: Duration::from_millis(20), max_iters: 100 };
+        let m = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(m.iters >= 1);
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.min <= m.mean);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Measurement {
+            name: "t".into(),
+            iters: 1,
+            mean: Duration::from_millis(10),
+            stddev: Duration::ZERO,
+            min: Duration::from_millis(10),
+        };
+        assert!((m.throughput(1000.0) - 100_000.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Tiny argument parser (clap is not vendored offline).
+//!
+//! Supports `--flag value`, `--flag=value` and positional arguments —
+//! all the CLI and examples need.
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: positionals + `--key value` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(iter: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut iter = iter.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if iter.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.opts.insert(rest.to_string(), iter.next().unwrap());
+                } else {
+                    out.opts.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some_and(|v| v != "false")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("figures fig2 --artifacts art --n 5");
+        assert_eq!(a.positional, vec!["figures", "fig2"]);
+        assert_eq!(a.get("artifacts"), Some("art"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        // Boolean flags bind a following bare token as their value, so
+        // they go last (or use --flag=true) — documented limitation.
+        let a = parse("run --x=3.5 --verbose");
+        assert_eq!(a.f64_or("x", 0.0).unwrap(), 3.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("--n abc");
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

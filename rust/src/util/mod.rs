@@ -1,0 +1,11 @@
+//! In-tree utility substrates.
+//!
+//! This image builds fully offline with only the `xla` crate closure
+//! vendored, so the usual ecosystem crates (serde_json, clap, criterion,
+//! proptest, tokio) are unavailable — these modules provide the subset
+//! this project needs, with their own test suites.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,155 @@
+//! Cross-layer numerics: the PJRT-compiled artifacts and the native
+//! Rust datapaths must reproduce the Python build-path outputs on the
+//! recorded test vectors (`artifacts/testvectors.json`).
+//!
+//! This is the contract that caught the large-constant-elision bug in
+//! the HLO text printer (see `python/compile/aot.py::to_hlo_text`):
+//! a silent weight corruption shows up here as a gross mismatch.
+
+use equalizer::equalizer::cnn::FixedPointCnn;
+use equalizer::equalizer::weights::{CnnWeights, FirWeights};
+use equalizer::equalizer::fir::FirEqualizer;
+use equalizer::fixedpoint::QuantSpec;
+use equalizer::runtime::{ArtifactRegistry, Engine};
+use equalizer::util::json;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn load_testvec() -> Option<(Vec<f32>, json::Json)> {
+    let path = format!("{}/testvectors.json", artifacts_dir());
+    let root = json::parse_file(path).ok()?;
+    let (x, _) = root.req("x").ok()?.as_tensor_f32().ok()?;
+    let outputs = root.req("outputs").ok()?.clone();
+    Some((x, outputs))
+}
+
+fn expected(outputs: &json::Json, name: &str) -> Vec<f32> {
+    outputs.req(name).unwrap().as_tensor_f32().unwrap().0
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn pjrt_cnn_matches_python() {
+    let Some((x, outputs)) = load_testvec() else { return };
+    let reg = ArtifactRegistry::discover(artifacts_dir()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let m = engine.load(reg.exact("cnn_imdd_w1024").unwrap()).unwrap();
+    let y = m.run_f32(&x).unwrap();
+    let want = expected(&outputs, "cnn_imdd_w1024");
+    assert!(max_abs_diff(&y, &want) < 1e-4, "PJRT CNN diverges from python export");
+}
+
+#[test]
+fn pjrt_quantized_cnn_matches_python() {
+    let Some((x, outputs)) = load_testvec() else { return };
+    let reg = ArtifactRegistry::discover(artifacts_dir()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let m = engine.load(reg.exact("cnn_imdd_quant_w1024").unwrap()).unwrap();
+    let y = m.run_f32(&x).unwrap();
+    let want = expected(&outputs, "cnn_imdd_quant_w1024");
+    assert!(max_abs_diff(&y, &want) < 1e-4, "PJRT quantized CNN diverges");
+}
+
+#[test]
+fn pjrt_fir_matches_python() {
+    let Some((x, outputs)) = load_testvec() else { return };
+    let reg = ArtifactRegistry::discover(artifacts_dir()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let m = engine.load(reg.exact("fir_imdd_w1024").unwrap()).unwrap();
+    let y = m.run_f32(&x).unwrap();
+    let want = expected(&outputs, "fir_imdd_w1024");
+    assert!(max_abs_diff(&y, &want) < 1e-4, "PJRT FIR diverges");
+}
+
+#[test]
+fn pjrt_volterra_matches_python() {
+    let Some((x, outputs)) = load_testvec() else { return };
+    let reg = ArtifactRegistry::discover(artifacts_dir()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let m = engine.load(reg.exact("volterra_imdd_w1024").unwrap()).unwrap();
+    let y = m.run_f32(&x).unwrap();
+    let want = expected(&outputs, "volterra_imdd_w1024");
+    assert!(max_abs_diff(&y, &want) < 2e-3, "PJRT Volterra diverges");
+}
+
+#[test]
+fn native_cnn_matches_python_and_pjrt() {
+    let Some((x, outputs)) = load_testvec() else { return };
+    let weights =
+        CnnWeights::load(format!("{}/weights_cnn_imdd.json", artifacts_dir())).unwrap();
+    let cnn = FixedPointCnn::new(weights, None);
+    let y = cnn.forward(&x);
+    let want = expected(&outputs, "cnn_imdd_w1024");
+    assert!(
+        max_abs_diff(&y, &want) < 1e-3,
+        "native datapath diverges from python export: {}",
+        max_abs_diff(&y, &want)
+    );
+}
+
+#[test]
+fn native_quantized_cnn_tracks_fake_quant_artifact() {
+    let Some((x, outputs)) = load_testvec() else { return };
+    let weights =
+        CnnWeights::load(format!("{}/weights_cnn_imdd.json", artifacts_dir())).unwrap();
+    let layers = weights.cfg.layers;
+    let cnn = FixedPointCnn::new(weights, Some(QuantSpec::paper_default(layers)));
+    let y = cnn.forward(&x);
+    let want = expected(&outputs, "cnn_imdd_quant_w1024");
+    // Same Q-format chain; residual differences only from f32 vs f64
+    // rounding order at format boundaries.
+    let diff = max_abs_diff(&y, &want);
+    assert!(diff < 0.05, "fixed-point datapath diverges: {diff}");
+}
+
+#[test]
+fn native_fir_matches_python() {
+    let Some((x, outputs)) = load_testvec() else { return };
+    let w = FirWeights::load(format!("{}/weights_fir_imdd.json", artifacts_dir())).unwrap();
+    let eq = FirEqualizer::from_weights(&w);
+    let y = eq.equalize(&x);
+    let want = expected(&outputs, "fir_imdd_w1024");
+    assert!(max_abs_diff(&y, &want) < 1e-4, "native FIR diverges");
+}
+
+#[test]
+fn all_width_buckets_compile_and_run() {
+    let Some((x, _)) = load_testvec() else { return };
+    let reg = ArtifactRegistry::discover(artifacts_dir()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    for width in reg.buckets("cnn", "imdd", false) {
+        let entry = reg.best_model("cnn", "imdd", width).unwrap();
+        let m = engine.load(entry).unwrap();
+        let mut input = x.clone();
+        input.resize(width, 0.0);
+        let y = m.run_f32(&input).unwrap();
+        assert_eq!(y.len(), width / 2, "bucket {width}: wrong output count");
+        assert!(y.iter().all(|v| v.is_finite()), "bucket {width}: non-finite output");
+    }
+}
+
+#[test]
+fn batched_artifact_matches_single() {
+    let Some((x, _)) = load_testvec() else { return };
+    let reg = ArtifactRegistry::discover(artifacts_dir()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let single = engine.load(reg.exact("cnn_imdd_w1024").unwrap()).unwrap();
+    let batched = engine.load(reg.exact("cnn_imdd_w1024_b8").unwrap()).unwrap();
+    let y1 = single.run_f32(&x).unwrap();
+    let mut xb = Vec::new();
+    for _ in 0..8 {
+        xb.extend_from_slice(&x);
+    }
+    let yb = batched.run_f32(&xb).unwrap();
+    assert_eq!(yb.len(), 8 * y1.len());
+    for lane in 0..8 {
+        let chunk = &yb[lane * y1.len()..(lane + 1) * y1.len()];
+        assert!(max_abs_diff(chunk, &y1) < 1e-5, "batch lane {lane} diverges");
+    }
+}

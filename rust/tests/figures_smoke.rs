@@ -1,0 +1,116 @@
+//! Smoke tests for the figure-regeneration harness: every model-backed
+//! figure must produce its rows without artifacts (fig2/fig4 need the
+//! DSE JSON, exercised when present), and the headline shape assertions
+//! of the platform comparison must hold.
+
+use equalizer::coordinator::seqlen::SeqLenOptimizer;
+use equalizer::coordinator::sim::simulate;
+use equalizer::coordinator::timing::TimingModel;
+use equalizer::dse::report::{DseFile, FigureReport};
+use equalizer::equalizer::weights::CnnTopologyCfg;
+use equalizer::hw::device::{XC7S25, XCVU13P};
+use equalizer::hw::dop::Dop;
+use equalizer::hw::platform;
+use equalizer::hw::power::{ht_power_w, lp_power_w, lp_throughput_baud};
+use equalizer::hw::resource::{ht_design, lp_design};
+
+fn cfg() -> CnnTopologyCfg {
+    CnnTopologyCfg::SELECTED
+}
+
+#[test]
+fn table1_shape() {
+    let u = ht_design(&cfg(), 64);
+    let pct = u.utilization(&XCVU13P);
+    // DSP and BRAM are the binding resources (paper: both ~78-79%).
+    assert!(pct.dsp_pct > 70.0 && pct.dsp_pct < 85.0);
+    assert!(pct.bram_pct > 70.0 && pct.bram_pct < 85.0);
+    assert!(pct.ff_pct < pct.lut_pct, "FFs are the slack resource");
+}
+
+#[test]
+fn fig8_shapes() {
+    let sweep = Dop::paper_sweep(&cfg());
+    assert_eq!(sweep.len(), 5);
+    let mut last_t = 0.0;
+    let mut last_p = 0.0;
+    for d in &sweep {
+        let t = lp_throughput_baud(&cfg(), *d, &XC7S25);
+        let p = lp_power_w(&cfg(), *d, &XC7S25);
+        assert!(t > last_t && p > last_p, "monotone in DOP");
+        last_t = t;
+        last_p = p;
+        let u = lp_design(&cfg(), *d, &XC7S25);
+        if d.total() < 225 {
+            assert!(u.fits(&XC7S25), "DOP {} must fit", d.total());
+        }
+    }
+    // Extremes bracket the paper's 0.1..0.2 W and Mbit/s-scale range.
+    assert!(lp_power_w(&cfg(), sweep[0], &XC7S25) < 0.12);
+    assert!(last_t > 10e6);
+}
+
+#[test]
+fn fig12_model_vs_sim_errors_bounded() {
+    for n_i in [2usize, 8, 64] {
+        let m = TimingModel::new(n_i, 8, 3, 9, 200e6);
+        for l_inst in [2048usize, 7320, 16384] {
+            let sim = simulate(&m, l_inst, (16 * n_i).max(64));
+            let t_err = (sim.t_net - m.t_net(l_inst)).abs() / m.t_net(l_inst);
+            assert!(t_err < 0.10, "throughput err {t_err:.2} at n_i={n_i} l={l_inst}");
+            let ratio = sim.lambda_sym_s / m.lambda_sym_s(l_inst);
+            assert!((0.2..6.0).contains(&ratio), "latency ratio {ratio:.2}");
+        }
+    }
+}
+
+#[test]
+fn fig13_15_headline_ordering() {
+    let m = TimingModel::new(64, 8, 3, 9, 200e6);
+    let opt = SeqLenOptimizer::new(m);
+    let ht_baud = m.t_net(opt.min_l_inst(80e9).unwrap()) / 2.0;
+
+    // HT FPGA beats every platform at every batch size (Fig. 13).
+    for p in platform::ALL {
+        for spb in [8u64, 400, 1_000_000, 1_000_000_000] {
+            assert!(ht_baud > p.throughput(spb), "{} beats FPGA at {spb}", p.name);
+        }
+    }
+    // ~3-4 orders of magnitude at small batch.
+    let ratio = ht_baud / platform::RTX_TENSORRT.throughput(400);
+    assert!(ratio > 1000.0, "small-batch gap only {ratio:.0}x");
+
+    // Latency (Fig. 14): FPGA below all platforms at low SPB.
+    let lam = m.lambda_sym_s(opt.min_l_inst(80e9).unwrap());
+    for p in platform::ALL {
+        assert!(lam < p.latency(512), "{}", p.name);
+    }
+
+    // Power (Fig. 15): LP FPGA lowest, GPU highest.
+    let lp = lp_power_w(&cfg(), *Dop::paper_sweep(&cfg()).last().unwrap(), &XC7S25);
+    let ht = ht_power_w(&cfg(), 64, &XCVU13P);
+    assert!(lp < 0.5);
+    assert!(ht < platform::RTX_PYTORCH.power(1_000_000_000));
+    assert!(ht > platform::AGX_TENSORRT.power(1_000_000) * 0.5);
+}
+
+#[test]
+fn fig2_fig4_reports_when_dse_present() {
+    for (file, dev, t_req) in [
+        ("artifacts/dse_imdd.json", &XCVU13P, 40e9),
+        ("artifacts/dse_proakis.json", &XC7S25, 100e6),
+    ] {
+        let path = format!("{}/{}", env!("CARGO_MANIFEST_DIR"), file);
+        let Ok(f) = DseFile::load(&path) else { continue };
+        let rep = FigureReport::build(&f, dev, t_req);
+        assert!(!rep.fronts.is_empty());
+        let text = rep.render();
+        assert!(text.contains("Pareto front"));
+        // Every front is monotone: more MACs -> lower BER.
+        for (_, front) in &rep.fronts {
+            for w in front.windows(2) {
+                assert!(w[1].ber <= w[0].ber);
+            }
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Regression guard: every HLO op shape the export path can emit must
+//! compile and run on the xla_extension 0.5.1 PJRT client.
+//!
+//! Two runtime incompatibilities have been caught here already:
+//! `constant({...})` elision (fixed in `aot.to_hlo_text`) and the
+//! `round-nearest-even` op (fixed in `kernels.ref.round_ties_even`).
+//! This test replays the op-bisection vectors (`artifacts/dbg_*.hlo.txt`
+//! + `dbg_cases.json`) when present.
+
+use equalizer::util::json;
+
+#[test]
+fn exported_op_samples_run_correctly() {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let Ok(tv) = json::parse_file(format!("{dir}/dbg_cases.json")) else { return };
+    let (x, _) = tv.req("x").unwrap().as_tensor_f32().unwrap();
+    let client = xla::PjRtClient::cpu().expect("PJRT client");
+    for (name, expect) in tv.req("cases").unwrap().as_obj().unwrap() {
+        let (want, _) = expect.as_tensor_f32().unwrap();
+        let path = format!("{dir}/dbg_{name}.hlo.txt");
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .unwrap_or_else(|e| panic!("{name}: parse failed: {e}"));
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).unwrap_or_else(|e| panic!("{name}: compile: {e}"));
+        let out = exe
+            .execute::<xla::Literal>(&[xla::Literal::vec1(&x)])
+            .unwrap_or_else(|e| panic!("{name}: execute: {e}"))[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let y = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+        let maxdiff =
+            y.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(maxdiff < 1e-5, "{name}: maxdiff {maxdiff}");
+    }
+}
