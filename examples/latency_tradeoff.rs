@@ -7,7 +7,7 @@
 //! cargo run --release --example latency_tradeoff
 //! ```
 
-use equalizer::coordinator::instance::{DecimatorInstance, EqualizerInstance, PjrtInstance};
+use equalizer::coordinator::instance::{DecimatorInstance, EqualizerInstance};
 use equalizer::coordinator::seqlen::SeqLenOptimizer;
 use equalizer::coordinator::server::EqualizerServer;
 use equalizer::coordinator::sim::simulate;
@@ -22,7 +22,10 @@ fn main() -> anyhow::Result<()> {
     // ---- the LUT the paper deploys on the FPGA (Fig. 11) -------------
     let model = TimingModel::new(64, cfg.vp, cfg.layers, cfg.kernel, 200e6);
     let opt = SeqLenOptimizer::new(model);
-    println!("== l_inst optimization, N_i=64 @ 200 MHz (T_max {:.1} Gsa/s) ==\n", model.t_max() / 1e9);
+    println!(
+        "== l_inst optimization, N_i=64 @ 200 MHz (T_max {:.1} Gsa/s) ==\n",
+        model.t_max() / 1e9
+    );
     println!("{:>12} {:>10} {:>12} {:>14}", "T_req Gsa/s", "l_inst", "lambda us", "T_net Gsa/s");
     let targets: Vec<f64> = [10.0, 20.0, 40.0, 60.0, 80.0, 90.0, 100.0]
         .iter()
@@ -41,7 +44,10 @@ fn main() -> anyhow::Result<()> {
 
     // ---- validate the model against the cycle-approximate sim --------
     println!("\n== timing model vs cycle simulation (Fig. 12 excerpt) ==");
-    println!("{:>6} {:>8} {:>12} {:>12} {:>12} {:>12}", "N_i", "l_inst", "lam_mod us", "lam_sim us", "Tnet_mod", "Tnet_sim");
+    println!(
+        "{:>6} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "N_i", "l_inst", "lam_mod us", "lam_sim us", "Tnet_mod", "Tnet_sim"
+    );
     for n_i in [2usize, 8, 64] {
         let m = TimingModel::new(n_i, cfg.vp, cfg.layers, cfg.kernel, 200e6);
         for l_inst in [2048usize, 7320] {
@@ -60,16 +66,18 @@ fn main() -> anyhow::Result<()> {
 
     // ---- runtime selection through the streaming server --------------
     println!("\n== per-request l_inst selection (streaming server) ==");
+    let artifacts =
+        args.str_or("artifacts", &ArtifactRegistry::default_dir().display().to_string());
     let instances: Vec<Box<dyn EqualizerInstance + Send>> =
-        match ArtifactRegistry::discover(&args.str_or("artifacts", "artifacts")) {
+        match ArtifactRegistry::discover(&artifacts) {
             Ok(reg) => {
                 let entry = reg.best_model("cnn", "imdd", 4096)?;
                 (0..2)
-                    .map(|_| Ok(Box::new(PjrtInstance::load(entry)?) as Box<_>))
+                    .map(|_| Ok(Box::new(AnyInstance::load(entry)?) as Box<_>))
                     .collect::<anyhow::Result<_>>()?
             }
             Err(_) => {
-                println!("(artifacts not built; using decimator instances)");
+                println!("(no artifacts found; using decimator instances)");
                 (0..2)
                     .map(|_| Box::new(DecimatorInstance { width: 4096, n_os: 2 }) as Box<_>)
                     .collect()

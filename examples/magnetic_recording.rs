@@ -6,7 +6,7 @@
 //! cargo run --release --example magnetic_recording -- --symbols 131072
 //! ```
 
-use equalizer::coordinator::instance::{EqualizerInstance, PjrtInstance};
+use equalizer::coordinator::instance::EqualizerInstance;
 use equalizer::equalizer::weights::CnnTopologyCfg;
 use equalizer::hw::device::XC7S25;
 use equalizer::hw::dop::Dop;
@@ -18,7 +18,8 @@ use equalizer::util::cli::Args;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let symbols = args.usize_or("symbols", 1 << 17)?;
-    let artifacts = args.str_or("artifacts", "artifacts");
+    let artifacts =
+        args.str_or("artifacts", &ArtifactRegistry::default_dir().display().to_string());
 
     println!("== CNN equalization, Proakis-B magnetic recording channel ==\n");
 
@@ -28,8 +29,7 @@ fn main() -> anyhow::Result<()> {
     let o_act = cfg.o_act_samples();
     let entry = registry.best_model("cnn", "proakis", 1024)?;
     let l_inst = entry.width() - 2 * o_act;
-    let workers: Vec<Box<dyn EqualizerInstance>> =
-        vec![Box::new(PjrtInstance::load(entry)?)];
+    let workers: Vec<Box<dyn EqualizerInstance>> = vec![Box::new(AnyInstance::load(entry)?)];
     let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os)?;
 
     let channel = ProakisBChannel::default();

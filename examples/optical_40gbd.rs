@@ -1,10 +1,11 @@
 //! END-TO-END DRIVER — the paper's high-throughput scenario, all layers
 //! composed (EXPERIMENTS.md §E2E):
 //!
-//!   L1/L2 (build time): Pallas conv kernel inside the JAX model, trained
-//!     on the simulated 40 GBd IM/DD channel and AOT-lowered to HLO;
-//!   L3 (this binary):   Rust coordinator streams a fresh channel
-//!     realization through OGM -> SSM tree -> N_i PJRT instances ->
+//!   build time (optional): the JAX model trained on the simulated
+//!     40 GBd IM/DD channel, folded weights exported to `artifacts/`
+//!     (and, for the PJRT backend, AOT-lowered to HLO);
+//!   this binary: the Rust coordinator streams a fresh channel
+//!     realization through OGM -> SSM tree -> N_i instances ->
 //!     MSM -> ORM, measures BER / software throughput / latency, and
 //!     evaluates the Sec. 6 timing model for the modeled FPGA deployment.
 //!
@@ -12,7 +13,6 @@
 //! cargo run --release --example optical_40gbd -- --instances 4 --symbols 262144
 //! ```
 
-use equalizer::coordinator::instance::{PjrtInstance, SharedPjrtInstance};
 use equalizer::coordinator::seqlen::SeqLenOptimizer;
 use equalizer::coordinator::sim::simulate;
 use equalizer::equalizer::weights::CnnTopologyCfg;
@@ -26,52 +26,37 @@ fn main() -> anyhow::Result<()> {
     let n_i = args.usize_or("instances", 4)?.next_power_of_two();
     let symbols = args.usize_or("symbols", 1 << 18)?;
     let bucket = args.usize_or("bucket", 4096)?;
-    let artifacts = args.str_or("artifacts", "artifacts");
+    let artifacts =
+        args.str_or("artifacts", &ArtifactRegistry::default_dir().display().to_string());
+    // batch (default) | threads | seq — see EqualizerPipeline docs.
+    let mode = args.str_or("mode", "batch");
+    anyhow::ensure!(
+        matches!(mode.as_str(), "batch" | "threads" | "seq"),
+        "unknown --mode {mode:?} (expected batch|threads|seq)"
+    );
 
     println!("== CNN equalization, 40 GBd IM/DD optical channel ==\n");
 
-    // ---- build the coordinator over PJRT instances -------------------
+    // ---- build the coordinator over backend-agnostic instances -------
     let registry = ArtifactRegistry::discover(&artifacts)?;
     let cfg = CnnTopologyCfg::SELECTED;
     let o_act = cfg.o_act_samples();
     let entry = registry.best_model("cnn", "imdd", bucket)?;
     let l_inst = entry.width() - 2 * o_act;
     println!(
-        "model {}  width {}  l_inst {}  o_act {}  N_i {}",
+        "model {}  width {}  l_inst {}  o_act {}  N_i {}  mode {}",
         entry.name,
         entry.width(),
         l_inst,
         o_act,
-        n_i
-    );
-    // Two deployment modes (EXPERIMENTS.md §Perf): the default shares
-    // one PJRT client across instances (fastest on CPU: XLA's internal
-    // pool supplies the parallelism); --own-clients gives each instance
-    // its own client + OS thread, mirroring one-engine-per-instance
-    // hardware at the cost of thread-pool contention.
-    let own_clients = args.flag("own-clients");
-    let t0 = Instant::now();
-    enum Pipe {
-        Shared(EqualizerPipeline<SharedPjrtInstance>, #[allow(dead_code)] Engine),
-        Own(EqualizerPipeline<PjrtInstance>),
-    }
-    let mut pipe = if own_clients {
-        let workers: Vec<PjrtInstance> =
-            (0..n_i).map(|_| PjrtInstance::load(entry)).collect::<anyhow::Result<_>>()?;
-        Pipe::Own(EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os)?)
-    } else {
-        let engine = Engine::cpu()?;
-        let workers: Vec<SharedPjrtInstance> = (0..n_i)
-            .map(|_| SharedPjrtInstance::load(&engine, entry))
-            .collect::<anyhow::Result<_>>()?;
-        Pipe::Shared(EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os)?, engine)
-    };
-    println!(
-        "compiled {} PJRT instances ({}) in {:.1} ms",
         n_i,
-        if own_clients { "one client each" } else { "shared client" },
-        t0.elapsed().as_secs_f64() * 1e3
+        mode
     );
+    let t0 = Instant::now();
+    let workers: Vec<AnyInstance> =
+        (0..n_i).map(|_| AnyInstance::load(entry)).collect::<anyhow::Result<_>>()?;
+    let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os)?;
+    println!("instantiated {} instances in {:.1} ms", n_i, t0.elapsed().as_secs_f64() * 1e3);
 
     // ---- stream the channel ------------------------------------------
     let channel = ImddChannel::default();
@@ -81,11 +66,16 @@ fn main() -> anyhow::Result<()> {
     );
     let data = channel.transmit(symbols, 42);
 
-    // Warm up XLA's lazy first-execute paths before timing.
-    match &mut pipe {
-        Pipe::Shared(p, _) => drop(p.equalize(&data.rx[..p.l_ol().min(data.rx.len())])?),
-        Pipe::Own(p) => drop(p.equalize_parallel(&data.rx[..p.l_ol().min(data.rx.len())])?),
-    }
+    let mut run = |chunk: &[f32]| -> anyhow::Result<Vec<f32>> {
+        match mode.as_str() {
+            "seq" => pipe.equalize(chunk),
+            "threads" => pipe.equalize_parallel(chunk),
+            _ => pipe.equalize_batch(chunk),
+        }
+    };
+
+    // Warm up scratch buffers / thread paths before timing.
+    drop(run(&data.rx[..(l_inst + 2 * o_act).min(data.rx.len())])?);
 
     let mut ber = BerCounter::new();
     let mut lat = LatencyStats::new();
@@ -96,10 +86,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     for chunk in data.rx.chunks(burst) {
         let t1 = Instant::now();
-        let soft = match &mut pipe {
-            Pipe::Shared(p, _) => p.equalize(chunk)?,
-            Pipe::Own(p) => p.equalize_parallel(chunk)?,
-        };
+        let soft = run(chunk)?;
         lat.record(t1.elapsed());
         ber.update(&soft, &data.symbols[produced..produced + soft.len()]);
         produced += soft.len();
@@ -107,11 +94,15 @@ fn main() -> anyhow::Result<()> {
     let elapsed = t0.elapsed().as_secs_f64();
     let tput = Throughput { symbols: produced as u64, seconds: elapsed };
 
-    println!("\n-- measured (software, CPU-PJRT) --");
+    println!("\n-- measured (software) --");
     println!("symbols      {}", produced);
     println!("BER          {:.3e} (+-{:.1e})", ber.ber(), ber.ci95());
     println!("throughput   {:.2} Msym/s", tput.baud() / 1e6);
-    println!("burst p50    {:.2} ms   p99 {:.2} ms", lat.percentile_us(50.0) / 1e3, lat.percentile_us(99.0) / 1e3);
+    println!(
+        "burst p50    {:.2} ms   p99 {:.2} ms",
+        lat.percentile_us(50.0) / 1e3,
+        lat.percentile_us(99.0) / 1e3
+    );
 
     // Baseline comparison (paper: CNN ~4x lower BER than linear EQ).
     let fir_ber = registry.train_ber.get("fir_imdd").copied().unwrap_or(f64::NAN);
@@ -127,9 +118,21 @@ fn main() -> anyhow::Result<()> {
     let l_req = opt.min_l_inst(80e9).expect("80 Gsa/s reachable at N_i=64");
     let sim = simulate(&model, l_req, 256);
     println!("\n-- modeled FPGA deployment (XCVU13P, 64 instances @200 MHz) --");
-    println!("T_max        {:.1} Gsamples/s  ({:.1} GBd)", model.t_max() / 1e9, model.t_max() / 2e9);
+    println!(
+        "T_max        {:.1} Gsamples/s  ({:.1} GBd)",
+        model.t_max() / 1e9,
+        model.t_max() / 2e9
+    );
     println!("l_inst(80G)  {} samples", l_req);
-    println!("T_net        {:.2} Gsamples/s (model)   {:.2} (cycle sim)", model.t_net(l_req) / 1e9, sim.t_net / 1e9);
-    println!("lambda_sym   {:.2} us (model)   {:.2} us (cycle sim)", model.lambda_sym_s(l_req) * 1e6, sim.lambda_sym_s * 1e6);
+    println!(
+        "T_net        {:.2} Gsamples/s (model)   {:.2} (cycle sim)",
+        model.t_net(l_req) / 1e9,
+        sim.t_net / 1e9
+    );
+    println!(
+        "lambda_sym   {:.2} us (model)   {:.2} us (cycle sim)",
+        model.lambda_sym_s(l_req) * 1e6,
+        sim.lambda_sym_s * 1e6
+    );
     Ok(())
 }

@@ -1,21 +1,26 @@
-//! Quickstart: load a compiled equalizer artifact and run it on a
-//! simulated burst — the smallest possible end-to-end round trip.
+//! Quickstart: load an equalizer artifact and run it on a simulated
+//! burst — the smallest possible end-to-end round trip.
+//!
+//! Runs on the committed native weights out of the box:
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! (With `make artifacts` + `--features pjrt` the same code runs the
+//! PJRT-compiled HLO instead.)
 
 use equalizer::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Discover the AOT artifacts (built once by `make artifacts`;
-    //    Python never runs after this point).
-    let registry = ArtifactRegistry::discover("artifacts")?;
+    // 1. Discover the artifacts: the HLO manifest when built, else the
+    //    committed native weight JSONs.
+    let registry = ArtifactRegistry::discover(ArtifactRegistry::default_dir())?;
     let engine = Engine::new(&registry)?;
-    println!("PJRT platform: {}", engine.platform_name());
+    println!("backend: {}", engine.platform_name());
 
     // 2. Pick the CNN equalizer for the optical channel at a 1024-sample
-    //    sub-sequence width and compile it.
+    //    sub-sequence width and instantiate it.
     let entry = registry.best_model("cnn", "imdd", 1024)?;
     let model = engine.load(entry)?;
     println!("loaded {} (width {})", entry.name, model.width());

@@ -1,18 +1,27 @@
-//! L3 hot-path benchmarks (§Perf): PJRT execution per width bucket, the
-//! full coordinator pipeline (sequential vs per-instance threads), the
-//! native fixed-point datapath, the stream-partitioning bookkeeping in
-//! isolation, and the channel simulators.  EXPERIMENTS.md §Perf records
-//! the before/after of each optimization against these numbers.
+//! L3 hot-path benchmarks (§Perf): the native fixed-point datapath
+//! (alloc-per-call vs scratch-reusing vs quantized), the full
+//! coordinator pipeline in all three execution modes (sequential /
+//! per-chunk threads / chunk-batched threads) across instance counts,
+//! the stream-partitioning bookkeeping in isolation, and the channel
+//! simulators.  With `--features pjrt` (and a real `xla` crate) the
+//! PJRT executable paths are measured too.
+//!
+//! The headline number: `pipeline_batch n_i=4` vs `pipeline_seq n_i=1`
+//! — the Sec. 5.3 parallelism claim on the native backend.
 
 use equalizer::channel::{imdd::ImddChannel, proakis::ProakisBChannel, Channel};
-use equalizer::coordinator::instance::{PjrtInstance, SharedPjrtInstance};
+use equalizer::coordinator::instance::AnyInstance;
 use equalizer::coordinator::pipeline::EqualizerPipeline;
 use equalizer::coordinator::{msm, ogm, ssm};
-use equalizer::equalizer::cnn::FixedPointCnn;
+use equalizer::equalizer::cnn::{CnnScratch, FixedPointCnn};
 use equalizer::equalizer::weights::{CnnTopologyCfg, CnnWeights};
 use equalizer::fixedpoint::QuantSpec;
-use equalizer::runtime::{ArtifactRegistry, Engine};
+use equalizer::runtime::ArtifactRegistry;
 use equalizer::util::bench::{header, Bencher};
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
 
 fn main() {
     let b = Bencher::default();
@@ -29,9 +38,7 @@ fn main() {
     // ---- stream partitioning bookkeeping alone ------------------------
     header("coordinator bookkeeping (no compute)");
     let data = imdd.transmit(1 << 17, 2);
-    b.bench("ogm_make_chunks l_inst=888 o=68", || {
-        ogm::make_chunks(&data.rx, 888, 68)
-    });
+    b.bench("ogm_make_chunks l_inst=888 o=68", || ogm::make_chunks(&data.rx, 888, 68));
     let chunks = ogm::make_chunks(&data.rx, 888, 68);
     b.bench("ssm_distribute n_i=64", || ssm::distribute(&chunks, 64));
     let queues = ssm::distribute(&chunks, 64);
@@ -40,70 +47,99 @@ fn main() {
     b.bench("msm_collect n_i=64", || msm::collect(&fake_outs, chunks.len()));
 
     // ---- native fixed-point datapath ----------------------------------
-    let weights_path = format!("{}/artifacts/weights_cnn_imdd.json", env!("CARGO_MANIFEST_DIR"));
-    if let Ok(weights) = CnnWeights::load(&weights_path) {
-        header("native datapath (1024-sample chunk)");
-        let x: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.1).sin()).collect();
-        let float_cnn = FixedPointCnn::new(weights.clone(), None);
-        let mm = b.bench("native_cnn_f32", || float_cnn.forward(&x));
-        println!("    -> {:.2} Msym/s", mm.throughput(512.0) / 1e6);
-        let q_cnn = FixedPointCnn::new(weights, Some(QuantSpec::paper_default(cfg.layers)));
-        b.bench("native_cnn_quantized", || q_cnn.forward(&x));
-    }
-
-    // ---- PJRT execution per bucket ------------------------------------
-    let art_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
-    let Ok(reg) = ArtifactRegistry::discover(&art_dir) else {
-        println!("\n(artifacts not built; PJRT benches skipped)");
+    let weights_path = format!("{}/weights_cnn_imdd.json", artifacts_dir());
+    let Ok(weights) = CnnWeights::load(&weights_path) else {
+        println!("\n(native weights missing; datapath + pipeline benches skipped)");
         return;
     };
-    let engine = Engine::cpu().expect("PJRT");
+    header("native datapath (1024-sample chunk)");
+    let x: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.1).sin()).collect();
+    let float_cnn = FixedPointCnn::new(weights.clone(), None);
+    let mm = b.bench("native_cnn_f32", || float_cnn.forward(&x));
+    println!("    -> {:.2} Msym/s", mm.throughput(512.0) / 1e6);
+    let mut scratch = CnnScratch::default();
+    let ms = b.bench("native_cnn_f32_scratch", || float_cnn.forward_with(&x, &mut scratch));
+    println!("    -> {:.2} Msym/s", ms.throughput(512.0) / 1e6);
+    let q_cnn = FixedPointCnn::new(weights.clone(), Some(QuantSpec::paper_default(cfg.layers)));
+    b.bench("native_cnn_quantized", || q_cnn.forward(&x));
+
+    // ---- full pipeline: sequential vs threads vs chunk-batched --------
+    let Ok(reg) = ArtifactRegistry::discover(artifacts_dir()) else {
+        println!("\n(artifact registry unavailable; pipeline benches skipped)");
+        return;
+    };
+    let entry = reg.best_model("cnn", "imdd", 4096).expect("4096 bucket").clone();
+    let o_act = cfg.o_act_samples();
+    let l_inst = entry.width() - 2 * o_act;
+    let data = imdd.transmit(1 << 17, 3);
+    let syms = (data.rx.len() / 2) as f64;
+
+    header("full pipeline, 128k symbols (bucket 4096, native backend)");
+    let mut seq_mean = None;
+    for n_i in [1usize, 2, 4, 8] {
+        let workers: Vec<AnyInstance> =
+            (0..n_i).map(|_| AnyInstance::load(&entry).unwrap()).collect();
+        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os).unwrap();
+        let m = b.bench(&format!("pipeline_seq n_i={n_i}"), || pipe.equalize(&data.rx).unwrap());
+        println!("    -> {:.2} Msym/s", m.throughput(syms) / 1e6);
+        if n_i == 1 {
+            seq_mean = Some(m.mean);
+        }
+    }
+    for n_i in [1usize, 2, 4, 8] {
+        let workers: Vec<AnyInstance> =
+            (0..n_i).map(|_| AnyInstance::load(&entry).unwrap()).collect();
+        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os).unwrap();
+        let m = b.bench(&format!("pipeline_threads n_i={n_i}"), || {
+            pipe.equalize_parallel(&data.rx).unwrap()
+        });
+        println!("    -> {:.2} Msym/s", m.throughput(syms) / 1e6);
+    }
+    let mut batch4_mean = None;
+    for n_i in [1usize, 2, 4, 8] {
+        let workers: Vec<AnyInstance> =
+            (0..n_i).map(|_| AnyInstance::load(&entry).unwrap()).collect();
+        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os).unwrap();
+        let m = b.bench(&format!("pipeline_batch n_i={n_i}"), || {
+            pipe.equalize_batch(&data.rx).unwrap()
+        });
+        println!("    -> {:.2} Msym/s", m.throughput(syms) / 1e6);
+        if n_i == 4 {
+            batch4_mean = Some(m.mean);
+        }
+    }
+    if let (Some(seq), Some(batch4)) = (seq_mean, batch4_mean) {
+        println!(
+            "\npipeline_batch n_i=4 is {:.2}x vs sequential n_i=1 \
+             (Sec. 5.3 parallelism on the native backend)",
+            seq.as_secs_f64() / batch4.as_secs_f64()
+        );
+    }
+
+    // ---- PJRT execution (needs real xla + HLO artifacts) --------------
+    #[cfg(feature = "pjrt")]
+    pjrt_benches(&b, &reg);
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(b: &Bencher, reg: &ArtifactRegistry) {
+    use equalizer::runtime::{ArtifactKind, Engine};
+    if !reg.models.iter().any(|m| m.kind == ArtifactKind::Hlo) {
+        println!("\n(no HLO artifacts; PJRT benches skipped)");
+        return;
+    }
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("\n(PJRT unavailable: {e})");
+            return;
+        }
+    };
     header("PJRT executable (per chunk)");
     for width in reg.buckets("cnn", "imdd", false) {
         let model = engine.load(reg.best_model("cnn", "imdd", width).unwrap()).unwrap();
         let x = vec![0.3f32; width];
         let m = b.bench(&format!("pjrt_cnn w={width}"), || model.run_f32(&x).unwrap());
         println!("    -> {:.2} Msym/s", m.throughput(width as f64 / 2.0) / 1e6);
-    }
-    if let Ok(e) = reg.exact("cnn_imdd_w1024_b8") {
-        let model = engine.load(e).unwrap();
-        let x = vec![0.3f32; 8 * 1024];
-        let m = b.bench("pjrt_cnn w=1024 batch=8", || model.run_f32(&x).unwrap());
-        println!("    -> {:.2} Msym/s", m.throughput(8.0 * 512.0) / 1e6);
-    }
-    if let Ok(e) = reg.exact("cnn_imdd_quant_w1024") {
-        let model = engine.load(e).unwrap();
-        let x = vec![0.3f32; 1024];
-        b.bench("pjrt_cnn_quant w=1024", || model.run_f32(&x).unwrap());
-    }
-
-    // ---- full pipeline: sequential vs threaded ------------------------
-    header("full pipeline, 128k symbols (bucket 4096)");
-    let data = imdd.transmit(1 << 17, 3);
-    let o_act = cfg.o_act_samples();
-    for n_i in [1usize, 2, 4, 8] {
-        let entry = reg.best_model("cnn", "imdd", 4096).unwrap();
-        let l_inst = entry.width() - 2 * o_act;
-        let workers: Vec<PjrtInstance> =
-            (0..n_i).map(|_| PjrtInstance::load(entry).unwrap()).collect();
-        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os).unwrap();
-        let m = b.bench(&format!("pipeline_threads(own client) n_i={n_i}"), || {
-            pipe.equalize_parallel(&data.rx).unwrap()
-        });
-        println!("    -> {:.2} Msym/s", m.throughput((data.rx.len() / 2) as f64) / 1e6);
-    }
-    // §Perf optimization: N instances sharing ONE PJRT client, run
-    // sequentially — the client's internal thread pool supplies the
-    // parallelism without client-per-instance oversubscription.
-    for n_i in [1usize, 4] {
-        let entry = reg.best_model("cnn", "imdd", 4096).unwrap();
-        let l_inst = entry.width() - 2 * o_act;
-        let workers: Vec<SharedPjrtInstance> =
-            (0..n_i).map(|_| SharedPjrtInstance::load(&engine, entry).unwrap()).collect();
-        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os).unwrap();
-        let m = b.bench(&format!("pipeline_shared_client n_i={n_i}"), || {
-            pipe.equalize(&data.rx).unwrap()
-        });
-        println!("    -> {:.2} Msym/s", m.throughput((data.rx.len() / 2) as f64) / 1e6);
     }
 }

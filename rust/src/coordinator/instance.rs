@@ -2,12 +2,12 @@
 //!
 //! The FPGA places `N_i` identical CNN engines; here an instance is
 //! anything that maps a sub-sequence of receiver samples to soft
-//! symbols: the PJRT-compiled HLO artifact (the serving hot path), the
-//! native bit-accurate datapath (quantization validation / simulator
-//! functional model), or a trivial decimator (plumbing tests).
+//! symbols: the native fixed-point datapath (the default production
+//! backend), the PJRT-compiled HLO artifact (`pjrt` feature), or a
+//! trivial decimator (plumbing tests).
 
-use crate::equalizer::cnn::FixedPointCnn;
-use crate::runtime::CompiledModel;
+use crate::equalizer::cnn::{CnnScratch, FixedPointCnn};
+use crate::runtime::artifact::{ArtifactEntry, ArtifactKind};
 use anyhow::Result;
 
 /// A worker that equalizes fixed-width sub-sequences.
@@ -17,12 +17,31 @@ use anyhow::Result;
 /// CPU PJRT client parallelizes each execute internally, and measured
 /// end-to-end throughput is higher with one shared client than with
 /// one client per instance (EXPERIMENTS.md §Perf).  The threaded
-/// pipeline path requires `Send` instances ([`PjrtInstance`]).
+/// pipeline paths require `Send` instances ([`NativeInstance`],
+/// [`AnyInstance`]).
 pub trait EqualizerInstance {
     /// Expected input width in samples.
     fn width(&self) -> usize;
+
     /// samples -> soft symbols (length = width / N_os).
     fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>>;
+
+    /// Process `n_chunks` contiguous equal-width chunks (`chunks.len()
+    /// == n_chunks * width()`), one output vector per chunk in order.
+    ///
+    /// The default loops over [`Self::process`]; implementations backed
+    /// by batched executables (e.g. the `b8` PJRT artifacts) can
+    /// dispatch the whole buffer at once.  The contiguous layout mirrors
+    /// the FPGA stream the SSM feeds one engine.
+    fn process_batch(&mut self, chunks: &[f32], n_chunks: usize) -> Result<Vec<Vec<f32>>> {
+        let w = self.width();
+        anyhow::ensure!(
+            chunks.len() == n_chunks * w,
+            "batch length {} != {n_chunks} chunks x width {w}",
+            chunks.len()
+        );
+        (0..n_chunks).map(|i| self.process(&chunks[i * w..(i + 1) * w])).collect()
+    }
 }
 
 impl<T: EqualizerInstance + ?Sized> EqualizerInstance for Box<T> {
@@ -33,87 +52,37 @@ impl<T: EqualizerInstance + ?Sized> EqualizerInstance for Box<T> {
     fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
         (**self).process(chunk)
     }
-}
 
-/// PJRT-compiled artifact instance (the real request path).
-///
-/// Owns its *own* PJRT client and executable: the `xla` crate's handles
-/// are `Rc`-based (not `Send`), so each instance is a self-contained
-/// island whose reference counts are only ever touched by the thread
-/// that currently owns the whole struct.  This mirrors the hardware —
-/// one engine per instance, no shared state.
-pub struct PjrtInstance {
-    /// Keep the client alive for the executable's lifetime.
-    _engine: crate::runtime::Engine,
-    model: CompiledModel,
-}
-
-impl PjrtInstance {
-    /// Create a dedicated client and compile the artifact into it.
-    pub fn load(entry: &crate::runtime::artifact::ArtifactEntry) -> Result<Self> {
-        let engine = crate::runtime::Engine::cpu()?;
-        let model = engine.load(entry)?;
-        Ok(Self { _engine: engine, model })
+    fn process_batch(&mut self, chunks: &[f32], n_chunks: usize) -> Result<Vec<Vec<f32>>> {
+        (**self).process_batch(chunks, n_chunks)
     }
 }
 
-// SAFETY: every Rc inside `_engine`/`model` was created by this
-// instance's own client and never escapes the struct; ownership moves
-// the island wholesale, so the non-atomic refcounts are only accessed
-// by one thread at a time.  PJRT CPU execution itself is thread-safe.
-unsafe impl Send for PjrtInstance {}
-
-impl EqualizerInstance for PjrtInstance {
-    fn width(&self) -> usize {
-        self.model.width()
-    }
-
-    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
-        self.model.run_f32(chunk)
-    }
-}
-
-/// Shared-client PJRT instance: compiled on a caller-owned [`Engine`]'s
-/// client, so N instances share one XLA thread pool (the fast CPU
-/// configuration; see §Perf).  Not `Send` — use with the sequential
-/// pipeline path.
-pub struct SharedPjrtInstance {
-    model: CompiledModel,
-}
-
-impl SharedPjrtInstance {
-    pub fn new(model: CompiledModel) -> Self {
-        Self { model }
-    }
-
-    /// Compile `entry` on the shared `engine`.
-    pub fn load(
-        engine: &crate::runtime::Engine,
-        entry: &crate::runtime::artifact::ArtifactEntry,
-    ) -> Result<Self> {
-        Ok(Self { model: engine.load(entry)? })
-    }
-}
-
-impl EqualizerInstance for SharedPjrtInstance {
-    fn width(&self) -> usize {
-        self.model.width()
-    }
-
-    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
-        self.model.run_f32(chunk)
-    }
-}
-
-/// Native fixed-point datapath instance.
+/// Native fixed-point datapath instance — `Send`, allocation-free in
+/// steady state (owns its conv scratch, like one FPGA engine owns its
+/// line buffers).
 pub struct NativeInstance {
     cnn: FixedPointCnn,
     width: usize,
+    scratch: CnnScratch,
 }
 
 impl NativeInstance {
     pub fn new(cnn: FixedPointCnn, width: usize) -> Self {
-        Self { cnn, width }
+        Self { cnn, width, scratch: CnnScratch::default() }
+    }
+
+    /// Load the folded weights behind a native CNN artifact entry
+    /// (quantization policy lives in [`ArtifactEntry::load_native_cnn`]).
+    pub fn from_entry(entry: &ArtifactEntry) -> Result<Self> {
+        let cnn = entry.load_native_cnn()?;
+        let width = entry.width();
+        let cfg = *cnn.cfg();
+        anyhow::ensure!(
+            cfg.out_symbols(width) * cfg.n_os == width,
+            "width {width} is off the decimation grid of {cfg:?}"
+        );
+        Ok(Self::new(cnn, width))
     }
 }
 
@@ -124,7 +93,143 @@ impl EqualizerInstance for NativeInstance {
 
     fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
         anyhow::ensure!(chunk.len() == self.width, "chunk width {} != {}", chunk.len(), self.width);
-        Ok(self.cnn.forward(chunk))
+        Ok(self.cnn.forward_with(chunk, &mut self.scratch))
+    }
+}
+
+/// Backend-agnostic worker: native datapath for weight artifacts, PJRT
+/// executable for HLO artifacts (with `--features pjrt`).  Always
+/// `Send`, so it drives both threaded pipeline paths.
+pub enum AnyInstance {
+    Native(NativeInstance),
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtInstance),
+}
+
+impl AnyInstance {
+    /// Instantiate the right worker flavor for `entry`.
+    pub fn load(entry: &ArtifactEntry) -> Result<Self> {
+        match entry.kind {
+            ArtifactKind::Hlo => Self::load_hlo(entry),
+            ArtifactKind::NativeCnn => Ok(Self::Native(NativeInstance::from_entry(entry)?)),
+            other => anyhow::bail!(
+                "artifact {} ({other:?}) cannot drive a pipeline instance (CNN required)",
+                entry.name
+            ),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn load_hlo(entry: &ArtifactEntry) -> Result<Self> {
+        Ok(Self::Pjrt(PjrtInstance::load(entry)?))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn load_hlo(entry: &ArtifactEntry) -> Result<Self> {
+        anyhow::bail!(
+            "artifact {} is an HLO module; rebuild with `--features pjrt` to use it",
+            entry.name
+        )
+    }
+}
+
+impl EqualizerInstance for AnyInstance {
+    fn width(&self) -> usize {
+        match self {
+            AnyInstance::Native(i) => i.width(),
+            #[cfg(feature = "pjrt")]
+            AnyInstance::Pjrt(i) => i.width(),
+        }
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            AnyInstance::Native(i) => i.process(chunk),
+            #[cfg(feature = "pjrt")]
+            AnyInstance::Pjrt(i) => i.process(chunk),
+        }
+    }
+
+    fn process_batch(&mut self, chunks: &[f32], n_chunks: usize) -> Result<Vec<Vec<f32>>> {
+        match self {
+            AnyInstance::Native(i) => i.process_batch(chunks, n_chunks),
+            #[cfg(feature = "pjrt")]
+            AnyInstance::Pjrt(i) => i.process_batch(chunks, n_chunks),
+        }
+    }
+}
+
+/// PJRT-compiled artifact instance (the HLO request path).
+///
+/// Owns its *own* PJRT client and executable: the `xla` crate's handles
+/// are `Rc`-based (not `Send`), so each instance is a self-contained
+/// island whose reference counts are only ever touched by the thread
+/// that currently owns the whole struct.  This mirrors the hardware —
+/// one engine per instance, no shared state.
+#[cfg(feature = "pjrt")]
+pub struct PjrtInstance {
+    /// Keep the client alive for the executable's lifetime.
+    _engine: crate::runtime::Engine,
+    model: crate::runtime::CompiledModel,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtInstance {
+    /// Create a dedicated client and compile the artifact into it.
+    pub fn load(entry: &ArtifactEntry) -> Result<Self> {
+        let engine = crate::runtime::Engine::cpu()?;
+        let model = engine.load(entry)?;
+        Ok(Self { _engine: engine, model })
+    }
+}
+
+// SAFETY: every Rc inside `_engine`/`model` was created by this
+// instance's own client and never escapes the struct; ownership moves
+// the island wholesale, so the non-atomic refcounts are only accessed
+// by one thread at a time.  PJRT CPU execution itself is thread-safe.
+#[cfg(feature = "pjrt")]
+unsafe impl Send for PjrtInstance {}
+
+#[cfg(feature = "pjrt")]
+impl EqualizerInstance for PjrtInstance {
+    fn width(&self) -> usize {
+        self.model.width()
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+        self.model.run_f32(chunk)
+    }
+}
+
+/// Shared-client PJRT instance: compiled on a caller-owned
+/// [`crate::runtime::Engine`]'s client, so N instances share one XLA
+/// thread pool (the fast CPU configuration; see §Perf).  Not `Send` —
+/// use with the sequential pipeline path.
+#[cfg(feature = "pjrt")]
+pub struct SharedPjrtInstance {
+    model: crate::runtime::CompiledModel,
+}
+
+#[cfg(feature = "pjrt")]
+impl SharedPjrtInstance {
+    pub fn new(model: crate::runtime::CompiledModel) -> Self {
+        Self { model }
+    }
+
+    /// Compile `entry` on the shared `engine`.
+    pub fn load(engine: &crate::runtime::Engine, entry: &ArtifactEntry) -> Result<Self> {
+        Ok(Self { model: engine.load(entry)? })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl EqualizerInstance for SharedPjrtInstance {
+    fn width(&self) -> usize {
+        self.model.width()
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+        self.model.run_f32(chunk)
     }
 }
 
@@ -154,5 +259,37 @@ mod tests {
         assert_eq!(d.width(), 8);
         let y = d.process(&[0.0, 9.0, 1.0, 9.0, 2.0, 9.0, 3.0, 9.0]).unwrap();
         assert_eq!(y, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn default_process_batch_splits_chunks() {
+        let mut d = DecimatorInstance { width: 4, n_os: 2 };
+        let out = d.process_batch(&[0.0, 9.0, 1.0, 9.0, 2.0, 9.0, 3.0, 9.0], 2).unwrap();
+        assert_eq!(out, vec![vec![0.0, 1.0], vec![2.0, 3.0]]);
+        assert!(d.process_batch(&[1.0; 7], 2).is_err(), "ragged batch rejected");
+    }
+
+    #[test]
+    fn native_instance_rejects_wrong_width() {
+        use crate::equalizer::cnn::delta_cnn;
+        use crate::equalizer::weights::CnnTopologyCfg;
+        let cnn = FixedPointCnn::new(delta_cnn(CnnTopologyCfg::SELECTED), None);
+        let mut inst = NativeInstance::new(cnn, 256);
+        assert!(inst.process(&vec![0.0; 255]).is_err());
+        assert_eq!(inst.process(&vec![0.0; 256]).unwrap().len(), 128);
+    }
+
+    #[test]
+    fn native_instance_batch_matches_sequential() {
+        use crate::equalizer::cnn::delta_cnn;
+        use crate::equalizer::weights::CnnTopologyCfg;
+        let cnn = FixedPointCnn::new(delta_cnn(CnnTopologyCfg::SELECTED), None);
+        let mut a = NativeInstance::new(cnn.clone(), 256);
+        let mut b = NativeInstance::new(cnn, 256);
+        let chunks: Vec<f32> = (0..768).map(|i| (i as f32 * 0.37).sin()).collect();
+        let batched = a.process_batch(&chunks, 3).unwrap();
+        for (i, out) in batched.iter().enumerate() {
+            assert_eq!(out, &b.process(&chunks[i * 256..(i + 1) * 256]).unwrap());
+        }
     }
 }

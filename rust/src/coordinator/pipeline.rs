@@ -2,11 +2,22 @@
 //! OGM -> SSM tree -> N_i instances -> MSM tree -> ORM.
 //!
 //! Functionally faithful to the FPGA dataflow (Sec. 5.3): identical
-//! chunking, routing, overlap bookkeeping and ordering.  Supports
-//! sequential execution (deterministic, for tests/validation) and a
-//! threaded mode with one OS thread per instance (the serving
-//! configuration — each instance owns its compiled executable, mirroring
-//! one hardware engine).
+//! chunking, routing, overlap bookkeeping and ordering.  Three
+//! execution modes over the same bookkeeping:
+//!
+//! * [`EqualizerPipeline::equalize`] — sequential (deterministic
+//!   single-threaded reference, also the fast path for shared-client
+//!   PJRT instances);
+//! * [`EqualizerPipeline::equalize_parallel`] — one OS thread per
+//!   instance, per-chunk dispatch;
+//! * [`EqualizerPipeline::equalize_batch`] — one OS thread per
+//!   instance, each worker receiving its whole chunk queue as one
+//!   contiguous batch ([`EqualizerInstance::process_batch`]), mirroring
+//!   the continuous stream an FPGA engine consumes.  This is the
+//!   serving configuration for the native backend.
+//!
+//! All three produce bit-identical outputs for the same instances —
+//! asserted by the tests here and in `tests/native_e2e.rs`.
 
 use super::instance::EqualizerInstance;
 use super::{msm, ogm, orm, ssm};
@@ -33,10 +44,11 @@ pub fn plan_bucket(
 /// A configured pipeline over `N_i` worker instances.
 ///
 /// Generic over the instance type: `Box<dyn EqualizerInstance>` (the
-/// default) for heterogeneous/shared-client workers (sequential
-/// execution), or any `Send` instance type (e.g.
-/// [`super::instance::PjrtInstance`]) to unlock
-/// [`EqualizerPipeline::equalize_parallel`].
+/// default) for heterogeneous workers (sequential execution), or any
+/// `Send` instance type (e.g. [`super::instance::NativeInstance`],
+/// [`super::instance::AnyInstance`]) to unlock the threaded
+/// [`EqualizerPipeline::equalize_parallel`] /
+/// [`EqualizerPipeline::equalize_batch`] paths.
 pub struct EqualizerPipeline<I: EqualizerInstance = Box<dyn EqualizerInstance>> {
     instances: Vec<I>,
     l_inst: usize,
@@ -46,14 +58,11 @@ pub struct EqualizerPipeline<I: EqualizerInstance = Box<dyn EqualizerInstance>> 
 
 impl<I: EqualizerInstance> EqualizerPipeline<I> {
     /// `instances` must all accept `l_inst + 2*o_act`-sample chunks.
-    pub fn new(
-        instances: Vec<I>,
-        l_inst: usize,
-        o_act: usize,
-        n_os: usize,
-    ) -> Result<Self> {
+    pub fn new(instances: Vec<I>, l_inst: usize, o_act: usize, n_os: usize) -> Result<Self> {
         anyhow::ensure!(!instances.is_empty(), "need at least one instance");
         anyhow::ensure!(instances.len().is_power_of_two(), "N_i must be a power of two");
+        anyhow::ensure!(n_os > 0, "N_os must be positive");
+        anyhow::ensure!(l_inst > 0, "l_inst must be positive");
         anyhow::ensure!(l_inst % n_os == 0, "l_inst must be divisible by N_os");
         anyhow::ensure!(o_act % n_os == 0, "o_act must be divisible by N_os");
         let l_ol = l_inst + 2 * o_act;
@@ -83,6 +92,17 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
         self.l_inst + 2 * self.o_act
     }
 
+    /// Reassemble per-instance chunk outputs into the soft-symbol stream.
+    fn merge(
+        &self,
+        per_instance: &[Vec<Vec<f32>>],
+        chunks: &[ogm::Chunk],
+    ) -> Vec<f32> {
+        let ordered = msm::collect(per_instance, chunks.len());
+        let valid: Vec<usize> = chunks.iter().map(|c| c.valid / self.n_os).collect();
+        orm::merge_outputs(&ordered, self.o_act / self.n_os, &valid)
+    }
+
     /// Equalize a sample stream into soft symbols (sequential).
     pub fn equalize(&mut self, x: &[f32]) -> Result<Vec<f32>> {
         let chunks = ogm::make_chunks(x, self.l_inst, self.o_act);
@@ -97,26 +117,17 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
             per_instance.push(outs);
         }
 
-        let ordered = msm::collect(&per_instance, chunks.len());
-        let valid: Vec<usize> = chunks.iter().map(|c| c.valid / self.n_os).collect();
-        Ok(orm::merge_outputs(&ordered, self.o_act / self.n_os, &valid))
+        Ok(self.merge(&per_instance, &chunks))
     }
 
-    /// Equalize a sample stream, one thread per instance.
-    ///
-    /// Requires `Send` instances (one PJRT client per worker).  NOTE:
-    /// on the CPU substrate the shared-client sequential path is
-    /// usually faster — the XLA client already parallelizes each
-    /// execute internally, so extra clients only contend
-    /// (EXPERIMENTS.md §Perf keeps both measurements).
+    /// Equalize a sample stream, one thread per instance, dispatching
+    /// chunk by chunk.
     pub fn equalize_parallel(&mut self, x: &[f32]) -> Result<Vec<f32>>
     where
         I: Send,
     {
         let chunks = ogm::make_chunks(x, self.l_inst, self.o_act);
         let queues = ssm::distribute(&chunks, self.instances.len());
-        let n_os = self.n_os;
-        let o_act = self.o_act;
 
         let mut per_instance: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.instances.len()];
         std::thread::scope(|scope| -> Result<()> {
@@ -132,14 +143,54 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
                 }));
             }
             for (i, h) in handles.into_iter().enumerate() {
-                per_instance[i] = h.join().map_err(|_| anyhow::anyhow!("instance thread panicked"))??;
+                per_instance[i] =
+                    h.join().map_err(|_| anyhow::anyhow!("instance thread panicked"))??;
             }
             Ok(())
         })?;
 
-        let ordered = msm::collect(&per_instance, chunks.len());
-        let valid: Vec<usize> = chunks.iter().map(|c| c.valid / n_os).collect();
-        Ok(orm::merge_outputs(&ordered, o_act / n_os, &valid))
+        Ok(self.merge(&per_instance, &chunks))
+    }
+
+    /// Equalize a sample stream in chunk-batched mode: one thread per
+    /// instance, each worker gathering its SSM queue into one
+    /// contiguous buffer and processing it with a single
+    /// [`EqualizerInstance::process_batch`] call.
+    ///
+    /// Identical output to [`Self::equalize`]; this is the high-
+    /// throughput configuration for `Send` instances (the gather cost
+    /// is one memcpy per chunk, repaid by allocation-free batched
+    /// execution inside each worker — §Perf in
+    /// `benches/pipeline_hotpath.rs`).
+    pub fn equalize_batch(&mut self, x: &[f32]) -> Result<Vec<f32>>
+    where
+        I: Send,
+    {
+        let chunks = ogm::make_chunks(x, self.l_inst, self.o_act);
+        let queues = ssm::distribute(&chunks, self.instances.len());
+        let l_ol = self.l_ol();
+
+        let mut per_instance: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.instances.len()];
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for (inst, queue) in self.instances.iter_mut().zip(&queues) {
+                let chunks = &chunks;
+                handles.push(scope.spawn(move || -> Result<Vec<Vec<f32>>> {
+                    let mut batch = Vec::with_capacity(queue.len() * l_ol);
+                    for &ci in queue {
+                        batch.extend_from_slice(&chunks[ci].data);
+                    }
+                    inst.process_batch(&batch, queue.len())
+                }));
+            }
+            for (i, h) in handles.into_iter().enumerate() {
+                per_instance[i] =
+                    h.join().map_err(|_| anyhow::anyhow!("instance thread panicked"))??;
+            }
+            Ok(())
+        })?;
+
+        Ok(self.merge(&per_instance, &chunks))
     }
 }
 
@@ -170,11 +221,14 @@ mod tests {
     }
 
     #[test]
-    fn parallel_matches_sequential() {
+    fn parallel_and_batch_match_sequential() {
         let x: Vec<f32> = (0..8192).map(|i| (i as f32 * 0.31).cos()).collect();
         let mut p1 = decimator_pipeline(8, 512, 64);
         let mut p2 = decimator_pipeline(8, 512, 64);
-        assert_eq!(p1.equalize(&x).unwrap(), p2.equalize_parallel(&x).unwrap());
+        let mut p3 = decimator_pipeline(8, 512, 64);
+        let seq = p1.equalize(&x).unwrap();
+        assert_eq!(seq, p2.equalize_parallel(&x).unwrap());
+        assert_eq!(seq, p3.equalize_batch(&x).unwrap());
     }
 
     #[test]
@@ -185,6 +239,9 @@ mod tests {
         let y = p.equalize(&x).unwrap();
         assert_eq!(y.len(), 500);
         assert_eq!(y[499], 998.0);
+        // The batched path handles ragged queues + partial tails too.
+        let mut pb = decimator_pipeline(4, 256, 16);
+        assert_eq!(pb.equalize_batch(&x).unwrap(), y);
     }
 
     #[test]
@@ -197,35 +254,77 @@ mod tests {
     }
 
     #[test]
+    fn plan_bucket_zero_overlap() {
+        // o_act = 0: the whole bucket becomes payload.
+        assert_eq!(plan_bucket(100, 0, &[64, 128]), Some((128, 128)));
+        assert_eq!(plan_bucket(128, 0, &[64, 128]), Some((128, 128)));
+        assert_eq!(plan_bucket(129, 0, &[64, 128]), None);
+    }
+
+    #[test]
+    fn plan_bucket_rejects_bucket_swallowed_by_overlap() {
+        // A bucket of exactly 2*o_act would leave l_inst = 0 — invalid
+        // even when the caller asks for a zero payload.
+        assert_eq!(plan_bucket(0, 32, &[64]), None);
+        // The next bucket up still works.
+        assert_eq!(plan_bucket(0, 32, &[64, 128]), Some((128, 64)));
+    }
+
+    #[test]
+    fn plan_bucket_non_monotone_bucket_list() {
+        // Bucket lists need not be sorted — the minimum fit wins.
+        let buckets = [4096usize, 256, 1024, 512];
+        assert_eq!(plan_bucket(100, 50, &buckets), Some((256, 156)));
+        assert_eq!(plan_bucket(400, 60, &buckets), Some((1024, 904)));
+    }
+
+    #[test]
+    fn plan_bucket_no_fit_returns_none() {
+        assert_eq!(plan_bucket(9000, 0, &[256, 512, 1024, 2048, 4096, 8192]), None);
+        assert_eq!(plan_bucket(1, 1, &[]), None);
+    }
+
+    #[test]
     fn width_mismatch_rejected() {
         let instances = vec![DecimatorInstance { width: 100, n_os: 2 }];
         assert!(EqualizerPipeline::new(instances, 256, 32, 2).is_err());
     }
 
     #[test]
+    fn constructor_invariants() {
+        let mk = |w| vec![DecimatorInstance { width: w, n_os: 2 }];
+        // Empty instance set.
+        assert!(EqualizerPipeline::<DecimatorInstance>::new(vec![], 256, 32, 2).is_err());
+        // Zero N_os (division grid undefined).
+        assert!(EqualizerPipeline::new(mk(320), 256, 32, 0).is_err());
+        // Zero l_inst (no payload per chunk).
+        assert!(EqualizerPipeline::new(mk(64), 0, 32, 2).is_err());
+        // l_inst / o_act off the N_os grid.
+        assert!(EqualizerPipeline::new(mk(321), 255, 33, 2).is_err());
+        assert!(EqualizerPipeline::new(mk(322), 256, 33, 2).is_err());
+        // A valid configuration for reference.
+        assert!(EqualizerPipeline::new(mk(320), 256, 32, 2).is_ok());
+    }
+
+    #[test]
     fn property_roundtrip_random_geometry() {
         // For random l_inst/o_act/stream length/instance count, the
         // OGM -> SSM -> decimate -> MSM -> ORM composition must equal
-        // direct decimation of the stream (lossless partitioning).
+        // direct decimation of the stream (lossless partitioning),
+        // through every execution mode.
         crate::util::prop::check(40, |g| {
             let n_i = 1usize << g.usize_in(0, 4);
             let l_inst = g.usize_in(8, 200) * 2;
             let o_act = g.usize_in(0, 40) * 2;
             let len = g.usize_in(1, 40) * l_inst + g.usize_in(0, 20) * 2;
             let x = g.vec_f32(len, -3.0, 3.0);
-            let mut p = decimator_pipeline_n(n_i, l_inst, o_act);
+            let mut p = decimator_pipeline(n_i, l_inst, o_act);
             let y = p.equalize(&x).unwrap();
             let expect: Vec<f32> = x.iter().step_by(2).copied().collect();
             assert_eq!(y, expect, "n_i={n_i} l_inst={l_inst} o_act={o_act} len={len}");
+            let mut pb = decimator_pipeline(n_i, l_inst, o_act);
+            assert_eq!(pb.equalize_batch(&x).unwrap(), expect, "batch mode");
         });
-    }
-
-    fn decimator_pipeline_n(
-        n_i: usize,
-        l_inst: usize,
-        o_act: usize,
-    ) -> EqualizerPipeline<DecimatorInstance> {
-        decimator_pipeline(n_i, l_inst, o_act)
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! Bit-accurate CNN datapath — the functional model of the FPGA engine.
+//! Bit-accurate CNN datapath — the functional model of the FPGA engine,
+//! and (since the native backend landed) the production execution path
+//! when no PJRT runtime is available.
 //!
 //! Executes the folded inference graph (conv -> ReLU per layer, Fig. 3)
 //! with optional per-tensor fixed-point quantization ([`QuantSpec`],
@@ -8,93 +10,151 @@
 //! (quantize input -> quantize weights -> convolve in full precision ->
 //! quantize activation), which is also what the FPGA MAC array with
 //! post-accumulator rounding computes.
+//!
+//! §Perf: the hot loop is a blocked im2col + GEMM-style kernel.  Each
+//! layer's weights are packed once at construction into `(C_out,
+//! C_in*K)` planes (pre-quantized when a [`QuantSpec`] is given); at
+//! run time, tiles of output positions gather their receptive fields
+//! into a contiguous patch matrix (interior positions via
+//! `copy_from_slice`, only the `pad`-wide borders pay per-tap bounds
+//! checks) and every output is one contiguous dot product with fused
+//! ReLU + re-quantization.  [`CnnScratch`] makes the whole pass
+//! allocation-free across chunks — the shape batched serving needs.
 
-use super::weights::{CnnTopologyCfg, CnnWeights, ConvLayer};
-use crate::fixedpoint::QuantSpec;
+use super::weights::{CnnTopologyCfg, CnnWeights};
 #[cfg(test)]
-use crate::fixedpoint::QFormat;
+use super::weights::ConvLayer;
+use crate::fixedpoint::{QuantSpec, Quantizer};
 
-/// CNN inference engine over folded weights.
+/// Output-position tile width of the blocked kernel.  45 weights per
+/// patch row (C_in*K <= 5*9) x 64 rows ~ 12 KiB — comfortably L1-resident
+/// alongside the weight planes.
+const TILE: usize = 64;
+
+/// One GEMM-ready layer: BN-folded, optionally pre-quantized weight
+/// planes in `(c_out, c_in*k)` row-major layout, plus the fused
+/// post-conv ops (ReLU on every layer but the last, activation
+/// re-quantization when running fixed point).
+#[derive(Debug, Clone)]
+struct PackedLayer {
+    w: Vec<f32>,
+    b: Vec<f32>,
+    c_in: usize,
+    c_out: usize,
+    k: usize,
+    stride: usize,
+    relu: bool,
+    act: Option<Quantizer>,
+}
+
+/// Reusable buffers for [`FixedPointCnn::forward_with`].  One scratch
+/// per worker instance keeps the steady-state hot path allocation-free.
+#[derive(Debug, Default, Clone)]
+pub struct CnnScratch {
+    feat: Vec<f32>,
+    next: Vec<f32>,
+    patches: Vec<f32>,
+}
+
+/// CNN inference engine over folded weights.  Only the packed planes
+/// are retained — the raw [`CnnWeights`] are consumed at construction.
 #[derive(Debug, Clone)]
 pub struct FixedPointCnn {
-    weights: CnnWeights,
+    cfg: CnnTopologyCfg,
     /// `None` -> float datapath (matches `cnn_imdd_w*.hlo.txt`).
     quant: Option<QuantSpec>,
-    /// Pre-quantized per-layer weights (cache when `quant` is set).
-    qlayers: Vec<ConvLayer>,
+    /// Packed per-layer kernels (weights pre-quantized when `quant` is set).
+    packed: Vec<PackedLayer>,
+    /// Fused input quantization (`a_in` format).
+    input_q: Option<Quantizer>,
 }
 
 impl FixedPointCnn {
     pub fn new(weights: CnnWeights, quant: Option<QuantSpec>) -> Self {
-        let qlayers = match &quant {
-            None => weights.layers.clone(),
-            Some(spec) => weights
-                .layers
-                .iter()
-                .enumerate()
-                .map(|(l, layer)| {
-                    let fmt = spec.get(&format!("w{l}"));
-                    let q = |v: f32| fmt.map_or(v, |f| f.quantize_f32(v));
-                    ConvLayer {
-                        w: layer.w.iter().map(|&v| q(v)).collect(),
-                        b: layer.b.iter().map(|&v| q(v)).collect(),
-                        ..layer.clone()
-                    }
-                })
-                .collect(),
-        };
-        Self { weights, quant, qlayers }
+        let cfg = weights.cfg;
+        let strides = cfg.strides();
+        let packed = weights
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, layer)| {
+                let wfmt = quant.as_ref().and_then(|s| s.get(&format!("w{l}")));
+                let q = |v: f32| wfmt.map_or(v, |f| f.quantize_f32(v));
+                PackedLayer {
+                    w: layer.w.iter().map(|&v| q(v)).collect(),
+                    b: layer.b.iter().map(|&v| q(v)).collect(),
+                    c_in: layer.c_in,
+                    c_out: layer.c_out,
+                    k: layer.k,
+                    stride: strides[l],
+                    relu: l != cfg.layers - 1,
+                    act: quant
+                        .as_ref()
+                        .and_then(|s| s.get(&format!("a{l}")))
+                        .map(|f| f.quantizer()),
+                }
+            })
+            .collect();
+        let input_q = quant.as_ref().and_then(|s| s.get("a_in")).map(|f| f.quantizer());
+        Self { cfg, quant, packed, input_q }
     }
 
     pub fn cfg(&self) -> &CnnTopologyCfg {
-        &self.weights.cfg
+        &self.cfg
+    }
+
+    pub fn quant(&self) -> Option<&QuantSpec> {
+        self.quant.as_ref()
     }
 
     /// Equalize one sub-sequence of receiver samples -> soft symbols.
     ///
     /// `x.len()` samples in, `cfg.out_symbols(x.len())` soft symbols out
-    /// (channel-interleaved flatten, Fig. 1).
+    /// (channel-interleaved flatten, Fig. 1).  Allocates fresh scratch;
+    /// workers on the hot path should use [`Self::forward_with`].
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
-        let cfg = self.weights.cfg;
-        let pad = cfg.padding();
-        let strides = cfg.strides();
+        let mut scratch = CnnScratch::default();
+        self.forward_with(x, &mut scratch)
+    }
 
-        let mut feat: Vec<Vec<f32>> = vec![x.to_vec()];
-        self.maybe_quant_act(&mut feat, "a_in");
+    /// [`Self::forward`] with caller-owned scratch buffers (allocation-free
+    /// in steady state).
+    pub fn forward_with(&self, x: &[f32], s: &mut CnnScratch) -> Vec<f32> {
+        let pad = self.cfg.padding();
 
-        for (l, layer) in self.qlayers.iter().enumerate() {
-            let last = l == cfg.layers - 1;
-            feat = conv1d(&feat, layer, strides[l], pad, !last);
-            self.maybe_quant_act(&mut feat, &format!("a{l}"));
+        s.feat.clear();
+        s.feat.extend_from_slice(x);
+        if let Some(q) = self.input_q {
+            for v in s.feat.iter_mut() {
+                *v = q.apply(*v);
+            }
+        }
+
+        let mut width = x.len();
+        let mut channels = 1usize;
+        for layer in &self.packed {
+            debug_assert_eq!(channels, layer.c_in);
+            let w_out = conv_out_width(width, pad, layer.k, layer.stride);
+            conv1d_packed(&s.feat, width, layer, pad, w_out, &mut s.next, &mut s.patches);
+            std::mem::swap(&mut s.feat, &mut s.next);
+            width = w_out;
+            channels = layer.c_out;
         }
 
         // (V_p, W_last) -> interleave channels (column-major flatten).
-        let w_last = feat[0].len();
-        let mut out = Vec::with_capacity(w_last * feat.len());
-        for j in 0..w_last {
-            for ch in &feat {
-                out.push(ch[j]);
+        let mut out = Vec::with_capacity(width * channels);
+        for j in 0..width {
+            for c in 0..channels {
+                out.push(s.feat[c * width + j]);
             }
         }
         out
     }
 
-    fn maybe_quant_act(&self, feat: &mut [Vec<f32>], key: &str) {
-        if let Some(spec) = &self.quant {
-            if let Some(fmt) = spec.get(key) {
-                for ch in feat.iter_mut() {
-                    for v in ch.iter_mut() {
-                        *v = fmt.quantize_f32(*v);
-                    }
-                }
-            }
-        }
-    }
-
     /// Total MAC operations for an input of `in_samples` samples
     /// (used by the cycle-approximate simulator and the DSE framework).
     pub fn macs(&self, in_samples: usize) -> u64 {
-        let cfg = self.weights.cfg;
+        let cfg = self.cfg;
         let pad = cfg.padding();
         let mut w = in_samples;
         let mut total = 0u64;
@@ -108,71 +168,86 @@ impl FixedPointCnn {
     }
 }
 
-/// Strided, padded 1-D convolution over channel-major feature maps,
-/// fused ReLU; plain f32 accumulation (the FPGA accumulates in wide
-/// fixed point — bit-exact to f32 for the word lengths involved).
-///
-/// §Perf: the interior positions (receptive field fully inside the
-/// signal) take a branch-free slice-dot fast path; only the `pad`-wide
-/// borders pay the per-tap bounds checks.  ~2x on the 1024-chunk bench
-/// (EXPERIMENTS.md §Perf).
-fn conv1d(x: &[Vec<f32>], layer: &ConvLayer, stride: usize, pad: usize, relu: bool) -> Vec<Vec<f32>> {
-    let width = x[0].len();
+fn conv_out_width(width: usize, pad: usize, k: usize, stride: usize) -> usize {
+    assert!(
+        width + 2 * pad >= k,
+        "input width {width} too small for kernel {k} with padding {pad}"
+    );
+    (width + 2 * pad - k) / stride + 1
+}
+
+/// Blocked im2col + GEMM 1-D convolution over a channel-major feature
+/// map (`x` holds `layer.c_in` rows of `width` samples), with fused
+/// ReLU and fixed-point re-quantization.  Zero-padded borders are
+/// materialized as literal zero taps in the patch rows, so interior and
+/// border positions share one branch-free dot-product loop — adding
+/// `0.0 * w` leaves every IEEE accumulation unchanged.
+fn conv1d_packed(
+    x: &[f32],
+    width: usize,
+    layer: &PackedLayer,
+    pad: usize,
+    w_out: usize,
+    out: &mut Vec<f32>,
+    patches: &mut Vec<f32>,
+) {
     let k = layer.k;
-    let w_out = (width + 2 * pad - k) / stride + 1;
-    let mut out = vec![vec![0.0f32; w_out]; layer.c_out];
+    let kk = layer.c_in * k;
+    out.clear();
+    out.resize(layer.c_out * w_out, 0.0);
+    patches.clear();
+    patches.resize(TILE * kk, 0.0);
 
-    // First/last output index whose window lies fully inside [0, width).
-    let j_lo = pad.div_ceil(stride);
-    let j_hi_excl = if width + pad >= k {
-        (((width + pad - k) / stride) + 1).min(w_out)
-    } else {
-        0
-    };
+    let mut j0 = 0usize;
+    while j0 < w_out {
+        let jn = (j0 + TILE).min(w_out);
 
-    for (o, out_ch) in out.iter_mut().enumerate() {
-        // Border positions: bounds-checked taps.
-        let border = |j: usize, slot: &mut f32| {
-            let start = (j * stride) as isize - pad as isize;
-            let mut acc = layer.b[o];
-            for (i, in_ch) in x.iter().enumerate() {
-                let wbase = (o * layer.c_in + i) * k;
-                for kk in 0..k {
-                    let idx = start + kk as isize;
-                    if idx >= 0 && (idx as usize) < width {
-                        acc += in_ch[idx as usize] * layer.w[wbase + kk];
+        // im2col: gather the receptive fields of positions j0..jn.
+        for (t, j) in (j0..jn).enumerate() {
+            let start = (j * layer.stride) as isize - pad as isize;
+            let row = &mut patches[t * kk..t * kk + kk];
+            if start >= 0 && start as usize + k <= width {
+                let s0 = start as usize;
+                for (c, dst) in row.chunks_exact_mut(k).enumerate() {
+                    dst.copy_from_slice(&x[c * width + s0..c * width + s0 + k]);
+                }
+            } else {
+                for (c, dst) in row.chunks_exact_mut(k).enumerate() {
+                    for (kk_i, slot) in dst.iter_mut().enumerate() {
+                        let idx = start + kk_i as isize;
+                        *slot = if idx >= 0 && (idx as usize) < width {
+                            x[c * width + idx as usize]
+                        } else {
+                            0.0
+                        };
                     }
                 }
             }
-            *slot = if relu && acc < 0.0 { 0.0 } else { acc };
-        };
-        for j in 0..j_lo.min(w_out) {
-            let mut v = 0.0;
-            border(j, &mut v);
-            out_ch[j] = v;
         }
-        for j in j_hi_excl.max(j_lo)..w_out {
-            let mut v = 0.0;
-            border(j, &mut v);
-            out_ch[j] = v;
-        }
-        // Interior: straight slice dot products (auto-vectorizable).
-        for (j, slot) in out_ch[j_lo..j_hi_excl].iter_mut().enumerate() {
-            let start = (j_lo + j) * stride - pad;
-            let mut acc = layer.b[o];
-            for (i, in_ch) in x.iter().enumerate() {
-                let w = &layer.w[(o * layer.c_in + i) * k..(o * layer.c_in + i) * k + k];
-                let xs = &in_ch[start..start + k];
-                let mut dot = 0.0f32;
-                for (a, b) in xs.iter().zip(w) {
-                    dot += a * b;
+
+        // GEMM: out[o][j] = b[o] + W[o] . patch[j], fused ReLU, then the
+        // activation re-quantization over the cache-resident tile.
+        for o in 0..layer.c_out {
+            let wrow = &layer.w[o * kk..(o + 1) * kk];
+            let bias = layer.b[o];
+            let dst = &mut out[o * w_out + j0..o * w_out + jn];
+            for (t, slot) in dst.iter_mut().enumerate() {
+                let prow = &patches[t * kk..(t + 1) * kk];
+                let mut acc = bias;
+                for (xv, wv) in prow.iter().zip(wrow) {
+                    acc += xv * wv;
                 }
-                acc += dot;
+                *slot = if layer.relu && acc < 0.0 { 0.0 } else { acc };
             }
-            *slot = if relu && acc < 0.0 { 0.0 } else { acc };
+            if let Some(q) = layer.act {
+                for v in dst.iter_mut() {
+                    *v = q.apply(*v);
+                }
+            }
         }
+
+        j0 = jn;
     }
-    out
 }
 
 /// Build an identity-topology CNN for tests: center-tap delta kernels.
@@ -196,6 +271,7 @@ pub(crate) fn delta_cnn(cfg: CnnTopologyCfg) -> CnnWeights {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixedpoint::QFormat;
 
     #[test]
     fn output_length_matches_topology() {
@@ -233,6 +309,25 @@ mod tests {
         let x = vec![-1.0f32; 512];
         let y = cnn.forward(&x);
         assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn forward_with_scratch_is_identical() {
+        // The allocation-free path must be bit-identical to forward(),
+        // including when the scratch is reused across different chunks.
+        let cfg = CnnTopologyCfg::SELECTED;
+        let mut weights = delta_cnn(cfg);
+        for l in &mut weights.layers {
+            for (i, v) in l.w.iter_mut().enumerate() {
+                *v += (i as f32 * 0.013).sin() * 0.1;
+            }
+        }
+        let cnn = FixedPointCnn::new(weights, None);
+        let mut scratch = CnnScratch::default();
+        for (len, seed) in [(1024usize, 0.31f32), (256, 0.77), (4096, 0.11)] {
+            let x: Vec<f32> = (0..len).map(|i| (i as f32 * seed).sin()).collect();
+            assert_eq!(cnn.forward(&x), cnn.forward_with(&x, &mut scratch), "len {len}");
+        }
     }
 
     #[test]
@@ -292,5 +387,19 @@ mod tests {
         let per_sym = macs as f64 / 4096.0;
         assert!((per_sym - 112.5).abs() < 2.0, "MAC/sym {per_sym}");
         assert!((cfg.mac_per_symbol() - 56.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_tile_aligned_widths() {
+        // Widths that leave partial tiles (w_out % TILE != 0) and widths
+        // smaller than one tile must both be handled by the blocking.
+        let cfg = CnnTopologyCfg::SELECTED;
+        let cnn = FixedPointCnn::new(delta_cnn(cfg), None);
+        for w in [16usize, 48, 272, 1040] {
+            let x: Vec<f32> = (0..w).map(|i| (i as f32 * 0.21).cos()).collect();
+            let y = cnn.forward(&x);
+            assert_eq!(y.len(), cfg.out_symbols(w), "width {w}");
+            assert!(y.iter().all(|v| v.is_finite()));
+        }
     }
 }

@@ -168,6 +168,63 @@ impl FirWeights {
     }
 }
 
+/// Volterra kernel artifact (`weights_volterra_<channel>.json`).
+#[derive(Debug, Clone)]
+pub struct VolterraWeights {
+    pub m1: usize,
+    pub m2: usize,
+    pub m3: usize,
+    pub n_os: usize,
+    pub w0: f32,
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub w3: Vec<f32>,
+    pub ber: f64,
+}
+
+impl VolterraWeights {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let root = json::parse_file(path.as_ref())?;
+        let cfg = root.req("cfg")?;
+        let params = root.req("params")?;
+        let dim = |key: &str| -> Result<usize> {
+            cfg.req(key)?.as_usize().ok_or_else(|| anyhow!("bad {key}"))
+        };
+        let (m1, m2, m3, n_os) = (dim("m1")?, dim("m2")?, dim("m3")?, dim("n_os")?);
+        let w0 = params.req("w0")?.as_f64().ok_or_else(|| anyhow!("w0"))? as f32;
+        let (w1, d1) = params.req("w1")?.as_tensor_f32()?;
+        let (w2, d2) = params.req("w2")?.as_tensor_f32()?;
+        let (w3, d3) = params.req("w3")?.as_tensor_f32()?;
+        anyhow::ensure!(d1 == vec![m1], "w1 dims {d1:?} != [{m1}]");
+        anyhow::ensure!(d2 == vec![m2, m2], "w2 dims {d2:?} != [{m2}, {m2}]");
+        anyhow::ensure!(d3 == vec![m3, m3, m3], "w3 dims {d3:?} != [{m3}; 3]");
+        Ok(Self {
+            m1,
+            m2,
+            m3,
+            n_os,
+            w0,
+            w1,
+            w2,
+            w3,
+            ber: root.req("ber")?.as_f64().ok_or_else(|| anyhow!("ber"))?,
+        })
+    }
+
+    /// Build the runnable equalizer from the loaded kernels.
+    pub fn to_equalizer(&self) -> crate::equalizer::volterra::VolterraEqualizer {
+        crate::equalizer::volterra::VolterraEqualizer {
+            w0: self.w0,
+            w1: self.w1.clone(),
+            w2: self.w2.clone(),
+            m2: self.m2,
+            w3: self.w3.clone(),
+            m3: self.m3,
+            n_os: self.n_os,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

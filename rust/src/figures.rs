@@ -238,7 +238,7 @@ fn table1() -> Result<()> {
 /// the FIR hits its nonlinearity floor while the CNN keeps improving).
 fn snr_sweep(artifacts: &str) -> Result<()> {
     let reg = ArtifactRegistry::discover(artifacts)?;
-    let engine = Engine::cpu()?;
+    let engine = Engine::new(&reg)?;
     let models = ["cnn_imdd_w1024", "fir_imdd_w1024", "volterra_imdd_w1024"];
     let compiled: Vec<_> = models
         .iter()

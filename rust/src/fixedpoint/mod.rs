@@ -61,6 +61,35 @@ impl QFormat {
     pub fn to_code(&self, x: f64) -> i64 {
         (self.quantize(x) * (2.0_f64).powi(self.frac_bits as i32)).round() as i64
     }
+
+    /// Precompute the constants of [`QFormat::quantize`] for hot loops.
+    pub fn quantizer(&self) -> Quantizer {
+        Quantizer {
+            scale: (2.0_f64).powi(self.frac_bits as i32),
+            inv_scale: (2.0_f64).powi(-(self.frac_bits as i32)),
+            lo: self.min_value(),
+            hi: self.max_value(),
+        }
+    }
+}
+
+/// Precomputed quantization constants — value-identical to
+/// [`QFormat::quantize_f32`] (both scale factors are exact powers of
+/// two, so multiplying by the reciprocal equals dividing), but without
+/// recomputing `powi` per element.  Used by the fused conv kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct Quantizer {
+    scale: f64,
+    inv_scale: f64,
+    lo: f64,
+    hi: f64,
+}
+
+impl Quantizer {
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        (round_ties_even(x as f64 * self.scale) * self.inv_scale).clamp(self.lo, self.hi) as f32
+    }
 }
 
 /// Round half to even, like IEEE-754 / `jnp.round` (Rust's `f64::round`
@@ -182,5 +211,105 @@ mod tests {
         let spec = QuantSpec::paper_default(3);
         assert_eq!(spec.avg_weight_bits(), 13.0);
         assert_eq!(spec.avg_act_bits(), 10.0);
+    }
+
+    #[test]
+    fn quantizer_matches_qformat_exactly() {
+        // The hot-loop Quantizer must be value-identical to quantize_f32.
+        crate::util::prop::check(30, |g| {
+            let q = QFormat::new(g.usize_in(1, 8) as u8, g.usize_in(0, 14) as u8);
+            let fast = q.quantizer();
+            for _ in 0..64 {
+                let x = g.f32_in(-300.0, 300.0);
+                assert_eq!(fast.apply(x), q.quantize_f32(x), "{q:?} at {x}");
+            }
+        });
+    }
+
+    #[test]
+    fn golden_matches_python_fake_quant() {
+        // Reference values computed with python/compile/kernels/quant.py
+        // semantics (round-to-nearest-even on x*2^n, clip to the signed
+        // Q(m.n) range) in float64 — identical IEEE arithmetic on both
+        // sides, so exact equality is required.
+        let cases_q4_6: [(f32, f32); 9] = [
+            (0.337, 0.34375),
+            (-0.337, -0.34375),
+            (0.0078125, 0.0),    // tie 0.5 -> even 0
+            (0.0234375, 0.03125), // tie 1.5 -> even 2
+            (-7.3, -7.296875),
+            (123.456, 7.984375), // saturate to max
+            (-123.456, -8.0),    // saturate to min
+            (1e-9, 0.0),
+            (0.4999999, 0.5),
+        ];
+        let q = QFormat::new(4, 6);
+        for (x, want) in cases_q4_6 {
+            assert_eq!(q.quantize_f32(x), want, "Q4.6({x})");
+        }
+        let cases_q3_10: [(f32, f32); 5] = [
+            (0.337, 0.3369140625),
+            (0.0078125, 0.0078125),
+            (-7.3, -4.0),
+            (123.456, 3.9990234375),
+            (-123.456, -4.0),
+        ];
+        let q = QFormat::new(3, 10);
+        for (x, want) in cases_q3_10 {
+            assert_eq!(q.quantize_f32(x), want, "Q3.10({x})");
+        }
+    }
+
+    #[test]
+    fn property_round_to_nearest_within_range() {
+        // In-range values quantize to the nearest grid point (distance
+        // at most step/2), and the result is always on the grid.
+        crate::util::prop::check(40, |g| {
+            let q = QFormat::new(g.usize_in(1, 7) as u8, g.usize_in(0, 12) as u8);
+            let lim = q.max_value() as f32;
+            let x = g.f32_in(-lim, lim);
+            let y = q.quantize(x as f64);
+            assert!((y - x as f64).abs() <= q.step() / 2.0 + 1e-12, "{q:?} {x} -> {y}");
+            let code = y * (2.0_f64).powi(q.frac_bits as i32);
+            assert_eq!(code, code.round(), "off-grid: {q:?} {x} -> {y}");
+        });
+    }
+
+    #[test]
+    fn property_saturation_clamps_to_range() {
+        crate::util::prop::check(40, |g| {
+            let q = QFormat::new(g.usize_in(1, 7) as u8, g.usize_in(0, 12) as u8);
+            let x = g.f32_in(-1e6, 1e6);
+            let y = q.quantize(x as f64);
+            assert!(y >= q.min_value() && y <= q.max_value(), "{q:?} {x} -> {y}");
+            // Beyond-range inputs hit exactly the range ends.
+            assert_eq!(q.quantize(q.max_value() + 1.0), q.max_value());
+            assert_eq!(q.quantize(q.min_value() - 1.0), q.min_value());
+        });
+    }
+
+    #[test]
+    fn property_quantization_idempotent() {
+        crate::util::prop::check(40, |g| {
+            let q = QFormat::new(g.usize_in(1, 8) as u8, g.usize_in(0, 14) as u8);
+            let x = g.f32_in(-500.0, 500.0);
+            let once = q.quantize(x as f64);
+            assert_eq!(q.quantize(once), once, "{q:?} not idempotent at {x}");
+            let once32 = q.quantize_f32(x);
+            assert_eq!(q.quantize_f32(once32), once32);
+        });
+    }
+
+    #[test]
+    fn property_monotone() {
+        // Quantization is a monotone map — required for the BER-vs-grid
+        // arguments in Sec. 4 to make sense.
+        crate::util::prop::check(40, |g| {
+            let q = QFormat::new(g.usize_in(1, 6) as u8, g.usize_in(0, 10) as u8);
+            let a = g.f32_in(-20.0, 20.0);
+            let b = g.f32_in(-20.0, 20.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(q.quantize(lo as f64) <= q.quantize(hi as f64));
+        });
     }
 }

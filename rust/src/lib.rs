@@ -13,16 +13,23 @@
 //! bit-accurate fixed-point datapaths, platform performance models, and
 //! offline stand-ins for JSON/bench/property-test tooling).
 //!
-//! The CNN itself is compiled ahead of time: JAX/Pallas (build-time
-//! Python) lowers the trained network to HLO text in `artifacts/`, which
-//! [`runtime`] loads and executes through the PJRT C API (`xla` crate).
-//! Python never runs on the request path.
+//! Two execution backends share one API ([`runtime::Engine`] /
+//! [`coordinator::instance::AnyInstance`]):
+//!
+//! * **native** (default): the blocked im2col/GEMM fixed-point CNN
+//!   datapath runs the BN-folded weight JSONs committed under
+//!   `artifacts/` — fully self-contained, `cargo test` green out of the
+//!   box, no Python or XLA anywhere.
+//! * **pjrt** (`--features pjrt`): JAX/Pallas (build-time Python) lowers
+//!   the trained network to HLO text, which [`runtime`] compiles and
+//!   executes through the PJRT C API (`xla` crate).  Python never runs
+//!   on the request path.
 //!
 //! ```no_run
 //! use equalizer::prelude::*;
 //!
 //! let registry = ArtifactRegistry::discover("artifacts")?;
-//! let engine = Engine::new(&registry)?;
+//! let engine = Engine::new(&registry)?; // native or PJRT, auto-selected
 //! let exe = engine.load(registry.best_model("cnn", "imdd", 1024)?)?;
 //! let y = exe.run_f32(&vec![0.0_f32; 1024])?;
 //! # Ok::<(), anyhow::Error>(())
@@ -43,9 +50,9 @@ pub mod util;
 pub mod prelude {
     pub use crate::channel::{imdd::ImddChannel, proakis::ProakisBChannel, Channel};
     pub use crate::config::{CnnTopology, RunConfig};
-    pub use crate::coordinator::instance::{
-        EqualizerInstance, NativeInstance, PjrtInstance, SharedPjrtInstance,
-    };
+    pub use crate::coordinator::instance::{AnyInstance, EqualizerInstance, NativeInstance};
+    #[cfg(feature = "pjrt")]
+    pub use crate::coordinator::instance::{PjrtInstance, SharedPjrtInstance};
     pub use crate::coordinator::{
         pipeline::EqualizerPipeline, seqlen::SeqLenOptimizer, timing::TimingModel,
     };

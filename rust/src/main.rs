@@ -3,11 +3,14 @@
 //! Subcommands map to the paper's evaluation (DESIGN.md §5): `figures`
 //! regenerates each table/figure, `equalize` runs the full pipeline on
 //! a simulated channel, `timing`/`seqlen` expose the Sec. 6 framework.
+//! Every command runs on the native backend out of the box; with
+//! `--features pjrt` (and the real `xla` crate) the same commands drive
+//! the HLO artifacts instead.
 
 use anyhow::Result;
 use equalizer::channel::{imdd::ImddChannel, proakis::ProakisBChannel, Channel};
 use equalizer::config::RunConfig;
-use equalizer::coordinator::instance::{PjrtInstance, SharedPjrtInstance};
+use equalizer::coordinator::instance::AnyInstance;
 use equalizer::coordinator::pipeline::EqualizerPipeline;
 use equalizer::coordinator::seqlen::SeqLenOptimizer;
 use equalizer::coordinator::timing::TimingModel;
@@ -27,7 +30,7 @@ COMMANDS:
   info      [--artifacts DIR]                          artifact inventory
   equalize  [--artifacts DIR] [--channel imdd|proakis]
             [--instances N] [--symbols N] [--l-inst N]
-            [--quant] [--own-clients]                  end-to-end BER run
+            [--quant] [--mode batch|threads|seq]       end-to-end BER run
   timing    [--instances N] [--l-inst N] [--f-clk HZ]  Sec. 6.1 model
   seqlen    [--instances N] [--target SAMPLES/S]       Sec. 6.2 framework
   figures   <fig2|fig4|fig8a|fig8b|fig12|fig13|fig14|
@@ -36,6 +39,15 @@ COMMANDS:
             [--requests N] [--spb SYMBOLS]             streaming-server demo
   config    [--profile high-throughput|low-power]      print JSON config
 ";
+
+/// Resolve `--artifacts`: explicit flag, else the registry default
+/// (`./artifacts`, falling back to the committed crate-relative dir).
+fn artifacts_dir(args: &Args) -> String {
+    match args.get("artifacts") {
+        Some(dir) => dir.to_string(),
+        None => ArtifactRegistry::default_dir().display().to_string(),
+    }
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -51,7 +63,7 @@ fn main() -> Result<()> {
         "serve" => serve(&args),
         "figures" => {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
-            figures::run(which, &args.str_or("artifacts", "artifacts"))
+            figures::run(which, &artifacts_dir(&args))
         }
         "config" => {
             let cfg = match args.str_or("profile", "high-throughput").as_str() {
@@ -70,19 +82,20 @@ fn main() -> Result<()> {
 }
 
 fn info(args: &Args) -> Result<()> {
-    let reg = ArtifactRegistry::discover(args.str_or("artifacts", "artifacts"))?;
+    let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
     let engine = Engine::new(&reg)?;
-    println!("PJRT platform: {}", engine.platform_name());
+    println!("backend: {}", engine.platform_name());
     println!("artifacts dir: {}", reg.dir.display());
     for m in &reg.models {
         println!(
-            "  {:28} model={:9} channel={:8} width={:6} batch={} quant={}",
+            "  {:28} model={:9} channel={:8} width={:6} batch={} quant={} kind={:?}",
             m.name,
             m.model,
             m.channel,
             m.width(),
             m.batch,
-            m.quant
+            m.quant,
+            m.kind
         );
     }
     for (k, v) in &reg.train_ber {
@@ -92,13 +105,17 @@ fn info(args: &Args) -> Result<()> {
 }
 
 fn equalize(args: &Args) -> Result<()> {
-    let reg = ArtifactRegistry::discover(args.str_or("artifacts", "artifacts"))?;
-    let _ = Engine::new(&reg)?; // fail fast if PJRT unavailable
+    let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
     let channel = args.str_or("channel", "imdd");
     let instances = args.usize_or("instances", 4)?.next_power_of_two();
     let symbols = args.usize_or("symbols", 1 << 17)?;
     let desired_l_inst = args.usize_or("l-inst", 768)?;
     let quant = args.flag("quant");
+    let mode = args.str_or("mode", "batch");
+    anyhow::ensure!(
+        matches!(mode.as_str(), "batch" | "threads" | "seq"),
+        "unknown --mode {mode:?} (expected batch|threads|seq)"
+    );
 
     let cfg = CnnTopologyCfg::SELECTED;
     // Software overlap: receptive field rounded to the stream grid (the
@@ -107,39 +124,35 @@ fn equalize(args: &Args) -> Result<()> {
     let model_name = "cnn";
     let buckets = reg.buckets(model_name, &channel, quant);
     anyhow::ensure!(!buckets.is_empty(), "no {model_name}/{channel} quant={quant} artifacts");
-    let (bucket, l_inst) = equalizer::coordinator::pipeline::plan_bucket(desired_l_inst, o_act, &buckets)
-        .ok_or_else(|| anyhow::anyhow!("no bucket fits l_inst={desired_l_inst} o_act={o_act}"))?;
-    println!("bucket width {bucket}, l_inst {l_inst}, o_act {o_act}, instances {instances}");
+    let (bucket, l_inst) =
+        equalizer::coordinator::pipeline::plan_bucket(desired_l_inst, o_act, &buckets)
+            .ok_or_else(|| anyhow::anyhow!("no bucket fits l_inst={desired_l_inst} o_act={o_act}"))?;
+    println!("bucket width {bucket}, l_inst {l_inst}, o_act {o_act}, instances {instances}, mode {mode}");
 
     let entry = reg
         .models
         .iter()
         .find(|m| {
-            m.model == model_name && m.channel == channel && m.quant == quant
-                && m.batch == 1 && m.width() == bucket
+            m.model == model_name
+                && m.channel == channel
+                && m.quant == quant
+                && m.batch == 1
+                && m.width() == bucket
         })
         .ok_or_else(|| anyhow::anyhow!("artifact disappeared"))?;
     let data = match channel.as_str() {
         "imdd" => ImddChannel::default().transmit(symbols, 42),
         _ => ProakisBChannel::default().transmit(symbols, 42),
     };
-    // Shared-client sequential dispatch is the fast CPU configuration
-    // (EXPERIMENTS.md §Perf); --own-clients runs the
-    // one-client-per-instance threaded mode instead.
+
+    let workers: Vec<AnyInstance> =
+        (0..instances).map(|_| AnyInstance::load(entry)).collect::<Result<_>>()?;
+    let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os)?;
     let t0 = std::time::Instant::now();
-    let soft = if args.flag("own-clients") {
-        let workers: Vec<PjrtInstance> = (0..instances)
-            .map(|_| PjrtInstance::load(entry))
-            .collect::<Result<_>>()?;
-        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os)?;
-        pipe.equalize_parallel(&data.rx)?
-    } else {
-        let engine = Engine::cpu()?;
-        let workers: Vec<SharedPjrtInstance> = (0..instances)
-            .map(|_| SharedPjrtInstance::load(&engine, entry))
-            .collect::<Result<_>>()?;
-        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os)?;
-        pipe.equalize(&data.rx)?
+    let soft = match mode.as_str() {
+        "seq" => pipe.equalize(&data.rx)?,
+        "threads" => pipe.equalize_parallel(&data.rx)?,
+        _ => pipe.equalize_batch(&data.rx)?, // validated above
     };
     let dt = t0.elapsed();
     let mut ber = BerCounter::new();
@@ -159,11 +172,11 @@ fn equalize(args: &Args) -> Result<()> {
 /// wall-clock latency distribution.
 fn serve(args: &Args) -> Result<()> {
     use equalizer::channel::mt19937::Mt19937;
-    use equalizer::coordinator::server::EqualizerServer;
     use equalizer::coordinator::instance::EqualizerInstance;
+    use equalizer::coordinator::server::EqualizerServer;
     use equalizer::metrics::stats::LatencyStats;
 
-    let reg = ArtifactRegistry::discover(args.str_or("artifacts", "artifacts"))?;
+    let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
     let n_i = args.usize_or("instances", 2)?;
     let n_requests = args.usize_or("requests", 16)?;
     let spb = args.usize_or("spb", 8192)?;
@@ -171,7 +184,7 @@ fn serve(args: &Args) -> Result<()> {
     let cfg = CnnTopologyCfg::SELECTED;
     let entry = reg.best_model("cnn", "imdd", 4096)?;
     let instances: Vec<Box<dyn EqualizerInstance + Send>> = (0..n_i)
-        .map(|_| Ok(Box::new(PjrtInstance::load(entry)?) as Box<_>))
+        .map(|_| Ok(Box::new(AnyInstance::load(entry)?) as Box<_>))
         .collect::<Result<_>>()?;
     let o_act = cfg.o_act_samples();
     let model = TimingModel::new(64, cfg.vp, cfg.layers, cfg.kernel, 200e6);
@@ -186,11 +199,7 @@ fn serve(args: &Args) -> Result<()> {
     let mut ber = BerCounter::new();
     let mut rng = Mt19937::new(5);
     for r in 0..n_requests {
-        let t_req = if r % 3 == 0 {
-            None
-        } else {
-            Some(10e9 + rng.next_f64() * 85e9)
-        };
+        let t_req = if r % 3 == 0 { None } else { Some(10e9 + rng.next_f64() * 85e9) };
         let burst = data.rx[r * spb * 2..(r + 1) * spb * 2].to_vec();
         let resp = handle.call(burst, t_req)?;
         ber.update(&resp.soft_symbols, &data.symbols[r * spb..r * spb + resp.soft_symbols.len()]);

@@ -1,15 +1,46 @@
-//! Artifact registry: the Rust view of `artifacts/manifest.json`.
+//! Artifact registry: the Rust view of the build outputs under
+//! `artifacts/`.
 //!
-//! `python/compile/aot.py` exports every model variant at several
-//! input-width buckets; the registry resolves (model family, channel,
-//! required width) to the smallest bucket that fits — the runtime
-//! analogue of the paper's per-sequence model selection (Sec. 6.2).
+//! Two artifact flavors exist:
+//!
+//! * **HLO text modules** (`*.hlo.txt` + `manifest.json`), exported by
+//!   `python/compile/aot.py` and executed through PJRT (`--features
+//!   pjrt`).  The manifest lists every model variant at several
+//!   input-width buckets; the registry resolves (model family, channel,
+//!   required width) to the smallest bucket that fits — the runtime
+//!   analogue of the paper's per-sequence model selection (Sec. 6.2).
+//! * **Native weight JSONs** (`weights_*.json`), the BN-folded
+//!   parameters the bit-accurate Rust datapaths execute directly.  When
+//!   no manifest is present the registry synthesizes the same width
+//!   buckets over these, so the whole coordinator runs end to end with
+//!   zero Python/XLA dependencies.
 
+use crate::equalizer::cnn::FixedPointCnn;
+use crate::equalizer::weights::{CnnWeights, FirWeights, VolterraWeights};
+use crate::fixedpoint::QuantSpec;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
 
-/// One exported model from the manifest.
+/// How an artifact entry is executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// AOT-lowered HLO text — needs the PJRT runtime (`pjrt` feature).
+    Hlo,
+    /// `weights_cnn_*.json` run by the native fixed-point CNN datapath.
+    NativeCnn,
+    /// `weights_fir_*.json` run by the native FIR equalizer.
+    NativeFir,
+    /// `weights_volterra_*.json` run by the native Volterra equalizer.
+    NativeVolterra,
+}
+
+/// Input-width buckets synthesized for native weight artifacts —
+/// mirrors `python/compile/aot.py::WIDTH_BUCKETS` (all divisible by
+/// `2 * V_p = 16`, so every bucket sits on the decimation grid).
+pub const NATIVE_WIDTH_BUCKETS: [usize; 6] = [256, 512, 1024, 2048, 4096, 8192];
+
+/// One exported model from the manifest (or a synthesized native entry).
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
     pub name: String,
@@ -22,12 +53,29 @@ pub struct ArtifactEntry {
     pub batch: usize,
     /// Absolute path, filled at load time.
     pub abs_path: PathBuf,
+    /// Execution flavor.
+    pub kind: ArtifactKind,
 }
 
 impl ArtifactEntry {
     /// Input width in samples (last axis of the input shape).
     pub fn width(&self) -> usize {
         *self.input_shape.last().expect("non-scalar input")
+    }
+
+    /// Instantiate the native CNN datapath behind a [`ArtifactKind::NativeCnn`]
+    /// entry.  This is the single home of the quantization policy:
+    /// quantized entries run the paper's Sec. 4 formats
+    /// ([`QuantSpec::paper_default`]) on the same folded weights.
+    pub fn load_native_cnn(&self) -> Result<FixedPointCnn> {
+        anyhow::ensure!(
+            self.kind == ArtifactKind::NativeCnn,
+            "artifact {} is not a native CNN weight set",
+            self.name
+        );
+        let weights = CnnWeights::load(&self.abs_path)?;
+        let quant = self.quant.then(|| QuantSpec::paper_default(weights.cfg.layers));
+        Ok(FixedPointCnn::new(weights, quant))
     }
 
     fn from_json(v: &Json, dir: &Path) -> Result<Self> {
@@ -49,7 +97,37 @@ impl ArtifactEntry {
             out_symbols: v.get("out_symbols").and_then(Json::as_usize).unwrap_or(0),
             quant: v.get("quant").and_then(Json::as_bool).unwrap_or(false),
             batch: v.get("batch").and_then(Json::as_usize).unwrap_or(1),
+            kind: ArtifactKind::Hlo,
         })
+    }
+
+    fn native(
+        name: String,
+        file: &str,
+        width: usize,
+        model: &str,
+        channel: &str,
+        out_symbols: usize,
+        abs_path: PathBuf,
+        kind: ArtifactKind,
+    ) -> Self {
+        Self {
+            name,
+            path: file.to_string(),
+            input_shape: vec![width],
+            model: model.to_string(),
+            channel: channel.to_string(),
+            out_symbols,
+            quant: false,
+            batch: 1,
+            abs_path,
+            kind,
+        }
+    }
+
+    fn native_quant(mut self) -> Self {
+        self.quant = true;
+        self
     }
 }
 
@@ -62,8 +140,37 @@ pub struct ArtifactRegistry {
 }
 
 impl ArtifactRegistry {
-    /// Read `<dir>/manifest.json`.
+    /// Default artifact directory: `./artifacts` when present, else the
+    /// crate-relative `artifacts/` where the committed weights live.
+    pub fn default_dir() -> PathBuf {
+        let local = Path::new("artifacts");
+        if local.exists() {
+            local.to_path_buf()
+        } else {
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        }
+    }
+
+    /// Discover the artifacts this build can actually execute: the HLO
+    /// manifest when present *and* the `pjrt` backend is compiled in,
+    /// otherwise the native weight JSONs (falling back to the manifest
+    /// only when no native weights exist, so the error names the real
+    /// gap).
     pub fn discover(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let has_manifest = dir.join("manifest.json").exists();
+        if has_manifest && cfg!(feature = "pjrt") {
+            return Self::discover_manifest(dir);
+        }
+        match Self::discover_native(&dir) {
+            Ok(reg) => Ok(reg),
+            Err(e) if has_manifest => Self::discover_manifest(dir).map_err(|_| e),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Parse the PJRT manifest written by `python/compile/aot.py`.
+    pub fn discover_manifest(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
         anyhow::ensure!(
@@ -93,6 +200,98 @@ impl ArtifactRegistry {
         Ok(Self { dir, models, train_ber })
     }
 
+    /// Build a registry from the native weight JSONs alone: every
+    /// `weights_cnn_<channel>.json` contributes one entry per
+    /// [`NATIVE_WIDTH_BUCKETS`] width (the network is fully
+    /// convolutional, so one weight set serves every bucket), plus the
+    /// FIR/Volterra baselines at their exported widths.
+    pub fn discover_native(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut models = Vec::new();
+        let mut train_ber = std::collections::BTreeMap::new();
+
+        for channel in ["imdd", "proakis"] {
+            let file = format!("weights_cnn_{channel}.json");
+            let path = dir.join(&file);
+            if path.exists() {
+                let w = CnnWeights::load(&path)?;
+                train_ber.insert(format!("cnn_{channel}"), w.train_ber);
+                for &width in &NATIVE_WIDTH_BUCKETS {
+                    models.push(ArtifactEntry::native(
+                        format!("cnn_{channel}_w{width}"),
+                        &file,
+                        width,
+                        "cnn",
+                        channel,
+                        w.cfg.out_symbols(width),
+                        path.clone(),
+                        ArtifactKind::NativeCnn,
+                    ));
+                }
+                // Quantized variant (paper Sec. 4 formats applied by the
+                // native datapath), at the width the AOT path exports.
+                let width = 1024usize;
+                models.push(
+                    ArtifactEntry::native(
+                        format!("cnn_{channel}_quant_w{width}"),
+                        &file,
+                        width,
+                        "cnn",
+                        channel,
+                        w.cfg.out_symbols(width),
+                        path.clone(),
+                        ArtifactKind::NativeCnn,
+                    )
+                    .native_quant(),
+                );
+            }
+
+            let file = format!("weights_fir_{channel}.json");
+            let path = dir.join(&file);
+            if path.exists() {
+                let w = FirWeights::load(&path)?;
+                train_ber.insert(format!("fir_{channel}"), w.ber);
+                for width in [1024usize, 4096] {
+                    models.push(ArtifactEntry::native(
+                        format!("fir_{channel}_w{width}"),
+                        &file,
+                        width,
+                        "fir",
+                        channel,
+                        width / w.cfg.n_os,
+                        path.clone(),
+                        ArtifactKind::NativeFir,
+                    ));
+                }
+            }
+
+            let file = format!("weights_volterra_{channel}.json");
+            let path = dir.join(&file);
+            if path.exists() {
+                let w = VolterraWeights::load(&path)?;
+                train_ber.insert(format!("volterra_{channel}"), w.ber);
+                let width = 1024usize;
+                models.push(ArtifactEntry::native(
+                    format!("volterra_{channel}_w{width}"),
+                    &file,
+                    width,
+                    "volterra",
+                    channel,
+                    width / w.n_os,
+                    path.clone(),
+                    ArtifactKind::NativeVolterra,
+                ));
+            }
+        }
+
+        anyhow::ensure!(
+            !models.is_empty(),
+            "no artifacts in {}: neither manifest.json (PJRT) nor weights_*.json (native)",
+            dir.display()
+        );
+        Ok(Self { dir, models, train_ber })
+    }
+
     /// All width buckets for a (model, channel, quant, batch=1) family,
     /// ascending.
     pub fn buckets(&self, model: &str, channel: &str, quant: bool) -> Vec<usize> {
@@ -106,12 +305,18 @@ impl ArtifactRegistry {
         w
     }
 
-    /// Smallest single-sequence artifact with width >= `min_width`.
+    /// Smallest single-sequence full-precision artifact with width >=
+    /// `min_width` (quantized variants are selected explicitly, via
+    /// [`Self::buckets`] with `quant = true` or [`Self::exact`]).
     pub fn best_model(&self, model: &str, channel: &str, min_width: usize) -> Result<&ArtifactEntry> {
         self.models
             .iter()
             .filter(|m| {
-                m.model == model && m.channel == channel && m.batch == 1 && m.width() >= min_width
+                m.model == model
+                    && m.channel == channel
+                    && m.batch == 1
+                    && !m.quant
+                    && m.width() >= min_width
             })
             .min_by_key(|m| m.width())
             .ok_or_else(|| {
@@ -141,10 +346,17 @@ mod tests {
     }
 
     #[test]
-    fn discovers_manifest_when_built() {
-        let Some(reg) = registry() else { return };
+    fn discovers_native_weights() {
+        // The native weight JSONs are committed, so discovery must work
+        // out of the box with no `make artifacts` step.
+        let reg = registry().expect("committed native artifacts discoverable");
         assert!(!reg.models.is_empty());
         assert!(reg.train_ber.contains_key("cnn_imdd"));
+        let e = reg.exact("cnn_imdd_w1024").unwrap();
+        assert_eq!(e.kind, ArtifactKind::NativeCnn);
+        assert_eq!(e.width(), 1024);
+        assert_eq!(e.out_symbols, 512);
+        assert!(e.abs_path.exists());
     }
 
     #[test]
@@ -174,6 +386,17 @@ mod tests {
     }
 
     #[test]
+    fn baselines_discovered_natively() {
+        let Some(reg) = registry() else { return };
+        for name in ["fir_imdd_w1024", "volterra_imdd_w1024"] {
+            let e = reg.exact(name).unwrap();
+            assert_eq!(e.out_symbols, 512, "{name}");
+            assert!(e.abs_path.exists(), "{name}");
+        }
+        assert!(reg.train_ber["fir_imdd"] > reg.train_ber["cnn_imdd"]);
+    }
+
+    #[test]
     fn entry_from_json_defaults() {
         let v = json::parse(
             r#"{"name":"m","path":"m.hlo.txt","input_shape":[512],
@@ -184,5 +407,11 @@ mod tests {
         assert_eq!(e.width(), 512);
         assert_eq!(e.batch, 1);
         assert!(!e.quant);
+        assert_eq!(e.kind, ArtifactKind::Hlo);
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(ArtifactRegistry::discover("/nonexistent/artifacts").is_err());
     }
 }

@@ -1,32 +1,66 @@
-//! A compiled model: PJRT executable + artifact metadata.
+//! A compiled model: artifact metadata + an executable implementation —
+//! either a native Rust datapath (always available) or a PJRT
+//! executable (`pjrt` feature).
 
-use super::artifact::ArtifactEntry;
+use super::artifact::{ArtifactEntry, ArtifactKind};
+use crate::equalizer::cnn::FixedPointCnn;
+use crate::equalizer::fir::FirEqualizer;
+use crate::equalizer::volterra::VolterraEqualizer;
+use crate::equalizer::weights::{FirWeights, VolterraWeights};
 use anyhow::Result;
 
-/// A PJRT-compiled equalizer model ready to execute.
+enum ModelImpl {
+    NativeCnn(Box<FixedPointCnn>),
+    NativeFir(FirEqualizer),
+    NativeVolterra(Box<VolterraEqualizer>),
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::pjrt::PjrtExecutable),
+}
+
+/// An equalizer model ready to execute.
 pub struct CompiledModel {
-    exe: xla::PjRtLoadedExecutable,
+    imp: ModelImpl,
     entry: ArtifactEntry,
 }
 
 impl CompiledModel {
-    pub fn new(exe: xla::PjRtLoadedExecutable, entry: ArtifactEntry) -> Self {
-        Self { exe, entry }
+    /// Instantiate the native datapath for a weight-JSON artifact.
+    pub(crate) fn native(entry: &ArtifactEntry) -> Result<Self> {
+        let imp = match entry.kind {
+            ArtifactKind::Hlo => anyhow::bail!(
+                "artifact {} is an HLO module; build with `--features pjrt` (and the real \
+                 `xla` crate) to execute it",
+                entry.name
+            ),
+            ArtifactKind::NativeCnn => ModelImpl::NativeCnn(Box::new(entry.load_native_cnn()?)),
+            ArtifactKind::NativeFir => {
+                let weights = FirWeights::load(&entry.abs_path)?;
+                ModelImpl::NativeFir(FirEqualizer::from_weights(&weights))
+            }
+            ArtifactKind::NativeVolterra => {
+                let weights = VolterraWeights::load(&entry.abs_path)?;
+                ModelImpl::NativeVolterra(Box::new(weights.to_equalizer()))
+            }
+        };
+        Ok(Self { imp, entry: entry.clone() })
+    }
+
+    #[cfg(feature = "pjrt")]
+    pub(crate) fn pjrt(exe: super::pjrt::PjrtExecutable, entry: ArtifactEntry) -> Self {
+        Self { imp: ModelImpl::Pjrt(exe), entry }
     }
 
     pub fn entry(&self) -> &ArtifactEntry {
         &self.entry
     }
 
-    /// Expected input width (samples).
+    /// Expected input width (samples) per batch row.
     pub fn width(&self) -> usize {
         self.entry.width()
     }
 
-    /// Run one sub-sequence: `x.len()` must equal `width()`.
-    ///
-    /// The artifacts are lowered with `return_tuple=True`, so the output
-    /// is a 1-tuple of the soft-symbol vector.
+    /// Run one sub-sequence (or `batch` stacked rows): `x.len()` must
+    /// equal `width() * batch`.
     pub fn run_f32(&self, x: &[f32]) -> Result<Vec<f32>> {
         anyhow::ensure!(
             x.len() == self.width() * self.entry.batch,
@@ -35,21 +69,30 @@ impl CompiledModel {
             self.width() * self.entry.batch,
             self.entry.batch
         );
-        let lit = if self.entry.batch == 1 {
-            xla::Literal::vec1(x)
-        } else {
-            xla::Literal::vec1(x)
-                .reshape(&[self.entry.batch as i64, self.width() as i64])
-                .map_err(|e| anyhow::anyhow!("reshape: {e}"))?
-        };
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
-        let inner = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple unwrap: {e}"))?;
-        inner.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+        match &self.imp {
+            ModelImpl::NativeCnn(cnn) => {
+                let mut out = Vec::new();
+                for row in x.chunks(self.width()) {
+                    out.extend(cnn.forward(row));
+                }
+                Ok(out)
+            }
+            ModelImpl::NativeFir(fir) => {
+                let mut out = Vec::new();
+                for row in x.chunks(self.width()) {
+                    out.extend(fir.equalize(row));
+                }
+                Ok(out)
+            }
+            ModelImpl::NativeVolterra(vol) => {
+                let mut out = Vec::new();
+                for row in x.chunks(self.width()) {
+                    out.extend(vol.equalize(row));
+                }
+                Ok(out)
+            }
+            #[cfg(feature = "pjrt")]
+            ModelImpl::Pjrt(exe) => exe.run_f32(x, self.width(), self.entry.batch),
+        }
     }
 }

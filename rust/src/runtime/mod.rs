@@ -1,66 +1,112 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
-//! request path.
+//! Model runtime: resolve artifacts and execute them on the request
+//! path, over one of two backends.
 //!
-//! This is the only place the `xla` crate is touched.  The flow follows
-//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
-//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
-//! HLO *text* is the interchange format (jax >= 0.5 emits 64-bit
-//! instruction ids in serialized protos, which xla_extension 0.5.1
-//! rejects; the text parser reassigns ids).
+//! * **native** (default): the bit-accurate Rust datapaths
+//!   ([`crate::equalizer`]) run the BN-folded weight JSONs directly —
+//!   self-contained, deterministic, no Python/XLA anywhere.
+//! * **pjrt** (`--features pjrt`): AOT-lowered HLO text compiled and
+//!   executed through the PJRT C API (`xla` crate).  The in-tree
+//!   `vendor/xla` package is a compile-time stub; patch in the real
+//!   crate to execute (see README "Backends").
 //!
-//! Python never runs here: artifacts are produced once by
-//! `make artifacts` and the binary is self-contained afterwards.
+//! [`Engine::new`] picks the backend from what the registry found: HLO
+//! artifacts + `pjrt` feature -> PJRT, otherwise native.  Python never
+//! runs on the request path in either mode.
 
 pub mod artifact;
 pub mod exec;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-pub use artifact::ArtifactRegistry;
+pub use artifact::{ArtifactKind, ArtifactRegistry};
 pub use exec::CompiledModel;
 
 use anyhow::Result;
-use std::path::Path;
 
-/// A PJRT CPU client that compiles HLO-text artifacts into executables.
+enum Backend {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtEngine),
+}
+
+/// Compiles registry artifacts into runnable models on the selected
+/// backend.
 pub struct Engine {
-    client: xla::PjRtClient,
+    backend: Backend,
 }
 
 impl Engine {
-    /// Create a CPU PJRT client for models from `registry`.
-    pub fn new(_registry: &ArtifactRegistry) -> Result<Self> {
-        Self::cpu()
+    /// Pick the backend for `registry`: PJRT when HLO artifacts are
+    /// present and the `pjrt` feature is enabled, native otherwise.
+    pub fn new(registry: &ArtifactRegistry) -> Result<Self> {
+        #[cfg(feature = "pjrt")]
+        {
+            if registry.models.iter().any(|m| m.kind == ArtifactKind::Hlo) {
+                return Ok(Self { backend: Backend::Pjrt(pjrt::PjrtEngine::cpu()?) });
+            }
+        }
+        let _ = registry;
+        Ok(Self::native())
     }
 
+    /// The always-available native backend.
+    pub fn native() -> Self {
+        Self { backend: Backend::Native }
+    }
+
+    /// A dedicated PJRT CPU client.
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT client: {e}"))?;
-        Ok(Self { client })
+        Ok(Self { backend: Backend::Pjrt(pjrt::PjrtEngine::cpu()?) })
     }
 
     pub fn platform_name(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Native => "native-cpu".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.platform_name(),
+        }
     }
 
-    /// Load one HLO-text artifact and compile it for this client.
+    /// Instantiate one artifact on this engine's backend.  Native weight
+    /// artifacts always run natively, even on a PJRT engine.
     pub fn load(&self, entry: &artifact::ArtifactEntry) -> Result<CompiledModel> {
-        self.load_path(entry.abs_path.clone(), entry.clone())
+        match &self.backend {
+            Backend::Native => CompiledModel::native(entry),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => match entry.kind {
+                ArtifactKind::Hlo => p.load(entry),
+                _ => CompiledModel::native(entry),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_runs_committed_artifacts() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        let Ok(reg) = ArtifactRegistry::discover(dir) else { return };
+        let engine = Engine::new(&reg).unwrap();
+        assert_eq!(engine.platform_name(), "native-cpu");
+        for entry in reg.models.iter().filter(|m| m.kind != ArtifactKind::Hlo) {
+            let model = engine.load(entry).unwrap();
+            let x = vec![0.25f32; model.width()];
+            let y = model.run_f32(&x).unwrap();
+            assert_eq!(y.len(), entry.out_symbols, "{}", entry.name);
+            assert!(y.iter().all(|v| v.is_finite()), "{}", entry.name);
+        }
     }
 
-    /// Compile an HLO text file with explicit metadata.
-    pub fn load_path(
-        &self,
-        path: impl AsRef<Path>,
-        entry: artifact::ArtifactEntry,
-    ) -> Result<CompiledModel> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
-        Ok(CompiledModel::new(exe, entry))
+    #[test]
+    fn wrong_input_length_rejected() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        let Ok(reg) = ArtifactRegistry::discover(dir) else { return };
+        let Ok(entry) = reg.exact("cnn_imdd_w1024") else { return };
+        let model = Engine::native().load(entry).unwrap();
+        assert!(model.run_f32(&vec![0.0; 1000]).is_err());
     }
 }

@@ -1,0 +1,83 @@
+//! PJRT backend (`--features pjrt`): load AOT artifacts (HLO text) and
+//! execute them through the `xla` crate.
+//!
+//! The flow follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//! HLO *text* is the interchange format (jax >= 0.5 emits 64-bit
+//! instruction ids in serialized protos, which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids).
+//!
+//! NOTE: the in-tree `vendor/xla` package is a compile-time stub so the
+//! feature keeps building offline; swap it for the real `xla` crate to
+//! actually execute (see README "Backends").
+
+use super::artifact::ArtifactEntry;
+use anyhow::Result;
+use std::path::Path;
+
+/// A PJRT CPU client that compiles HLO-text artifacts into executables.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+}
+
+impl PjrtEngine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT client: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it for this client.
+    pub fn load(&self, entry: &ArtifactEntry) -> Result<super::CompiledModel> {
+        let exe = self.compile_path(&entry.abs_path)?;
+        Ok(super::CompiledModel::pjrt(exe, entry.clone()))
+    }
+
+    /// Compile an HLO text file.
+    pub fn compile_path(&self, path: impl AsRef<Path>) -> Result<PjrtExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(PjrtExecutable { exe })
+    }
+}
+
+/// A PJRT-compiled equalizer executable.
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtExecutable {
+    /// Run one sub-sequence (`batch` rows of `width` samples).
+    ///
+    /// The artifacts are lowered with `return_tuple=True`, so the output
+    /// is a 1-tuple of the soft-symbol vector.
+    pub fn run_f32(&self, x: &[f32], width: usize, batch: usize) -> Result<Vec<f32>> {
+        let lit = if batch == 1 {
+            xla::Literal::vec1(x)
+        } else {
+            xla::Literal::vec1(x)
+                .reshape(&[batch as i64, width as i64])
+                .map_err(|e| anyhow::anyhow!("reshape: {e}"))?
+        };
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        let inner = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple unwrap: {e}"))?;
+        inner.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+    }
+}

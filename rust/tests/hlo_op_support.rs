@@ -1,3 +1,4 @@
+#![cfg(feature = "pjrt")]
 //! Regression guard: every HLO op shape the export path can emit must
 //! compile and run on the xla_extension 0.5.1 PJRT client.
 //!

@@ -1,0 +1,126 @@
+//! Native end-to-end acceptance: channel simulator -> parallel
+//! coordinator pipeline -> BER, entirely on the native backend (no
+//! Python, no XLA, no network).  This is the test the paper's Sec. 5.3
+//! claim rides on: the partitioned BER over `N_i` instances equals the
+//! monolithic BER exactly, for every execution mode.
+
+use equalizer::channel::{imdd::ImddChannel, proakis::ProakisBChannel, Channel, ChannelData};
+use equalizer::coordinator::instance::{AnyInstance, NativeInstance};
+use equalizer::coordinator::pipeline::{plan_bucket, EqualizerPipeline};
+use equalizer::equalizer::weights::CnnTopologyCfg;
+use equalizer::metrics::ber::BerCounter;
+use equalizer::runtime::{ArtifactKind, ArtifactRegistry};
+
+fn registry() -> ArtifactRegistry {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    ArtifactRegistry::discover(dir).expect("committed native artifacts")
+}
+
+fn pipeline(reg: &ArtifactRegistry, n_i: usize, channel: &str) -> EqualizerPipeline<AnyInstance> {
+    let cfg = CnnTopologyCfg::SELECTED;
+    let o_act = cfg.o_act_samples();
+    let (bucket, l_inst) =
+        plan_bucket(768, o_act, &reg.buckets("cnn", channel, false)).expect("bucket fits");
+    let entry = reg.best_model("cnn", channel, bucket).unwrap();
+    assert_eq!(entry.kind, ArtifactKind::NativeCnn, "native path expected");
+    let workers: Vec<AnyInstance> =
+        (0..n_i).map(|_| AnyInstance::load(entry).unwrap()).collect();
+    EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os).unwrap()
+}
+
+fn count_ber(soft: &[f32], data: &ChannelData) -> BerCounter {
+    let mut ber = BerCounter::new();
+    ber.update(soft, &data.symbols[..soft.len()]);
+    ber
+}
+
+#[test]
+fn partitioned_ber_equals_monolithic_ber() {
+    // Sec. 5.3: N_i parallel instances with OGM/ORM overlap handling
+    // produce the same soft symbols — and therefore the same error
+    // COUNT, not just the same order of magnitude — as one monolithic
+    // instance, on both channels.
+    let reg = registry();
+    for (channel, data) in [
+        ("imdd", ImddChannel::default().transmit(30_000, 7)),
+        ("proakis", ProakisBChannel::default().transmit(30_000, 7)),
+    ] {
+        let y1 = pipeline(&reg, 1, channel).equalize_batch(&data.rx).unwrap();
+        let y4 = pipeline(&reg, 4, channel).equalize_batch(&data.rx).unwrap();
+        assert_eq!(y1, y4, "{channel}: N_i=4 changed the soft symbols");
+        let b1 = count_ber(&y1, &data);
+        let b4 = count_ber(&y4, &data);
+        assert_eq!(b1.errors(), b4.errors(), "{channel}: partitioned BER diverged");
+        assert_eq!(b1.total(), b4.total());
+        assert!(b1.ber() < 0.1, "{channel}: equalizer not functional: {:.3e}", b1.ber());
+    }
+}
+
+#[test]
+fn all_execution_modes_agree_deterministically() {
+    // equalize / equalize_parallel / equalize_batch on N_i in {1, 4},
+    // twice each: every run must produce the identical byte stream.
+    let reg = registry();
+    let data = ImddChannel::default().transmit(20_000, 3);
+    let reference = pipeline(&reg, 1, "imdd").equalize(&data.rx).unwrap();
+    assert_eq!(reference.len(), 20_000);
+    for n_i in [1usize, 4] {
+        for rep in 0..2 {
+            let mut p = pipeline(&reg, n_i, "imdd");
+            assert_eq!(p.equalize(&data.rx).unwrap(), reference, "seq n_i={n_i} rep={rep}");
+            assert_eq!(
+                p.equalize_parallel(&data.rx).unwrap(),
+                reference,
+                "threads n_i={n_i} rep={rep}"
+            );
+            assert_eq!(p.equalize_batch(&data.rx).unwrap(), reference, "batch n_i={n_i} rep={rep}");
+        }
+    }
+}
+
+#[test]
+fn native_ber_is_usefully_low() {
+    // The committed weights are really trained: the equalized BER on a
+    // fresh realization sits near the training eval, far below the
+    // ~0.5 of an untrained network and below the raw decision BER.
+    let reg = registry();
+    let data = ImddChannel::default().transmit(40_000, 42);
+    let soft = pipeline(&reg, 4, "imdd").equalize_batch(&data.rx).unwrap();
+    let eq_ber = count_ber(&soft, &data).ber();
+
+    // Raw hard decisions on the unequalized symbol-position samples.
+    let raw: Vec<f32> = data.rx.iter().step_by(2).copied().collect();
+    let raw_ber = count_ber(&raw, &data).ber();
+
+    let train = reg.train_ber["cnn_imdd"];
+    assert!(eq_ber < 5.0 * train + 1e-3, "BER {eq_ber:.3e} vs train {train:.3e}");
+    assert!(eq_ber < raw_ber / 5.0, "equalizer gains <5x over raw: {eq_ber:.3e} vs {raw_ber:.3e}");
+}
+
+#[test]
+fn scratch_reuse_across_requests_is_clean() {
+    // One pipeline serving several consecutive bursts (scratch buffers
+    // and instance state reused) must match fresh pipelines per burst.
+    let reg = registry();
+    let mut served = pipeline(&reg, 4, "imdd");
+    for seed in [1u32, 2, 3] {
+        let data = ImddChannel::default().transmit(8_192, seed);
+        let warm = served.equalize_batch(&data.rx).unwrap();
+        let cold = pipeline(&reg, 4, "imdd").equalize_batch(&data.rx).unwrap();
+        assert_eq!(warm, cold, "state leaked across bursts (seed {seed})");
+    }
+}
+
+#[test]
+fn native_instance_direct_construction() {
+    // NativeInstance::from_entry and manual construction agree.
+    let reg = registry();
+    let entry = reg.best_model("cnn", "imdd", 1024).unwrap();
+    let mut a = NativeInstance::from_entry(entry).unwrap();
+    let weights = equalizer::equalizer::weights::CnnWeights::load(&entry.abs_path).unwrap();
+    let cnn = equalizer::equalizer::cnn::FixedPointCnn::new(weights, None);
+    let mut b = NativeInstance::new(cnn, entry.width());
+    let x: Vec<f32> = (0..entry.width()).map(|i| (i as f32 * 0.17).sin()).collect();
+    use equalizer::coordinator::instance::EqualizerInstance;
+    assert_eq!(a.process(&x).unwrap(), b.process(&x).unwrap());
+}

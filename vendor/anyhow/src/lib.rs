@@ -1,0 +1,119 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! This build environment resolves dependencies without a network, so
+//! the real `anyhow` cannot be fetched.  This shim provides the subset
+//! the workspace uses — a message-carrying [`Error`], the `Result`
+//! alias, and the `anyhow!` / `bail!` / `ensure!` macros — with the
+//! same surface syntax, so swapping in the real crate is a one-line
+//! `Cargo.toml` change.
+
+use std::fmt::{self, Display};
+
+/// A string-backed error.  Like the real `anyhow::Error`, this type
+/// deliberately does NOT implement `std::error::Error`, which is what
+/// allows the blanket `From<E: std::error::Error>` conversion below to
+/// exist without coherence conflicts.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Flatten the source chain into the message, as `{:#}` would.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => { $crate::Error::msg(::std::format!($($arg)+)) };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => { return ::std::result::Result::Err($crate::anyhow!($($arg)+)) };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_roundtrip() {
+        assert_eq!(fails(false).unwrap(), 7);
+        let e = fails(true).unwrap_err();
+        assert_eq!(e.to_string(), "flag was true");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e:?}"), "x = 3");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn check(n: usize) -> Result<()> {
+            ensure!(n > 2);
+            Ok(())
+        }
+        assert!(check(3).is_ok());
+        assert!(check(1).unwrap_err().to_string().contains("n > 2"));
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}
