@@ -40,7 +40,8 @@ fn main() {
                     let best_fir = fir.last().map(|p| p.ber).unwrap_or(1.0);
                     let best_cnn = cnn.last().map(|p| p.ber).unwrap_or(1.0);
                     println!(
-                        "FIR floor {best_fir:.3e} vs best CNN {best_cnn:.3e}  (paper: FIR saturates above the CNN)"
+                        "FIR floor {best_fir:.3e} vs best CNN {best_cnn:.3e}  \
+                         (paper: FIR saturates above the CNN)"
                     );
                     // Matched-complexity comparison around the selection.
                     if let Some(sel) = &rep.selected {
@@ -54,7 +55,8 @@ fn main() {
                             .fold(f64::INFINITY, f64::min)
                             .min(fir.last().map(|p| p.ber).unwrap_or(f64::INFINITY));
                         println!(
-                            "equal-complexity gap: FIR {near_fir:.3e} / CNN {:.3e} = {:.1}x (paper: ~4x optical, ~1.1x magnetic)\n",
+                            "equal-complexity gap: FIR {near_fir:.3e} / CNN {:.3e} = {:.1}x \
+                             (paper: ~4x optical, ~1.1x magnetic)\n",
                             sel.ber,
                             near_fir / sel.ber.max(1e-9)
                         );

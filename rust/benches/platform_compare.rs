@@ -41,7 +41,8 @@ fn main() {
         println!(" | {ht_baud:>11.3e} {lp_baud:>11.3e}");
     }
     println!(
-        "anchor: HT-FPGA/RTX-TRT @400 SPB = {:.0}x (paper ~4500x); RTX-TRT peak {:.1} GBd (paper 12)",
+        "anchor: HT-FPGA/RTX-TRT @400 SPB = {:.0}x (paper ~4500x); \
+         RTX-TRT peak {:.1} GBd (paper 12)",
         ht_baud / platform::RTX_TENSORRT.throughput(400),
         platform::RTX_TENSORRT.throughput(u64::MAX / 2) / 1e9
     );
@@ -55,7 +56,8 @@ fn main() {
         println!(" | {ht_lat:>11.3e} {lp_lat:>11.3e}");
     }
     println!(
-        "anchor: AGX-TRT/HT-FPGA @1e6 SPB = {:.0}x (paper: up to 52x); GPU/CPU ~{:.0}x HT at low SPB (paper ~5x)",
+        "anchor: AGX-TRT/HT-FPGA @1e6 SPB = {:.0}x (paper: up to 52x); \
+         GPU/CPU ~{:.0}x HT at low SPB (paper ~5x)",
         platform::AGX_TENSORRT.latency(1_000_000) / ht_lat,
         platform::RTX_TENSORRT.latency(400) / ht_lat
     );

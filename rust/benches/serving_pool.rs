@@ -1,0 +1,80 @@
+//! Serving-layer benchmarks (§Perf): dispatcher overhead with trivial
+//! instances (pure pool bookkeeping), and shard scaling on the real
+//! native CNN profile — the multi-stream analogue of the
+//! `pipeline_hotpath` parallelism headline.
+
+use equalizer::coordinator::instance::DecimatorInstance;
+use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool, Shard};
+use equalizer::coordinator::seqlen::SeqLenOptimizer;
+use equalizer::coordinator::server::EqualizerServer;
+use equalizer::coordinator::timing::TimingModel;
+use equalizer::runtime::ArtifactRegistry;
+use equalizer::util::bench::{header, Bencher};
+
+fn decimator_shard(n_i: usize, width: usize, o_act: usize) -> Shard<DecimatorInstance> {
+    let instances: Vec<DecimatorInstance> =
+        (0..n_i).map(|_| DecimatorInstance { width, n_os: 2 }).collect();
+    let opt = SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6));
+    let targets: Vec<f64> = (1..=100).map(|i| i as f64 * 1e9).collect();
+    Shard::single("default", EqualizerServer::new(instances, o_act, 2, &opt, &targets).unwrap())
+}
+
+fn main() {
+    let b = Bencher::quick();
+
+    // ---- dispatch overhead: near-free compute, 64 bursts in flight --
+    header("pool dispatch (decimator instances, 64 x 8k-sample bursts)");
+    let burst: Vec<f32> = (0..8192).map(|i| i as f32).collect();
+    for shards in [1usize, 2, 4] {
+        let pool = ServerPool::new(
+            (0..shards).map(|_| decimator_shard(2, 4096, 64)).collect(),
+            RoutePolicy::ShortestQueue,
+            64,
+        )
+        .unwrap()
+        .spawn();
+        let m = b.bench(&format!("pool_decimator shards={shards}"), || {
+            let pending: Vec<_> =
+                (0..64).map(|_| pool.submit("default", burst.clone(), None).unwrap()).collect();
+            for rx in pending {
+                rx.recv().unwrap();
+            }
+        });
+        println!("    -> {:.2} Mreq/s dispatch", m.throughput(64.0) / 1e6);
+        pool.shutdown();
+    }
+
+    // ---- shard scaling on the real native CNN profile ---------------
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let Ok(reg) = ArtifactRegistry::discover(dir) else {
+        println!("\n(native weights missing; cnn pool benches skipped)");
+        return;
+    };
+    header("pool serving (cnn_imdd profile, 8 x 16k-sample bursts)");
+    let data: Vec<f32> = (0..16_384).map(|i| (i as f32 * 0.17).sin()).collect();
+    let symbols = 8.0 * data.len() as f64 / 2.0;
+    for shards in [1usize, 2] {
+        let cfg = PoolConfig {
+            shards,
+            instances_per_shard: 2,
+            policy: RoutePolicy::ShortestQueue,
+            ..PoolConfig::default()
+        };
+        let pool = match ServerPool::from_registry(&reg, &["cnn_imdd"], &cfg) {
+            Ok(p) => p.spawn(),
+            Err(e) => {
+                println!("(cnn_imdd profile unavailable: {e})");
+                return;
+            }
+        };
+        let m = b.bench(&format!("pool_cnn shards={shards}"), || {
+            let pending: Vec<_> =
+                (0..8).map(|_| pool.submit("cnn_imdd", data.clone(), None).unwrap()).collect();
+            for rx in pending {
+                rx.recv().unwrap();
+            }
+        });
+        println!("    -> {:.2} Msym/s", m.throughput(symbols) / 1e6);
+        pool.shutdown();
+    }
+}

@@ -97,11 +97,15 @@ impl EqualizerInstance for NativeInstance {
     }
 }
 
-/// Backend-agnostic worker: native datapath for weight artifacts, PJRT
-/// executable for HLO artifacts (with `--features pjrt`).  Always
-/// `Send`, so it drives both threaded pipeline paths.
+/// Backend-agnostic worker: native datapath for CNN weight artifacts,
+/// FIR/Volterra baselines for their weight sets, PJRT executable for
+/// HLO artifacts (with `--features pjrt`).  Always `Send`, so it
+/// drives both threaded pipeline paths — and the serving pool's
+/// per-request profile selection, where one shard mixes all flavors.
 pub enum AnyInstance {
     Native(NativeInstance),
+    Fir(FirInstance),
+    Volterra(VolterraInstance),
     #[cfg(feature = "pjrt")]
     Pjrt(PjrtInstance),
 }
@@ -112,10 +116,10 @@ impl AnyInstance {
         match entry.kind {
             ArtifactKind::Hlo => Self::load_hlo(entry),
             ArtifactKind::NativeCnn => Ok(Self::Native(NativeInstance::from_entry(entry)?)),
-            other => anyhow::bail!(
-                "artifact {} ({other:?}) cannot drive a pipeline instance (CNN required)",
-                entry.name
-            ),
+            ArtifactKind::NativeFir => Ok(Self::Fir(FirInstance::from_entry(entry)?)),
+            ArtifactKind::NativeVolterra => {
+                Ok(Self::Volterra(VolterraInstance::from_entry(entry)?))
+            }
         }
     }
 
@@ -137,6 +141,8 @@ impl EqualizerInstance for AnyInstance {
     fn width(&self) -> usize {
         match self {
             AnyInstance::Native(i) => i.width(),
+            AnyInstance::Fir(i) => i.width(),
+            AnyInstance::Volterra(i) => i.width(),
             #[cfg(feature = "pjrt")]
             AnyInstance::Pjrt(i) => i.width(),
         }
@@ -145,6 +151,8 @@ impl EqualizerInstance for AnyInstance {
     fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
         match self {
             AnyInstance::Native(i) => i.process(chunk),
+            AnyInstance::Fir(i) => i.process(chunk),
+            AnyInstance::Volterra(i) => i.process(chunk),
             #[cfg(feature = "pjrt")]
             AnyInstance::Pjrt(i) => i.process(chunk),
         }
@@ -153,9 +161,68 @@ impl EqualizerInstance for AnyInstance {
     fn process_batch(&mut self, chunks: &[f32], n_chunks: usize) -> Result<Vec<Vec<f32>>> {
         match self {
             AnyInstance::Native(i) => i.process_batch(chunks, n_chunks),
+            AnyInstance::Fir(i) => i.process_batch(chunks, n_chunks),
+            AnyInstance::Volterra(i) => i.process_batch(chunks, n_chunks),
             #[cfg(feature = "pjrt")]
             AnyInstance::Pjrt(i) => i.process_batch(chunks, n_chunks),
         }
+    }
+}
+
+/// Linear FIR baseline instance (Sec. 3.2) — the `fir_*` serving
+/// profiles.  Stateless and `Send`.
+pub struct FirInstance {
+    fir: crate::equalizer::fir::FirEqualizer,
+    width: usize,
+}
+
+impl FirInstance {
+    pub fn new(fir: crate::equalizer::fir::FirEqualizer, width: usize) -> Self {
+        Self { fir, width }
+    }
+
+    pub fn from_entry(entry: &ArtifactEntry) -> Result<Self> {
+        Ok(Self::new(crate::runtime::exec::load_fir(entry)?, entry.width()))
+    }
+}
+
+impl EqualizerInstance for FirInstance {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(chunk.len() == self.width, "chunk width {} != {}", chunk.len(), self.width);
+        Ok(self.fir.equalize(chunk))
+    }
+}
+
+/// Order-3 Volterra baseline instance (Sec. 3.3) — the `volterra_*`
+/// serving profiles.  Stateless and `Send`.
+pub struct VolterraInstance {
+    vol: Box<crate::equalizer::volterra::VolterraEqualizer>,
+    width: usize,
+}
+
+impl VolterraInstance {
+    pub fn new(vol: Box<crate::equalizer::volterra::VolterraEqualizer>, width: usize) -> Self {
+        Self { vol, width }
+    }
+
+    pub fn from_entry(entry: &ArtifactEntry) -> Result<Self> {
+        let vol = Box::new(crate::runtime::exec::load_volterra(entry)?);
+        Ok(Self::new(vol, entry.width()))
+    }
+}
+
+impl EqualizerInstance for VolterraInstance {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(chunk.len() == self.width, "chunk width {} != {}", chunk.len(), self.width);
+        Ok(self.vol.equalize(chunk))
     }
 }
 
@@ -275,8 +342,30 @@ mod tests {
         use crate::equalizer::weights::CnnTopologyCfg;
         let cnn = FixedPointCnn::new(delta_cnn(CnnTopologyCfg::SELECTED), None);
         let mut inst = NativeInstance::new(cnn, 256);
-        assert!(inst.process(&vec![0.0; 255]).is_err());
-        assert_eq!(inst.process(&vec![0.0; 256]).unwrap().len(), 128);
+        assert!(inst.process(&[0.0; 255]).is_err());
+        assert_eq!(inst.process(&[0.0; 256]).unwrap().len(), 128);
+    }
+
+    #[test]
+    fn baseline_instances_from_entries() {
+        // FIR/Volterra artifacts drive pipeline instances now: the
+        // instance output equals the bare equalizer on the same chunk.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        let Ok(reg) = crate::runtime::ArtifactRegistry::discover(dir) else { return };
+        let x: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.23).cos()).collect();
+
+        let entry = reg.exact("fir_imdd_w1024").unwrap();
+        let mut inst = AnyInstance::load(entry).unwrap();
+        assert_eq!(inst.width(), 1024);
+        let fir = crate::equalizer::fir::FirEqualizer::from_weights(
+            &crate::equalizer::weights::FirWeights::load(&entry.abs_path).unwrap(),
+        );
+        assert_eq!(inst.process(&x).unwrap(), fir.equalize(&x));
+        assert!(inst.process(&x[..1000]).is_err(), "width enforced");
+
+        let entry = reg.exact("volterra_imdd_w1024").unwrap();
+        let mut inst = AnyInstance::load(entry).unwrap();
+        assert_eq!(inst.process(&x).unwrap().len(), 512);
     }
 
     #[test]

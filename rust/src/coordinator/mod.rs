@@ -11,17 +11,20 @@
 //!
 //! This module is that architecture, re-hosted: [`ogm`]/[`orm`] do the
 //! overlap bookkeeping, [`ssm`]/[`msm`] the tree routing, [`instance`]
-//! wraps one CNN worker (PJRT executable or native datapath),
-//! [`pipeline`] composes them, [`timing`] is the paper's Sec. 6.1
-//! model, [`sim`] the cycle-approximate simulator it is validated
-//! against (Fig. 12), [`seqlen`] the Sec. 6.2 optimization framework,
-//! and [`server`] a tokio streaming front-end.
+//! wraps one equalizer worker (native datapath, FIR/Volterra baseline,
+//! or PJRT executable), [`pipeline`] composes them, [`timing`] is the
+//! paper's Sec. 6.1 model, [`sim`] the cycle-approximate simulator it
+//! is validated against (Fig. 12), [`seqlen`] the Sec. 6.2
+//! optimization framework, [`server`] the single-stream serving
+//! engine, and [`pool`] the sharded multi-stream pool with per-request
+//! profile selection built on top of it.
 
 pub mod instance;
 pub mod msm;
 pub mod ogm;
 pub mod orm;
 pub mod pipeline;
+pub mod pool;
 pub mod seqlen;
 pub mod server;
 pub mod sim;

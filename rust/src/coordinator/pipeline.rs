@@ -88,6 +88,10 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
         self.o_act
     }
 
+    pub fn n_os(&self) -> usize {
+        self.n_os
+    }
+
     pub fn l_ol(&self) -> usize {
         self.l_inst + 2 * self.o_act
     }
@@ -167,14 +171,51 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
         I: Send,
     {
         let chunks = ogm::make_chunks(x, self.l_inst, self.o_act);
-        let queues = ssm::distribute(&chunks, self.instances.len());
+        self.run_batch(&chunks)
+    }
+
+    /// Equalize with a per-call payload `l_inst <= self.l_inst()`:
+    /// chunks are cut at the requested payload and zero-extended to the
+    /// fixed instance width `l_ol` (the FPGA pads the stream tail the
+    /// same way).  This is the serving path behind per-burst sequence-
+    /// length selection (Fig. 11): the artifact width stays fixed while
+    /// the effective `l_inst` — and with it the latency — shrinks.
+    ///
+    /// Bit-identical to a pipeline constructed at `l_inst` directly,
+    /// modulo the zero padding every instance ignores past the overlap.
+    pub fn equalize_resized(&mut self, x: &[f32], l_inst: usize) -> Result<Vec<f32>>
+    where
+        I: Send,
+    {
+        anyhow::ensure!(
+            l_inst > 0 && l_inst <= self.l_inst,
+            "l_inst {l_inst} outside (0, {}]",
+            self.l_inst
+        );
+        anyhow::ensure!(l_inst % self.n_os == 0, "l_inst {l_inst} off the N_os={} grid", self.n_os);
+        let l_ol = self.l_ol();
+        let mut chunks = ogm::make_chunks(x, l_inst, self.o_act);
+        for c in &mut chunks {
+            c.data.resize(l_ol, 0.0);
+        }
+        self.run_batch(&chunks)
+    }
+
+    /// One thread per instance, each consuming its whole SSM queue as a
+    /// contiguous batch — shared by [`Self::equalize_batch`] and
+    /// [`Self::equalize_resized`].  Every `chunks[i].data` must already
+    /// be `l_ol` samples long.
+    fn run_batch(&mut self, chunks: &[ogm::Chunk]) -> Result<Vec<f32>>
+    where
+        I: Send,
+    {
+        let queues = ssm::distribute(chunks, self.instances.len());
         let l_ol = self.l_ol();
 
         let mut per_instance: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.instances.len()];
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
             for (inst, queue) in self.instances.iter_mut().zip(&queues) {
-                let chunks = &chunks;
                 handles.push(scope.spawn(move || -> Result<Vec<Vec<f32>>> {
                     let mut batch = Vec::with_capacity(queue.len() * l_ol);
                     for &ci in queue {
@@ -190,7 +231,7 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
             Ok(())
         })?;
 
-        Ok(self.merge(&per_instance, &chunks))
+        Ok(self.merge(&per_instance, chunks))
     }
 }
 
@@ -242,6 +283,23 @@ mod tests {
         // The batched path handles ragged queues + partial tails too.
         let mut pb = decimator_pipeline(4, 256, 16);
         assert_eq!(pb.equalize_batch(&x).unwrap(), y);
+    }
+
+    #[test]
+    fn resized_payload_matches_native_geometry() {
+        // A pipeline built at l_inst=512 serving a request at l_inst=256
+        // must equal a pipeline built at 256 directly: the chunk layout
+        // is identical, the extra width is zero padding past the
+        // overlap, and the ORM never emits those symbols.
+        let x: Vec<f32> = (0..5000).map(|i| (i as f32 * 0.13).sin()).collect();
+        let expect: Vec<f32> = x.iter().step_by(2).copied().collect();
+        let mut wide = decimator_pipeline(4, 512, 32);
+        assert_eq!(wide.equalize_resized(&x, 256).unwrap(), expect);
+        assert_eq!(wide.equalize_resized(&x, 512).unwrap(), expect, "full payload");
+        // Off-grid and oversized payloads are rejected.
+        assert!(wide.equalize_resized(&x, 511).is_err());
+        assert!(wide.equalize_resized(&x, 514).is_err());
+        assert!(wide.equalize_resized(&x, 0).is_err());
     }
 
     #[test]

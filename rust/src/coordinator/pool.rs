@@ -1,0 +1,699 @@
+//! Sharded multi-stream serving pool.
+//!
+//! The paper's architecture serves *one* stream per engine complex; the
+//! real-time follow-up (Ney et al., arXiv:2402.15288) drives the same
+//! engine as a continuously fed streaming system.  This module is the
+//! service-scale composition of both: a [`ServerPool`] owns `N` shards,
+//! each a full OGM -> SSM -> instances -> MSM -> ORM pipeline complex
+//! ([`super::server::EqualizerServer`]) *per profile*, behind a bounded
+//! request queue.
+//!
+//! * **Per-request channel selection** — a request names a profile
+//!   (`cnn_imdd`, `fir_imdd`, `volterra_imdd`, `cnn_proakis`, ...);
+//!   the shard resolves it to the matching engine, so one pool serves
+//!   heterogeneous traffic.  Profiles resolve through the existing
+//!   [`ArtifactRegistry`] ([`ArtifactRegistry::profile_entry`]).
+//! * **Per-burst sequence-length selection** — each engine keeps the
+//!   `t_req` -> `l_inst` LUT of Fig. 11, so latency/throughput trades
+//!   stay per burst, per shard.
+//! * **Backpressure** — shard queues are bounded
+//!   (`std::sync::mpsc::sync_channel`): [`PoolClient::submit`] blocks
+//!   when the routed shard is full, [`PoolClient::try_submit`] reports
+//!   fullness instead.
+//! * **Routing** — [`RoutePolicy::RoundRobin`] or
+//!   [`RoutePolicy::ShortestQueue`] over the live per-shard queue
+//!   depths ([`crate::metrics::serving::ShardCounters`]).
+//!
+//! Replies are bit-identical to the sequential single-pipeline
+//! reference for the same inputs: a burst is never split across shards
+//! and every datapath is deterministic (asserted in
+//! `tests/serving_pool.rs`).
+
+use super::instance::{
+    AnyInstance, EqualizerInstance, FirInstance, NativeInstance, VolterraInstance,
+};
+use super::seqlen::SeqLenOptimizer;
+use super::server::EqualizerServer;
+use super::timing::TimingModel;
+use crate::equalizer::weights::{CnnTopologyCfg, FirWeights, VolterraWeights};
+use crate::metrics::serving::{ServerStats, ShardCounters};
+use crate::runtime::{ArtifactKind, ArtifactRegistry};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Default bound on each shard's request queue.
+pub const DEFAULT_QUEUE_CAP: usize = 64;
+
+/// How the dispatcher picks a shard for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through shards in submit order.
+    RoundRobin,
+    /// Route to the shard with the fewest queued requests (ties to the
+    /// lowest shard index).
+    ShortestQueue,
+}
+
+impl std::str::FromStr for RoutePolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "round-robin" | "rr" => Ok(Self::RoundRobin),
+            "shortest-queue" | "sq" => Ok(Self::ShortestQueue),
+            other => anyhow::bail!("unknown policy {other:?} (round-robin|shortest-queue)"),
+        }
+    }
+}
+
+/// One queued equalization request.
+pub struct PoolRequest {
+    /// Profile name (see [`ArtifactRegistry::profile_entry`] for the
+    /// registry-backed pools; arbitrary keys for hand-built shards).
+    pub profile: String,
+    /// Receiver samples (N_os per symbol).
+    pub samples: Vec<f32>,
+    /// Optional net-throughput requirement driving l_inst selection.
+    pub t_req: Option<f64>,
+    /// Reply channel.
+    pub reply: mpsc::Sender<PoolResponse>,
+}
+
+/// Pool reply.
+#[derive(Debug)]
+pub struct PoolResponse {
+    /// Equalized soft symbols (empty when `error` is set).
+    pub soft_symbols: Vec<f32>,
+    /// l_inst the engine selected for this burst (samples).
+    pub l_inst: usize,
+    /// Shard that served the burst.
+    pub shard: usize,
+    /// Profile the burst was equalized under.
+    pub profile: String,
+    /// Wall-clock time on the shard worker.
+    pub elapsed_us: f64,
+    /// Processing failure, if any.
+    pub error: Option<String>,
+}
+
+/// One shard: a set of per-profile serving engines that share a worker
+/// thread (the software analogue of one FPGA with several bitstream
+/// personalities resident).
+pub struct Shard<I: EqualizerInstance + Send + 'static> {
+    profiles: BTreeMap<String, EqualizerServer<I>>,
+}
+
+impl<I: EqualizerInstance + Send + 'static> Shard<I> {
+    pub fn new() -> Self {
+        Self { profiles: BTreeMap::new() }
+    }
+
+    /// Builder-style: register `engine` under `profile`.
+    pub fn with_profile(mut self, profile: impl Into<String>, engine: EqualizerServer<I>) -> Self {
+        self.profiles.insert(profile.into(), engine);
+        self
+    }
+
+    /// A shard serving a single profile.
+    pub fn single(profile: impl Into<String>, engine: EqualizerServer<I>) -> Self {
+        Self::new().with_profile(profile, engine)
+    }
+
+    /// Registered profile names, sorted.
+    pub fn profile_names(&self) -> Vec<String> {
+        self.profiles.keys().cloned().collect()
+    }
+}
+
+impl<I: EqualizerInstance + Send + 'static> Default for Shard<I> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Configuration for registry-backed pools
+/// ([`ServerPool::from_registry`]).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Number of shards (worker threads x full pipeline complexes).
+    pub shards: usize,
+    /// Instances per engine inside each shard (power of two).
+    pub instances_per_shard: usize,
+    pub policy: RoutePolicy,
+    /// Bounded per-shard queue length (backpressure).
+    pub queue_cap: usize,
+    /// `N_i` assumed by the LUT's timing model (the paper's HT design).
+    pub lut_instances: usize,
+    /// Clock assumed by the LUT's timing model.
+    pub f_clk: f64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            shards: 2,
+            instances_per_shard: 2,
+            policy: RoutePolicy::ShortestQueue,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            lut_instances: 64,
+            f_clk: 200e6,
+        }
+    }
+}
+
+/// A sharded, multi-profile serving pool (spawn with
+/// [`ServerPool::spawn`]).
+pub struct ServerPool<I: EqualizerInstance + Send + 'static> {
+    shards: Vec<Shard<I>>,
+    policy: RoutePolicy,
+    queue_cap: usize,
+}
+
+impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
+    /// Every shard must serve the identical profile set (any shard can
+    /// take any request).
+    pub fn new(shards: Vec<Shard<I>>, policy: RoutePolicy, queue_cap: usize) -> Result<Self> {
+        anyhow::ensure!(!shards.is_empty(), "need at least one shard");
+        anyhow::ensure!(queue_cap >= 1, "queue capacity must be at least 1");
+        let names = shards[0].profile_names();
+        anyhow::ensure!(!names.is_empty(), "shards must serve at least one profile");
+        for (i, s) in shards.iter().enumerate() {
+            anyhow::ensure!(
+                s.profile_names() == names,
+                "shard {i} serves {:?}, shard 0 serves {names:?}",
+                s.profile_names()
+            );
+        }
+        Ok(Self { shards, policy, queue_cap })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Start one worker thread per shard and return the dispatch
+    /// handle.
+    pub fn spawn(self) -> PoolHandle {
+        let Self { shards, policy, queue_cap } = self;
+        let profiles: Arc<[String]> = shards[0].profile_names().into();
+        let mut txs = Vec::with_capacity(shards.len());
+        let mut joins = Vec::with_capacity(shards.len());
+        let mut counters = Vec::with_capacity(shards.len());
+        for (id, shard) in shards.into_iter().enumerate() {
+            let (tx, rx) = mpsc::sync_channel::<PoolRequest>(queue_cap);
+            let shared = Arc::new(ShardCounters::default());
+            let worker_counters = Arc::clone(&shared);
+            joins.push(std::thread::spawn(move || shard_loop(shard, id, rx, worker_counters)));
+            txs.push(tx);
+            counters.push(shared);
+        }
+        PoolHandle {
+            client: PoolClient {
+                txs,
+                counters,
+                profiles,
+                policy,
+                rr: Arc::new(AtomicUsize::new(0)),
+            },
+            joins,
+        }
+    }
+}
+
+/// Worker loop: drain the shard queue until every sender is gone.
+///
+/// The outstanding-work counter is decremented only once a request
+/// *finishes*, so [`RoutePolicy::ShortestQueue`] sees in-service work,
+/// not just what sits in the channel.
+fn shard_loop<I: EqualizerInstance + Send + 'static>(
+    mut shard: Shard<I>,
+    shard_id: usize,
+    rx: mpsc::Receiver<PoolRequest>,
+    counters: Arc<ShardCounters>,
+) {
+    while let Ok(req) = rx.recv() {
+        let t0 = Instant::now();
+        let (soft_symbols, l_inst, error) = match shard.profiles.get_mut(&req.profile) {
+            None => (Vec::new(), 0, Some(format!("unknown profile {:?}", req.profile))),
+            Some(engine) => {
+                let (result, l_inst) = engine.serve_one(&req.samples, req.t_req);
+                match result {
+                    Ok(soft) => (soft, l_inst, None),
+                    Err(e) => (Vec::new(), l_inst, Some(e.to_string())),
+                }
+            }
+        };
+        let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
+        counters.served(soft_symbols.len(), elapsed_us, error.is_some());
+        counters.dequeued();
+        let _ = req.reply.send(PoolResponse {
+            soft_symbols,
+            l_inst,
+            shard: shard_id,
+            profile: req.profile,
+            elapsed_us,
+            error,
+        });
+    }
+}
+
+/// Outcome of a non-blocking submit ([`PoolClient::try_submit`]).
+#[derive(Debug)]
+pub enum TrySubmit {
+    /// Enqueued; await the reply on this receiver.
+    Queued(mpsc::Receiver<PoolResponse>),
+    /// The routed shard's queue was full — the burst comes back
+    /// untouched so the caller can retry without re-cloning it.
+    Full(Vec<f32>),
+}
+
+impl TrySubmit {
+    /// The reply channel, if the burst was queued.
+    pub fn queued(self) -> Option<mpsc::Receiver<PoolResponse>> {
+        match self {
+            TrySubmit::Queued(rx) => Some(rx),
+            TrySubmit::Full(_) => None,
+        }
+    }
+}
+
+/// Cloneable dispatcher: routes requests to shards.  Clone one per
+/// client thread ([`PoolHandle::client`]); every clone holds the shard
+/// senders, so all clones must be dropped before
+/// [`PoolHandle::shutdown`] can finish draining.
+#[derive(Clone)]
+pub struct PoolClient {
+    txs: Vec<mpsc::SyncSender<PoolRequest>>,
+    counters: Vec<Arc<ShardCounters>>,
+    profiles: Arc<[String]>,
+    policy: RoutePolicy,
+    rr: Arc<AtomicUsize>,
+}
+
+impl PoolClient {
+    fn route(&self) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len(),
+            RoutePolicy::ShortestQueue => self
+                .counters
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, c)| c.queue_depth())
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+
+    fn check_profile(&self, profile: &str) -> Result<()> {
+        anyhow::ensure!(
+            self.profiles.iter().any(|p| p == profile),
+            "unknown profile {profile:?}: this pool serves {:?}",
+            self.profiles
+        );
+        Ok(())
+    }
+
+    /// Route and enqueue one burst; blocks while the routed shard's
+    /// queue is full (backpressure).  Returns the reply channel.
+    pub fn submit(
+        &self,
+        profile: &str,
+        samples: Vec<f32>,
+        t_req: Option<f64>,
+    ) -> Result<mpsc::Receiver<PoolResponse>> {
+        self.check_profile(profile)?;
+        let shard = self.route();
+        let (reply, rx) = mpsc::channel();
+        self.counters[shard].enqueued();
+        let req = PoolRequest { profile: profile.to_string(), samples, t_req, reply };
+        if self.txs[shard].send(req).is_err() {
+            self.counters[shard].dequeued();
+            anyhow::bail!("shard {shard} is shut down");
+        }
+        Ok(rx)
+    }
+
+    /// Non-blocking submit: on backpressure the burst is handed back
+    /// untouched ([`TrySubmit::Full`]) so retries never re-clone it,
+    /// and the rejected attempt leaves no trace in the peak-depth
+    /// stats.
+    pub fn try_submit(
+        &self,
+        profile: &str,
+        samples: Vec<f32>,
+        t_req: Option<f64>,
+    ) -> Result<TrySubmit> {
+        self.check_profile(profile)?;
+        let shard = self.route();
+        let (reply, rx) = mpsc::channel();
+        let depth = self.counters[shard].enqueued_pending();
+        let req = PoolRequest { profile: profile.to_string(), samples, t_req, reply };
+        match self.txs[shard].try_send(req) {
+            Ok(()) => {
+                self.counters[shard].commit_peak(depth);
+                Ok(TrySubmit::Queued(rx))
+            }
+            Err(mpsc::TrySendError::Full(req)) => {
+                self.counters[shard].dequeued();
+                Ok(TrySubmit::Full(req.samples))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.counters[shard].dequeued();
+                anyhow::bail!("shard {shard} is shut down")
+            }
+        }
+    }
+
+    /// Submit one burst and wait for its reply; processing failures
+    /// come back as `Err`.
+    pub fn call(
+        &self,
+        profile: &str,
+        samples: Vec<f32>,
+        t_req: Option<f64>,
+    ) -> Result<PoolResponse> {
+        let rx = self.submit(profile, samples, t_req)?;
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("shard dropped the reply"))?;
+        match &resp.error {
+            Some(e) => anyhow::bail!("profile {:?} on shard {}: {e}", resp.profile, resp.shard),
+            None => Ok(resp),
+        }
+    }
+
+    /// Profiles every shard serves, sorted.
+    pub fn profiles(&self) -> &[String] {
+        &self.profiles
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Live per-shard counters snapshot.
+    pub fn stats(&self) -> ServerStats {
+        ServerStats::snapshot(self.counters.iter().map(|c| c.as_ref()))
+    }
+}
+
+/// Owner handle of a spawned pool: dispatch (via the embedded
+/// [`PoolClient`]) plus lifecycle.
+pub struct PoolHandle {
+    client: PoolClient,
+    joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl PoolHandle {
+    /// A cloneable dispatcher for a client thread.
+    pub fn client(&self) -> PoolClient {
+        self.client.clone()
+    }
+
+    /// See [`PoolClient::submit`].
+    pub fn submit(
+        &self,
+        profile: &str,
+        samples: Vec<f32>,
+        t_req: Option<f64>,
+    ) -> Result<mpsc::Receiver<PoolResponse>> {
+        self.client.submit(profile, samples, t_req)
+    }
+
+    /// See [`PoolClient::try_submit`].
+    pub fn try_submit(
+        &self,
+        profile: &str,
+        samples: Vec<f32>,
+        t_req: Option<f64>,
+    ) -> Result<TrySubmit> {
+        self.client.try_submit(profile, samples, t_req)
+    }
+
+    /// See [`PoolClient::call`].
+    pub fn call(
+        &self,
+        profile: &str,
+        samples: Vec<f32>,
+        t_req: Option<f64>,
+    ) -> Result<PoolResponse> {
+        self.client.call(profile, samples, t_req)
+    }
+
+    pub fn profiles(&self) -> &[String] {
+        self.client.profiles()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.client.n_shards()
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.client.stats()
+    }
+
+    /// Drop this handle's senders, wait for every shard to drain, and
+    /// return the final stats snapshot.  Blocks until all outstanding
+    /// [`PoolClient`] clones are dropped too.
+    pub fn shutdown(self) -> ServerStats {
+        let Self { client, joins } = self;
+        let counters = client.counters.clone();
+        drop(client);
+        for j in joins {
+            let _ = j.join();
+        }
+        ServerStats::snapshot(counters.iter().map(|c| c.as_ref()))
+    }
+}
+
+/// The datapath loaded once per profile; shard engines stamp cheap
+/// clones from it instead of re-parsing the weight JSONs per instance.
+enum ProfileEngine {
+    Cnn(crate::equalizer::cnn::FixedPointCnn),
+    Fir(crate::equalizer::fir::FirEqualizer),
+    Volterra(Box<crate::equalizer::volterra::VolterraEqualizer>),
+    /// PJRT executables own per-instance clients — loaded per instance.
+    Hlo,
+}
+
+/// Everything a profile contributes to a pool, resolved and parsed
+/// exactly once: the widest-bucket width, the family-specific overlap
+/// geometry, and the loaded datapath.
+struct ProfileBlueprint {
+    width: usize,
+    o_act: usize,
+    n_os: usize,
+    engine: ProfileEngine,
+}
+
+impl ProfileBlueprint {
+    fn load(reg: &ArtifactRegistry, profile: &str) -> Result<Self> {
+        let entry = reg.profile_entry(profile)?;
+        let width = entry.width();
+        Ok(match entry.kind {
+            ArtifactKind::NativeCnn => {
+                let cnn = entry.load_native_cnn()?;
+                let cfg = *cnn.cfg();
+                anyhow::ensure!(
+                    cfg.out_symbols(width) * cfg.n_os == width,
+                    "width {width} is off the decimation grid of {cfg:?}"
+                );
+                Self {
+                    width,
+                    o_act: cfg.o_act_samples(),
+                    n_os: cfg.n_os,
+                    engine: ProfileEngine::Cnn(cnn),
+                }
+            }
+            ArtifactKind::NativeFir => {
+                let w = FirWeights::load(&entry.abs_path)?;
+                // The filter window spans i-(m-1)/2 .. i+m/2 (see
+                // FirEqualizer::equalize), so m/2 covers the wider
+                // side for both tap-count parities.
+                let half = w.cfg.taps / 2;
+                Self {
+                    width,
+                    o_act: half.next_multiple_of(w.cfg.n_os),
+                    n_os: w.cfg.n_os,
+                    engine: ProfileEngine::Fir(
+                        crate::equalizer::fir::FirEqualizer::from_weights(&w),
+                    ),
+                }
+            }
+            ArtifactKind::NativeVolterra => {
+                let w = VolterraWeights::load(&entry.abs_path)?;
+                let half = w.m1.max(w.m2).max(w.m3).div_ceil(2);
+                Self {
+                    width,
+                    o_act: half.next_multiple_of(w.n_os),
+                    n_os: w.n_os,
+                    engine: ProfileEngine::Volterra(Box::new(w.to_equalizer())),
+                }
+            }
+            ArtifactKind::Hlo => {
+                // HLO entries are CNN lowerings of the selected topology.
+                let cfg = CnnTopologyCfg::SELECTED;
+                Self {
+                    width,
+                    o_act: cfg.o_act_samples(),
+                    n_os: cfg.n_os,
+                    engine: ProfileEngine::Hlo,
+                }
+            }
+        })
+    }
+
+    /// Stamp one shard's serving engine: `instances` workers cloned
+    /// from the loaded datapath.
+    fn shard_engine(
+        &self,
+        reg: &ArtifactRegistry,
+        profile: &str,
+        instances: usize,
+        optimizer: &SeqLenOptimizer,
+        lut_targets: &[f64],
+    ) -> Result<EqualizerServer<AnyInstance>> {
+        let workers: Vec<AnyInstance> = (0..instances)
+            .map(|_| -> Result<AnyInstance> {
+                Ok(match &self.engine {
+                    ProfileEngine::Cnn(cnn) => {
+                        AnyInstance::Native(NativeInstance::new(cnn.clone(), self.width))
+                    }
+                    ProfileEngine::Fir(fir) => {
+                        AnyInstance::Fir(FirInstance::new(fir.clone(), self.width))
+                    }
+                    ProfileEngine::Volterra(vol) => {
+                        AnyInstance::Volterra(VolterraInstance::new(vol.clone(), self.width))
+                    }
+                    ProfileEngine::Hlo => AnyInstance::load(reg.profile_entry(profile)?)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        EqualizerServer::new(workers, self.o_act, self.n_os, optimizer, lut_targets)
+    }
+}
+
+impl ServerPool<AnyInstance> {
+    /// Build a pool whose shards each serve every profile in
+    /// `profiles`, resolved through `reg` (see
+    /// [`ArtifactRegistry::profile_entry`] for the naming scheme).
+    /// Each profile's weights are parsed once; shards clone from the
+    /// loaded datapath.
+    pub fn from_registry<S: AsRef<str>>(
+        reg: &ArtifactRegistry,
+        profiles: &[S],
+        cfg: &PoolConfig,
+    ) -> Result<Self> {
+        anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
+        anyhow::ensure!(!profiles.is_empty(), "need at least one profile");
+        anyhow::ensure!(
+            cfg.instances_per_shard.is_power_of_two(),
+            "instances_per_shard must be a power of two (SSM tree), got {}",
+            cfg.instances_per_shard
+        );
+        let topo = CnnTopologyCfg::SELECTED;
+        let timing =
+            TimingModel::new(cfg.lut_instances, topo.vp, topo.layers, topo.kernel, cfg.f_clk);
+        let optimizer = SeqLenOptimizer::new(timing);
+        let lut_targets: Vec<f64> = (1..=100).map(|i| i as f64 * 1e9).collect();
+        let blueprints: Vec<(String, ProfileBlueprint)> = profiles
+            .iter()
+            .map(|p| -> Result<(String, ProfileBlueprint)> {
+                Ok((p.as_ref().to_string(), ProfileBlueprint::load(reg, p.as_ref())?))
+            })
+            .collect::<Result<_>>()?;
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
+            let mut shard = Shard::new();
+            for (name, blueprint) in &blueprints {
+                let engine = blueprint.shard_engine(
+                    reg,
+                    name,
+                    cfg.instances_per_shard,
+                    &optimizer,
+                    &lut_targets,
+                )?;
+                shard = shard.with_profile(name.clone(), engine);
+            }
+            shards.push(shard);
+        }
+        Self::new(shards, cfg.policy, cfg.queue_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::instance::DecimatorInstance;
+
+    fn engine(n_i: usize, width: usize, o_act: usize) -> EqualizerServer<DecimatorInstance> {
+        let instances: Vec<DecimatorInstance> =
+            (0..n_i).map(|_| DecimatorInstance { width, n_os: 2 }).collect();
+        let opt = SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6));
+        let targets: Vec<f64> = (1..=100).map(|i| i as f64 * 1e9).collect();
+        EqualizerServer::new(instances, o_act, 2, &opt, &targets).unwrap()
+    }
+
+    #[test]
+    fn pool_construction_invariants() {
+        // No shards.
+        assert!(ServerPool::<DecimatorInstance>::new(vec![], RoutePolicy::RoundRobin, 4).is_err());
+        // Zero queue capacity.
+        let s = Shard::single("a", engine(2, 256, 32));
+        assert!(ServerPool::new(vec![s], RoutePolicy::RoundRobin, 0).is_err());
+        // Empty profile set.
+        assert!(
+            ServerPool::new(vec![Shard::<DecimatorInstance>::new()], RoutePolicy::RoundRobin, 4)
+                .is_err()
+        );
+        // Mismatched profile sets across shards.
+        let a = Shard::single("a", engine(2, 256, 32));
+        let b = Shard::single("b", engine(2, 256, 32));
+        assert!(ServerPool::new(vec![a, b], RoutePolicy::RoundRobin, 4).is_err());
+        // Valid 2-shard pool.
+        let a = Shard::single("a", engine(2, 256, 32));
+        let b = Shard::single("a", engine(2, 256, 32));
+        let pool = ServerPool::new(vec![a, b], RoutePolicy::RoundRobin, 4).unwrap();
+        assert_eq!(pool.n_shards(), 2);
+    }
+
+    #[test]
+    fn round_trip_and_profile_rejection() {
+        let shard = Shard::new()
+            .with_profile("even", engine(2, 256, 32))
+            .with_profile("odd", engine(2, 256, 32));
+        let pool = ServerPool::new(vec![shard], RoutePolicy::RoundRobin, 8).unwrap().spawn();
+        assert_eq!(pool.profiles(), &["even".to_string(), "odd".to_string()][..]);
+        let x: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+        let resp = pool.call("even", x.clone(), None).unwrap();
+        assert_eq!(resp.soft_symbols.len(), 512);
+        assert_eq!(resp.shard, 0);
+        assert_eq!(resp.profile, "even");
+        assert!(pool.call("neither", x, None).is_err());
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_requests(), 1, "rejected submit never reached a shard");
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!("round-robin".parse::<RoutePolicy>().unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!("sq".parse::<RoutePolicy>().unwrap(), RoutePolicy::ShortestQueue);
+        assert!("fifo".parse::<RoutePolicy>().is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_shards() {
+        let shards: Vec<_> = (0..2).map(|_| Shard::single("d", engine(2, 256, 32))).collect();
+        let pool = ServerPool::new(shards, RoutePolicy::RoundRobin, 8).unwrap().spawn();
+        let mut seen = Vec::new();
+        for _ in 0..4 {
+            let resp = pool.call("d", vec![0.0; 512], None).unwrap();
+            seen.push(resp.shard);
+        }
+        assert_eq!(seen, vec![0, 1, 0, 1]);
+        let stats = pool.shutdown();
+        assert_eq!(stats.shards[0].requests, 2);
+        assert_eq!(stats.shards[1].requests, 2);
+    }
+}

@@ -1,7 +1,7 @@
 //! Streaming server front-end (std threads + channels; tokio is not
-//! vendored in this offline image — the request loop is a dedicated
-//! worker thread, which also matches the hardware model: one engine
-//! complex owning its instances).
+//! vendored in this offline image — request loops are dedicated worker
+//! threads, which also matches the hardware model: one engine complex
+//! owning its instances).
 //!
 //! Serving shape: clients submit sample bursts over an mpsc channel;
 //! the coordinator chunks them (OGM), fans work out to instance workers
@@ -9,13 +9,22 @@
 //! replies per burst with soft symbols + timing.  Each burst may carry
 //! its own throughput requirement and the server picks `l_inst` from
 //! the LUT — the paper's runtime sequence-length selection (Fig. 11).
+//!
+//! [`EqualizerServer`] is the single-stream engine: one fixed artifact
+//! width, one profile.  Since the sharded pool landed it is also the
+//! *per-profile engine inside a pool shard* — [`EqualizerServer::spawn`]
+//! simply delegates to a one-shard [`super::pool::ServerPool`], so the
+//! legacy API and the pool share one request path.
 
+use super::pipeline::EqualizerPipeline;
+use super::pool::{PoolResponse, RoutePolicy, ServerPool, Shard, DEFAULT_QUEUE_CAP};
 use super::seqlen::{LutRow, SeqLenOptimizer};
-use super::{msm, ogm, orm, ssm};
 use crate::coordinator::instance::EqualizerInstance;
 use anyhow::Result;
 use std::sync::mpsc;
-use std::time::Instant;
+
+/// Profile name the single-stream front-end registers its engine under.
+pub const DEFAULT_PROFILE: &str = "default";
 
 /// One equalization request.
 pub struct EqualizeRequest {
@@ -38,19 +47,17 @@ pub struct EqualizeResponse {
     pub elapsed_us: f64,
 }
 
-/// Streaming server around a fixed set of instances (`Send`: the
-/// request loop runs on its own thread).
-pub struct EqualizerServer<I: EqualizerInstance + Send + 'static = Box<dyn EqualizerInstance + Send>> {
-    instances: Vec<I>,
-    /// Width every instance accepts (= max l_ol).
-    l_ol: usize,
-    o_act: usize,
-    n_os: usize,
+/// Single-stream serving engine around a fixed set of instances: LUT-
+/// driven per-burst `l_inst` selection over one [`EqualizerPipeline`].
+pub struct EqualizerServer<
+    I: EqualizerInstance + Send + 'static = Box<dyn EqualizerInstance + Send>,
+> {
+    pipe: EqualizerPipeline<I>,
     lut: Vec<LutRow>,
-    default_l_inst: usize,
 }
 
-/// Handle to a running server thread.
+/// Handle to a running single-stream server (a one-shard pool behind a
+/// forwarding thread that keeps the legacy request type).
 pub struct ServerHandle {
     pub tx: mpsc::Sender<EqualizeRequest>,
     join: std::thread::JoinHandle<()>,
@@ -81,71 +88,74 @@ impl<I: EqualizerInstance + Send + 'static> EqualizerServer<I> {
         optimizer: &SeqLenOptimizer,
         lut_targets: &[f64],
     ) -> Result<Self> {
-        anyhow::ensure!(!instances.is_empty());
+        anyhow::ensure!(!instances.is_empty(), "need at least one instance");
         let l_ol = instances[0].width();
-        for inst in &instances {
-            anyhow::ensure!(inst.width() == l_ol, "instance width mismatch");
-        }
         anyhow::ensure!(l_ol > 2 * o_act, "l_ol must exceed the overlap");
-        Ok(Self {
-            instances,
-            l_ol,
-            o_act,
-            n_os,
-            lut: optimizer.build_lut(lut_targets),
-            default_l_inst: l_ol - 2 * o_act,
-        })
+        let pipe = EqualizerPipeline::new(instances, l_ol - 2 * o_act, o_act, n_os)?;
+        Ok(Self { pipe, lut: optimizer.build_lut(lut_targets) })
+    }
+
+    /// The fixed artifact width every instance accepts.
+    pub fn l_ol(&self) -> usize {
+        self.pipe.l_ol()
+    }
+
+    /// Largest payload one chunk can carry (`l_ol - 2 o_act`).
+    pub fn max_payload(&self) -> usize {
+        self.pipe.l_inst()
     }
 
     /// Pick l_inst for a request: LUT hit if a requirement is given and
     /// achievable with this fixed artifact width, else the full payload.
     fn pick_l_inst(&self, t_req: Option<f64>) -> usize {
-        let max_payload = self.l_ol - 2 * self.o_act;
-        let grid = self.n_os;
+        let max_payload = self.pipe.l_inst();
+        let grid = self.pipe.n_os();
         match t_req {
-            None => self.default_l_inst,
+            None => max_payload,
             Some(t) => SeqLenOptimizer::lookup(&self.lut, t)
-                .map(|row| row.l_inst.min(max_payload).next_multiple_of(grid).min(max_payload))
+                .map(|row| {
+                    row.l_inst.min(max_payload).next_multiple_of(grid).min(max_payload)
+                })
                 .unwrap_or(max_payload),
         }
     }
 
-    fn process(&mut self, samples: &[f32], l_inst: usize) -> Result<Vec<f32>> {
-        // Chunk with the requested payload, then zero-extend every chunk
-        // to the fixed instance width (the FPGA pads the stream tail).
-        let mut chunks = ogm::make_chunks(samples, l_inst, self.o_act);
-        for c in &mut chunks {
-            c.data.resize(self.l_ol, 0.0);
-        }
-        let queues = ssm::distribute(&chunks, self.instances.len());
-        let mut per_instance: Vec<Vec<Vec<f32>>> = Vec::with_capacity(self.instances.len());
-        for (inst, queue) in self.instances.iter_mut().zip(&queues) {
-            let mut outs = Vec::with_capacity(queue.len());
-            for &ci in queue {
-                outs.push(inst.process(&chunks[ci].data)?);
-            }
-            per_instance.push(outs);
-        }
-        let ordered = msm::collect(&per_instance, chunks.len());
-        let valid: Vec<usize> = chunks.iter().map(|c| c.valid / self.n_os).collect();
-        Ok(orm::merge_outputs(&ordered, self.o_act / self.n_os, &valid))
+    /// Serve one burst: select `l_inst`, equalize, return the soft
+    /// symbols with the selection.  This is the request path shared by
+    /// the legacy single-stream loop and every pool shard.
+    pub fn serve_one(&mut self, samples: &[f32], t_req: Option<f64>) -> (Result<Vec<f32>>, usize) {
+        let l_inst = self.pick_l_inst(t_req);
+        (self.pipe.equalize_resized(samples, l_inst), l_inst)
     }
 
-    /// Spawn the request loop on its own thread.
-    pub fn spawn(mut self) -> ServerHandle {
+    /// Spawn the request loop: a one-shard [`ServerPool`] serving this
+    /// engine under [`DEFAULT_PROFILE`], plus a forwarding thread that
+    /// adapts the legacy [`EqualizeRequest`] channel onto it.
+    pub fn spawn(self) -> ServerHandle {
+        let pool = ServerPool::new(
+            vec![Shard::single(DEFAULT_PROFILE, self)],
+            RoutePolicy::RoundRobin,
+            DEFAULT_QUEUE_CAP,
+        )
+        .expect("one-shard pool is always valid")
+        .spawn();
         let (tx, rx) = mpsc::channel::<EqualizeRequest>();
         let join = std::thread::spawn(move || {
             while let Ok(req) = rx.recv() {
-                let l_inst = self.pick_l_inst(req.t_req);
-                let t0 = Instant::now();
-                let result = self.process(&req.samples, l_inst);
-                let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
-                let resp = match result {
-                    Ok(soft_symbols) => EqualizeResponse { soft_symbols, l_inst, elapsed_us },
-                    Err(_) => EqualizeResponse { soft_symbols: vec![], l_inst, elapsed_us },
+                let resp = pool
+                    .submit(DEFAULT_PROFILE, req.samples, req.t_req)
+                    .ok()
+                    .and_then(|reply| reply.recv().ok());
+                let resp = match resp {
+                    Some(PoolResponse { soft_symbols, l_inst, elapsed_us, .. }) => {
+                        // Errors already surface as an empty payload.
+                        EqualizeResponse { soft_symbols, l_inst, elapsed_us }
+                    }
+                    None => EqualizeResponse { soft_symbols: vec![], l_inst: 0, elapsed_us: 0.0 },
                 };
                 let _ = req.reply.send(resp);
             }
+            pool.shutdown();
         });
         ServerHandle { tx, join }
     }
@@ -198,6 +208,22 @@ mod tests {
             let resp = h.call(samples, None).unwrap();
             assert_eq!(resp.soft_symbols[0], round as f32);
         }
+        h.shutdown();
+    }
+
+    #[test]
+    fn serve_one_is_the_pool_request_path() {
+        // serve_one (used directly by pool shards) matches what spawn's
+        // channel path replies, and rejects nothing the LUT allows.
+        let mut engine = server(2, 512, 64);
+        let samples: Vec<f32> = (0..2048).map(|i| i as f32).collect();
+        let (soft, l_inst) = engine.serve_one(&samples, None);
+        assert_eq!(l_inst, engine.max_payload());
+        let soft = soft.unwrap();
+        let h = server(2, 512, 64).spawn();
+        let resp = h.call(samples, None).unwrap();
+        assert_eq!(resp.soft_symbols, soft);
+        assert_eq!(resp.l_inst, l_inst);
         h.shutdown();
     }
 }

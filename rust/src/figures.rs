@@ -179,7 +179,9 @@ fn fig14() -> Result<()> {
     let ht_lat = m.lambda_sym_s(l);
     // LP FPGA: SPB fixed at 8 symbols; latency = pipeline depth at the
     // engine rate.
-    let lp_lat = 8.0 * 2.0 / lp_throughput_baud(&cfg, *Dop::paper_sweep(&cfg).last().unwrap(), &XC7S25) / 2.0;
+    let lp_lat =
+        8.0 * 2.0 / lp_throughput_baud(&cfg, *Dop::paper_sweep(&cfg).last().unwrap(), &XC7S25)
+            / 2.0;
     println!("{:>12} | {:>11} {:>11} {:>11} {:>11} {:>11} | {:>11} {:>11}",
         "SPB", "RTX-PT", "RTX-TRT", "AGX-PT", "AGX-TRT", "CPU", "HT-FPGA", "LP-FPGA");
     for spb in SPB_GRID {

@@ -113,12 +113,39 @@ pub fn round_ties_even(x: f64) -> f64 {
 /// Per-tensor fixed-point formats of the quantized CNN (one entry per
 /// weight tensor `w{l}` and activation `a_in`/`a{l}`) — the shape of the
 /// QAT output `qat_bits_*.json` and of `manifest.json`'s `bits`.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct QuantSpec(pub std::collections::BTreeMap<String, QFormat>);
 
 impl QuantSpec {
     pub fn get(&self, key: &str) -> Option<QFormat> {
         self.0.get(key).copied()
+    }
+
+    /// Parse the QAT export shape `{"w0": [3, 10], "a_in": [4, 6], ...}`
+    /// (written by `python/compile/quant.py`, consumed by the AOT path
+    /// — and now by the native quantized entries too).
+    pub fn from_json(v: &crate::util::json::Json) -> anyhow::Result<Self> {
+        let obj = v.as_obj().ok_or_else(|| anyhow::anyhow!("qat bits: expected an object"))?;
+        anyhow::ensure!(!obj.is_empty(), "qat bits: empty object");
+        let mut m = std::collections::BTreeMap::new();
+        for (key, val) in obj {
+            let arr = val
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("qat bits {key:?}: expected [m, n]"))?;
+            anyhow::ensure!(arr.len() == 2, "qat bits {key:?}: expected [m, n], got {arr:?}");
+            let dim = |i: usize, what: &str| -> anyhow::Result<u8> {
+                let b = arr[i]
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("qat bits {key:?}: bad {what}"))?;
+                anyhow::ensure!(b <= 32, "qat bits {key:?}: {what} {b} > 32");
+                Ok(b as u8)
+            };
+            let int_bits = dim(0, "int bits")?;
+            let frac_bits = dim(1, "frac bits")?;
+            anyhow::ensure!(int_bits >= 1, "qat bits {key:?}: need >= 1 int bit (sign)");
+            m.insert(key.clone(), QFormat::new(int_bits, frac_bits));
+        }
+        Ok(Self(m))
     }
 
     /// The paper's Sec. 4 result: ~13 bit weights (Q3.10), ~10 bit
@@ -211,6 +238,30 @@ mod tests {
         let spec = QuantSpec::paper_default(3);
         assert_eq!(spec.avg_weight_bits(), 13.0);
         assert_eq!(spec.avg_act_bits(), 10.0);
+    }
+
+    #[test]
+    fn quant_spec_from_json_roundtrips_paper_default() {
+        // The paper operating point serialized the way quant.py writes
+        // qat_bits_*.json parses back to the identical spec.
+        let text = r#"{"w0": [3, 10], "w1": [3, 10], "w2": [3, 10],
+                       "a_in": [4, 6], "a0": [4, 6], "a1": [4, 6], "a2": [4, 6]}"#;
+        let spec = QuantSpec::from_json(&crate::util::json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec, QuantSpec::paper_default(3));
+        assert_eq!(spec.get("a_in"), Some(QFormat::new(4, 6)));
+    }
+
+    #[test]
+    fn quant_spec_from_json_rejects_malformed() {
+        let parse = |t: &str| QuantSpec::from_json(&crate::util::json::parse(t).unwrap());
+        assert!(parse("{}").is_err(), "empty object");
+        assert!(parse("[1, 2]").is_err(), "not an object");
+        assert!(parse(r#"{"w0": [3]}"#).is_err(), "missing frac bits");
+        assert!(parse(r#"{"w0": [3, 10, 1]}"#).is_err(), "extra element");
+        assert!(parse(r#"{"w0": [0, 10]}"#).is_err(), "no sign bit");
+        assert!(parse(r#"{"w0": [3, 64]}"#).is_err(), "absurd width");
+        assert!(parse(r#"{"w0": [3.5, 10]}"#).is_err(), "fractional bits");
+        assert!(parse(r#"{"w0": "Q3.10"}"#).is_err(), "wrong value shape");
     }
 
     #[test]

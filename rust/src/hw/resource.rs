@@ -32,7 +32,10 @@ impl ResourceUsage {
     }
 
     pub fn fits(&self, dev: &Device) -> bool {
-        self.luts <= dev.luts && self.ffs <= dev.ffs && self.dsps <= dev.dsps && self.brams <= dev.brams
+        self.luts <= dev.luts
+            && self.ffs <= dev.ffs
+            && self.dsps <= dev.dsps
+            && self.brams <= dev.brams
     }
 }
 
@@ -92,7 +95,9 @@ pub fn ht_design(cfg: &CnnTopologyCfg, n_i: u64) -> ResourceUsage {
             + n_i * (lut_macs_per_inst * LUT_PER_MAC + LUT_INSTANCE_CTRL)
             + stream_modules * LUT_STREAM,
         ffs: FF_BASE + n_i * FF_PER_INSTANCE + stream_modules * FF_STREAM,
-        brams: BRAM_BASE + (n_i as f64 * BRAM_INSTANCE).round() as u64 + stream_modules * BRAM_STREAM,
+        brams: BRAM_BASE
+            + (n_i as f64 * BRAM_INSTANCE).round() as u64
+            + stream_modules * BRAM_STREAM,
     }
 }
 

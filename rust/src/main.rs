@@ -35,8 +35,10 @@ COMMANDS:
   seqlen    [--instances N] [--target SAMPLES/S]       Sec. 6.2 framework
   figures   <fig2|fig4|fig8a|fig8b|fig12|fig13|fig14|
              fig15|table1|snr|all> [--artifacts DIR]   regenerate results
-  serve     [--artifacts DIR] [--instances N]
-            [--requests N] [--spb SYMBOLS]             streaming-server demo
+  serve     [--artifacts DIR] [--shards N] [--instances N]
+            [--clients M] [--requests K] [--spb SYMBOLS]
+            [--profiles P1,P2,..] [--policy round-robin|shortest-queue]
+            [--queue-cap N]                            multi-stream serving demo
   config    [--profile high-throughput|low-power]      print JSON config
 ";
 
@@ -126,8 +128,12 @@ fn equalize(args: &Args) -> Result<()> {
     anyhow::ensure!(!buckets.is_empty(), "no {model_name}/{channel} quant={quant} artifacts");
     let (bucket, l_inst) =
         equalizer::coordinator::pipeline::plan_bucket(desired_l_inst, o_act, &buckets)
-            .ok_or_else(|| anyhow::anyhow!("no bucket fits l_inst={desired_l_inst} o_act={o_act}"))?;
-    println!("bucket width {bucket}, l_inst {l_inst}, o_act {o_act}, instances {instances}, mode {mode}");
+            .ok_or_else(|| {
+                anyhow::anyhow!("no bucket fits l_inst={desired_l_inst} o_act={o_act}")
+            })?;
+    println!(
+        "bucket width {bucket}, l_inst {l_inst}, o_act {o_act}, instances {instances}, mode {mode}"
+    );
 
     let entry = reg
         .models
@@ -167,57 +173,113 @@ fn equalize(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Streaming-server demo: N requests with randomized per-request
-/// throughput requirements; reports the l_inst the LUT selected and the
-/// wall-clock latency distribution.
+/// Multi-stream serving demo: a sharded pool serving a synthetic
+/// multi-client workload — M client threads, each submitting K bursts
+/// that cycle through the requested profiles with randomized per-burst
+/// throughput requirements.  Reports per-request routing and the
+/// per-shard stats table.
 fn serve(args: &Args) -> Result<()> {
     use equalizer::channel::mt19937::Mt19937;
-    use equalizer::coordinator::instance::EqualizerInstance;
-    use equalizer::coordinator::server::EqualizerServer;
-    use equalizer::metrics::stats::LatencyStats;
+    use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
 
     let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
-    let n_i = args.usize_or("instances", 2)?;
-    let n_requests = args.usize_or("requests", 16)?;
-    let spb = args.usize_or("spb", 8192)?;
-
-    let cfg = CnnTopologyCfg::SELECTED;
-    let entry = reg.best_model("cnn", "imdd", 4096)?;
-    let instances: Vec<Box<dyn EqualizerInstance + Send>> = (0..n_i)
-        .map(|_| Ok(Box::new(AnyInstance::load(entry)?) as Box<_>))
-        .collect::<Result<_>>()?;
-    let o_act = cfg.o_act_samples();
-    let model = TimingModel::new(64, cfg.vp, cfg.layers, cfg.kernel, 200e6);
-    let opt = SeqLenOptimizer::new(model);
-    let targets: Vec<f64> = (1..=100).map(|i| i as f64 * 1e9).collect();
-    let server = EqualizerServer::new(instances, o_act, cfg.n_os, &opt, &targets)?;
-    let handle = server.spawn();
-
-    println!("serving {n_requests} bursts of {spb} symbols over {n_i} instances");
-    let data = ImddChannel::default().transmit(spb * n_requests, 99);
-    let mut lat = LatencyStats::new();
-    let mut ber = BerCounter::new();
-    let mut rng = Mt19937::new(5);
-    for r in 0..n_requests {
-        let t_req = if r % 3 == 0 { None } else { Some(10e9 + rng.next_f64() * 85e9) };
-        let burst = data.rx[r * spb * 2..(r + 1) * spb * 2].to_vec();
-        let resp = handle.call(burst, t_req)?;
-        ber.update(&resp.soft_symbols, &data.symbols[r * spb..r * spb + resp.soft_symbols.len()]);
-        lat.record_us(resp.elapsed_us);
-        println!(
-            "  req {r:>3}  t_req {:>9}  l_inst {:>6}  {:>9.1} us",
-            t_req.map(|t| format!("{:.0}G", t / 1e9)).unwrap_or_else(|| "-".into()),
-            resp.l_inst,
-            resp.elapsed_us
-        );
+    let shards = args.usize_or("shards", 2)?.max(1);
+    let instances = args.usize_or("instances", 2)?.next_power_of_two();
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let requests = args.usize_or("requests", 8)?.max(1);
+    let spb = args.usize_or("spb", 8192)?.max(64);
+    let policy: RoutePolicy = args.str_or("policy", "shortest-queue").parse()?;
+    let queue_cap = args.usize_or("queue-cap", 64)?.max(1);
+    let profiles: Vec<String> = args
+        .str_or("profiles", "cnn_imdd,fir_imdd")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    for p in &profiles {
+        reg.profile_entry(p)?;
     }
-    handle.shutdown();
+
+    let cfg = PoolConfig {
+        shards,
+        instances_per_shard: instances,
+        policy,
+        queue_cap,
+        ..PoolConfig::default()
+    };
+    let pool = ServerPool::from_registry(&reg, &profiles, &cfg)?.spawn();
     println!(
-        "
-BER {:.3e}   latency p50 {:.1} us  p99 {:.1} us",
-        ber.ber(),
-        lat.percentile_us(50.0),
-        lat.percentile_us(99.0)
+        "pool: {shards} shard(s) x {instances} instance(s), profiles {profiles:?}, \
+         {policy:?}, queue cap {queue_cap}"
+    );
+    println!("workload: {clients} client(s) x {requests} burst(s) x {spb} symbols\n");
+
+    struct Burst {
+        profile: String,
+        rx: Vec<f32>,
+        reference: Vec<f32>,
+        t_req: Option<f64>,
+    }
+
+    // Pre-generate every burst so the timed window below measures the
+    // pool, not the channel simulators.
+    let workloads: Vec<Vec<Burst>> = (0..clients)
+        .map(|c| {
+            let mut rng = Mt19937::new(1000 + c as u32);
+            (0..requests)
+                .map(|r| {
+                    let profile = profiles[(c + r) % profiles.len()].clone();
+                    let seed = (c * requests + r) as u32 + 7;
+                    let data = if profile.ends_with("proakis") {
+                        ProakisBChannel::default().transmit(spb, seed)
+                    } else {
+                        ImddChannel::default().transmit(spb, seed)
+                    };
+                    let t_req =
+                        if r % 3 == 0 { None } else { Some(10e9 + rng.next_f64() * 85e9) };
+                    Burst { profile, rx: data.rx, reference: data.symbols, t_req }
+                })
+                .collect()
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::with_capacity(clients);
+    for (c, workload) in workloads.into_iter().enumerate() {
+        let client = pool.client();
+        joins.push(std::thread::spawn(move || -> Result<usize> {
+            let mut symbols = 0usize;
+            for (r, burst) in workload.into_iter().enumerate() {
+                let Burst { profile, rx, reference, t_req } = burst;
+                let resp = client.call(&profile, rx, t_req)?;
+                let mut ber = BerCounter::new();
+                ber.update(&resp.soft_symbols, &reference[..resp.soft_symbols.len()]);
+                println!(
+                    "  client {c} req {r}  {profile:>14} -> shard {}  t_req {:>9}  \
+                     l_inst {:>6}  {:>9.1} us  BER {:.2e}",
+                    resp.shard,
+                    t_req.map(|t| format!("{:.0}G", t / 1e9)).unwrap_or_else(|| "-".into()),
+                    resp.l_inst,
+                    resp.elapsed_us,
+                    ber.ber()
+                );
+                symbols += resp.soft_symbols.len();
+            }
+            Ok(symbols)
+        }));
+    }
+    let mut total_symbols = 0usize;
+    for j in joins {
+        total_symbols += j.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = pool.shutdown();
+    println!();
+    print!("{}", stats.render());
+    println!(
+        "aggregate: {:.2} Msym/s over {:.2} ms wall",
+        total_symbols as f64 / wall / 1e6,
+        wall * 1e3
     );
     Ok(())
 }

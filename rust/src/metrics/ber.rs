@@ -91,11 +91,11 @@ mod tests {
     #[test]
     fn ci_shrinks_with_samples() {
         let mut small = BerCounter::new();
-        small.update(&vec![1.0; 100], &vec![-1.0; 100]);
-        small.update(&vec![1.0; 100], &vec![1.0; 100]);
+        small.update(&[1.0; 100], &[-1.0; 100]);
+        small.update(&[1.0; 100], &[1.0; 100]);
         let mut large = BerCounter::new();
-        large.update(&vec![1.0; 10_000], &vec![-1.0; 10_000]);
-        large.update(&vec![1.0; 10_000], &vec![1.0; 10_000]);
+        large.update(&[1.0; 10_000], &[-1.0; 10_000]);
+        large.update(&[1.0; 10_000], &[1.0; 10_000]);
         assert!(large.ci95() < small.ci95());
     }
 

@@ -1,4 +1,6 @@
-//! Measurement substrates: BER counting and latency/throughput statistics.
+//! Measurement substrates: BER counting, latency/throughput statistics
+//! and the per-shard serving counters.
 
 pub mod ber;
+pub mod serving;
 pub mod stats;

@@ -1,0 +1,302 @@
+//! Serving-side counters: per-shard request / throughput / latency /
+//! queue-depth accounting for the multi-stream pool
+//! ([`crate::coordinator::pool::ServerPool`]).
+//!
+//! One [`ShardCounters`] is shared between a shard's worker thread and
+//! the dispatcher: the dispatcher bumps the outstanding-work depth on
+//! submit (and reads it for shortest-queue routing), the worker
+//! decrements it when a request *finishes* — so the depth counts
+//! queued **and in-service** work, which is what routing needs.
+//! [`ServerStats`] is the immutable snapshot handed to callers.
+//!
+//! Latency percentiles are computed over a bounded reservoir of the
+//! most recent [`LATENCY_RING_CAP`] requests, so a long-lived pool's
+//! memory and snapshot cost stay constant.
+
+use super::stats::LatencyStats;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Latency samples retained per shard (ring buffer of the most recent).
+pub const LATENCY_RING_CAP: usize = 4096;
+
+/// Ring buffer of the last [`LATENCY_RING_CAP`] latency samples.
+#[derive(Debug, Default)]
+struct LatencyRing {
+    samples_us: Vec<f64>,
+    next: usize,
+}
+
+impl LatencyRing {
+    fn record(&mut self, us: f64) {
+        if self.samples_us.len() < LATENCY_RING_CAP {
+            self.samples_us.push(us);
+        } else {
+            self.samples_us[self.next] = us;
+            self.next = (self.next + 1) % LATENCY_RING_CAP;
+        }
+    }
+
+    fn stats(&self) -> LatencyStats {
+        let mut s = LatencyStats::new();
+        for &us in &self.samples_us {
+            s.record_us(us);
+        }
+        s
+    }
+}
+
+/// Live counters for one shard (all methods are `&self`; safe to share
+/// behind an `Arc`).
+#[derive(Debug, Default)]
+pub struct ShardCounters {
+    queue_depth: AtomicUsize,
+    peak_queue_depth: AtomicUsize,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    symbols: AtomicU64,
+    busy_us: AtomicU64,
+    latency: Mutex<LatencyRing>,
+}
+
+impl ShardCounters {
+    /// A request entered this shard (queued or travelling): bump the
+    /// outstanding depth and latch the peak.
+    pub fn enqueued(&self) {
+        let depth = self.enqueued_pending();
+        self.commit_peak(depth);
+    }
+
+    /// Like [`Self::enqueued`] but without touching the peak — for
+    /// optimistic submits that may be rolled back ([`Self::dequeued`]);
+    /// commit the returned depth with [`Self::commit_peak`] once the
+    /// request actually lands.
+    pub fn enqueued_pending(&self) -> usize {
+        self.queue_depth.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Latch `depth` into the peak once an optimistic submit succeeded.
+    pub fn commit_peak(&self, depth: usize) {
+        self.peak_queue_depth.fetch_max(depth, Ordering::SeqCst);
+    }
+
+    /// A request left this shard: finished service, or its send failed
+    /// after the optimistic increment.
+    pub fn dequeued(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Requests outstanding on this shard: waiting in (or travelling
+    /// to) the queue, plus the one in service.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::SeqCst)
+    }
+
+    /// Record one completed request: output symbols, wall time on the
+    /// shard, and whether it failed.
+    pub fn served(&self, symbols: usize, elapsed_us: f64, is_error: bool) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if is_error {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        self.symbols.fetch_add(symbols as u64, Ordering::Relaxed);
+        self.busy_us.fetch_add(elapsed_us.max(0.0).round() as u64, Ordering::Relaxed);
+        self.latency.lock().expect("latency lock").record(elapsed_us);
+    }
+
+    /// Immutable snapshot of this shard's counters (latency stats over
+    /// the last [`LATENCY_RING_CAP`] requests).
+    pub fn snapshot(&self, shard: usize) -> ShardStats {
+        let latency = self.latency.lock().expect("latency lock").stats();
+        ShardStats {
+            shard,
+            requests: self.requests.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            symbols: self.symbols.load(Ordering::Relaxed),
+            busy_us: self.busy_us.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::SeqCst),
+            peak_queue_depth: self.peak_queue_depth.load(Ordering::SeqCst),
+            p50_us: latency.percentile_us(50.0),
+            p99_us: latency.percentile_us(99.0),
+            max_us: latency.max_us(),
+        }
+    }
+}
+
+/// Point-in-time view of one shard.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    pub requests: u64,
+    pub errors: u64,
+    /// Soft symbols produced (== bits for PAM-2).
+    pub symbols: u64,
+    /// Summed per-request wall time on the shard worker.
+    pub busy_us: u64,
+    /// Outstanding requests (queued + in service) at snapshot time.
+    pub queue_depth: usize,
+    pub peak_queue_depth: usize,
+    /// Latency percentiles over the last [`LATENCY_RING_CAP`] requests.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+/// Pool-wide snapshot: one [`ShardStats`] per shard.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub shards: Vec<ShardStats>,
+}
+
+impl ServerStats {
+    /// Snapshot every shard's counters, in shard order.
+    pub fn snapshot<'a>(counters: impl IntoIterator<Item = &'a ShardCounters>) -> Self {
+        Self {
+            shards: counters.into_iter().enumerate().map(|(i, c)| c.snapshot(i)).collect(),
+        }
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.shards.iter().map(|s| s.requests).sum()
+    }
+
+    pub fn total_errors(&self) -> u64 {
+        self.shards.iter().map(|s| s.errors).sum()
+    }
+
+    pub fn total_symbols(&self) -> u64 {
+        self.shards.iter().map(|s| s.symbols).sum()
+    }
+
+    /// Aggregate shard throughput over the summed busy time (an upper
+    /// bound on what one shard would sustain; wall-clock aggregate
+    /// throughput is `total_symbols / wall_seconds` at the caller).
+    pub fn busy_msym_per_s(&self) -> f64 {
+        let busy_s: f64 = self.shards.iter().map(|s| s.busy_us as f64 * 1e-6).sum();
+        if busy_s <= 0.0 {
+            return 0.0;
+        }
+        self.total_symbols() as f64 / busy_s / 1e6
+    }
+
+    /// Human-readable per-shard table (ends with a newline).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>10} {:>10} {:>10}",
+            "shard", "requests", "errors", "symbols", "queue", "peak", "p50 us", "p99 us", "busy ms"
+        );
+        for s in &self.shards {
+            let _ = writeln!(
+                out,
+                "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>10.1} {:>10.1} {:>10.2}",
+                s.shard,
+                s.requests,
+                s.errors,
+                s.symbols,
+                s.queue_depth,
+                s.peak_queue_depth,
+                s.p50_us,
+                s.p99_us,
+                s.busy_us as f64 / 1e3
+            );
+        }
+        let _ = writeln!(
+            out,
+            "total {:>9} {:>7} {:>12}  ({:.2} Msym/s per busy shard)",
+            self.total_requests(),
+            self.total_errors(),
+            self.total_symbols(),
+            self.busy_msym_per_s()
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_depth_tracks_peak() {
+        let c = ShardCounters::default();
+        c.enqueued();
+        c.enqueued();
+        c.enqueued();
+        c.dequeued();
+        assert_eq!(c.queue_depth(), 2);
+        let s = c.snapshot(0);
+        assert_eq!(s.peak_queue_depth, 3);
+        assert_eq!(s.queue_depth, 2);
+    }
+
+    #[test]
+    fn served_accumulates() {
+        let c = ShardCounters::default();
+        c.served(512, 100.0, false);
+        c.served(256, 300.0, true);
+        let s = c.snapshot(3);
+        assert_eq!(s.shard, 3);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.symbols, 768);
+        assert_eq!(s.busy_us, 400);
+        assert_eq!(s.max_us, 300.0);
+        assert!(s.p50_us >= 100.0 && s.p50_us <= 300.0);
+    }
+
+    #[test]
+    fn stats_totals_and_render() {
+        let a = ShardCounters::default();
+        let b = ShardCounters::default();
+        a.served(1000, 50.0, false);
+        b.served(2000, 150.0, false);
+        let stats = ServerStats::snapshot([&a, &b]);
+        assert_eq!(stats.shards.len(), 2);
+        assert_eq!(stats.total_requests(), 2);
+        assert_eq!(stats.total_symbols(), 3000);
+        assert_eq!(stats.total_errors(), 0);
+        // 3000 symbols over 200 us of busy time = 15 Msym/s.
+        assert!((stats.busy_msym_per_s() - 15.0).abs() < 1e-9);
+        let table = stats.render();
+        assert!(table.contains("shard"));
+        assert!(table.lines().count() == 4, "{table}");
+    }
+
+    #[test]
+    fn latency_reservoir_is_bounded() {
+        let c = ShardCounters::default();
+        for i in 0..(LATENCY_RING_CAP + 100) {
+            c.served(1, i as f64, false);
+        }
+        let s = c.snapshot(0);
+        assert_eq!(s.requests, (LATENCY_RING_CAP + 100) as u64, "counters keep full history");
+        // The reservoir dropped the oldest 100 samples: the minimum
+        // retained latency is 100, so p50 sits in the retained window.
+        assert!(s.p50_us >= 100.0);
+        assert_eq!(s.max_us, (LATENCY_RING_CAP + 99) as f64);
+    }
+
+    #[test]
+    fn optimistic_enqueue_commits_peak_only_on_success() {
+        let c = ShardCounters::default();
+        let d = c.enqueued_pending();
+        assert_eq!(d, 1);
+        // Rolled back (e.g. try_send returned Full): no peak latched.
+        c.dequeued();
+        assert_eq!(c.snapshot(0).peak_queue_depth, 0);
+        let d = c.enqueued_pending();
+        c.commit_peak(d);
+        assert_eq!(c.snapshot(0).peak_queue_depth, 1);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let none: Vec<&ShardCounters> = Vec::new();
+        let stats = ServerStats::snapshot(none);
+        assert_eq!(stats.total_requests(), 0);
+        assert_eq!(stats.busy_msym_per_s(), 0.0);
+    }
+}

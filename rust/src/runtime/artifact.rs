@@ -65,8 +65,11 @@ impl ArtifactEntry {
 
     /// Instantiate the native CNN datapath behind a [`ArtifactKind::NativeCnn`]
     /// entry.  This is the single home of the quantization policy:
-    /// quantized entries run the paper's Sec. 4 formats
-    /// ([`QuantSpec::paper_default`]) on the same folded weights.
+    /// quantized entries run the QAT-learned per-tensor formats when
+    /// `qat_bits_<channel>.json` sits next to the weights (the same
+    /// file the AOT path consumes), else the paper's Sec. 4 operating
+    /// point ([`QuantSpec::paper_default`]) — on the same folded
+    /// weights either way.
     pub fn load_native_cnn(&self) -> Result<FixedPointCnn> {
         anyhow::ensure!(
             self.kind == ArtifactKind::NativeCnn,
@@ -74,8 +77,52 @@ impl ArtifactEntry {
             self.name
         );
         let weights = CnnWeights::load(&self.abs_path)?;
-        let quant = self.quant.then(|| QuantSpec::paper_default(weights.cfg.layers));
+        let quant = if self.quant {
+            Some(match self.qat_bits()? {
+                Some(spec) => {
+                    // Partial coverage would silently leave tensors in
+                    // full precision — make it a hard error instead.
+                    let mut missing: Vec<String> = Vec::new();
+                    let mut need = |key: String| {
+                        if spec.get(&key).is_none() {
+                            missing.push(key);
+                        }
+                    };
+                    need("a_in".to_string());
+                    for l in 0..weights.cfg.layers {
+                        need(format!("w{l}"));
+                        need(format!("a{l}"));
+                    }
+                    anyhow::ensure!(
+                        missing.is_empty(),
+                        "qat_bits_{}.json misses formats for {missing:?} \
+                         (topology has {} layers)",
+                        self.channel,
+                        weights.cfg.layers
+                    );
+                    spec
+                }
+                None => QuantSpec::paper_default(weights.cfg.layers),
+            })
+        } else {
+            None
+        };
         Ok(FixedPointCnn::new(weights, quant))
+    }
+
+    /// The QAT-learned fixed-point formats for this entry's channel, if
+    /// `qat_bits_<channel>.json` was exported next to the weights
+    /// (written by `python/compile/quant.py`, read by
+    /// `python/compile/aot.py::qat_bits` — this is the Rust mirror).
+    pub fn qat_bits(&self) -> Result<Option<QuantSpec>> {
+        let Some(dir) = self.abs_path.parent() else { return Ok(None) };
+        let path = dir.join(format!("qat_bits_{}.json", self.channel));
+        if !path.exists() {
+            return Ok(None);
+        }
+        let spec = QuantSpec::from_json(&json::parse_file(&path)?)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Ok(Some(spec))
     }
 
     fn from_json(v: &Json, dir: &Path) -> Result<Self> {
@@ -298,7 +345,9 @@ impl ArtifactRegistry {
         let mut w: Vec<usize> = self
             .models
             .iter()
-            .filter(|m| m.model == model && m.channel == channel && m.quant == quant && m.batch == 1)
+            .filter(|m| {
+                m.model == model && m.channel == channel && m.quant == quant && m.batch == 1
+            })
             .map(|m| m.width())
             .collect();
         w.sort_unstable();
@@ -308,7 +357,12 @@ impl ArtifactRegistry {
     /// Smallest single-sequence full-precision artifact with width >=
     /// `min_width` (quantized variants are selected explicitly, via
     /// [`Self::buckets`] with `quant = true` or [`Self::exact`]).
-    pub fn best_model(&self, model: &str, channel: &str, min_width: usize) -> Result<&ArtifactEntry> {
+    pub fn best_model(
+        &self,
+        model: &str,
+        channel: &str,
+        min_width: usize,
+    ) -> Result<&ArtifactEntry> {
         self.models
             .iter()
             .filter(|m| {
@@ -333,6 +387,29 @@ impl ArtifactRegistry {
             .iter()
             .find(|m| m.name == name)
             .ok_or_else(|| anyhow!("no artifact named {name}"))
+    }
+
+    /// Resolve a serving profile name `<model>_<channel>` (e.g.
+    /// `cnn_imdd`, `fir_imdd`, `volterra_imdd`, `cnn_proakis`) to the
+    /// *widest* full-precision batch-1 artifact of that family — the
+    /// serving choice: the widest bucket maximizes the payload one
+    /// burst can carry, and per-request `l_inst` selection (Fig. 11)
+    /// trims latency back down when a burst asks for it.
+    pub fn profile_entry(&self, profile: &str) -> Result<&ArtifactEntry> {
+        let (model, channel) = profile
+            .split_once('_')
+            .ok_or_else(|| anyhow!("profile {profile:?} is not of the form <model>_<channel>"))?;
+        self.models
+            .iter()
+            .filter(|m| m.model == model && m.channel == channel && m.batch == 1 && !m.quant)
+            .max_by_key(|m| m.width())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifacts for profile {profile:?} (model={model}, channel={channel}) \
+                     in {}",
+                    self.dir.display()
+                )
+            })
     }
 }
 
@@ -413,5 +490,72 @@ mod tests {
     #[test]
     fn missing_dir_is_error() {
         assert!(ArtifactRegistry::discover("/nonexistent/artifacts").is_err());
+    }
+
+    #[test]
+    fn profile_entry_resolves_widest_bucket() {
+        let Some(reg) = registry() else { return };
+        let e = reg.profile_entry("cnn_imdd").unwrap();
+        assert_eq!(e.width(), *NATIVE_WIDTH_BUCKETS.last().unwrap());
+        assert!(!e.quant, "profiles serve the full-precision variant");
+        let e = reg.profile_entry("fir_imdd").unwrap();
+        assert_eq!((e.model.as_str(), e.width()), ("fir", 4096));
+        assert_eq!(reg.profile_entry("volterra_imdd").unwrap().width(), 1024);
+        assert!(reg.profile_entry("transformer_imdd").is_err());
+        assert!(reg.profile_entry("noseparator").is_err());
+    }
+
+    #[test]
+    fn qat_bits_override_paper_default() {
+        // A quant entry with qat_bits_<channel>.json next to its
+        // weights must pick up the learned formats; without the file it
+        // falls back to the paper's Sec. 4 operating point.  Set up a
+        // scratch artifact dir with the committed weights copied in.
+        let Some(reg) = registry() else { return };
+        let src = &reg.exact("cnn_imdd_quant_w1024").unwrap().abs_path;
+        let dir = std::env::temp_dir().join(format!("eq_qat_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // A crashed earlier run may have left the side file behind.
+        let _ = std::fs::remove_file(dir.join("qat_bits_imdd.json"));
+        std::fs::copy(src, dir.join("weights_cnn_imdd.json")).unwrap();
+
+        let scratch = ArtifactRegistry::discover_native(&dir).unwrap();
+        let entry = scratch.exact("cnn_imdd_quant_w1024").unwrap();
+        assert!(entry.qat_bits().unwrap().is_none(), "no side file yet");
+        let default_cnn = entry.load_native_cnn().unwrap();
+
+        // Aggressively coarse learned formats: observable in the output.
+        std::fs::write(
+            dir.join("qat_bits_imdd.json"),
+            r#"{"w0": [2, 3], "w1": [2, 3], "w2": [2, 3],
+                "a_in": [2, 2], "a0": [2, 2], "a1": [2, 2], "a2": [2, 2]}"#,
+        )
+        .unwrap();
+        let spec = entry.qat_bits().unwrap().expect("side file discovered");
+        assert_eq!(spec.get("w0").unwrap(), crate::fixedpoint::QFormat::new(2, 3));
+        assert_eq!(spec.avg_weight_bits(), 5.0);
+        let learned_cnn = entry.load_native_cnn().unwrap();
+
+        let x: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.11).sin()).collect();
+        assert_ne!(
+            default_cnn.forward(&x),
+            learned_cnn.forward(&x),
+            "learned 5-bit weights must change the output vs Q3.10"
+        );
+
+        // Malformed side files are hard errors, not silent fallbacks.
+        std::fs::write(dir.join("qat_bits_imdd.json"), r#"{"w0": [2]}"#).unwrap();
+        assert!(entry.load_native_cnn().is_err());
+
+        // So is well-formed but partial coverage: unmatched tensors
+        // would otherwise silently run in full precision.
+        std::fs::write(
+            dir.join("qat_bits_imdd.json"),
+            r#"{"w0": [2, 3], "a_in": [2, 2]}"#,
+        )
+        .unwrap();
+        let err = entry.load_native_cnn().unwrap_err().to_string();
+        assert!(err.contains("misses formats"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -17,6 +17,28 @@ enum ModelImpl {
     Pjrt(super::pjrt::PjrtExecutable),
 }
 
+/// Instantiate the FIR baseline behind a [`ArtifactKind::NativeFir`]
+/// entry (shared by [`CompiledModel`] and the pipeline instances).
+pub(crate) fn load_fir(entry: &ArtifactEntry) -> Result<FirEqualizer> {
+    anyhow::ensure!(
+        entry.kind == ArtifactKind::NativeFir,
+        "artifact {} is not a native FIR weight set",
+        entry.name
+    );
+    Ok(FirEqualizer::from_weights(&FirWeights::load(&entry.abs_path)?))
+}
+
+/// Instantiate the Volterra baseline behind a
+/// [`ArtifactKind::NativeVolterra`] entry.
+pub(crate) fn load_volterra(entry: &ArtifactEntry) -> Result<VolterraEqualizer> {
+    anyhow::ensure!(
+        entry.kind == ArtifactKind::NativeVolterra,
+        "artifact {} is not a native Volterra weight set",
+        entry.name
+    );
+    Ok(VolterraWeights::load(&entry.abs_path)?.to_equalizer())
+}
+
 /// An equalizer model ready to execute.
 pub struct CompiledModel {
     imp: ModelImpl,
@@ -33,13 +55,9 @@ impl CompiledModel {
                 entry.name
             ),
             ArtifactKind::NativeCnn => ModelImpl::NativeCnn(Box::new(entry.load_native_cnn()?)),
-            ArtifactKind::NativeFir => {
-                let weights = FirWeights::load(&entry.abs_path)?;
-                ModelImpl::NativeFir(FirEqualizer::from_weights(&weights))
-            }
+            ArtifactKind::NativeFir => ModelImpl::NativeFir(load_fir(entry)?),
             ArtifactKind::NativeVolterra => {
-                let weights = VolterraWeights::load(&entry.abs_path)?;
-                ModelImpl::NativeVolterra(Box::new(weights.to_equalizer()))
+                ModelImpl::NativeVolterra(Box::new(load_volterra(entry)?))
             }
         };
         Ok(Self { imp, entry: entry.clone() })

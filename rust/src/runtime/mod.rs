@@ -80,6 +80,18 @@ impl Engine {
             },
         }
     }
+
+    /// Resolve a serving profile name (`<model>_<channel>`, see
+    /// [`ArtifactRegistry::profile_entry`]) and instantiate it on this
+    /// engine's backend — the per-profile handle the serving pool and
+    /// the CLI share.
+    pub fn load_profile(
+        &self,
+        registry: &ArtifactRegistry,
+        profile: &str,
+    ) -> Result<CompiledModel> {
+        self.load(registry.profile_entry(profile)?)
+    }
 }
 
 #[cfg(test)]
@@ -102,11 +114,26 @@ mod tests {
     }
 
     #[test]
+    fn profile_handles_resolve_per_family() {
+        // One engine hands out runnable models for every profile family
+        // committed natively — the multi-profile surface the pool uses.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        let Ok(reg) = ArtifactRegistry::discover(dir) else { return };
+        let engine = Engine::new(&reg).unwrap();
+        for profile in ["cnn_imdd", "fir_imdd", "volterra_imdd"] {
+            let model = engine.load_profile(&reg, profile).unwrap();
+            let y = model.run_f32(&vec![0.1f32; model.width()]).unwrap();
+            assert_eq!(y.len(), model.width() / 2, "{profile}");
+        }
+        assert!(engine.load_profile(&reg, "transformer_imdd").is_err());
+    }
+
+    #[test]
     fn wrong_input_length_rejected() {
         let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
         let Ok(reg) = ArtifactRegistry::discover(dir) else { return };
         let Ok(entry) = reg.exact("cnn_imdd_w1024") else { return };
         let model = Engine::native().load(entry).unwrap();
-        assert!(model.run_f32(&vec![0.0; 1000]).is_err());
+        assert!(model.run_f32(&[0.0; 1000]).is_err());
     }
 }

@@ -57,13 +57,21 @@ pub struct Bencher {
 
 impl Default for Bencher {
     fn default() -> Self {
-        Self { warmup: Duration::from_millis(300), measure: Duration::from_secs(2), max_iters: 10_000 }
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_iters: 10_000,
+        }
     }
 }
 
 impl Bencher {
     pub fn quick() -> Self {
-        Self { warmup: Duration::from_millis(50), measure: Duration::from_millis(400), max_iters: 2_000 }
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(400),
+            max_iters: 2_000,
+        }
     }
 
     /// Run `f` repeatedly; returns stats over per-iteration wall time.
@@ -121,7 +129,11 @@ mod tests {
 
     #[test]
     fn measures_something() {
-        let b = Bencher { warmup: Duration::from_millis(1), measure: Duration::from_millis(20), max_iters: 100 };
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            max_iters: 100,
+        };
         let m = b.bench("spin", || {
             let mut x = 0u64;
             for i in 0..1000 {

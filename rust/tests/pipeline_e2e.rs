@@ -28,7 +28,11 @@ fn registry() -> ArtifactRegistry {
     ArtifactRegistry::discover(artifacts_dir()).expect("committed artifacts")
 }
 
-fn cnn_pipeline(reg: &ArtifactRegistry, n_i: usize, channel: &str) -> EqualizerPipeline<AnyInstance> {
+fn cnn_pipeline(
+    reg: &ArtifactRegistry,
+    n_i: usize,
+    channel: &str,
+) -> EqualizerPipeline<AnyInstance> {
     let cfg = CnnTopologyCfg::SELECTED;
     let o_act = cfg.o_act_samples();
     let buckets = reg.buckets("cnn", channel, false);

@@ -1,0 +1,245 @@
+//! Serving-layer acceptance: a sharded multi-stream pool serving
+//! heterogeneous profiles concurrently must be bit-identical to the
+//! sequential single-pipeline reference, honor per-burst `t_req` ->
+//! `l_inst` selection through the pool path, and exert real
+//! backpressure on its bounded queues.
+
+use equalizer::channel::{imdd::ImddChannel, proakis::ProakisBChannel, Channel};
+use equalizer::coordinator::instance::{DecimatorInstance, EqualizerInstance};
+use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool, Shard, TrySubmit};
+use equalizer::coordinator::seqlen::SeqLenOptimizer;
+use equalizer::coordinator::server::EqualizerServer;
+use equalizer::coordinator::timing::TimingModel;
+use equalizer::runtime::ArtifactRegistry;
+
+fn registry() -> ArtifactRegistry {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    ArtifactRegistry::discover(dir).expect("committed native artifacts")
+}
+
+fn optimizer() -> SeqLenOptimizer {
+    SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6))
+}
+
+fn lut_targets() -> Vec<f64> {
+    (1..=100).map(|i| i as f64 * 1e9).collect()
+}
+
+fn decimator_shard(n_i: usize, width: usize, o_act: usize) -> Shard<DecimatorInstance> {
+    let instances: Vec<DecimatorInstance> =
+        (0..n_i).map(|_| DecimatorInstance { width, n_os: 2 }).collect();
+    let engine =
+        EqualizerServer::new(instances, o_act, 2, &optimizer(), &lut_targets()).unwrap();
+    Shard::single("default", engine)
+}
+
+#[test]
+fn concurrent_clients_bit_exact_under_tiny_queue() {
+    // 2 shards, queue capacity 1 (hard backpressure: submits block
+    // while a shard is busy), 4 clients x 8 bursts in flight at once.
+    // Every reply must be the exact decimation of its burst.
+    // Round-robin so the 16/16 shard split is deterministic.
+    let shards = vec![decimator_shard(2, 512, 32), decimator_shard(2, 512, 32)];
+    let pool = ServerPool::new(shards, RoutePolicy::RoundRobin, 1).unwrap().spawn();
+    std::thread::scope(|scope| {
+        for c in 0..4usize {
+            let client = pool.client();
+            scope.spawn(move || {
+                for r in 0..8usize {
+                    let x: Vec<f32> =
+                        (0..2048).map(|i| (i + 1000 * c + 10_000 * r) as f32).collect();
+                    let expect: Vec<f32> = x.iter().step_by(2).copied().collect();
+                    let resp = client.call("default", x, None).unwrap();
+                    assert_eq!(resp.soft_symbols, expect, "client {c} burst {r}");
+                    assert!(resp.shard < 2);
+                }
+            });
+        }
+    });
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), 32);
+    assert_eq!(stats.total_errors(), 0);
+    assert_eq!(stats.total_symbols(), 32 * 1024);
+    assert!(stats.shards.iter().all(|s| s.queue_depth == 0), "queues drained");
+    assert_eq!(stats.shards[0].requests, 16, "round-robin splits evenly");
+    assert_eq!(stats.shards[1].requests, 16);
+}
+
+struct Case {
+    profile: String,
+    samples: Vec<f32>,
+    t_req: Option<f64>,
+    want_soft: Vec<f32>,
+    want_l_inst: usize,
+}
+
+#[test]
+fn sharded_pool_matches_sequential_reference_across_profiles() {
+    // The acceptance bar: a 2-shard pool serves interleaved requests
+    // for four different equalizer profiles concurrently, and every
+    // reply is bit-identical to the sequential single-pipeline
+    // reference (a 1-shard, 1-instance pool serving the same engines).
+    let reg = registry();
+    let profiles = ["cnn_imdd", "fir_imdd", "volterra_imdd", "cnn_proakis"];
+    let pool_cfg = PoolConfig { shards: 2, instances_per_shard: 2, ..PoolConfig::default() };
+    let reference_cfg = PoolConfig { shards: 1, instances_per_shard: 1, ..PoolConfig::default() };
+    let reference = ServerPool::from_registry(&reg, &profiles, &reference_cfg).unwrap().spawn();
+
+    // Precompute every burst and its sequential-reference reply.
+    let mut cases = Vec::new();
+    for (i, profile) in profiles.iter().enumerate() {
+        for r in 0..2usize {
+            let seed = (10 + i * 4 + r) as u32;
+            let data = if profile.ends_with("proakis") {
+                ProakisBChannel::default().transmit(3000, seed)
+            } else {
+                ImddChannel::default().transmit(3000, seed)
+            };
+            let t_req = if r == 0 { None } else { Some(30e9 + i as f64 * 15e9) };
+            let want = reference.call(profile, data.rx.clone(), t_req).unwrap();
+            assert!(!want.soft_symbols.is_empty());
+            cases.push(Case {
+                profile: profile.to_string(),
+                samples: data.rx,
+                t_req,
+                want_soft: want.soft_symbols,
+                want_l_inst: want.l_inst,
+            });
+        }
+    }
+    reference.shutdown();
+
+    // Fire all bursts concurrently from several clients.
+    let pool = ServerPool::from_registry(&reg, &profiles, &pool_cfg).unwrap().spawn();
+    std::thread::scope(|scope| {
+        for chunk in cases.chunks(2) {
+            let client = pool.client();
+            scope.spawn(move || {
+                for case in chunk {
+                    let resp =
+                        client.call(&case.profile, case.samples.clone(), case.t_req).unwrap();
+                    assert_eq!(resp.soft_symbols, case.want_soft, "{}", case.profile);
+                    assert_eq!(resp.l_inst, case.want_l_inst, "{}", case.profile);
+                    assert_eq!(resp.profile, case.profile);
+                }
+            });
+        }
+    });
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), cases.len() as u64);
+    assert_eq!(stats.total_errors(), 0);
+}
+
+#[test]
+fn lut_selection_through_the_pool_path() {
+    // Fig. 11 through the pool: a low throughput requirement selects a
+    // smaller l_inst (lower latency) than a high requirement, and the
+    // payload itself is independent of the chunking choice.
+    let pool = ServerPool::new(
+        vec![decimator_shard(4, 2048, 128)],
+        RoutePolicy::RoundRobin,
+        8,
+    )
+    .unwrap()
+    .spawn();
+    let x: Vec<f32> = (0..8192).map(|i| i as f32).collect();
+    let low = pool.call("default", x.clone(), Some(10e9)).unwrap();
+    let high = pool.call("default", x.clone(), Some(90e9)).unwrap();
+    let unconstrained = pool.call("default", x, None).unwrap();
+    assert!(low.l_inst < high.l_inst, "{} !< {}", low.l_inst, high.l_inst);
+    assert_eq!(unconstrained.l_inst, 2048 - 2 * 128, "no t_req -> full payload");
+    assert_eq!(low.soft_symbols.len(), 4096);
+    assert_eq!(low.soft_symbols, high.soft_symbols, "payload independent of chunking");
+    assert_eq!(low.soft_symbols, unconstrained.soft_symbols);
+    pool.shutdown();
+}
+
+#[test]
+fn lut_selection_matches_single_stream_server() {
+    // The pool path and the legacy EqualizerServer front-end pick the
+    // identical l_inst for the identical t_req (they share serve_one).
+    let pool = ServerPool::new(
+        vec![decimator_shard(4, 2048, 128)],
+        RoutePolicy::RoundRobin,
+        8,
+    )
+    .unwrap()
+    .spawn();
+    let instances: Vec<Box<dyn EqualizerInstance + Send>> = (0..4)
+        .map(|_| Box::new(DecimatorInstance { width: 2048, n_os: 2 }) as Box<_>)
+        .collect();
+    let legacy = EqualizerServer::new(instances, 128, 2, &optimizer(), &lut_targets())
+        .unwrap()
+        .spawn();
+    for t_req in [None, Some(10e9), Some(40e9), Some(75e9), Some(90e9), Some(500e9)] {
+        let a = pool.call("default", vec![0.0; 4096], t_req).unwrap();
+        let b = legacy.call(vec![0.0; 4096], t_req).unwrap();
+        assert_eq!(a.l_inst, b.l_inst, "t_req {t_req:?}");
+        assert_eq!(a.soft_symbols, b.soft_symbols, "t_req {t_req:?}");
+    }
+    legacy.shutdown();
+    pool.shutdown();
+}
+
+/// A deliberately slow instance: decimates after a fixed sleep, so
+/// tests can hold a shard busy deterministically.
+struct SlowInstance {
+    width: usize,
+    delay: std::time::Duration,
+}
+
+impl EqualizerInstance for SlowInstance {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        Ok(chunk.iter().step_by(2).copied().collect())
+    }
+}
+
+#[test]
+fn try_submit_reports_backpressure() {
+    // 1 shard, queue capacity 1, a worker that takes ~50 ms per chunk:
+    // after one burst is being processed and a second sits in the
+    // queue, try_submit must report fullness instead of blocking.
+    let engine = EqualizerServer::new(
+        vec![SlowInstance { width: 256, delay: std::time::Duration::from_millis(50) }],
+        32,
+        2,
+        &optimizer(),
+        &lut_targets(),
+    )
+    .unwrap();
+    let pool = ServerPool::new(
+        vec![Shard::single("slow", engine)],
+        RoutePolicy::RoundRobin,
+        1,
+    )
+    .unwrap()
+    .spawn();
+
+    let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+    // First burst: the worker dequeues it (possibly after a beat) and
+    // starts its 50 ms sleep.  Second burst: occupies the queue slot
+    // once the worker picked up the first.
+    let rx_a = pool.submit("slow", burst.clone(), None).unwrap();
+    let rx_b = pool.submit("slow", burst.clone(), None).unwrap();
+    // With the worker asleep and the slot taken, the third burst sees
+    // backpressure — and gets its samples handed back untouched.
+    let returned = match pool.try_submit("slow", burst.clone(), None).unwrap() {
+        TrySubmit::Full(samples) => samples,
+        TrySubmit::Queued(_) => panic!("bounded queue must report Full"),
+    };
+    assert_eq!(returned, burst, "rejected burst comes back intact");
+    // Both queued bursts complete normally.
+    assert_eq!(rx_a.recv().unwrap().soft_symbols.len(), 96);
+    assert_eq!(rx_b.recv().unwrap().soft_symbols.len(), 96);
+    // Queue drained: retrying with the returned burst succeeds.
+    let rx_c = pool.try_submit("slow", returned, None).unwrap().queued().expect("queue drained");
+    assert_eq!(rx_c.recv().unwrap().soft_symbols.len(), 96);
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), 3);
+    assert!(stats.shards[0].peak_queue_depth >= 1);
+}
