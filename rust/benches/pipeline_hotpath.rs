@@ -1,13 +1,19 @@
 //! L3 hot-path benchmarks (§Perf): the native fixed-point datapath
-//! (alloc-per-call vs scratch-reusing vs quantized), the full
-//! coordinator pipeline in all three execution modes (sequential /
-//! per-chunk threads / chunk-batched threads) across instance counts,
-//! the stream-partitioning bookkeeping in isolation, and the channel
-//! simulators.  With `--features pjrt` (and a real `xla` crate) the
-//! PJRT executable paths are measured too.
+//! (alloc-per-call vs scratch-reusing vs fake-quant vs the integer
+//! fast path), the full coordinator pipeline in all three execution
+//! modes (sequential / per-chunk threads / chunk-batched threads)
+//! across instance counts, the stream-partitioning bookkeeping in
+//! isolation, and the channel simulators.  With `--features pjrt` (and
+//! a real `xla` crate) the PJRT executable paths are measured too.
 //!
-//! The headline number: `pipeline_batch n_i=4` vs `pipeline_seq n_i=1`
-//! — the Sec. 5.3 parallelism claim on the native backend.
+//! Headline numbers: `pipeline_batch n_i=4` vs `pipeline_seq n_i=1`
+//! (the Sec. 5.3 parallelism claim) and `native_cnn_int16` vs
+//! `native_cnn_fakequant` (the Sec. 4 quantized arithmetic claim) on
+//! the native backend.
+//!
+//! Pass `--quick` (CI perf smoke) for reduced budgets and workloads;
+//! the int16/f32 bit-identity gate is asserted in every mode before
+//! anything is timed.
 
 use equalizer::channel::{imdd::ImddChannel, proakis::ProakisBChannel, Channel};
 use equalizer::coordinator::instance::AnyInstance;
@@ -17,27 +23,29 @@ use equalizer::equalizer::cnn::{CnnScratch, FixedPointCnn};
 use equalizer::equalizer::weights::{CnnTopologyCfg, CnnWeights};
 use equalizer::fixedpoint::QuantSpec;
 use equalizer::runtime::ArtifactRegistry;
-use equalizer::util::bench::{header, Bencher};
+use equalizer::util::bench::{header, Bencher, Throughput};
 
 fn artifacts_dir() -> String {
     format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
 }
 
 fn main() {
-    let b = Bencher::default();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
     let cfg = CnnTopologyCfg::SELECTED;
+    let stream_exp = if quick { 15 } else { 17 };
 
     // ---- channel simulators (substrate cost) -------------------------
     header("channel simulators (64k symbols)");
     let imdd = ImddChannel::default();
     let m_imdd = b.bench("imdd_transmit_64k", || imdd.transmit(65_536, 1));
-    println!("    -> {:.2} Msym/s", m_imdd.throughput(65_536.0) / 1e6);
+    println!("    -> {}", Throughput::from_measurement(&m_imdd, 65_536.0).line());
     let pro = ProakisBChannel::default();
     b.bench("proakis_transmit_64k", || pro.transmit(65_536, 1));
 
     // ---- stream partitioning bookkeeping alone ------------------------
     header("coordinator bookkeeping (no compute)");
-    let data = imdd.transmit(1 << 17, 2);
+    let data = imdd.transmit(1 << stream_exp, 2);
     b.bench("ogm_make_chunks l_inst=888 o=68", || ogm::make_chunks(&data.rx, 888, 68));
     let chunks = ogm::make_chunks(&data.rx, 888, 68);
     b.bench("ssm_distribute n_i=64", || ssm::distribute(&chunks, 64));
@@ -54,14 +62,38 @@ fn main() {
     };
     header("native datapath (1024-sample chunk)");
     let x: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.1).sin()).collect();
+    let syms = cfg.out_symbols(1024) as f64;
     let float_cnn = FixedPointCnn::new(weights.clone(), None);
     let mm = b.bench("native_cnn_f32", || float_cnn.forward(&x));
-    println!("    -> {:.2} Msym/s", mm.throughput(512.0) / 1e6);
+    println!("    -> {}", Throughput::from_measurement(&mm, syms).line());
     let mut scratch = CnnScratch::default();
     let ms = b.bench("native_cnn_f32_scratch", || float_cnn.forward_with(&x, &mut scratch));
-    println!("    -> {:.2} Msym/s", ms.throughput(512.0) / 1e6);
+    println!("    -> {}", Throughput::from_measurement(&ms, syms).line());
+
     let q_cnn = FixedPointCnn::new(weights.clone(), Some(QuantSpec::paper_default(cfg.layers)));
-    b.bench("native_cnn_quantized", || q_cnn.forward(&x));
+    // Bit-identity gate (also run under --quick in CI): the integer
+    // fast path must return exactly what the fake-quant f32 reference
+    // computes, on every width the blocking treats differently.
+    assert!(q_cnn.uses_integer_path(), "paper formats must pass the provability gate");
+    for n in [256usize, 1024, 4096] {
+        let xw: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).sin()).collect();
+        assert_eq!(
+            q_cnn.forward(&xw),
+            q_cnn.forward_reference(&xw),
+            "int16 != fakequant_f32 at width {n}"
+        );
+    }
+    println!("(bit-identity: int16 == fakequant_f32 at widths 256/1024/4096)");
+    let mq = b.bench("native_cnn_fakequant", || q_cnn.forward_reference_with(&x, &mut scratch));
+    let t_ref = Throughput::from_measurement(&mq, syms);
+    println!("    -> {}", t_ref.line());
+    let mi = b.bench("native_cnn_int16", || q_cnn.forward_with(&x, &mut scratch));
+    let t_int = Throughput::from_measurement(&mi, syms);
+    println!("    -> {}", t_int.line());
+    println!(
+        "\nnative_cnn_int16 is {:.2}x vs native_cnn_fakequant (Sec. 4 integer arithmetic)",
+        t_int.symbols_per_s / t_ref.symbols_per_s
+    );
 
     // ---- full pipeline: sequential vs threads vs chunk-batched --------
     let Ok(reg) = ArtifactRegistry::discover(artifacts_dir()) else {
@@ -71,17 +103,20 @@ fn main() {
     let entry = reg.best_model("cnn", "imdd", 4096).expect("4096 bucket").clone();
     let o_act = cfg.o_act_samples();
     let l_inst = entry.width() - 2 * o_act;
-    let data = imdd.transmit(1 << 17, 3);
-    let syms = (data.rx.len() / 2) as f64;
+    let data = imdd.transmit(1 << stream_exp, 3);
+    let syms_total = (data.rx.len() / 2) as f64;
 
-    header("full pipeline, 128k symbols (bucket 4096, native backend)");
+    header(&format!(
+        "full pipeline, {}k symbols (bucket 4096, native backend)",
+        1 << (stream_exp - 10)
+    ));
     let mut seq_mean = None;
     for n_i in [1usize, 2, 4, 8] {
         let workers: Vec<AnyInstance> =
             (0..n_i).map(|_| AnyInstance::load(&entry).unwrap()).collect();
         let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os).unwrap();
         let m = b.bench(&format!("pipeline_seq n_i={n_i}"), || pipe.equalize(&data.rx).unwrap());
-        println!("    -> {:.2} Msym/s", m.throughput(syms) / 1e6);
+        println!("    -> {}", Throughput::from_measurement(&m, syms_total).line());
         if n_i == 1 {
             seq_mean = Some(m.mean);
         }
@@ -93,7 +128,7 @@ fn main() {
         let m = b.bench(&format!("pipeline_threads n_i={n_i}"), || {
             pipe.equalize_parallel(&data.rx).unwrap()
         });
-        println!("    -> {:.2} Msym/s", m.throughput(syms) / 1e6);
+        println!("    -> {}", Throughput::from_measurement(&m, syms_total).line());
     }
     let mut batch4_mean = None;
     for n_i in [1usize, 2, 4, 8] {
@@ -103,7 +138,7 @@ fn main() {
         let m = b.bench(&format!("pipeline_batch n_i={n_i}"), || {
             pipe.equalize_batch(&data.rx).unwrap()
         });
-        println!("    -> {:.2} Msym/s", m.throughput(syms) / 1e6);
+        println!("    -> {}", Throughput::from_measurement(&m, syms_total).line());
         if n_i == 4 {
             batch4_mean = Some(m.mean);
         }
@@ -114,6 +149,20 @@ fn main() {
              (Sec. 5.3 parallelism on the native backend)",
             seq.as_secs_f64() / batch4.as_secs_f64()
         );
+    }
+
+    // ---- quantized profile through the pipeline (integer fast path) ---
+    header("full pipeline, quantized profile (int16 datapath)");
+    if let Ok(qentry) = reg.exact("cnn_imdd_quant_w4096") {
+        for n_i in [1usize, 4] {
+            let workers: Vec<AnyInstance> =
+                (0..n_i).map(|_| AnyInstance::load(qentry).unwrap()).collect();
+            let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os).unwrap();
+            let m = b.bench(&format!("pipeline_batch_quant n_i={n_i}"), || {
+                pipe.equalize_batch(&data.rx).unwrap()
+            });
+            println!("    -> {}", Throughput::from_measurement(&m, syms_total).line());
+        }
     }
 
     // ---- PJRT execution (needs real xla + HLO artifacts) --------------
@@ -140,6 +189,6 @@ fn pjrt_benches(b: &Bencher, reg: &ArtifactRegistry) {
         let model = engine.load(reg.best_model("cnn", "imdd", width).unwrap()).unwrap();
         let x = vec![0.3f32; width];
         let m = b.bench(&format!("pjrt_cnn w={width}"), || model.run_f32(&x).unwrap());
-        println!("    -> {:.2} Msym/s", m.throughput(width as f64 / 2.0) / 1e6);
+        println!("    -> {}", Throughput::from_measurement(&m, width as f64 / 2.0).line());
     }
 }

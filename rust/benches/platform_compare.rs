@@ -10,6 +10,7 @@ use equalizer::hw::device::{XC7S25, XCVU13P};
 use equalizer::hw::dop::Dop;
 use equalizer::hw::platform;
 use equalizer::hw::power::{ht_power_w, lp_power_w, lp_throughput_baud};
+use equalizer::util::bench::Throughput;
 
 const SPB_GRID: [u64; 10] =
     [8, 64, 400, 1_000, 10_000, 100_000, 1_000_000, 10_000_000, 100_000_000, 1_000_000_000];
@@ -46,6 +47,10 @@ fn main() {
         ht_baud / platform::RTX_TENSORRT.throughput(400),
         platform::RTX_TENSORRT.throughput(u64::MAX / 2) / 1e9
     );
+    // Unified records, cross-comparable with pipeline_hotpath /
+    // serving_pool / `repro bench --json`.
+    println!("unified: HT-FPGA {}", Throughput::from_rate(ht_baud, 1.0).line());
+    println!("unified: LP-FPGA {}", Throughput::from_rate(lp_baud, 1.0).line());
 
     println!("\n=== Fig. 14: latency (s) vs SPB ===\n{head}");
     for spb in SPB_GRID {

@@ -9,7 +9,7 @@ use equalizer::coordinator::seqlen::SeqLenOptimizer;
 use equalizer::coordinator::server::EqualizerServer;
 use equalizer::coordinator::timing::TimingModel;
 use equalizer::runtime::ArtifactRegistry;
-use equalizer::util::bench::{header, Bencher};
+use equalizer::util::bench::{header, Bencher, Throughput};
 
 fn decimator_shard(n_i: usize, width: usize, o_act: usize) -> Shard<DecimatorInstance> {
     let instances: Vec<DecimatorInstance> =
@@ -50,31 +50,35 @@ fn main() {
         println!("\n(native weights missing; cnn pool benches skipped)");
         return;
     };
-    header("pool serving (cnn_imdd profile, 8 x 16k-sample bursts)");
+    header("pool serving (8 x 16k-sample bursts per profile)");
     let data: Vec<f32> = (0..16_384).map(|i| (i as f32 * 0.17).sin()).collect();
     let symbols = 8.0 * data.len() as f64 / 2.0;
-    for shards in [1usize, 2] {
-        let cfg = PoolConfig {
-            shards,
-            instances_per_shard: 2,
-            policy: RoutePolicy::ShortestQueue,
-            ..PoolConfig::default()
-        };
-        let pool = match ServerPool::from_registry(&reg, &["cnn_imdd"], &cfg) {
-            Ok(p) => p.spawn(),
-            Err(e) => {
-                println!("(cnn_imdd profile unavailable: {e})");
-                return;
-            }
-        };
-        let m = b.bench(&format!("pool_cnn shards={shards}"), || {
-            let pending: Vec<_> =
-                (0..8).map(|_| pool.submit("cnn_imdd", data.clone(), None).unwrap()).collect();
-            for rx in pending {
-                rx.recv().unwrap();
-            }
-        });
-        println!("    -> {:.2} Msym/s", m.throughput(symbols) / 1e6);
-        pool.shutdown();
+    // cnn_imdd runs the f32 datapath, cnn_imdd_quant the integer fast
+    // path — same pool machinery, so the delta is pure datapath.
+    'profiles: for profile in ["cnn_imdd", "cnn_imdd_quant"] {
+        for shards in [1usize, 2] {
+            let cfg = PoolConfig {
+                shards,
+                instances_per_shard: 2,
+                policy: RoutePolicy::ShortestQueue,
+                ..PoolConfig::default()
+            };
+            let pool = match ServerPool::from_registry(&reg, &[profile], &cfg) {
+                Ok(p) => p.spawn(),
+                Err(e) => {
+                    println!("({profile} profile unavailable: {e})");
+                    continue 'profiles;
+                }
+            };
+            let m = b.bench(&format!("pool_{profile} shards={shards}"), || {
+                let pending: Vec<_> =
+                    (0..8).map(|_| pool.submit(profile, data.clone(), None).unwrap()).collect();
+                for rx in pending {
+                    rx.recv().unwrap();
+                }
+            });
+            println!("    -> {}", Throughput::from_measurement(&m, symbols).line());
+            pool.shutdown();
+        }
     }
 }

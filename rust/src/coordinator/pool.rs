@@ -9,8 +9,10 @@
 //! request queue.
 //!
 //! * **Per-request channel selection** — a request names a profile
-//!   (`cnn_imdd`, `fir_imdd`, `volterra_imdd`, `cnn_proakis`, ...);
-//!   the shard resolves it to the matching engine, so one pool serves
+//!   (`cnn_imdd`, `fir_imdd`, `volterra_imdd`, `cnn_proakis`, and the
+//!   quantized families `cnn_imdd_quant`/`cnn_proakis_quant`, which the
+//!   native backend runs on the integer fixed-point fast path); the
+//!   shard resolves it to the matching engine, so one pool serves
 //!   heterogeneous traffic.  Profiles resolve through the existing
 //!   [`ArtifactRegistry`] ([`ArtifactRegistry::profile_entry`]).
 //! * **Per-burst sequence-length selection** — each engine keeps the

@@ -8,6 +8,17 @@
 //! kernel (`python/compile/kernels/quant.py`) models, so the Rust
 //! bit-accurate CNN datapath reproduces the quantized HLO artifact
 //! bit-for-bit.
+//!
+//! Two value domains, one semantics:
+//!
+//! * **Fake-quant f32** ([`QFormat::quantize`], [`Quantizer`]): values
+//!   stay f32, snapped onto the Q(m.n) grid — the reference datapath.
+//! * **Integer codes** ([`QFormat::to_fixed`], [`CodeQuantizer`],
+//!   [`Requantizer`]): the value `v` is carried as the i16 code
+//!   `v * 2^n`, and post-accumulator rounding is a shift with
+//!   round-to-nearest-even — exactly what the FPGA MAC array computes.
+//!   On the representable grid both domains agree value-for-value; the
+//!   unit/property tests below pin that equivalence.
 
 
 /// A fixed-point format: `int_bits` integer bits (including sign) and
@@ -62,6 +73,38 @@ impl QFormat {
         (self.quantize(x) * (2.0_f64).powi(self.frac_bits as i32)).round() as i64
     }
 
+    /// Smallest integer code: `min_value() * 2^frac_bits = -2^(w-1)`.
+    pub fn min_code(&self) -> i64 {
+        debug_assert!(self.width() <= 32, "code range needs width <= 32");
+        -(1i64 << (self.width() - 1))
+    }
+
+    /// Largest integer code: `max_value() * 2^frac_bits = 2^(w-1) - 1`.
+    pub fn max_code(&self) -> i64 {
+        debug_assert!(self.width() <= 32, "code range needs width <= 32");
+        (1i64 << (self.width() - 1)) - 1
+    }
+
+    /// Whether every code of this format fits an i16 word — the storage
+    /// type of the integer CNN datapath.
+    pub fn fits_i16(&self) -> bool {
+        self.width() >= 1 && self.width() <= 16
+    }
+
+    /// Quantize straight to the integer code (i16 storage): RNE on
+    /// `x * 2^n`, then saturate to the two's-complement code range.
+    /// Value-identical to `quantize_f32(x) * 2^n` for every finite `x`.
+    pub fn to_fixed(&self, x: f32) -> i16 {
+        self.code_quantizer().apply(x)
+    }
+
+    /// Integer code -> the f32 value it encodes (`code * 2^-n`, exact:
+    /// a power-of-two scale of a <=16-bit integer).
+    pub fn from_fixed(&self, code: i16) -> f32 {
+        debug_assert!(self.fits_i16());
+        code as f32 * self.step() as f32
+    }
+
     /// Precompute the constants of [`QFormat::quantize`] for hot loops.
     pub fn quantizer(&self) -> Quantizer {
         Quantizer {
@@ -69,6 +112,16 @@ impl QFormat {
             inv_scale: (2.0_f64).powi(-(self.frac_bits as i32)),
             lo: self.min_value(),
             hi: self.max_value(),
+        }
+    }
+
+    /// Precompute the constants of [`QFormat::to_fixed`] for hot loops.
+    pub fn code_quantizer(&self) -> CodeQuantizer {
+        assert!(self.fits_i16(), "integer codes need width <= 16, got {self:?}");
+        CodeQuantizer {
+            scale: (2.0_f64).powi(self.frac_bits as i32),
+            lo: self.min_code() as f64,
+            hi: self.max_code() as f64,
         }
     }
 }
@@ -89,6 +142,84 @@ impl Quantizer {
     #[inline]
     pub fn apply(&self, x: f32) -> f32 {
         (round_ties_even(x as f64 * self.scale) * self.inv_scale).clamp(self.lo, self.hi) as f32
+    }
+}
+
+/// `2^52 + 2^51`: adding then subtracting this forces an f64 onto the
+/// integer grid using the FPU's native round-to-nearest-even — a
+/// branch-free [`round_ties_even`] for every `|v| <= 2^51`.  Beyond
+/// that the result is off by at most one ulp of a `>= 2^51` magnitude,
+/// which the code-range clamp maps to the same saturated endpoint.
+const RNE_MAGIC: f64 = 6_755_399_441_055_744.0;
+
+/// Precomputed f32 -> integer-code quantization (the input conversion
+/// of the integer datapath).  Same RNE + saturation as [`Quantizer`],
+/// but the result stays in the code domain: `apply(x) ==
+/// quantize_f32(x) * 2^n` for every finite `x`.  Branch-free, so the
+/// per-sample input conversion vectorizes.
+#[derive(Debug, Clone, Copy)]
+pub struct CodeQuantizer {
+    scale: f64,
+    lo: f64,
+    hi: f64,
+}
+
+impl CodeQuantizer {
+    #[inline]
+    pub fn apply(&self, x: f32) -> i16 {
+        ((x as f64 * self.scale + RNE_MAGIC) - RNE_MAGIC).clamp(self.lo, self.hi) as i16
+    }
+}
+
+/// Post-accumulator re-quantization in the integer domain: take an
+/// accumulator code on the `2^-acc_frac` grid and move it onto an
+/// output [`QFormat`]'s grid with round-to-nearest-even, saturating to
+/// the output code range — a shift + mask instead of the f64
+/// round/clamp of [`Quantizer::apply`], but value-identical to it on
+/// every accumulator the exactness gate admits (see
+/// `equalizer::cnn::QuantizedCnn`): for `shift >= 0` this computes
+/// RNE(A / 2^shift) via the two's-complement remainder, for
+/// `shift < 0` the scale-up is exact.
+#[derive(Debug, Clone, Copy)]
+pub struct Requantizer {
+    /// `acc_frac - out_frac`; positive = the accumulator grid is finer.
+    shift: i32,
+    lo: i64,
+    hi: i64,
+}
+
+impl Requantizer {
+    /// `acc_frac` is the fraction width of the accumulator grid
+    /// (input activation frac + weight frac in a MAC array).
+    pub fn new(acc_frac: u32, out: QFormat) -> Self {
+        assert!(out.fits_i16(), "requantizer output needs width <= 16, got {out:?}");
+        Self {
+            shift: acc_frac as i32 - out.frac_bits as i32,
+            lo: out.min_code(),
+            hi: out.max_code(),
+        }
+    }
+
+    /// RNE-shift + saturate one accumulator code to the output grid.
+    #[inline]
+    pub fn apply(&self, acc: i64) -> i16 {
+        let r = if self.shift > 0 {
+            let s = self.shift as u32;
+            // Arithmetic shift floors; the masked remainder is the
+            // non-negative fraction, so ties land exactly on `half`.
+            let floor = acc >> s;
+            let rem = acc & ((1i64 << s) - 1);
+            let half = 1i64 << (s - 1);
+            match rem.cmp(&half) {
+                std::cmp::Ordering::Greater => floor + 1,
+                std::cmp::Ordering::Less => floor,
+                // Tie: pick the even neighbour of {floor, floor+1}.
+                std::cmp::Ordering::Equal => floor + (floor & 1),
+            }
+        } else {
+            acc << (-self.shift) as u32
+        };
+        r.clamp(self.lo, self.hi) as i16
     }
 }
 
@@ -275,6 +406,98 @@ mod tests {
                 assert_eq!(fast.apply(x), q.quantize_f32(x), "{q:?} at {x}");
             }
         });
+    }
+
+    #[test]
+    fn code_range_mirrors_value_range() {
+        let q = QFormat::new(4, 6);
+        assert_eq!(q.min_code(), -512);
+        assert_eq!(q.max_code(), 511);
+        assert_eq!(q.from_fixed(q.min_code() as i16) as f64, q.min_value());
+        assert_eq!(q.from_fixed(q.max_code() as i16) as f64, q.max_value());
+        assert!(q.fits_i16());
+        assert!(QFormat::new(8, 8).fits_i16());
+        assert!(!QFormat::new(8, 9).fits_i16());
+    }
+
+    #[test]
+    fn to_fixed_matches_fake_quant_everywhere() {
+        // The integer conversion must be the code-domain mirror of the
+        // fake-quant reference: to_fixed(x) == quantize_f32(x) * 2^n.
+        crate::util::prop::check(40, |g| {
+            let q = QFormat::new(g.usize_in(1, 8) as u8, g.usize_in(0, 8) as u8);
+            let fast = q.code_quantizer();
+            for _ in 0..64 {
+                let x = g.f32_in(-600.0, 600.0);
+                let code = q.to_fixed(x);
+                assert_eq!(code, fast.apply(x), "{q:?} at {x}");
+                let want = q.quantize_f32(x) * (1i32 << q.frac_bits) as f32;
+                assert_eq!(code as f32, want, "{q:?} at {x}");
+                // Round trip: the code decodes to the quantized value.
+                assert_eq!(q.from_fixed(code), q.quantize_f32(x), "{q:?} at {x}");
+            }
+        });
+    }
+
+    #[test]
+    fn to_fixed_saturates_and_handles_infinities() {
+        let q = QFormat::new(3, 5);
+        assert_eq!(q.to_fixed(1e9), q.max_code() as i16);
+        assert_eq!(q.to_fixed(-1e9), q.min_code() as i16);
+        assert_eq!(q.to_fixed(3.0e38), q.max_code() as i16, "beyond the RNE_MAGIC window");
+        assert_eq!(q.to_fixed(f32::INFINITY), q.max_code() as i16);
+        assert_eq!(q.to_fixed(f32::NEG_INFINITY), q.min_code() as i16);
+    }
+
+    #[test]
+    fn to_fixed_ties_to_even() {
+        // The branch-free RNE_MAGIC rounding must keep banker's
+        // rounding: 0.5/64 -> code 0 (even), 1.5/64 -> code 2.
+        let q = QFormat::new(4, 6);
+        assert_eq!(q.to_fixed(0.0078125), 0);
+        assert_eq!(q.to_fixed(0.0234375), 2);
+        assert_eq!(q.to_fixed(-0.0078125), 0);
+        assert_eq!(q.to_fixed(-0.0234375), -2);
+        assert_eq!(q.to_fixed(0.5), 32);
+    }
+
+    #[test]
+    fn requantizer_matches_quantizer_on_grid() {
+        // For every accumulator code A on the 2^-acc_frac grid inside
+        // the f32-exact window, the integer RNE shift must agree with
+        // the f64 fake-quant reference applied to the encoded value.
+        crate::util::prop::check(40, |g| {
+            let acc_frac = g.usize_in(0, 20) as u32;
+            let out = QFormat::new(g.usize_in(1, 8) as u8, g.usize_in(0, 8) as u8);
+            let rq = Requantizer::new(acc_frac, out);
+            let slow = out.quantizer();
+            let inv = (2.0_f64).powi(-(acc_frac as i32));
+            for _ in 0..128 {
+                let a = g.usize_in(0, 1 << 24) as i64 - (1 << 23);
+                let value = (a as f64 * inv) as f32; // exact: |a| <= 2^23
+                assert_eq!(
+                    out.from_fixed(rq.apply(a)),
+                    slow.apply(value),
+                    "acc_frac {acc_frac} {out:?} at code {a}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn requantizer_ties_to_even() {
+        // acc_frac 4 -> Q4.2: shift 2, ties at remainder 2.
+        let rq = Requantizer::new(4, QFormat::new(4, 2));
+        assert_eq!(rq.apply(2), 0); // 0.125 -> tie -> even 0
+        assert_eq!(rq.apply(6), 2); // 0.375 -> tie -> even 2 (0.5)
+        assert_eq!(rq.apply(-2), 0); // -0.125 -> tie -> even 0
+        assert_eq!(rq.apply(-6), -2); // -0.375 -> tie -> even -2
+        assert_eq!(rq.apply(3), 1); // 0.1875 -> nearest 0.25
+        assert_eq!(rq.apply(1 << 20), 31); // saturate to max code
+        assert_eq!(rq.apply(-(1 << 20)), -32); // saturate to min code
+        // Negative shift: scale-up is exact.
+        let up = Requantizer::new(2, QFormat::new(4, 6));
+        assert_eq!(up.apply(3), 48); // 0.75 * 2^6
     }
 
     #[test]

@@ -39,6 +39,10 @@ COMMANDS:
             [--clients M] [--requests K] [--spb SYMBOLS]
             [--profiles P1,P2,..] [--policy round-robin|shortest-queue]
             [--queue-cap N]                            multi-stream serving demo
+  bench     [--artifacts DIR] [--json [PATH]] [--quick]
+                                                       hot-path throughput (f32 /
+                                                       fake-quant / int16 + pipeline);
+                                                       --json writes BENCH_pr3.json
   config    [--profile high-throughput|low-power]      print JSON config
 ";
 
@@ -63,6 +67,7 @@ fn main() -> Result<()> {
         "timing" => timing(&args),
         "seqlen" => seqlen(&args),
         "serve" => serve(&args),
+        "bench" => bench_cmd(&args),
         "figures" => {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
             figures::run(which, &artifacts_dir(&args))
@@ -281,6 +286,116 @@ fn serve(args: &Args) -> Result<()> {
         total_symbols as f64 / wall / 1e6,
         wall * 1e3
     );
+    Ok(())
+}
+
+/// Machine-readable hot-path benchmark: the native CNN datapath on all
+/// three execution paths (f32 / fake-quant f32 / int16) and the batched
+/// pipeline on the float + quantized profiles, reported as the unified
+/// `{profile, path, symbols/s, ns/symbol, GBd-equivalent}` records
+/// (`util::bench::Throughput`).  `--json [PATH]` additionally writes
+/// the records as a JSON array (default `BENCH_pr3.json`) so the perf
+/// trajectory stays machine-readable across PRs.  The integer path is
+/// asserted bit-identical to the fake-quant reference before anything
+/// is timed.
+fn bench_cmd(args: &Args) -> Result<()> {
+    use equalizer::equalizer::cnn::CnnScratch;
+    use equalizer::util::bench::{header, Bencher, Throughput};
+    use equalizer::util::json::Json;
+
+    let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
+    let quick = args.flag("quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let json_path = args
+        .get("json")
+        .map(|v| if v == "true" { "BENCH_pr3.json".to_string() } else { v.to_string() });
+
+    let float_cnn = reg.exact("cnn_imdd_w1024")?.load_native_cnn()?;
+    let q_cnn = reg.exact("cnn_imdd_quant_w1024")?.load_native_cnn()?;
+    let cfg = *float_cnn.cfg();
+    let width = 1024usize;
+    let syms = cfg.out_symbols(width) as f64;
+    let x: Vec<f32> = (0..width).map(|i| (i as f32 * 0.1).sin()).collect();
+
+    // Correctness gate before any timing: the integer fast path must be
+    // engaged and bit-identical to the fake-quant f32 reference.
+    anyhow::ensure!(
+        q_cnn.uses_integer_path(),
+        "quantized entry fell back to {} — formats failed the provability gate",
+        q_cnn.exec_path()
+    );
+    anyhow::ensure!(
+        q_cnn.forward(&x) == q_cnn.forward_reference(&x),
+        "integer datapath diverges from the fake-quant reference"
+    );
+    println!("bit-identity: int16 == fakequant_f32 on cnn_imdd_quant (checked)");
+
+    let mut records: Vec<Json> = Vec::new();
+    let mut scratch = CnnScratch::default();
+
+    header("native datapath (1024-sample chunk)");
+    let m = b.bench("cnn_imdd f32", || float_cnn.forward_with(&x, &mut scratch));
+    let t = Throughput::from_measurement(&m, syms);
+    println!("    -> {}", t.line());
+    records.push(t.to_json("cnn_imdd", "f32"));
+    let m = b.bench("cnn_imdd_quant fakequant_f32", || {
+        q_cnn.forward_reference_with(&x, &mut scratch)
+    });
+    let t_ref = Throughput::from_measurement(&m, syms);
+    println!("    -> {}", t_ref.line());
+    records.push(t_ref.to_json("cnn_imdd_quant", "fakequant_f32"));
+    let m = b.bench("cnn_imdd_quant int16", || q_cnn.forward_with(&x, &mut scratch));
+    let t_int = Throughput::from_measurement(&m, syms);
+    println!("    -> {}", t_int.line());
+    records.push(t_int.to_json("cnn_imdd_quant", "int16"));
+    println!(
+        "\nint16 is {:.2}x the fake-quant reference on the datapath",
+        t_int.symbols_per_s / t_ref.symbols_per_s
+    );
+
+    header("pipeline (batch mode, n_i=4)");
+    let data = ImddChannel::default().transmit(if quick { 1 << 14 } else { 1 << 17 }, 3);
+    let syms_total = (data.rx.len() / 2) as f64;
+    let o_act = cfg.o_act_samples();
+    for (profile, name) in
+        [("cnn_imdd", "cnn_imdd_w4096"), ("cnn_imdd_quant", "cnn_imdd_quant_w4096")]
+    {
+        let entry = reg.exact(name)?;
+        let l_inst = entry.width() - 2 * o_act;
+        let workers: Vec<AnyInstance> =
+            (0..4).map(|_| AnyInstance::load(entry)).collect::<Result<_>>()?;
+        let mut pipe = EqualizerPipeline::new(workers, l_inst, o_act, cfg.n_os)?;
+        let m = b.bench(&format!("pipeline_batch {profile} n_i=4"), || {
+            pipe.equalize_batch(&data.rx).unwrap()
+        });
+        let t = Throughput::from_measurement(&m, syms_total);
+        println!("    -> {}", t.line());
+        records.push(t.to_json(profile, "pipeline_batch4"));
+    }
+
+    if let Some(path) = json_path {
+        // Preserve historical baseline rows (path suffix `_pre_pr3`)
+        // from an existing file — `bench` re-measures only the current
+        // execution paths, and the committed before/after comparison
+        // must survive regeneration.
+        let mut all: Vec<Json> = Vec::new();
+        if let Ok(existing) = equalizer::util::json::parse_file(&path) {
+            if let Some(arr) = existing.as_arr() {
+                all.extend(
+                    arr.iter()
+                        .filter(|r| {
+                            r.get("path")
+                                .and_then(Json::as_str)
+                                .is_some_and(|p| p.ends_with("_pre_pr3"))
+                        })
+                        .cloned(),
+                );
+            }
+        }
+        all.extend(records);
+        std::fs::write(&path, format!("{}\n", Json::Arr(all).render()))?;
+        println!("\nwrote {path}");
+    }
     Ok(())
 }
 

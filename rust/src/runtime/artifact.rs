@@ -69,7 +69,11 @@ impl ArtifactEntry {
     /// `qat_bits_<channel>.json` sits next to the weights (the same
     /// file the AOT path consumes), else the paper's Sec. 4 operating
     /// point ([`QuantSpec::paper_default`]) — on the same folded
-    /// weights either way.
+    /// weights either way.  The constructed [`FixedPointCnn`] selects
+    /// the integer (i16/i32) datapath automatically whenever the
+    /// resolved formats pass its provability gate, so quantized entries
+    /// are the fast path end to end — through `Engine`, `AnyInstance`
+    /// and the serving pool alike.
     pub fn load_native_cnn(&self) -> Result<FixedPointCnn> {
         anyhow::ensure!(
             self.kind == ArtifactKind::NativeCnn,
@@ -274,23 +278,25 @@ impl ArtifactRegistry {
                         path.clone(),
                         ArtifactKind::NativeCnn,
                     ));
+                    // Quantized variant at every bucket: with the
+                    // integer datapath these are the serving *fast*
+                    // path, not a degraded mode (QAT formats from
+                    // `qat_bits_<channel>.json` when present, else the
+                    // paper's Sec. 4 operating point).
+                    models.push(
+                        ArtifactEntry::native(
+                            format!("cnn_{channel}_quant_w{width}"),
+                            &file,
+                            width,
+                            "cnn",
+                            channel,
+                            w.cfg.out_symbols(width),
+                            path.clone(),
+                            ArtifactKind::NativeCnn,
+                        )
+                        .native_quant(),
+                    );
                 }
-                // Quantized variant (paper Sec. 4 formats applied by the
-                // native datapath), at the width the AOT path exports.
-                let width = 1024usize;
-                models.push(
-                    ArtifactEntry::native(
-                        format!("cnn_{channel}_quant_w{width}"),
-                        &file,
-                        width,
-                        "cnn",
-                        channel,
-                        w.cfg.out_symbols(width),
-                        path.clone(),
-                        ArtifactKind::NativeCnn,
-                    )
-                    .native_quant(),
-                );
             }
 
             let file = format!("weights_fir_{channel}.json");
@@ -391,22 +397,30 @@ impl ArtifactRegistry {
 
     /// Resolve a serving profile name `<model>_<channel>` (e.g.
     /// `cnn_imdd`, `fir_imdd`, `volterra_imdd`, `cnn_proakis`) to the
-    /// *widest* full-precision batch-1 artifact of that family — the
-    /// serving choice: the widest bucket maximizes the payload one
-    /// burst can carry, and per-request `l_inst` selection (Fig. 11)
-    /// trims latency back down when a burst asks for it.
+    /// *widest* batch-1 artifact of that family — the serving choice:
+    /// the widest bucket maximizes the payload one burst can carry, and
+    /// per-request `l_inst` selection (Fig. 11) trims latency back down
+    /// when a burst asks for it.  A `_quant` suffix (`cnn_imdd_quant`)
+    /// selects the quantized family, which the native backend executes
+    /// on the integer fixed-point fast path.
     pub fn profile_entry(&self, profile: &str) -> Result<&ArtifactEntry> {
-        let (model, channel) = profile
-            .split_once('_')
-            .ok_or_else(|| anyhow!("profile {profile:?} is not of the form <model>_<channel>"))?;
+        let (base, quant) = match profile.strip_suffix("_quant") {
+            Some(base) => (base, true),
+            None => (profile, false),
+        };
+        let (model, channel) = base.split_once('_').ok_or_else(|| {
+            anyhow!("profile {profile:?} is not of the form <model>_<channel>[_quant]")
+        })?;
         self.models
             .iter()
-            .filter(|m| m.model == model && m.channel == channel && m.batch == 1 && !m.quant)
+            .filter(|m| {
+                m.model == model && m.channel == channel && m.batch == 1 && m.quant == quant
+            })
             .max_by_key(|m| m.width())
             .ok_or_else(|| {
                 anyhow!(
-                    "no artifacts for profile {profile:?} (model={model}, channel={channel}) \
-                     in {}",
+                    "no artifacts for profile {profile:?} (model={model}, channel={channel}, \
+                     quant={quant}) in {}",
                     self.dir.display()
                 )
             })
@@ -497,12 +511,30 @@ mod tests {
         let Some(reg) = registry() else { return };
         let e = reg.profile_entry("cnn_imdd").unwrap();
         assert_eq!(e.width(), *NATIVE_WIDTH_BUCKETS.last().unwrap());
-        assert!(!e.quant, "profiles serve the full-precision variant");
+        assert!(!e.quant, "bare profiles serve the full-precision variant");
         let e = reg.profile_entry("fir_imdd").unwrap();
         assert_eq!((e.model.as_str(), e.width()), ("fir", 4096));
         assert_eq!(reg.profile_entry("volterra_imdd").unwrap().width(), 1024);
         assert!(reg.profile_entry("transformer_imdd").is_err());
         assert!(reg.profile_entry("noseparator").is_err());
+    }
+
+    #[test]
+    fn quant_profiles_resolve_quant_family() {
+        // `<model>_<channel>_quant` selects the quantized entries — the
+        // integer fast path of the native backend — at every bucket.
+        let Some(reg) = registry() else { return };
+        let e = reg.profile_entry("cnn_imdd_quant").unwrap();
+        assert!(e.quant);
+        assert_eq!(e.width(), *NATIVE_WIDTH_BUCKETS.last().unwrap());
+        assert_eq!(e.model, "cnn");
+        let b = reg.buckets("cnn", "imdd", true);
+        assert_eq!(b, NATIVE_WIDTH_BUCKETS.to_vec(), "quant variants at every bucket");
+        // The loaded datapath actually runs the integer path (paper
+        // formats pass the provability gate on the committed weights).
+        let cnn = e.load_native_cnn().unwrap();
+        assert!(cnn.uses_integer_path(), "committed quant entry must take the int path");
+        assert!(reg.profile_entry("fir_imdd_quant").is_err(), "no quant FIR family");
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! Micro-benchmark harness (criterion is not vendored offline).
 //!
-//! Warmup + timed iterations with mean/stddev/min reporting, plus a
-//! throughput helper.  Used by every target in `rust/benches/`
+//! Warmup + timed iterations with mean/stddev/min reporting, plus the
+//! unified [`Throughput`] record (symbols/s, ns/symbol, GBd-equivalent)
+//! that `pipeline_hotpath`, `serving_pool`, `platform_compare` and
+//! `repro bench --json` all report, so their numbers are directly
+//! cross-comparable.  Used by every target in `rust/benches/`
 //! (`harness = false` binaries).
 
+use crate::util::json::Json;
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
@@ -32,6 +36,52 @@ impl Measurement {
     /// items/s given items processed per iteration.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Unified throughput record: one symbol per baud, so `gbd` is the
+/// line-rate equivalent the paper quotes (Sec. 5) and `symbols_per_s`
+/// is the software number every bench prints.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    pub symbols_per_s: f64,
+    pub ns_per_symbol: f64,
+    pub gbd: f64,
+}
+
+impl Throughput {
+    /// From a measurement and the symbols processed per iteration.
+    pub fn from_measurement(m: &Measurement, symbols_per_iter: f64) -> Self {
+        Self::from_rate(symbols_per_iter, m.mean.as_secs_f64())
+    }
+
+    /// From raw totals (`symbols` processed in `secs` of wall time).
+    pub fn from_rate(symbols: f64, secs: f64) -> Self {
+        let symbols_per_s = symbols / secs;
+        Self { symbols_per_s, ns_per_symbol: 1e9 / symbols_per_s, gbd: symbols_per_s / 1e9 }
+    }
+
+    /// The standard one-line rendering used by every bench target.
+    pub fn line(&self) -> String {
+        format!(
+            "{:.2} Msym/s  ({:.4} GBd-eq, {:.1} ns/sym)",
+            self.symbols_per_s / 1e6,
+            self.gbd,
+            self.ns_per_symbol
+        )
+    }
+
+    /// JSON record for machine-readable perf trajectories
+    /// (`BENCH_*.json`): `{profile, path, symbols_per_s, ns_per_symbol,
+    /// gbd}`.
+    pub fn to_json(&self, profile: &str, path: &str) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("profile".to_string(), Json::Str(profile.to_string()));
+        m.insert("path".to_string(), Json::Str(path.to_string()));
+        m.insert("symbols_per_s".to_string(), Json::Num(self.symbols_per_s));
+        m.insert("ns_per_symbol".to_string(), Json::Num(self.ns_per_symbol));
+        m.insert("gbd".to_string(), Json::Num(self.gbd));
+        Json::Obj(m)
     }
 }
 
@@ -156,5 +206,27 @@ mod tests {
             min: Duration::from_millis(10),
         };
         assert!((m.throughput(1000.0) - 100_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn unified_throughput_record() {
+        let m = Measurement {
+            name: "t".into(),
+            iters: 1,
+            mean: Duration::from_micros(512),
+            stddev: Duration::ZERO,
+            min: Duration::from_micros(512),
+        };
+        let t = Throughput::from_measurement(&m, 512.0);
+        assert!((t.symbols_per_s - 1e6).abs() < 1.0);
+        assert!((t.ns_per_symbol - 1000.0).abs() < 1e-6);
+        assert!((t.gbd - 1e-3).abs() < 1e-12);
+        let t2 = Throughput::from_rate(2e9, 1.0);
+        assert!((t2.gbd - 2.0).abs() < 1e-9);
+        let j = t2.to_json("cnn_imdd", "int16");
+        assert_eq!(j.req("profile").unwrap().as_str(), Some("cnn_imdd"));
+        assert_eq!(j.req("path").unwrap().as_str(), Some("int16"));
+        assert!(j.req("gbd").unwrap().as_f64().unwrap() > 1.9);
+        assert!(t2.line().contains("GBd-eq"));
     }
 }

@@ -1,0 +1,146 @@
+//! Integer-datapath acceptance: the i16/i32 fast path of the quantized
+//! CNN must be **bit-identical** to the fake-quant f32 reference —
+//! on random weight sets across widths and QAT format shapes (property
+//! tests), and on the committed artifacts (the serving contract).
+//! Specs that cannot be proven identical must fall back to the
+//! reference transparently.
+
+use equalizer::equalizer::cnn::FixedPointCnn;
+use equalizer::equalizer::weights::{CnnTopologyCfg, CnnWeights, ConvLayer};
+use equalizer::fixedpoint::{QFormat, QuantSpec};
+use equalizer::util::{json, prop};
+
+/// Random folded weights in the regime trained equalizers live in
+/// (|w| <= 0.35, |b| <= 0.25): comfortably inside the provability gate
+/// for every spec in [`spec_pool`], so the integer path must engage.
+fn random_weights(g: &mut prop::Gen, cfg: CnnTopologyCfg) -> CnnWeights {
+    let layers = cfg
+        .layer_channels()
+        .iter()
+        .map(|&(cin, cout)| ConvLayer {
+            w: g.vec_f32(cout * cin * cfg.kernel, -0.35, 0.35),
+            b: g.vec_f32(cout, -0.25, 0.25),
+            c_in: cin,
+            c_out: cout,
+            k: cfg.kernel,
+        })
+        .collect();
+    CnnWeights { cfg, layers, train_ber: 0.0 }
+}
+
+/// The paper operating point plus QAT-export-shaped specs (mixed
+/// per-layer formats, parsed from the same JSON `qat_bits_*.json`
+/// carries) and a symmetric narrow/wide pair.
+fn spec_pool() -> Vec<QuantSpec> {
+    let qat = |text: &str| QuantSpec::from_json(&json::parse(text).unwrap()).unwrap();
+    vec![
+        QuantSpec::paper_default(3),
+        qat(r#"{"w0": [3, 9], "w1": [2, 10], "w2": [3, 8],
+                "a_in": [4, 7], "a0": [4, 6], "a1": [3, 7], "a2": [4, 6]}"#),
+        qat(r#"{"w0": [2, 8], "w1": [2, 8], "w2": [2, 8],
+                "a_in": [3, 7], "a0": [3, 7], "a1": [3, 7], "a2": [3, 7]}"#),
+        qat(r#"{"w0": [4, 6], "w1": [4, 6], "w2": [4, 6],
+                "a_in": [5, 5], "a0": [5, 5], "a1": [5, 5], "a2": [5, 5]}"#),
+    ]
+}
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn integer_path_bit_identical_on_random_weights() {
+    // Property: for random weight sets x widths 16..4096 x QAT format
+    // shapes, the integer path returns byte-for-byte the fake-quant
+    // reference output (and actually engages — no silent fallback).
+    let cfg = CnnTopologyCfg::SELECTED;
+    let specs = spec_pool();
+    prop::check(12, |g| {
+        let weights = random_weights(g, cfg);
+        let spec = g.choose(&specs).clone();
+        let q = FixedPointCnn::new(weights, Some(spec));
+        assert!(q.uses_integer_path(), "gate refused a provable spec (seed {:#x})", g.seed);
+        let width = *g.choose(&[16usize, 48, 272, 1024, 4096]);
+        let x = g.vec_f32(width, -4.0, 4.0);
+        assert_eq!(
+            q.forward(&x),
+            q.forward_reference(&x),
+            "int16 != fakequant_f32 at width {width} (seed {:#x})",
+            g.seed
+        );
+    });
+}
+
+#[test]
+fn integer_path_bit_identical_on_committed_artifacts() {
+    // The acceptance bar: every committed CNN weight set, under the
+    // paper operating point *and* QAT-shaped formats, is bit-identical
+    // between the two datapaths at every serving bucket width.
+    let mut checked = 0;
+    for channel in ["imdd", "proakis"] {
+        let path = format!("{}/weights_cnn_{channel}.json", artifacts_dir());
+        let Ok(weights) = CnnWeights::load(&path) else { continue };
+        for spec in spec_pool() {
+            let q = FixedPointCnn::new(weights.clone(), Some(spec));
+            assert!(q.uses_integer_path(), "{channel}: committed weights must pass the gate");
+            for width in [256usize, 1024, 8192] {
+                let x: Vec<f32> = (0..width).map(|i| (i as f32 * 0.173).sin() * 1.7).collect();
+                assert_eq!(q.forward(&x), q.forward_reference(&x), "{channel} width {width}");
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 0, "committed artifacts missing — nothing verified");
+}
+
+#[test]
+fn unprovable_specs_fall_back_to_reference() {
+    let cfg = CnnTopologyCfg::SELECTED;
+    // Constant 0.3 weights: sum |w_code| is far beyond the f32-exact
+    // window for wide Q8.8 activations, so the bound (not the i16
+    // width) refuses the integer path.
+    let layers = cfg
+        .layer_channels()
+        .iter()
+        .map(|&(cin, cout)| ConvLayer {
+            w: vec![0.3; cout * cin * cfg.kernel],
+            b: vec![0.1; cout],
+            c_in: cin,
+            c_out: cout,
+            k: cfg.kernel,
+        })
+        .collect();
+    let weights = CnnWeights { cfg, layers, train_ber: 0.0 };
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("a_in".into(), QFormat::new(8, 8));
+    for l in 0..3 {
+        m.insert(format!("w{l}"), QFormat::new(8, 8));
+        m.insert(format!("a{l}"), QFormat::new(8, 8));
+    }
+    let q = FixedPointCnn::new(weights, Some(QuantSpec(m)));
+    assert!(!q.uses_integer_path(), "out-of-window spec must fall back");
+    assert_eq!(q.exec_path(), "fakequant_f32");
+    let x: Vec<f32> = (0..512).map(|i| (i as f32 * 0.21).cos()).collect();
+    assert_eq!(q.forward(&x), q.forward_reference(&x), "fallback is the reference itself");
+}
+
+#[test]
+fn quantized_entries_load_on_the_integer_path() {
+    // Through the registry (the serving loader): every committed quant
+    // entry resolves to the integer path, float entries to f32.
+    use equalizer::runtime::{ArtifactKind, ArtifactRegistry};
+    let Ok(reg) = ArtifactRegistry::discover(artifacts_dir()) else { return };
+    for entry in &reg.models {
+        // Skip HLO entries (present when `make artifacts` has run).
+        if entry.model != "cnn" || entry.kind != ArtifactKind::NativeCnn {
+            continue;
+        }
+        let cnn = entry.load_native_cnn().unwrap();
+        if entry.quant {
+            assert!(cnn.uses_integer_path(), "{} must run int16", entry.name);
+            assert_eq!(cnn.exec_path(), "int16");
+        } else {
+            assert_eq!(cnn.exec_path(), "f32", "{}", entry.name);
+        }
+    }
+}

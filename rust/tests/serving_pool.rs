@@ -131,6 +131,55 @@ fn sharded_pool_matches_sequential_reference_across_profiles() {
 }
 
 #[test]
+fn quantized_profile_through_pool_matches_reference() {
+    // The integer fast path must survive the full serving stack: a
+    // 2-shard pool serving `cnn_imdd_quant` answers bit-identically to
+    // the sequential single-instance reference pool, the quantized
+    // engine really is a different datapath than the float profile, and
+    // every served soft symbol sits on the final activation grid (an
+    // end-to-end witness that the integer requantizer ran).
+    use equalizer::fixedpoint::QuantSpec;
+
+    let reg = registry();
+    let profiles = ["cnn_imdd", "cnn_imdd_quant"];
+    let reference_cfg = PoolConfig { shards: 1, instances_per_shard: 1, ..PoolConfig::default() };
+    let reference = ServerPool::from_registry(&reg, &profiles, &reference_cfg).unwrap().spawn();
+    let data = ImddChannel::default().transmit(6000, 77);
+    let want_q = reference.call("cnn_imdd_quant", data.rx.clone(), None).unwrap();
+    let want_f = reference.call("cnn_imdd", data.rx.clone(), None).unwrap();
+    assert!(!want_q.soft_symbols.is_empty());
+    assert_eq!(want_q.soft_symbols.len(), want_f.soft_symbols.len());
+    assert_ne!(want_q.soft_symbols, want_f.soft_symbols, "quant must differ from float");
+    reference.shutdown();
+
+    let entry = reg.profile_entry("cnn_imdd_quant").unwrap();
+    let spec = entry.qat_bits().unwrap().unwrap_or_else(|| QuantSpec::paper_default(3));
+    let fmt = spec.get("a2").unwrap();
+    for &v in &want_q.soft_symbols {
+        assert_eq!(v, fmt.quantize_f32(v), "off-grid soft symbol {v}");
+    }
+
+    let pool_cfg = PoolConfig { shards: 2, instances_per_shard: 2, ..PoolConfig::default() };
+    let pool = ServerPool::from_registry(&reg, &profiles, &pool_cfg).unwrap().spawn();
+    std::thread::scope(|scope| {
+        for _ in 0..3 {
+            let client = pool.client();
+            let rx = &data.rx;
+            let want = &want_q.soft_symbols;
+            scope.spawn(move || {
+                for _ in 0..2 {
+                    let resp = client.call("cnn_imdd_quant", rx.clone(), None).unwrap();
+                    assert_eq!(&resp.soft_symbols, want, "pool diverges from reference");
+                }
+            });
+        }
+    });
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), 6);
+    assert_eq!(stats.total_errors(), 0);
+}
+
+#[test]
 fn lut_selection_through_the_pool_path() {
     // Fig. 11 through the pool: a low throughput requirement selects a
     // smaller l_inst (lower latency) than a high requirement, and the
