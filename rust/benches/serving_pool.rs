@@ -1,15 +1,21 @@
 //! Serving-layer benchmarks (§Perf): dispatcher overhead with trivial
-//! instances (pure pool bookkeeping), and shard scaling on the real
-//! native CNN profile — the multi-stream analogue of the
-//! `pipeline_hotpath` parallelism headline.
+//! instances (pure pool bookkeeping), shard scaling on the real native
+//! CNN profile — the multi-stream analogue of the `pipeline_hotpath`
+//! parallelism headline — and the adaptive-scheduler headline: cross-
+//! request coalescing on a 64-client small-burst mix, the regime where
+//! per-request execution leaves the datapath mostly idle (the paper's
+//! small-batch collapse, Sec. 7, re-created and then closed in
+//! software).
 
 use equalizer::coordinator::instance::DecimatorInstance;
 use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool, Shard};
+use equalizer::coordinator::sched::SchedulerConfig;
 use equalizer::coordinator::seqlen::SeqLenOptimizer;
 use equalizer::coordinator::server::EqualizerServer;
 use equalizer::coordinator::timing::TimingModel;
 use equalizer::runtime::ArtifactRegistry;
 use equalizer::util::bench::{header, Bencher, Throughput};
+use std::time::Duration;
 
 fn decimator_shard(n_i: usize, width: usize, o_act: usize) -> Shard<DecimatorInstance> {
     let instances: Vec<DecimatorInstance> =
@@ -81,4 +87,57 @@ fn main() {
             pool.shutdown();
         }
     }
+
+    // ---- coalescing on the small-burst mix (the scheduler headline) --
+    // 64 concurrent clients x 128-symbol bursts on the int16 fast
+    // path: per-request execution pays one dispatch + one mostly-empty
+    // pipeline pass per burst; coalescing batches the queue into a few
+    // passes that keep every instance busy.  Bit-exactness of the two
+    // modes is asserted in tests/adaptive_sched.rs — this target only
+    // measures the throughput gap.
+    header("pool coalescing (64 clients x 128-symbol bursts, cnn_imdd_quant)");
+    let clients = 64usize;
+    let burst: Vec<f32> = (0..256).map(|i| (i as f32 * 0.19).sin()).collect();
+    let small_symbols = (clients * burst.len() / 2) as f64;
+    let mut rates = Vec::new();
+    let coalesced = SchedulerConfig::default().with_coalescing(Duration::from_millis(1));
+    let modes = [("per-request", SchedulerConfig::default()), ("coalesced", coalesced)];
+    for (name, scheduler) in modes {
+        let cfg = PoolConfig {
+            shards: 2,
+            instances_per_shard: 4,
+            policy: RoutePolicy::ShortestQueue,
+            queue_cap: clients,
+            scheduler,
+            ..PoolConfig::default()
+        };
+        let pool = match ServerPool::from_registry(&reg, &["cnn_imdd_quant"], &cfg) {
+            Ok(p) => p.spawn(),
+            Err(e) => {
+                println!("(cnn_imdd_quant profile unavailable: {e})");
+                return;
+            }
+        };
+        let m = b.bench(&format!("pool_smallburst {name}"), || {
+            let pending: Vec<_> = (0..clients)
+                .map(|_| pool.submit("cnn_imdd_quant", burst.clone(), None).unwrap())
+                .collect();
+            for rx in pending {
+                rx.recv().unwrap();
+            }
+        });
+        let t = Throughput::from_measurement(&m, small_symbols);
+        println!("    -> {}", t.line());
+        rates.push(t.symbols_per_s);
+        let stats = pool.shutdown();
+        println!(
+            "       ({} of {} requests served coalesced)",
+            stats.total_coalesced_requests(),
+            stats.total_requests()
+        );
+    }
+    println!(
+        "\ncoalescing is {:.2}x per-request execution on the small-burst mix",
+        rates[1] / rates[0]
+    );
 }

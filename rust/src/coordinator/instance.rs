@@ -13,7 +13,7 @@ use anyhow::Result;
 /// A worker that equalizes fixed-width sub-sequences.
 ///
 /// `Send` is *not* required: shared-client PJRT instances
-/// ([`SharedPjrtInstance`]) are intentionally single-threaded — the
+/// (`SharedPjrtInstance`, `pjrt` feature) are intentionally single-threaded — the
 /// CPU PJRT client parallelizes each execute internally, and measured
 /// end-to-end throughput is higher with one shared client than with
 /// one client per instance (EXPERIMENTS.md §Perf).  The threaded

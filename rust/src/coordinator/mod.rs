@@ -16,15 +16,20 @@
 //! paper's Sec. 6.1 model, [`sim`] the cycle-approximate simulator it
 //! is validated against (Fig. 12), [`seqlen`] the Sec. 6.2
 //! optimization framework, [`server`] the single-stream serving
-//! engine, and [`pool`] the sharded multi-stream pool with per-request
-//! profile selection built on top of it.
+//! engine, [`pool`] the sharded multi-stream pool with per-request
+//! profile selection built on top of it, and [`sched`] the adaptive
+//! scheduling policy (cross-request coalescing, work stealing,
+//! hysteretic shard autoscaling) that pool runs under load.
 
 pub mod instance;
 pub mod msm;
 pub mod ogm;
 pub mod orm;
 pub mod pipeline;
+#[warn(missing_docs)]
 pub mod pool;
+#[warn(missing_docs)]
+pub mod sched;
 pub mod seqlen;
 pub mod server;
 pub mod sim;

@@ -201,11 +201,74 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
         self.run_batch(&chunks)
     }
 
+    /// Equalize several independent bursts in **one** batched pipeline
+    /// pass at a shared payload `l_inst` — the serving pool's
+    /// cross-request coalescing primitive.  Every burst is chunked
+    /// exactly as [`Self::equalize_resized`] would chunk it alone; the
+    /// concatenated chunk list then flows through one SSM distribution
+    /// and one [`EqualizerInstance::process_batch`] call per instance,
+    /// and each burst's outputs are re-assembled with its own ORM pass.
+    ///
+    /// **Bit-exactness invariant:** the result equals calling
+    /// [`Self::equalize_resized`] on each burst sequentially.  This
+    /// holds because chunk geometry depends only on (burst, `l_inst`,
+    /// `o_act`), every instance is an identical datapath, and each
+    /// chunk is processed independently — so the chunk -> instance
+    /// assignment (the only thing coalescing changes) cannot affect
+    /// any output bit.  Asserted across mixed burst sizes and all
+    /// instance counts in the tests here and end to end in
+    /// `tests/adaptive_sched.rs`.
+    pub fn equalize_coalesced(&mut self, bursts: &[&[f32]], l_inst: usize) -> Result<Vec<Vec<f32>>>
+    where
+        I: Send,
+    {
+        anyhow::ensure!(
+            l_inst > 0 && l_inst <= self.l_inst,
+            "l_inst {l_inst} outside (0, {}]",
+            self.l_inst
+        );
+        anyhow::ensure!(l_inst % self.n_os == 0, "l_inst {l_inst} off the N_os={} grid", self.n_os);
+        let l_ol = self.l_ol();
+        let mut all: Vec<ogm::Chunk> = Vec::new();
+        let mut spans = Vec::with_capacity(bursts.len());
+        for x in bursts {
+            let start = all.len();
+            let mut chunks = ogm::make_chunks(x, l_inst, self.o_act);
+            for c in &mut chunks {
+                c.data.resize(l_ol, 0.0);
+            }
+            all.append(&mut chunks);
+            spans.push((start, all.len()));
+        }
+        let ordered = self.process_ordered(&all)?;
+        let o_sym = self.o_act / self.n_os;
+        Ok(spans
+            .into_iter()
+            .map(|(a, b)| {
+                let valid: Vec<usize> = all[a..b].iter().map(|c| c.valid / self.n_os).collect();
+                orm::merge_outputs(&ordered[a..b], o_sym, &valid)
+            })
+            .collect())
+    }
+
     /// One thread per instance, each consuming its whole SSM queue as a
     /// contiguous batch — shared by [`Self::equalize_batch`] and
     /// [`Self::equalize_resized`].  Every `chunks[i].data` must already
     /// be `l_ol` samples long.
     fn run_batch(&mut self, chunks: &[ogm::Chunk]) -> Result<Vec<f32>>
+    where
+        I: Send,
+    {
+        let ordered = self.process_ordered(chunks)?;
+        let valid: Vec<usize> = chunks.iter().map(|c| c.valid / self.n_os).collect();
+        Ok(orm::merge_outputs(&ordered, self.o_act / self.n_os, &valid))
+    }
+
+    /// SSM-distribute `chunks` over the instances, process each queue
+    /// as one contiguous [`EqualizerInstance::process_batch`] call on
+    /// its own thread, and MSM-collect the outputs back into chunk
+    /// order (no ORM — callers strip overlap per logical stream).
+    fn process_ordered(&mut self, chunks: &[ogm::Chunk]) -> Result<Vec<Vec<f32>>>
     where
         I: Send,
     {
@@ -231,7 +294,7 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
             Ok(())
         })?;
 
-        Ok(self.merge(&per_instance, chunks))
+        Ok(msm::collect(&per_instance, chunks.len()))
     }
 }
 
@@ -300,6 +363,39 @@ mod tests {
         assert!(wide.equalize_resized(&x, 511).is_err());
         assert!(wide.equalize_resized(&x, 514).is_err());
         assert!(wide.equalize_resized(&x, 0).is_err());
+    }
+
+    #[test]
+    fn coalesced_matches_per_burst_resized() {
+        // The coalescing primitive: N bursts through one batched pass
+        // must be bit-identical to serving each burst alone, for mixed
+        // burst sizes (multi-chunk, partial tail, sub-chunk, empty).
+        let lens = [5000usize, 1000, 256, 10, 0, 4097];
+        let bursts: Vec<Vec<f32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(b, &n)| (0..n).map(|i| ((i + 17 * b) as f32 * 0.13).sin()).collect())
+            .collect();
+        for l_inst in [256usize, 512] {
+            let mut pool = decimator_pipeline(4, 512, 32);
+            let refs: Vec<&[f32]> = bursts.iter().map(Vec::as_slice).collect();
+            let coalesced = pool.equalize_coalesced(&refs, l_inst).unwrap();
+            assert_eq!(coalesced.len(), bursts.len());
+            let mut solo = decimator_pipeline(4, 512, 32);
+            for (x, got) in bursts.iter().zip(&coalesced) {
+                if x.is_empty() {
+                    assert!(got.is_empty(), "empty burst stays empty");
+                    continue;
+                }
+                assert_eq!(got, &solo.equalize_resized(x, l_inst).unwrap(), "l_inst {l_inst}");
+            }
+        }
+        // Invalid payloads are rejected exactly like equalize_resized.
+        let mut pool = decimator_pipeline(2, 512, 32);
+        let x = vec![0.0f32; 64];
+        assert!(pool.equalize_coalesced(&[x.as_slice()], 511).is_err());
+        assert!(pool.equalize_coalesced(&[x.as_slice()], 0).is_err());
+        assert!(pool.equalize_coalesced(&[x.as_slice()], 514).is_err());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Sharded multi-stream serving pool.
+//! Sharded multi-stream serving pool with an adaptive scheduler.
 //!
 //! The paper's architecture serves *one* stream per engine complex; the
 //! real-time follow-up (Ney et al., arXiv:2402.15288) drives the same
@@ -6,7 +6,9 @@
 //! service-scale composition of both: a [`ServerPool`] owns `N` shards,
 //! each a full OGM -> SSM -> instances -> MSM -> ORM pipeline complex
 //! ([`super::server::EqualizerServer`]) *per profile*, behind a bounded
-//! request queue.
+//! request queue — plus the adaptive scheduler
+//! ([`super::sched::SchedulerConfig`]) that keeps those complexes full
+//! under many small concurrent requests:
 //!
 //! * **Per-request channel selection** — a request names a profile
 //!   (`cnn_imdd`, `fir_imdd`, `volterra_imdd`, `cnn_proakis`, and the
@@ -14,48 +16,92 @@
 //!   native backend runs on the integer fixed-point fast path); the
 //!   shard resolves it to the matching engine, so one pool serves
 //!   heterogeneous traffic.  Profiles resolve through the existing
-//!   [`ArtifactRegistry`] ([`ArtifactRegistry::profile_entry`]).
+//!   [`ArtifactRegistry`] ([`ArtifactRegistry::profile_entry`]), and
+//!   their datapaths are parsed exactly once into a
+//!   [`crate::runtime::artifact::ProfileBlueprint`] that every shard —
+//!   including autoscaled ones — stamps engines from.
 //! * **Per-burst sequence-length selection** — each engine keeps the
 //!   `t_req` -> `l_inst` LUT of Fig. 11, so latency/throughput trades
 //!   stay per burst, per shard.
-//! * **Backpressure** — shard queues are bounded
-//!   (`std::sync::mpsc::sync_channel`): [`PoolClient::submit`] blocks
-//!   when the routed shard is full, [`PoolClient::try_submit`] reports
-//!   fullness instead.
+//! * **Backpressure** — shard queues are bounded:
+//!   [`PoolClient::submit`] blocks while the routed shard is full,
+//!   [`PoolClient::try_submit`] reports fullness instead.
 //! * **Routing** — [`RoutePolicy::RoundRobin`] or
 //!   [`RoutePolicy::ShortestQueue`] over the live per-shard queue
-//!   depths ([`crate::metrics::serving::ShardCounters`]).
+//!   depths ([`crate::metrics::serving::ShardCounters`]), restricted
+//!   to the shards the autoscaler currently keeps live.
 //!
-//! Replies are bit-identical to the sequential single-pipeline
-//! reference for the same inputs: a burst is never split across shards
-//! and every datapath is deterministic (asserted in
-//! `tests/serving_pool.rs`).
+//! # Scheduler invariants
+//!
+//! **Bit-exactness under coalescing.**  A worker that coalesces
+//! queued bursts groups them by (profile, picked `l_inst`) and runs
+//! the group through one batched pipeline pass
+//! ([`super::pipeline::EqualizerPipeline::equalize_coalesced`]).
+//! Coalescing only changes *which instance* processes *which chunk*;
+//! chunk geometry is per burst, every instance is an identical
+//! datapath, and chunks are processed independently — so every reply
+//! is bit-identical to serving the burst alone (asserted across mixed
+//! profiles, burst sizes and quantized profiles in
+//! `tests/adaptive_sched.rs`).
+//!
+//! **Steal ordering.**  A thief takes whole bursts — never a burst's
+//! chunks — from the *front* (oldest end) of the deepest live queue,
+//! at most half of it (bounded by the thief's free capacity), and
+//! appends them to its own queue — empty when it decided to steal,
+//! save for racing submissions — in the same order.  Per-request
+//! integrity and FIFO dispatch order are
+//! preserved; cross-request *completion* order was never guaranteed by
+//! a multi-shard pool (two shards always race) and stealing does not
+//! change that.  Stealing requires every shard to serve identical
+//! engines per profile (validated at construction), so a stolen burst
+//! picks the same `l_inst` and produces the same bits on the thief.
+//!
+//! **Autoscale stability.**  The monitor thread feeds queue pressure
+//! into the hysteretic [`super::sched::AutoScaler`]; parked shards
+//! keep their engines resident (no weight reload on growth) and drain
+//! any straggling queue before going idle, so shrinking never strands
+//! a request.
 
 use super::instance::{
     AnyInstance, EqualizerInstance, FirInstance, NativeInstance, VolterraInstance,
 };
+use super::sched::{AutoScaleConfig, AutoScaler, ScaleDecision, SchedulerConfig};
 use super::seqlen::SeqLenOptimizer;
 use super::server::EqualizerServer;
 use super::timing::TimingModel;
-use crate::equalizer::weights::{CnnTopologyCfg, FirWeights, VolterraWeights};
-use crate::metrics::serving::{ServerStats, ShardCounters};
-use crate::runtime::{ArtifactKind, ArtifactRegistry};
+use crate::equalizer::weights::CnnTopologyCfg;
+use crate::metrics::serving::{PoolStats, ServerStats, ShardCounters};
+use crate::runtime::artifact::{ProfileBlueprint, ProfileDatapath};
+use crate::runtime::ArtifactRegistry;
 use anyhow::Result;
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 /// Default bound on each shard's request queue.
 pub const DEFAULT_QUEUE_CAP: usize = 64;
 
+/// How often an idle shard re-checks other queues for stealable work
+/// (doubles up to [`STEAL_POLL_MAX`] while nothing is stealable, so a
+/// long-idle pool doesn't busy-poll; any push to the own queue still
+/// wakes the worker immediately).
+const STEAL_POLL: Duration = Duration::from_millis(1);
+
+/// Upper bound on the backed-off steal poll interval.
+const STEAL_POLL_MAX: Duration = Duration::from_millis(32);
+
+/// Minimum victim queue length before a steal is worthwhile (the last
+/// queued burst is left to its own shard).
+const STEAL_MIN: usize = 2;
+
 /// How the dispatcher picks a shard for a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
-    /// Cycle through shards in submit order.
+    /// Cycle through the live shards in submit order.
     RoundRobin,
-    /// Route to the shard with the fewest queued requests (ties to the
-    /// lowest shard index).
+    /// Route to the live shard with the fewest queued requests (ties
+    /// to the lowest shard index).
     ShortestQueue,
 }
 
@@ -91,12 +137,17 @@ pub struct PoolResponse {
     pub soft_symbols: Vec<f32>,
     /// l_inst the engine selected for this burst (samples).
     pub l_inst: usize,
-    /// Shard that served the burst.
+    /// Shard that served the burst (the thief when it was stolen).
     pub shard: usize,
     /// Profile the burst was equalized under.
     pub profile: String,
-    /// Wall-clock time on the shard worker.
+    /// Wall-clock time on the shard worker.  For a coalesced burst
+    /// this is the whole batch's pass time — the latency the request
+    /// actually observed.
     pub elapsed_us: f64,
+    /// Requests that shared this burst's batched pipeline pass
+    /// (1 = served alone).
+    pub batched: usize,
     /// Processing failure, if any.
     pub error: Option<String>,
 }
@@ -109,6 +160,7 @@ pub struct Shard<I: EqualizerInstance + Send + 'static> {
 }
 
 impl<I: EqualizerInstance + Send + 'static> Shard<I> {
+    /// An empty shard; register engines with [`Self::with_profile`].
     pub fn new() -> Self {
         Self { profiles: BTreeMap::new() }
     }
@@ -141,9 +193,12 @@ impl<I: EqualizerInstance + Send + 'static> Default for Shard<I> {
 #[derive(Debug, Clone)]
 pub struct PoolConfig {
     /// Number of shards (worker threads x full pipeline complexes).
+    /// With autoscaling this is the *maximum* live set; see
+    /// [`AutoScaleConfig::min_shards`].
     pub shards: usize,
     /// Instances per engine inside each shard (power of two).
     pub instances_per_shard: usize,
+    /// Dispatch policy over the live shards.
     pub policy: RoutePolicy,
     /// Bounded per-shard queue length (backpressure).
     pub queue_cap: usize,
@@ -151,6 +206,9 @@ pub struct PoolConfig {
     pub lut_instances: usize,
     /// Clock assumed by the LUT's timing model.
     pub f_clk: f64,
+    /// Adaptive scheduling policy (coalescing / stealing / autoscale);
+    /// the default disables all three.
+    pub scheduler: SchedulerConfig,
 }
 
 impl Default for PoolConfig {
@@ -162,6 +220,7 @@ impl Default for PoolConfig {
             queue_cap: DEFAULT_QUEUE_CAP,
             lut_instances: 64,
             f_clk: 200e6,
+            scheduler: SchedulerConfig::default(),
         }
     }
 }
@@ -172,12 +231,30 @@ pub struct ServerPool<I: EqualizerInstance + Send + 'static> {
     shards: Vec<Shard<I>>,
     policy: RoutePolicy,
     queue_cap: usize,
+    scheduler: SchedulerConfig,
 }
 
 impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
-    /// Every shard must serve the identical profile set (any shard can
-    /// take any request).
+    /// A pool with the default (disabled) scheduler: every shard must
+    /// serve the identical profile set (any shard can take any
+    /// request).
     pub fn new(shards: Vec<Shard<I>>, policy: RoutePolicy, queue_cap: usize) -> Result<Self> {
+        Self::with_scheduler(shards, policy, queue_cap, SchedulerConfig::default())
+    }
+
+    /// A pool with an explicit adaptive-scheduler policy.
+    ///
+    /// Beyond the [`Self::new`] invariants, enabling
+    /// [`SchedulerConfig::steal`] requires every shard's engines to be
+    /// geometrically identical per profile (same `l_ol`, payload and
+    /// `N_os`) — a stolen burst is equalized by the *thief's* engine,
+    /// and only identical engines make that bit-identical.
+    pub fn with_scheduler(
+        shards: Vec<Shard<I>>,
+        policy: RoutePolicy,
+        queue_cap: usize,
+        scheduler: SchedulerConfig,
+    ) -> Result<Self> {
         anyhow::ensure!(!shards.is_empty(), "need at least one shard");
         anyhow::ensure!(queue_cap >= 1, "queue capacity must be at least 1");
         let names = shards[0].profile_names();
@@ -189,33 +266,66 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
                 s.profile_names()
             );
         }
-        Ok(Self { shards, policy, queue_cap })
+        if scheduler.steal {
+            for (i, s) in shards.iter().enumerate().skip(1) {
+                for (name, engine) in &s.profiles {
+                    let r = &shards[0].profiles[name];
+                    anyhow::ensure!(
+                        engine.l_ol() == r.l_ol()
+                            && engine.max_payload() == r.max_payload()
+                            && engine.n_os() == r.n_os(),
+                        "work stealing requires identical engines per profile: shard {i} \
+                         {name:?} has l_ol {} / payload {}, shard 0 has l_ol {} / payload {}",
+                        engine.l_ol(),
+                        engine.max_payload(),
+                        r.l_ol(),
+                        r.max_payload()
+                    );
+                }
+            }
+        }
+        if let Some(auto) = &scheduler.autoscale {
+            auto.validate(shards.len())?;
+        }
+        Ok(Self { shards, policy, queue_cap, scheduler })
     }
 
+    /// Shards this pool was constructed with (the maximum live set).
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
 
-    /// Start one worker thread per shard and return the dispatch
-    /// handle.
+    /// Start one worker thread per shard (plus the autoscale monitor
+    /// when configured) and return the dispatch handle.
     pub fn spawn(self) -> PoolHandle {
-        let Self { shards, policy, queue_cap } = self;
+        let Self { shards, policy, queue_cap, scheduler } = self;
+        let n = shards.len();
         let profiles: Arc<[String]> = shards[0].profile_names().into();
-        let mut txs = Vec::with_capacity(shards.len());
-        let mut joins = Vec::with_capacity(shards.len());
-        let mut counters = Vec::with_capacity(shards.len());
+        let live = scheduler.autoscale.as_ref().map_or(n, |a| a.min_shards.min(n));
+        let core = Arc::new(SchedCore {
+            slots: (0..n).map(|_| ShardSlot::default()).collect(),
+            counters: (0..n).map(|_| Arc::new(ShardCounters::default())).collect(),
+            queue_cap,
+            sched: scheduler,
+            active: AtomicUsize::new(live),
+            open: AtomicBool::new(true),
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
+        });
+        let mut joins = Vec::with_capacity(n + 1);
         for (id, shard) in shards.into_iter().enumerate() {
-            let (tx, rx) = mpsc::sync_channel::<PoolRequest>(queue_cap);
-            let shared = Arc::new(ShardCounters::default());
-            let worker_counters = Arc::clone(&shared);
-            joins.push(std::thread::spawn(move || shard_loop(shard, id, rx, worker_counters)));
-            txs.push(tx);
-            counters.push(shared);
+            let worker_core = Arc::clone(&core);
+            joins.push(std::thread::spawn(move || worker_loop(shard, id, worker_core)));
         }
+        if let Some(auto) = core.sched.autoscale.clone() {
+            let monitor_core = Arc::clone(&core);
+            joins.push(std::thread::spawn(move || monitor_loop(monitor_core, auto)));
+        }
+        let clients_guard = Arc::new(ClientsGuard { core: Arc::clone(&core) });
         PoolHandle {
             client: PoolClient {
-                txs,
-                counters,
+                core,
+                _guard: clients_guard,
                 profiles,
                 policy,
                 rr: Arc::new(AtomicUsize::new(0)),
@@ -225,40 +335,321 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
     }
 }
 
-/// Worker loop: drain the shard queue until every sender is gone.
-///
-/// The outstanding-work counter is decremented only once a request
-/// *finishes*, so [`RoutePolicy::ShortestQueue`] sees in-service work,
-/// not just what sits in the channel.
-fn shard_loop<I: EqualizerInstance + Send + 'static>(
+/// One shard's bounded request queue plus its wakeup machinery.
+#[derive(Default)]
+struct ShardSlot {
+    queue: Mutex<VecDeque<PoolRequest>>,
+    /// Mirror of `queue.len()` so victim selection and routing never
+    /// take the lock.
+    queued: AtomicUsize,
+    /// Signalled on every push (and on activation / shutdown).
+    not_empty: Condvar,
+    /// Signalled whenever the worker frees queue capacity.
+    not_full: Condvar,
+}
+
+/// State shared by the dispatcher, the shard workers and the monitor.
+struct SchedCore {
+    slots: Vec<ShardSlot>,
+    counters: Vec<Arc<ShardCounters>>,
+    queue_cap: usize,
+    sched: SchedulerConfig,
+    /// Shards the dispatcher routes to (a prefix of `slots`).
+    active: AtomicUsize,
+    /// Cleared when the last [`PoolClient`] clone drops.
+    open: AtomicBool,
+    scale_ups: AtomicU64,
+    scale_downs: AtomicU64,
+}
+
+impl SchedCore {
+    fn pool_stats(&self) -> PoolStats {
+        PoolStats {
+            active_shards: self.active.load(Ordering::SeqCst),
+            scale_ups: self.scale_ups.load(Ordering::Relaxed),
+            scale_downs: self.scale_downs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Dropped when the last client goes away: flips `open` and wakes
+/// every worker so draining can finish.
+struct ClientsGuard {
+    core: Arc<SchedCore>,
+}
+
+impl Drop for ClientsGuard {
+    fn drop(&mut self) {
+        self.core.open.store(false, Ordering::SeqCst);
+        for slot in &self.core.slots {
+            slot.not_empty.notify_all();
+        }
+    }
+}
+
+/// Worker loop: serve batches from the own queue (stealing when idle)
+/// until every client is gone and the queue is drained.
+fn worker_loop<I: EqualizerInstance + Send + 'static>(
     mut shard: Shard<I>,
-    shard_id: usize,
-    rx: mpsc::Receiver<PoolRequest>,
-    counters: Arc<ShardCounters>,
+    id: usize,
+    core: Arc<SchedCore>,
 ) {
-    while let Ok(req) = rx.recv() {
-        let t0 = Instant::now();
-        let (soft_symbols, l_inst, error) = match shard.profiles.get_mut(&req.profile) {
-            None => (Vec::new(), 0, Some(format!("unknown profile {:?}", req.profile))),
-            Some(engine) => {
-                let (result, l_inst) = engine.serve_one(&req.samples, req.t_req);
-                match result {
-                    Ok(soft) => (soft, l_inst, None),
-                    Err(e) => (Vec::new(), l_inst, Some(e.to_string())),
-                }
+    while let Some(batch) = next_batch(&core, id, &shard) {
+        execute_batch(&mut shard, id, &core, batch);
+    }
+}
+
+/// Block until a batch is available: pop the own queue (coalescing up
+/// to the configured window), stealing from the deepest live queue
+/// when the own queue is empty.  `None` once the pool is closed and
+/// the own queue drained.
+fn next_batch<I: EqualizerInstance + Send + 'static>(
+    core: &SchedCore,
+    id: usize,
+    shard: &Shard<I>,
+) -> Option<Vec<PoolRequest>> {
+    let slot = &core.slots[id];
+    let mut steal_wait = STEAL_POLL;
+    let mut q = slot.queue.lock().expect("shard queue");
+    loop {
+        if let Some(first) = q.pop_front() {
+            slot.queued.store(q.len(), Ordering::SeqCst);
+            slot.not_full.notify_all();
+            return Some(collect_group(core, id, shard, first, q));
+        }
+        if !core.open.load(Ordering::SeqCst) {
+            return None;
+        }
+        let stealing = core.sched.steal && id < core.active.load(Ordering::SeqCst);
+        if stealing {
+            drop(q);
+            let stole = steal_into(core, id);
+            q = slot.queue.lock().expect("shard queue");
+            if stole || !q.is_empty() {
+                steal_wait = STEAL_POLL;
+                continue;
             }
-        };
-        let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
-        counters.served(soft_symbols.len(), elapsed_us, error.is_some());
-        counters.dequeued();
-        let _ = req.reply.send(PoolResponse {
-            soft_symbols,
-            l_inst,
-            shard: shard_id,
-            profile: req.profile,
-            elapsed_us,
-            error,
-        });
+            let (guard, _) = slot.not_empty.wait_timeout(q, steal_wait).expect("shard queue");
+            steal_wait = (steal_wait * 2).min(STEAL_POLL_MAX);
+            q = guard;
+        } else {
+            q = slot.not_empty.wait(q).expect("shard queue");
+        }
+    }
+}
+
+/// Starting from `first`, gather queued requests with the same
+/// (profile, picked `l_inst`) key — waiting up to the coalescing
+/// window for more to arrive — and return them as one batch.  Requests
+/// with other keys keep their queue positions (and their relative
+/// order).
+fn collect_group<I: EqualizerInstance + Send + 'static>(
+    core: &SchedCore,
+    id: usize,
+    shard: &Shard<I>,
+    first: PoolRequest,
+    mut q: MutexGuard<'_, VecDeque<PoolRequest>>,
+) -> Vec<PoolRequest> {
+    if !core.sched.coalescing() {
+        return vec![first];
+    }
+    let Some(engine) = shard.profiles.get(&first.profile) else {
+        return vec![first];
+    };
+    let slot = &core.slots[id];
+    let max = core.sched.coalesce_max;
+    let l_inst = engine.pick_l_inst(first.t_req);
+    let profile = first.profile.clone();
+    let mut batch = vec![first];
+    let deadline = Instant::now() + core.sched.coalesce_window;
+    loop {
+        let mut i = 0;
+        while i < q.len() && batch.len() < max {
+            if q[i].profile == profile && engine.pick_l_inst(q[i].t_req) == l_inst {
+                batch.push(q.remove(i).expect("scanned index in range"));
+            } else {
+                i += 1;
+            }
+        }
+        slot.queued.store(q.len(), Ordering::SeqCst);
+        slot.not_full.notify_all();
+        if batch.len() >= max || !core.open.load(Ordering::SeqCst) {
+            break;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (guard, _) = slot.not_empty.wait_timeout(q, deadline - now).expect("shard queue");
+        q = guard;
+    }
+    batch
+}
+
+/// Move up to half of the deepest live queue (oldest bursts first,
+/// whole bursts only) onto `thief`'s queue.  Never holds two queue
+/// locks at once.  Returns whether anything moved.
+fn steal_into(core: &SchedCore, thief: usize) -> bool {
+    let live = core.active.load(Ordering::SeqCst).min(core.slots.len());
+    let mut victim: Option<usize> = None;
+    let mut best_len = STEAL_MIN - 1;
+    for (v, slot) in core.slots.iter().enumerate().take(live) {
+        if v == thief {
+            continue;
+        }
+        let len = slot.queued.load(Ordering::SeqCst);
+        if len > best_len {
+            best_len = len;
+            victim = Some(v);
+        }
+    }
+    let Some(v) = victim else {
+        return false;
+    };
+    // Bound the take by the thief's free capacity so a racing
+    // submission wave cannot push the thief far past `queue_cap` (the
+    // thief's queue was empty when it decided to steal, so `free` is
+    // normally the full cap; the mirror read keeps a race to a
+    // transient overshoot of at most the in-flight submissions).
+    let free = core.queue_cap.saturating_sub(core.slots[thief].queued.load(Ordering::SeqCst));
+    if free == 0 {
+        return false;
+    }
+    let stolen: Vec<PoolRequest> = {
+        let mut vq = core.slots[v].queue.lock().expect("shard queue");
+        let take = (vq.len() / 2).min(free);
+        if take == 0 {
+            return false;
+        }
+        let stolen = vq.drain(..take).collect();
+        core.slots[v].queued.store(vq.len(), Ordering::SeqCst);
+        stolen
+    };
+    core.slots[v].not_full.notify_all();
+    for _ in &stolen {
+        core.counters[v].dequeued();
+        core.counters[thief].enqueued();
+    }
+    core.counters[thief].stole(stolen.len() as u64);
+    let mut tq = core.slots[thief].queue.lock().expect("shard queue");
+    tq.extend(stolen);
+    core.slots[thief].queued.store(tq.len(), Ordering::SeqCst);
+    true
+}
+
+/// Serve one batch: a single coalesced pipeline pass when the batch
+/// has >= 2 requests (falling back to per-request service if the
+/// coalesced pass errors), the plain single-request path otherwise.
+fn execute_batch<I: EqualizerInstance + Send + 'static>(
+    shard: &mut Shard<I>,
+    id: usize,
+    core: &SchedCore,
+    batch: Vec<PoolRequest>,
+) {
+    let counters: &ShardCounters = &core.counters[id];
+    if batch.len() >= 2 {
+        let t0 = Instant::now();
+        if let Some(engine) = shard.profiles.get_mut(&batch[0].profile) {
+            let l_inst = engine.pick_l_inst(batch[0].t_req);
+            let outs = {
+                let bursts: Vec<&[f32]> = batch.iter().map(|r| r.samples.as_slice()).collect();
+                engine.serve_coalesced(&bursts, l_inst)
+            };
+            if let Ok(outs) = outs {
+                let n = batch.len();
+                let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
+                // Latency: every request observed the whole pass.
+                // Busy: the shard ran the pass once, so each request
+                // carries a 1/n share (keeps summed busy time
+                // wall-clock-true under coalescing).
+                let busy_share_us = elapsed_us / n as f64;
+                counters.coalesced(n as u64);
+                for (req, soft) in batch.into_iter().zip(outs) {
+                    counters.served_with_busy(soft.len(), elapsed_us, busy_share_us, false);
+                    counters.dequeued();
+                    let _ = req.reply.send(PoolResponse {
+                        soft_symbols: soft,
+                        l_inst,
+                        shard: id,
+                        profile: req.profile,
+                        elapsed_us,
+                        batched: n,
+                        error: None,
+                    });
+                }
+                return;
+            }
+            // A failed coalesced pass falls back to per-request
+            // service below, so one malformed burst cannot poison its
+            // batch neighbours.
+        }
+    }
+    for req in batch {
+        serve_single(shard, id, counters, req);
+    }
+}
+
+/// The pre-scheduler request path: serve one burst on its own.
+fn serve_single<I: EqualizerInstance + Send + 'static>(
+    shard: &mut Shard<I>,
+    id: usize,
+    counters: &ShardCounters,
+    req: PoolRequest,
+) {
+    let t0 = Instant::now();
+    let (soft_symbols, l_inst, error) = match shard.profiles.get_mut(&req.profile) {
+        None => (Vec::new(), 0, Some(format!("unknown profile {:?}", req.profile))),
+        Some(engine) => {
+            let (result, l_inst) = engine.serve_one(&req.samples, req.t_req);
+            match result {
+                Ok(soft) => (soft, l_inst, None),
+                Err(e) => (Vec::new(), l_inst, Some(e.to_string())),
+            }
+        }
+    };
+    let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
+    counters.served(soft_symbols.len(), elapsed_us, error.is_some());
+    counters.dequeued();
+    let _ = req.reply.send(PoolResponse {
+        soft_symbols,
+        l_inst,
+        shard: id,
+        profile: req.profile,
+        elapsed_us,
+        batched: 1,
+        error,
+    });
+}
+
+/// Autoscale monitor: periodically feed queue pressure into the
+/// hysteretic controller and apply its decisions to the live set.
+fn monitor_loop(core: Arc<SchedCore>, cfg: AutoScaleConfig) {
+    let mut scaler = AutoScaler::new(cfg.clone(), core.slots.len());
+    while core.open.load(Ordering::SeqCst) {
+        std::thread::sleep(cfg.tick);
+        let live = core.active.load(Ordering::SeqCst);
+        let outstanding: usize = core.counters.iter().map(|c| c.queue_depth()).sum();
+        match scaler.observe(live, outstanding) {
+            ScaleDecision::Hold => {}
+            ScaleDecision::Grow => {
+                core.active.store(live + 1, Ordering::SeqCst);
+                core.scale_ups.fetch_add(1, Ordering::Relaxed);
+                // Wake the revived worker (it may be in an *untimed*
+                // wait and should resume stealing).  The notify must
+                // happen under the slot's mutex: otherwise the worker
+                // could read the stale `active`, decide on an untimed
+                // wait, and miss a notify fired in between — parking
+                // the "grown" shard until the next routed request.
+                let slot = &core.slots[live];
+                let guard = slot.queue.lock().expect("shard queue");
+                slot.not_empty.notify_all();
+                drop(guard);
+            }
+            ScaleDecision::Shrink => {
+                core.active.store(live - 1, Ordering::SeqCst);
+                core.scale_downs.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 }
 
@@ -283,13 +674,13 @@ impl TrySubmit {
 }
 
 /// Cloneable dispatcher: routes requests to shards.  Clone one per
-/// client thread ([`PoolHandle::client`]); every clone holds the shard
-/// senders, so all clones must be dropped before
+/// client thread ([`PoolHandle::client`]); every clone keeps the pool
+/// open, so all clones must be dropped before
 /// [`PoolHandle::shutdown`] can finish draining.
 #[derive(Clone)]
 pub struct PoolClient {
-    txs: Vec<mpsc::SyncSender<PoolRequest>>,
-    counters: Vec<Arc<ShardCounters>>,
+    core: Arc<SchedCore>,
+    _guard: Arc<ClientsGuard>,
     profiles: Arc<[String]>,
     policy: RoutePolicy,
     rr: Arc<AtomicUsize>,
@@ -297,11 +688,14 @@ pub struct PoolClient {
 
 impl PoolClient {
     fn route(&self) -> usize {
+        let live = self.core.active.load(Ordering::SeqCst).max(1);
         match self.policy {
-            RoutePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len(),
+            RoutePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % live,
             RoutePolicy::ShortestQueue => self
+                .core
                 .counters
                 .iter()
+                .take(live)
                 .enumerate()
                 .min_by_key(|(_, c)| c.queue_depth())
                 .map(|(i, _)| i)
@@ -320,6 +714,33 @@ impl PoolClient {
 
     /// Route and enqueue one burst; blocks while the routed shard's
     /// queue is full (backpressure).  Returns the reply channel.
+    ///
+    /// ```
+    /// use equalizer::coordinator::instance::DecimatorInstance;
+    /// use equalizer::coordinator::pool::{RoutePolicy, ServerPool, Shard};
+    /// use equalizer::coordinator::seqlen::SeqLenOptimizer;
+    /// use equalizer::coordinator::server::EqualizerServer;
+    /// use equalizer::coordinator::timing::TimingModel;
+    ///
+    /// let optimizer = SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6));
+    /// let targets: Vec<f64> = (1..=10).map(|i| i as f64 * 1e9).collect();
+    /// let engine = EqualizerServer::new(
+    ///     vec![DecimatorInstance { width: 256, n_os: 2 }],
+    ///     32,
+    ///     2,
+    ///     &optimizer,
+    ///     &targets,
+    /// )?;
+    /// let pool = ServerPool::new(vec![Shard::single("demo", engine)], RoutePolicy::RoundRobin, 8)?
+    ///     .spawn();
+    /// let client = pool.client();
+    /// let reply = client.submit("demo", vec![0.0; 512], None)?;
+    /// assert_eq!(reply.recv()?.soft_symbols.len(), 256);
+    /// drop(client); // shutdown drains only once every client clone is gone
+    /// let stats = pool.shutdown();
+    /// assert_eq!(stats.total_requests(), 1);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn submit(
         &self,
         profile: &str,
@@ -327,14 +748,39 @@ impl PoolClient {
         t_req: Option<f64>,
     ) -> Result<mpsc::Receiver<PoolResponse>> {
         self.check_profile(profile)?;
-        let shard = self.route();
+        self.submit_to(self.route(), profile, samples, t_req)
+    }
+
+    /// Enqueue one burst on a specific shard, bypassing the routing
+    /// policy (client-side affinity; also how the steal/skew tests
+    /// build deterministic imbalance).  Blocks while that shard's
+    /// queue is full.  Any constructed shard is addressable — a parked
+    /// shard still drains its queue, it just receives no *routed*
+    /// traffic.
+    pub fn submit_to(
+        &self,
+        shard: usize,
+        profile: &str,
+        samples: Vec<f32>,
+        t_req: Option<f64>,
+    ) -> Result<mpsc::Receiver<PoolResponse>> {
+        self.check_profile(profile)?;
+        anyhow::ensure!(
+            shard < self.core.slots.len(),
+            "shard {shard} out of range (pool has {})",
+            self.core.slots.len()
+        );
         let (reply, rx) = mpsc::channel();
-        self.counters[shard].enqueued();
-        let req = PoolRequest { profile: profile.to_string(), samples, t_req, reply };
-        if self.txs[shard].send(req).is_err() {
-            self.counters[shard].dequeued();
-            anyhow::bail!("shard {shard} is shut down");
+        let slot = &self.core.slots[shard];
+        let mut q = slot.queue.lock().expect("shard queue");
+        while q.len() >= self.core.queue_cap {
+            q = slot.not_full.wait(q).expect("shard queue");
         }
+        self.core.counters[shard].enqueued();
+        q.push_back(PoolRequest { profile: profile.to_string(), samples, t_req, reply });
+        slot.queued.store(q.len(), Ordering::SeqCst);
+        drop(q);
+        slot.not_empty.notify_all();
         Ok(rx)
     }
 
@@ -350,23 +796,19 @@ impl PoolClient {
     ) -> Result<TrySubmit> {
         self.check_profile(profile)?;
         let shard = self.route();
-        let (reply, rx) = mpsc::channel();
-        let depth = self.counters[shard].enqueued_pending();
-        let req = PoolRequest { profile: profile.to_string(), samples, t_req, reply };
-        match self.txs[shard].try_send(req) {
-            Ok(()) => {
-                self.counters[shard].commit_peak(depth);
-                Ok(TrySubmit::Queued(rx))
-            }
-            Err(mpsc::TrySendError::Full(req)) => {
-                self.counters[shard].dequeued();
-                Ok(TrySubmit::Full(req.samples))
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                self.counters[shard].dequeued();
-                anyhow::bail!("shard {shard} is shut down")
-            }
+        let slot = &self.core.slots[shard];
+        let mut q = slot.queue.lock().expect("shard queue");
+        if q.len() >= self.core.queue_cap {
+            return Ok(TrySubmit::Full(samples));
         }
+        let (reply, rx) = mpsc::channel();
+        let depth = self.core.counters[shard].enqueued_pending();
+        q.push_back(PoolRequest { profile: profile.to_string(), samples, t_req, reply });
+        slot.queued.store(q.len(), Ordering::SeqCst);
+        drop(q);
+        self.core.counters[shard].commit_peak(depth);
+        slot.not_empty.notify_all();
+        Ok(TrySubmit::Queued(rx))
     }
 
     /// Submit one burst and wait for its reply; processing failures
@@ -390,13 +832,21 @@ impl PoolClient {
         &self.profiles
     }
 
+    /// Shards this pool was constructed with (the maximum live set).
     pub fn n_shards(&self) -> usize {
-        self.txs.len()
+        self.core.slots.len()
     }
 
-    /// Live per-shard counters snapshot.
+    /// Shards the dispatcher currently routes to.
+    pub fn live_shards(&self) -> usize {
+        self.core.active.load(Ordering::SeqCst)
+    }
+
+    /// Live per-shard counters snapshot, including the scheduler's
+    /// pool-level gauges.
     pub fn stats(&self) -> ServerStats {
-        ServerStats::snapshot(self.counters.iter().map(|c| c.as_ref()))
+        ServerStats::snapshot(self.core.counters.iter().map(|c| c.as_ref()))
+            .with_pool(self.core.pool_stats())
     }
 }
 
@@ -443,145 +893,78 @@ impl PoolHandle {
         self.client.call(profile, samples, t_req)
     }
 
+    /// Profiles every shard serves, sorted.
     pub fn profiles(&self) -> &[String] {
         self.client.profiles()
     }
 
+    /// Shards this pool was constructed with (the maximum live set).
     pub fn n_shards(&self) -> usize {
         self.client.n_shards()
     }
 
+    /// Shards the dispatcher currently routes to.
+    pub fn live_shards(&self) -> usize {
+        self.client.live_shards()
+    }
+
+    /// Live stats snapshot (see [`PoolClient::stats`]).
     pub fn stats(&self) -> ServerStats {
         self.client.stats()
     }
 
-    /// Drop this handle's senders, wait for every shard to drain, and
+    /// Drop this handle's client, wait for every shard to drain, and
     /// return the final stats snapshot.  Blocks until all outstanding
     /// [`PoolClient`] clones are dropped too.
     pub fn shutdown(self) -> ServerStats {
         let Self { client, joins } = self;
-        let counters = client.counters.clone();
+        let core = Arc::clone(&client.core);
         drop(client);
         for j in joins {
             let _ = j.join();
         }
-        ServerStats::snapshot(counters.iter().map(|c| c.as_ref()))
+        ServerStats::snapshot(core.counters.iter().map(|c| c.as_ref()))
+            .with_pool(core.pool_stats())
     }
 }
 
-/// The datapath loaded once per profile; shard engines stamp cheap
-/// clones from it instead of re-parsing the weight JSONs per instance.
-enum ProfileEngine {
-    Cnn(crate::equalizer::cnn::FixedPointCnn),
-    Fir(crate::equalizer::fir::FirEqualizer),
-    Volterra(Box<crate::equalizer::volterra::VolterraEqualizer>),
-    /// PJRT executables own per-instance clients — loaded per instance.
-    Hlo,
-}
-
-/// Everything a profile contributes to a pool, resolved and parsed
-/// exactly once: the widest-bucket width, the family-specific overlap
-/// geometry, and the loaded datapath.
-struct ProfileBlueprint {
-    width: usize,
-    o_act: usize,
-    n_os: usize,
-    engine: ProfileEngine,
-}
-
-impl ProfileBlueprint {
-    fn load(reg: &ArtifactRegistry, profile: &str) -> Result<Self> {
-        let entry = reg.profile_entry(profile)?;
-        let width = entry.width();
-        Ok(match entry.kind {
-            ArtifactKind::NativeCnn => {
-                let cnn = entry.load_native_cnn()?;
-                let cfg = *cnn.cfg();
-                anyhow::ensure!(
-                    cfg.out_symbols(width) * cfg.n_os == width,
-                    "width {width} is off the decimation grid of {cfg:?}"
-                );
-                Self {
-                    width,
-                    o_act: cfg.o_act_samples(),
-                    n_os: cfg.n_os,
-                    engine: ProfileEngine::Cnn(cnn),
+/// Stamp one shard's serving engine for `profile`: `instances` workers
+/// cloned from the blueprint's loaded datapath.
+fn stamp_engine(
+    blueprint: &ProfileBlueprint,
+    reg: &ArtifactRegistry,
+    profile: &str,
+    instances: usize,
+    optimizer: &SeqLenOptimizer,
+    lut_targets: &[f64],
+) -> Result<EqualizerServer<AnyInstance>> {
+    let workers: Vec<AnyInstance> = (0..instances)
+        .map(|_| -> Result<AnyInstance> {
+            Ok(match &blueprint.datapath {
+                ProfileDatapath::Cnn(cnn) => {
+                    AnyInstance::Native(NativeInstance::new(cnn.clone(), blueprint.width))
                 }
-            }
-            ArtifactKind::NativeFir => {
-                let w = FirWeights::load(&entry.abs_path)?;
-                // The filter window spans i-(m-1)/2 .. i+m/2 (see
-                // FirEqualizer::equalize), so m/2 covers the wider
-                // side for both tap-count parities.
-                let half = w.cfg.taps / 2;
-                Self {
-                    width,
-                    o_act: half.next_multiple_of(w.cfg.n_os),
-                    n_os: w.cfg.n_os,
-                    engine: ProfileEngine::Fir(
-                        crate::equalizer::fir::FirEqualizer::from_weights(&w),
-                    ),
+                ProfileDatapath::Fir(fir) => {
+                    AnyInstance::Fir(FirInstance::new(fir.clone(), blueprint.width))
                 }
-            }
-            ArtifactKind::NativeVolterra => {
-                let w = VolterraWeights::load(&entry.abs_path)?;
-                let half = w.m1.max(w.m2).max(w.m3).div_ceil(2);
-                Self {
-                    width,
-                    o_act: half.next_multiple_of(w.n_os),
-                    n_os: w.n_os,
-                    engine: ProfileEngine::Volterra(Box::new(w.to_equalizer())),
+                ProfileDatapath::Volterra(vol) => {
+                    AnyInstance::Volterra(VolterraInstance::new(vol.clone(), blueprint.width))
                 }
-            }
-            ArtifactKind::Hlo => {
-                // HLO entries are CNN lowerings of the selected topology.
-                let cfg = CnnTopologyCfg::SELECTED;
-                Self {
-                    width,
-                    o_act: cfg.o_act_samples(),
-                    n_os: cfg.n_os,
-                    engine: ProfileEngine::Hlo,
-                }
-            }
-        })
-    }
-
-    /// Stamp one shard's serving engine: `instances` workers cloned
-    /// from the loaded datapath.
-    fn shard_engine(
-        &self,
-        reg: &ArtifactRegistry,
-        profile: &str,
-        instances: usize,
-        optimizer: &SeqLenOptimizer,
-        lut_targets: &[f64],
-    ) -> Result<EqualizerServer<AnyInstance>> {
-        let workers: Vec<AnyInstance> = (0..instances)
-            .map(|_| -> Result<AnyInstance> {
-                Ok(match &self.engine {
-                    ProfileEngine::Cnn(cnn) => {
-                        AnyInstance::Native(NativeInstance::new(cnn.clone(), self.width))
-                    }
-                    ProfileEngine::Fir(fir) => {
-                        AnyInstance::Fir(FirInstance::new(fir.clone(), self.width))
-                    }
-                    ProfileEngine::Volterra(vol) => {
-                        AnyInstance::Volterra(VolterraInstance::new(vol.clone(), self.width))
-                    }
-                    ProfileEngine::Hlo => AnyInstance::load(reg.profile_entry(profile)?)?,
-                })
+                ProfileDatapath::Hlo => AnyInstance::load(reg.profile_entry(profile)?)?,
             })
-            .collect::<Result<_>>()?;
-        EqualizerServer::new(workers, self.o_act, self.n_os, optimizer, lut_targets)
-    }
+        })
+        .collect::<Result<_>>()?;
+    EqualizerServer::new(workers, blueprint.o_act, blueprint.n_os, optimizer, lut_targets)
 }
 
 impl ServerPool<AnyInstance> {
     /// Build a pool whose shards each serve every profile in
     /// `profiles`, resolved through `reg` (see
     /// [`ArtifactRegistry::profile_entry`] for the naming scheme).
-    /// Each profile's weights are parsed once; shards clone from the
-    /// loaded datapath.
+    /// Each profile's weights are parsed once
+    /// ([`ArtifactRegistry::profile_blueprint`]); every shard —
+    /// including ones the autoscaler parks at spawn — clones from the
+    /// loaded datapath, so growing the live set never reloads weights.
     pub fn from_registry<S: AsRef<str>>(
         reg: &ArtifactRegistry,
         profiles: &[S],
@@ -602,14 +985,15 @@ impl ServerPool<AnyInstance> {
         let blueprints: Vec<(String, ProfileBlueprint)> = profiles
             .iter()
             .map(|p| -> Result<(String, ProfileBlueprint)> {
-                Ok((p.as_ref().to_string(), ProfileBlueprint::load(reg, p.as_ref())?))
+                Ok((p.as_ref().to_string(), reg.profile_blueprint(p.as_ref())?))
             })
             .collect::<Result<_>>()?;
         let mut shards = Vec::with_capacity(cfg.shards);
         for _ in 0..cfg.shards {
             let mut shard = Shard::new();
             for (name, blueprint) in &blueprints {
-                let engine = blueprint.shard_engine(
+                let engine = stamp_engine(
+                    blueprint,
                     reg,
                     name,
                     cfg.instances_per_shard,
@@ -620,7 +1004,7 @@ impl ServerPool<AnyInstance> {
             }
             shards.push(shard);
         }
-        Self::new(shards, cfg.policy, cfg.queue_cap)
+        Self::with_scheduler(shards, cfg.policy, cfg.queue_cap, cfg.scheduler.clone())
     }
 }
 
@@ -629,12 +1013,18 @@ mod tests {
     use super::*;
     use crate::coordinator::instance::DecimatorInstance;
 
+    fn optimizer() -> SeqLenOptimizer {
+        SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6))
+    }
+
+    fn lut_targets() -> Vec<f64> {
+        (1..=100).map(|i| i as f64 * 1e9).collect()
+    }
+
     fn engine(n_i: usize, width: usize, o_act: usize) -> EqualizerServer<DecimatorInstance> {
         let instances: Vec<DecimatorInstance> =
             (0..n_i).map(|_| DecimatorInstance { width, n_os: 2 }).collect();
-        let opt = SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6));
-        let targets: Vec<f64> = (1..=100).map(|i| i as f64 * 1e9).collect();
-        EqualizerServer::new(instances, o_act, 2, &opt, &targets).unwrap()
+        EqualizerServer::new(instances, o_act, 2, &optimizer(), &lut_targets()).unwrap()
     }
 
     #[test]
@@ -661,6 +1051,35 @@ mod tests {
     }
 
     #[test]
+    fn steal_requires_identical_engine_geometry() {
+        // Same profile name but different widths: fine without
+        // stealing, rejected with it (a stolen burst would be
+        // equalized by a geometrically different engine).
+        let mk = || {
+            vec![Shard::single("a", engine(2, 256, 32)), Shard::single("a", engine(2, 512, 32))]
+        };
+        assert!(ServerPool::new(mk(), RoutePolicy::RoundRobin, 4).is_ok());
+        let steal = SchedulerConfig::default().with_stealing();
+        let bad = ServerPool::with_scheduler(mk(), RoutePolicy::RoundRobin, 4, steal.clone());
+        assert!(bad.is_err());
+        let uniform =
+            vec![Shard::single("a", engine(2, 256, 32)), Shard::single("a", engine(2, 256, 32))];
+        assert!(ServerPool::with_scheduler(uniform, RoutePolicy::RoundRobin, 4, steal).is_ok());
+    }
+
+    #[test]
+    fn autoscale_config_validated_at_construction() {
+        let mk = || vec![Shard::single("a", engine(2, 256, 32))];
+        let bad = SchedulerConfig::default().with_autoscale(AutoScaleConfig {
+            min_shards: 2, // exceeds the 1 constructed shard
+            ..AutoScaleConfig::default()
+        });
+        assert!(ServerPool::with_scheduler(mk(), RoutePolicy::RoundRobin, 4, bad).is_err());
+        let ok = SchedulerConfig::default().with_autoscale(AutoScaleConfig::default());
+        assert!(ServerPool::with_scheduler(mk(), RoutePolicy::RoundRobin, 4, ok).is_ok());
+    }
+
+    #[test]
     fn round_trip_and_profile_rejection() {
         let shard = Shard::new()
             .with_profile("even", engine(2, 256, 32))
@@ -672,9 +1091,11 @@ mod tests {
         assert_eq!(resp.soft_symbols.len(), 512);
         assert_eq!(resp.shard, 0);
         assert_eq!(resp.profile, "even");
+        assert_eq!(resp.batched, 1, "no coalescing by default");
         assert!(pool.call("neither", x, None).is_err());
         let stats = pool.shutdown();
         assert_eq!(stats.total_requests(), 1, "rejected submit never reached a shard");
+        assert_eq!(stats.pool.active_shards, 1, "pool snapshots carry the live set");
     }
 
     #[test]
@@ -697,5 +1118,80 @@ mod tests {
         let stats = pool.shutdown();
         assert_eq!(stats.shards[0].requests, 2);
         assert_eq!(stats.shards[1].requests, 2);
+    }
+
+    #[test]
+    fn submit_to_pins_the_shard() {
+        let shards: Vec<_> = (0..2).map(|_| Shard::single("d", engine(2, 256, 32))).collect();
+        let pool = ServerPool::new(shards, RoutePolicy::RoundRobin, 8).unwrap().spawn();
+        let client = pool.client();
+        for _ in 0..3 {
+            let resp = client.submit_to(1, "d", vec![0.0; 512], None).unwrap().recv().unwrap();
+            assert_eq!(resp.shard, 1);
+        }
+        assert!(client.submit_to(5, "d", vec![0.0; 512], None).is_err(), "out of range");
+        assert!(client.submit_to(0, "nope", vec![0.0; 512], None).is_err(), "unknown profile");
+        drop(client);
+        let stats = pool.shutdown();
+        assert_eq!(stats.shards[1].requests, 3);
+        assert_eq!(stats.shards[0].requests, 0);
+    }
+
+    /// Decimates after a fixed sleep: holds a worker busy so queued
+    /// bursts pile up deterministically.
+    struct SlowInstance {
+        width: usize,
+        delay: Duration,
+    }
+
+    impl EqualizerInstance for SlowInstance {
+        fn width(&self) -> usize {
+            self.width
+        }
+
+        fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+            std::thread::sleep(self.delay);
+            Ok(chunk.iter().step_by(2).copied().collect())
+        }
+    }
+
+    #[test]
+    fn coalescing_groups_queued_bursts() {
+        // A slow single-instance engine: while the worker serves the
+        // first burst, the rest queue up and must be coalesced into a
+        // batched pass — with every reply still the exact decimation.
+        let slow = EqualizerServer::new(
+            vec![SlowInstance { width: 256, delay: Duration::from_millis(20) }],
+            32,
+            2,
+            &optimizer(),
+            &lut_targets(),
+        )
+        .unwrap();
+        let sched = SchedulerConfig::default().with_coalescing(Duration::from_millis(5));
+        let pool = ServerPool::with_scheduler(
+            vec![Shard::single("slow", slow)],
+            RoutePolicy::RoundRobin,
+            16,
+            sched,
+        )
+        .unwrap()
+        .spawn();
+        let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+        let expect: Vec<f32> = burst.iter().step_by(2).copied().collect();
+        let pending: Vec<_> =
+            (0..6).map(|_| pool.submit("slow", burst.clone(), None).unwrap()).collect();
+        let mut max_batch = 0usize;
+        for rx in pending {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.soft_symbols, expect, "coalesced reply must stay bit-exact");
+            max_batch = max_batch.max(resp.batched);
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_requests(), 6);
+        assert_eq!(stats.total_errors(), 0);
+        assert!(max_batch >= 2, "queued bursts must coalesce (max batch {max_batch})");
+        assert!(stats.total_coalesced_requests() >= 2);
+        assert!(stats.shards[0].coalesced_batches >= 1);
     }
 }

@@ -1,0 +1,334 @@
+//! Adaptive scheduling policy for the serving pool: configuration for
+//! cross-request batch coalescing and cross-shard work stealing, plus
+//! the hysteretic autoscaler that grows/shrinks the live shard set.
+//!
+//! The paper's throughput claim rests on *filling the datapath*: the
+//! FPGA engine batches a continuous symbol stream through a fixed-DOP
+//! pipeline, and its GPU comparison collapses by three orders of
+//! magnitude exactly when batches are small (Sec. 7).  A serving pool
+//! that executes every request alone re-creates that collapse in
+//! software — many small concurrent bursts each pay the full dispatch
+//! cost and leave most instances idle.  The scheduler closes the gap
+//! three ways, all policy-only (the datapath never changes, so outputs
+//! stay bit-identical to sequential execution):
+//!
+//! * **Coalescing** ([`SchedulerConfig::coalesce_window`]) — a shard
+//!   worker drains its queue up to a time/size window, groups bursts
+//!   with the same (profile, `l_inst`) key and runs them through one
+//!   batched pipeline pass, then scatters the per-request outputs back
+//!   to their reply channels.
+//! * **Work stealing** ([`SchedulerConfig::steal`]) — an idle shard
+//!   takes whole queued bursts (oldest first, never splitting a burst)
+//!   from the deepest queue, so a skewed profile mix cannot strand
+//!   work behind one hot shard.
+//! * **Autoscaling** ([`SchedulerConfig::autoscale`]) — a monitor
+//!   thread feeds the queue-pressure signal the per-shard counters
+//!   already expose into an [`AutoScaler`], which grows or shrinks the
+//!   set of shards the dispatcher routes to.  Hysteresis (distinct
+//!   high/low watermarks plus a consecutive-tick requirement) keeps
+//!   the pool stable at steady load.
+//!
+//! The decision logic lives here as plain data + a pure state machine
+//! so it can be unit-tested without threads; the mechanism (queues,
+//! workers, the monitor thread) lives in [`crate::coordinator::pool`].
+
+use anyhow::Result;
+use std::time::Duration;
+
+/// Scheduling policy for a [`crate::coordinator::pool::ServerPool`].
+///
+/// The default is the pre-scheduler behavior — one request at a time
+/// per shard, no stealing, a fixed shard set — so existing pools are
+/// unchanged unless a knob is turned.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerConfig {
+    /// Cross-request coalescing window.  Zero (the default) disables
+    /// coalescing; otherwise a shard worker that dequeued a burst
+    /// keeps collecting same-(profile, `l_inst`) bursts for up to this
+    /// long — or until [`Self::coalesce_max`] — and serves them as one
+    /// batched pipeline pass.  The window bounds the extra latency the
+    /// first burst of a batch can pay.
+    pub coalesce_window: Duration,
+    /// Maximum bursts per coalesced batch (values below 2 disable
+    /// coalescing).  `SchedulerConfig::default()` leaves it 0;
+    /// [`Self::with_coalescing`] sets [`DEFAULT_COALESCE_MAX`].
+    pub coalesce_max: usize,
+    /// Enable cross-shard work stealing.  Requires every shard to
+    /// serve identical engines per profile (checked at pool
+    /// construction), because a stolen burst is equalized by the
+    /// thief's engine.
+    pub steal: bool,
+    /// Dynamic shard scaling; `None` (the default) keeps every shard
+    /// live.
+    pub autoscale: Option<AutoScaleConfig>,
+}
+
+/// Default [`SchedulerConfig::coalesce_max`] used by
+/// [`SchedulerConfig::with_coalescing`].
+pub const DEFAULT_COALESCE_MAX: usize = 32;
+
+impl SchedulerConfig {
+    /// True when the worker loop should attempt batch collection.
+    pub fn coalescing(&self) -> bool {
+        !self.coalesce_window.is_zero() && self.coalesce_max >= 2
+    }
+
+    /// Builder: enable coalescing with `window` and the default batch
+    /// bound ([`DEFAULT_COALESCE_MAX`]).
+    pub fn with_coalescing(mut self, window: Duration) -> Self {
+        self.coalesce_window = window;
+        if self.coalesce_max < 2 {
+            self.coalesce_max = DEFAULT_COALESCE_MAX;
+        }
+        self
+    }
+
+    /// Builder: enable cross-shard work stealing.
+    pub fn with_stealing(mut self) -> Self {
+        self.steal = true;
+        self
+    }
+
+    /// Builder: enable dynamic shard scaling.
+    pub fn with_autoscale(mut self, cfg: AutoScaleConfig) -> Self {
+        self.autoscale = Some(cfg);
+        self
+    }
+}
+
+/// Dynamic shard-scaling policy (see [`AutoScaler`] for the decision
+/// rule).  The *maximum* live shard count is the number of shards the
+/// pool was built with; scaling never constructs engines at runtime —
+/// parked shards keep their engines resident (stamped once from the
+/// shared per-profile blueprint,
+/// [`crate::runtime::artifact::ProfileBlueprint`]), so growing the
+/// live set never reloads weights.
+#[derive(Debug, Clone)]
+pub struct AutoScaleConfig {
+    /// Live shards at spawn and the floor the pool never shrinks
+    /// below (>= 1).
+    pub min_shards: usize,
+    /// Grow when outstanding work per live shard exceeds this.
+    pub high_watermark: f64,
+    /// Shrink when outstanding work per live shard falls below this
+    /// (must be < [`Self::high_watermark`]).
+    pub low_watermark: f64,
+    /// Consecutive out-of-band observations required before a scale
+    /// step (>= 1).  Each step resets the count, so a pool grows at
+    /// most one shard per `hysteresis_ticks * tick`.
+    pub hysteresis_ticks: u32,
+    /// Observation interval of the monitor thread.
+    pub tick: Duration,
+}
+
+impl Default for AutoScaleConfig {
+    fn default() -> Self {
+        Self {
+            min_shards: 1,
+            high_watermark: 3.0,
+            low_watermark: 0.5,
+            hysteresis_ticks: 3,
+            tick: Duration::from_millis(2),
+        }
+    }
+}
+
+impl AutoScaleConfig {
+    /// Validate against the pool's constructed shard count.
+    pub fn validate(&self, max_shards: usize) -> Result<()> {
+        anyhow::ensure!(self.min_shards >= 1, "autoscale min_shards must be at least 1");
+        anyhow::ensure!(
+            self.min_shards <= max_shards,
+            "autoscale min_shards {} exceeds the {} constructed shards",
+            self.min_shards,
+            max_shards
+        );
+        anyhow::ensure!(
+            self.low_watermark < self.high_watermark,
+            "autoscale watermarks must satisfy low ({}) < high ({})",
+            self.low_watermark,
+            self.high_watermark
+        );
+        anyhow::ensure!(self.hysteresis_ticks >= 1, "autoscale hysteresis_ticks must be >= 1");
+        anyhow::ensure!(!self.tick.is_zero(), "autoscale tick must be non-zero");
+        Ok(())
+    }
+}
+
+/// One scaling decision of the [`AutoScaler`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Keep the current live shard set.
+    Hold,
+    /// Activate one more shard.
+    Grow,
+    /// Park one shard (its queue is drained before it goes idle).
+    Shrink,
+}
+
+/// Hysteretic scale controller: a pure state machine over
+/// (live shards, outstanding requests) observations, kept free of
+/// clocks and threads so the flapping behavior is unit-testable.
+///
+/// Pressure is `outstanding / live_shards`.  A [`ScaleDecision::Grow`]
+/// fires only after [`AutoScaleConfig::hysteresis_ticks`] *consecutive*
+/// observations above the high watermark (symmetrically for
+/// [`ScaleDecision::Shrink`] below the low watermark); any in-band
+/// observation resets both counts.  Together with `low < high` this
+/// guarantees no flapping at constant load: a fixed pressure is either
+/// in-band (never acts) or out-of-band on one side only (acts in one
+/// direction until the bound, never reverses).
+#[derive(Debug, Clone)]
+pub struct AutoScaler {
+    cfg: AutoScaleConfig,
+    max_shards: usize,
+    above: u32,
+    below: u32,
+}
+
+impl AutoScaler {
+    /// A controller for a pool constructed with `max_shards` shards.
+    pub fn new(cfg: AutoScaleConfig, max_shards: usize) -> Self {
+        Self { cfg, max_shards, above: 0, below: 0 }
+    }
+
+    /// Feed one observation; returns the action to take *now*.
+    pub fn observe(&mut self, live_shards: usize, outstanding: usize) -> ScaleDecision {
+        let pressure = outstanding as f64 / live_shards.max(1) as f64;
+        if pressure > self.cfg.high_watermark && live_shards < self.max_shards {
+            self.below = 0;
+            self.above += 1;
+            if self.above >= self.cfg.hysteresis_ticks {
+                self.above = 0;
+                return ScaleDecision::Grow;
+            }
+        } else if pressure < self.cfg.low_watermark && live_shards > self.cfg.min_shards {
+            self.above = 0;
+            self.below += 1;
+            if self.below >= self.cfg.hysteresis_ticks {
+                self.below = 0;
+                return ScaleDecision::Shrink;
+            }
+        } else {
+            self.above = 0;
+            self.below = 0;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(hysteresis: u32) -> AutoScaleConfig {
+        AutoScaleConfig {
+            min_shards: 1,
+            high_watermark: 2.0,
+            low_watermark: 0.5,
+            hysteresis_ticks: hysteresis,
+            tick: Duration::from_millis(1),
+        }
+    }
+
+    #[test]
+    fn constant_in_band_load_never_scales() {
+        // The hysteresis acceptance bar: at steady load inside the
+        // watermark band the controller must hold forever.
+        let mut s = AutoScaler::new(cfg(2), 4);
+        for _ in 0..1000 {
+            assert_eq!(s.observe(2, 2), ScaleDecision::Hold); // pressure 1.0
+        }
+    }
+
+    #[test]
+    fn grow_needs_consecutive_pressure() {
+        let mut s = AutoScaler::new(cfg(3), 4);
+        assert_eq!(s.observe(1, 10), ScaleDecision::Hold);
+        assert_eq!(s.observe(1, 10), ScaleDecision::Hold);
+        // An in-band dip resets the streak.
+        assert_eq!(s.observe(1, 1), ScaleDecision::Hold);
+        assert_eq!(s.observe(1, 10), ScaleDecision::Hold);
+        assert_eq!(s.observe(1, 10), ScaleDecision::Hold);
+        assert_eq!(s.observe(1, 10), ScaleDecision::Grow);
+        // The step resets the count: no immediate second grow.
+        assert_eq!(s.observe(2, 10), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn shrink_mirrors_grow_and_respects_floor() {
+        let mut s = AutoScaler::new(cfg(2), 4);
+        assert_eq!(s.observe(3, 0), ScaleDecision::Hold);
+        assert_eq!(s.observe(3, 0), ScaleDecision::Shrink);
+        assert_eq!(s.observe(2, 0), ScaleDecision::Hold);
+        assert_eq!(s.observe(2, 0), ScaleDecision::Shrink);
+        // At the floor an idle pool holds.
+        for _ in 0..100 {
+            assert_eq!(s.observe(1, 0), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn grow_respects_ceiling() {
+        let mut s = AutoScaler::new(cfg(1), 2);
+        assert_eq!(s.observe(1, 100), ScaleDecision::Grow);
+        // At max_shards sustained pressure holds instead of growing.
+        for _ in 0..100 {
+            assert_eq!(s.observe(2, 100), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn oscillation_across_the_band_never_flaps() {
+        // Alternating above/below observations (a bursty but on-average
+        // in-band load) must never produce a decision when hysteresis
+        // requires 2 consecutive ticks.
+        let mut s = AutoScaler::new(cfg(2), 4);
+        for i in 0..1000 {
+            let outstanding = if i % 2 == 0 { 10 } else { 0 };
+            assert_eq!(s.observe(2, outstanding), ScaleDecision::Hold, "tick {i}");
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(AutoScaleConfig::default().validate(4).is_ok());
+        let zero_min = AutoScaleConfig { min_shards: 0, ..AutoScaleConfig::default() };
+        assert!(zero_min.validate(4).is_err());
+        let min_over_max = AutoScaleConfig { min_shards: 5, ..AutoScaleConfig::default() };
+        assert!(min_over_max.validate(4).is_err());
+        let flat_band = AutoScaleConfig {
+            low_watermark: 3.0,
+            high_watermark: 3.0,
+            ..AutoScaleConfig::default()
+        };
+        assert!(flat_band.validate(4).is_err());
+        let no_hysteresis = AutoScaleConfig { hysteresis_ticks: 0, ..AutoScaleConfig::default() };
+        assert!(no_hysteresis.validate(4).is_err());
+        let zero_tick = AutoScaleConfig { tick: Duration::ZERO, ..AutoScaleConfig::default() };
+        assert!(zero_tick.validate(4).is_err());
+    }
+
+    #[test]
+    fn scheduler_config_gates() {
+        let off = SchedulerConfig::default();
+        assert!(!off.coalescing());
+        assert!(!off.steal);
+        assert!(off.autoscale.is_none());
+        let on = SchedulerConfig::default()
+            .with_coalescing(Duration::from_micros(500))
+            .with_stealing()
+            .with_autoscale(AutoScaleConfig::default());
+        assert!(on.coalescing());
+        assert_eq!(on.coalesce_max, DEFAULT_COALESCE_MAX);
+        assert!(on.steal);
+        assert!(on.autoscale.is_some());
+        // A window with an explicit sub-2 max stays disabled.
+        let degenerate = SchedulerConfig {
+            coalesce_window: Duration::from_millis(1),
+            coalesce_max: 1,
+            ..SchedulerConfig::default()
+        };
+        assert!(!degenerate.coalescing());
+    }
+}

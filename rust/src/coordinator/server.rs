@@ -105,9 +105,21 @@ impl<I: EqualizerInstance + Send + 'static> EqualizerServer<I> {
         self.pipe.l_inst()
     }
 
+    /// The symbol decimation factor of the underlying pipeline.
+    pub fn n_os(&self) -> usize {
+        self.pipe.n_os()
+    }
+
     /// Pick l_inst for a request: LUT hit if a requirement is given and
     /// achievable with this fixed artifact width, else the full payload.
-    fn pick_l_inst(&self, t_req: Option<f64>) -> usize {
+    ///
+    /// Public because the pool scheduler groups coalescable requests by
+    /// (profile, picked `l_inst`) — two requests whose `t_req` resolve
+    /// to different payloads cannot share one batched pass.  The pick
+    /// is a pure function of `t_req` and the engine's fixed LUT, so
+    /// identical engines (pool shards stamped from one blueprint) pick
+    /// identically.
+    pub fn pick_l_inst(&self, t_req: Option<f64>) -> usize {
         let max_payload = self.pipe.l_inst();
         let grid = self.pipe.n_os();
         match t_req {
@@ -126,6 +138,16 @@ impl<I: EqualizerInstance + Send + 'static> EqualizerServer<I> {
     pub fn serve_one(&mut self, samples: &[f32], t_req: Option<f64>) -> (Result<Vec<f32>>, usize) {
         let l_inst = self.pick_l_inst(t_req);
         (self.pipe.equalize_resized(samples, l_inst), l_inst)
+    }
+
+    /// Serve several bursts as **one** batched pipeline pass at a
+    /// shared `l_inst` (see
+    /// [`EqualizerPipeline::equalize_coalesced`] for the bit-exactness
+    /// argument).  The caller (the pool's coalescing scheduler)
+    /// guarantees every burst picked the same `l_inst`; outputs come
+    /// back per burst, in input order.
+    pub fn serve_coalesced(&mut self, bursts: &[&[f32]], l_inst: usize) -> Result<Vec<Vec<f32>>> {
+        self.pipe.equalize_coalesced(bursts, l_inst)
     }
 
     /// Spawn the request loop: a one-shard [`ServerPool`] serving this
@@ -209,6 +231,28 @@ mod tests {
             assert_eq!(resp.soft_symbols[0], round as f32);
         }
         h.shutdown();
+    }
+
+    #[test]
+    fn serve_coalesced_matches_serve_one() {
+        // The engine-level coalescing primitive: one batched pass over
+        // several bursts equals serving each alone, and the LUT pick
+        // used as the group key is identical across equal engines.
+        let mut engine = server(2, 512, 64);
+        let l = engine.pick_l_inst(None);
+        assert_eq!(l, engine.max_payload());
+        let bursts: Vec<Vec<f32>> = (0..3)
+            .map(|b| (0..(700 + 400 * b)).map(|i| (i + b) as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = bursts.iter().map(Vec::as_slice).collect();
+        let outs = engine.serve_coalesced(&refs, l).unwrap();
+        let mut solo = server(2, 512, 64);
+        assert_eq!(solo.pick_l_inst(None), l, "equal engines pick identically");
+        for (x, got) in bursts.iter().zip(&outs) {
+            let (want, l_one) = solo.serve_one(x, None);
+            assert_eq!(l_one, l);
+            assert_eq!(got, &want.unwrap());
+        }
     }
 
     #[test]

@@ -56,10 +56,11 @@ pub mod prelude {
     pub use crate::coordinator::pool::{
         PoolClient, PoolConfig, PoolHandle, RoutePolicy, ServerPool, TrySubmit,
     };
+    pub use crate::coordinator::sched::{AutoScaleConfig, AutoScaler, SchedulerConfig};
     pub use crate::coordinator::{
         pipeline::EqualizerPipeline, seqlen::SeqLenOptimizer, timing::TimingModel,
     };
-    pub use crate::metrics::serving::ServerStats;
+    pub use crate::metrics::serving::{PoolStats, ServerStats};
     pub use crate::equalizer::{cnn::FixedPointCnn, fir::FirEqualizer, weights::CnnWeights};
     pub use crate::hw::{device::Device, dop::Dop};
     pub use crate::metrics::ber::BerCounter;

@@ -38,11 +38,16 @@ COMMANDS:
   serve     [--artifacts DIR] [--shards N] [--instances N]
             [--clients M] [--requests K] [--spb SYMBOLS]
             [--profiles P1,P2,..] [--policy round-robin|shortest-queue]
-            [--queue-cap N]                            multi-stream serving demo
+            [--queue-cap N] [--coalesce-window US] [--coalesce-max N]
+            [--steal] [--autoscale MIN]                multi-stream serving demo
+            (--coalesce-window batches same-profile bursts, --steal lets
+             idle shards take queued work, --autoscale MIN starts MIN
+             shards and grows/shrinks up to --shards under pressure)
   bench     [--artifacts DIR] [--json [PATH]] [--quick]
-                                                       hot-path throughput (f32 /
-                                                       fake-quant / int16 + pipeline);
-                                                       --json writes BENCH_pr3.json
+                                                       hot-path + serving throughput
+                                                       (f32 / fake-quant / int16 +
+                                                       pipeline + pool coalescing);
+                                                       --json writes BENCH_pr4.json
   config    [--profile high-throughput|low-power]      print JSON config
 ";
 
@@ -182,10 +187,12 @@ fn equalize(args: &Args) -> Result<()> {
 /// multi-client workload — M client threads, each submitting K bursts
 /// that cycle through the requested profiles with randomized per-burst
 /// throughput requirements.  Reports per-request routing and the
-/// per-shard stats table.
+/// per-shard stats table.  The adaptive scheduler is driven by
+/// `--coalesce-window` (us), `--steal` and `--autoscale MIN`.
 fn serve(args: &Args) -> Result<()> {
     use equalizer::channel::mt19937::Mt19937;
     use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
+    use equalizer::coordinator::sched::{AutoScaleConfig, SchedulerConfig};
 
     let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
     let shards = args.usize_or("shards", 2)?.max(1);
@@ -195,6 +202,20 @@ fn serve(args: &Args) -> Result<()> {
     let spb = args.usize_or("spb", 8192)?.max(64);
     let policy: RoutePolicy = args.str_or("policy", "shortest-queue").parse()?;
     let queue_cap = args.usize_or("queue-cap", 64)?.max(1);
+    let coalesce_us = args.f64_or("coalesce-window", 0.0)?.max(0.0);
+    let coalesce_max = args.usize_or("coalesce-max", 32)?;
+    let mut scheduler = SchedulerConfig::default();
+    if coalesce_us > 0.0 {
+        scheduler.coalesce_window = std::time::Duration::from_secs_f64(coalesce_us * 1e-6);
+        scheduler.coalesce_max = coalesce_max.max(2);
+    }
+    if args.flag("steal") {
+        scheduler.steal = true;
+    }
+    if let Some(v) = args.get("autoscale") {
+        let min_shards = if v == "true" { 1 } else { v.parse()? };
+        scheduler.autoscale = Some(AutoScaleConfig { min_shards, ..AutoScaleConfig::default() });
+    }
     let profiles: Vec<String> = args
         .str_or("profiles", "cnn_imdd,fir_imdd")
         .split(',')
@@ -210,6 +231,7 @@ fn serve(args: &Args) -> Result<()> {
         instances_per_shard: instances,
         policy,
         queue_cap,
+        scheduler,
         ..PoolConfig::default()
     };
     let pool = ServerPool::from_registry(&reg, &profiles, &cfg)?.spawn();
@@ -217,6 +239,18 @@ fn serve(args: &Args) -> Result<()> {
         "pool: {shards} shard(s) x {instances} instance(s), profiles {profiles:?}, \
          {policy:?}, queue cap {queue_cap}"
     );
+    if cfg.scheduler.coalescing() || cfg.scheduler.steal || cfg.scheduler.autoscale.is_some() {
+        println!(
+            "scheduler: coalesce {} (max {}), steal {}, autoscale {}",
+            if cfg.scheduler.coalescing() { format!("{coalesce_us:.0} us") } else { "off".into() },
+            cfg.scheduler.coalesce_max,
+            if cfg.scheduler.steal { "on" } else { "off" },
+            match &cfg.scheduler.autoscale {
+                Some(a) => format!("{}..{shards} shards", a.min_shards),
+                None => "off".into(),
+            }
+        );
+    }
     println!("workload: {clients} client(s) x {requests} burst(s) x {spb} symbols\n");
 
     struct Burst {
@@ -290,14 +324,15 @@ fn serve(args: &Args) -> Result<()> {
 }
 
 /// Machine-readable hot-path benchmark: the native CNN datapath on all
-/// three execution paths (f32 / fake-quant f32 / int16) and the batched
-/// pipeline on the float + quantized profiles, reported as the unified
-/// `{profile, path, symbols/s, ns/symbol, GBd-equivalent}` records
-/// (`util::bench::Throughput`).  `--json [PATH]` additionally writes
-/// the records as a JSON array (default `BENCH_pr3.json`) so the perf
-/// trajectory stays machine-readable across PRs.  The integer path is
-/// asserted bit-identical to the fake-quant reference before anything
-/// is timed.
+/// three execution paths (f32 / fake-quant f32 / int16), the batched
+/// pipeline on the float + quantized profiles, and the serving pool on
+/// a many-small-bursts mix with coalescing off/on — reported as the
+/// unified `{profile, path, symbols/s, ns/symbol, GBd-equivalent}`
+/// records (`util::bench::Throughput`).  `--json [PATH]` additionally
+/// writes the records as a JSON array (default `BENCH_pr4.json`) so
+/// the perf trajectory stays machine-readable across PRs.  The integer
+/// path is asserted bit-identical to the fake-quant reference before
+/// anything is timed.
 fn bench_cmd(args: &Args) -> Result<()> {
     use equalizer::equalizer::cnn::CnnScratch;
     use equalizer::util::bench::{header, Bencher, Throughput};
@@ -308,7 +343,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
     let b = if quick { Bencher::quick() } else { Bencher::default() };
     let json_path = args
         .get("json")
-        .map(|v| if v == "true" { "BENCH_pr3.json".to_string() } else { v.to_string() });
+        .map(|v| if v == "true" { "BENCH_pr4.json".to_string() } else { v.to_string() });
 
     let float_cnn = reg.exact("cnn_imdd_w1024")?.load_native_cnn()?;
     let q_cnn = reg.exact("cnn_imdd_quant_w1024")?.load_native_cnn()?;
@@ -373,10 +408,56 @@ fn bench_cmd(args: &Args) -> Result<()> {
         records.push(t.to_json(profile, "pipeline_batch4"));
     }
 
+    header("serving pool (64 clients x 128-symbol bursts, cnn_imdd_quant)");
+    {
+        use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
+        use equalizer::coordinator::sched::SchedulerConfig;
+
+        let clients = 64usize;
+        let spb = 128usize; // symbols per burst: the small-burst regime
+        let burst: Vec<f32> = (0..2 * spb).map(|i| (i as f32 * 0.19).sin()).collect();
+        let symbols = (clients * spb) as f64;
+        let mut pool_rates = Vec::new();
+        let coalesced =
+            SchedulerConfig::default().with_coalescing(std::time::Duration::from_millis(1));
+        let modes = [
+            ("serving_per_request", SchedulerConfig::default()),
+            ("serving_coalesced", coalesced),
+        ];
+        for (path, scheduler) in modes {
+            let cfg = PoolConfig {
+                shards: 2,
+                instances_per_shard: 4,
+                policy: RoutePolicy::ShortestQueue,
+                queue_cap: clients,
+                scheduler,
+                ..PoolConfig::default()
+            };
+            let pool = ServerPool::from_registry(&reg, &["cnn_imdd_quant"], &cfg)?.spawn();
+            let m = b.bench(&format!("pool {path}"), || {
+                let pending: Vec<_> = (0..clients)
+                    .map(|_| pool.submit("cnn_imdd_quant", burst.clone(), None).unwrap())
+                    .collect();
+                for rx in pending {
+                    rx.recv().unwrap();
+                }
+            });
+            let t = Throughput::from_measurement(&m, symbols);
+            println!("    -> {}", t.line());
+            pool_rates.push(t.symbols_per_s);
+            records.push(t.to_json("cnn_imdd_quant", path));
+            pool.shutdown();
+        }
+        println!(
+            "\ncoalescing is {:.2}x per-request pool execution on the small-burst mix",
+            pool_rates[1] / pool_rates[0]
+        );
+    }
+
     if let Some(path) = json_path {
-        // Preserve historical baseline rows (path suffix `_pre_pr3`)
+        // Preserve historical baseline rows (path marker `_pre_pr`)
         // from an existing file — `bench` re-measures only the current
-        // execution paths, and the committed before/after comparison
+        // execution paths, and the committed before/after comparisons
         // must survive regeneration.
         let mut all: Vec<Json> = Vec::new();
         if let Ok(existing) = equalizer::util::json::parse_file(&path) {
@@ -386,7 +467,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
                         .filter(|r| {
                             r.get("path")
                                 .and_then(Json::as_str)
-                                .is_some_and(|p| p.ends_with("_pre_pr3"))
+                                .is_some_and(|p| p.contains("_pre_pr"))
                         })
                         .cloned(),
                 );

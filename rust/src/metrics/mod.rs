@@ -2,5 +2,6 @@
 //! and the per-shard serving counters.
 
 pub mod ber;
+#[warn(missing_docs)]
 pub mod serving;
 pub mod stats;

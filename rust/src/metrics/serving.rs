@@ -48,6 +48,12 @@ impl LatencyRing {
 
 /// Live counters for one shard (all methods are `&self`; safe to share
 /// behind an `Arc`).
+///
+/// Beyond the request/latency/depth accounting, the adaptive scheduler
+/// records its decisions here: bursts this shard stole from other
+/// queues ([`Self::stole`]) and batches it coalesced
+/// ([`Self::coalesced`]), so the stats table shows *why* a shard's
+/// throughput moved, not just that it did.
 #[derive(Debug, Default)]
 pub struct ShardCounters {
     queue_depth: AtomicUsize,
@@ -56,6 +62,9 @@ pub struct ShardCounters {
     errors: AtomicU64,
     symbols: AtomicU64,
     busy_us: AtomicU64,
+    stolen: AtomicU64,
+    coalesced_batches: AtomicU64,
+    coalesced_requests: AtomicU64,
     latency: Mutex<LatencyRing>,
 }
 
@@ -95,13 +104,42 @@ impl ShardCounters {
     /// Record one completed request: output symbols, wall time on the
     /// shard, and whether it failed.
     pub fn served(&self, symbols: usize, elapsed_us: f64, is_error: bool) {
+        self.served_with_busy(symbols, elapsed_us, elapsed_us, is_error);
+    }
+
+    /// Like [`Self::served`], but with latency and busy time
+    /// attributed separately.  Under coalescing every request in a
+    /// batch *observes* the whole batch's wall time (that goes into
+    /// the latency reservoir), but the shard was only busy for that
+    /// wall time **once** — so each request contributes its share
+    /// (`busy_us = batch wall time / batch size`) and summed busy
+    /// time stays wall-clock-true.
+    pub fn served_with_busy(
+        &self,
+        symbols: usize,
+        latency_us: f64,
+        busy_us: f64,
+        is_error: bool,
+    ) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         if is_error {
             self.errors.fetch_add(1, Ordering::Relaxed);
         }
         self.symbols.fetch_add(symbols as u64, Ordering::Relaxed);
-        self.busy_us.fetch_add(elapsed_us.max(0.0).round() as u64, Ordering::Relaxed);
-        self.latency.lock().expect("latency lock").record(elapsed_us);
+        self.busy_us.fetch_add(busy_us.max(0.0).round() as u64, Ordering::Relaxed);
+        self.latency.lock().expect("latency lock").record(latency_us);
+    }
+
+    /// Record `n` bursts stolen *by* this shard from another queue.
+    pub fn stole(&self, n: u64) {
+        self.stolen.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one coalesced batch of `n` requests (`n >= 2`) served in
+    /// a single pipeline pass.
+    pub fn coalesced(&self, n: u64) {
+        self.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+        self.coalesced_requests.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Immutable snapshot of this shard's counters (latency stats over
@@ -114,6 +152,9 @@ impl ShardCounters {
             errors: self.errors.load(Ordering::Relaxed),
             symbols: self.symbols.load(Ordering::Relaxed),
             busy_us: self.busy_us.load(Ordering::Relaxed),
+            stolen: self.stolen.load(Ordering::Relaxed),
+            coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
+            coalesced_requests: self.coalesced_requests.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::SeqCst),
             peak_queue_depth: self.peak_queue_depth.load(Ordering::SeqCst),
             p50_us: latency.percentile_us(50.0),
@@ -126,44 +167,101 @@ impl ShardCounters {
 /// Point-in-time view of one shard.
 #[derive(Debug, Clone)]
 pub struct ShardStats {
+    /// Shard index within the pool.
     pub shard: usize,
+    /// Requests this shard completed (including stolen ones).
     pub requests: u64,
+    /// Completed requests that failed.
     pub errors: u64,
     /// Soft symbols produced (== bits for PAM-2).
     pub symbols: u64,
-    /// Summed per-request wall time on the shard worker.
+    /// Summed wall time the shard worker spent serving.  Coalesced
+    /// requests contribute a 1/batch-size share of their pass each
+    /// ([`ShardCounters::served_with_busy`]), so this stays
+    /// wall-clock-true no matter how requests were batched.
     pub busy_us: u64,
+    /// Bursts this shard stole from other shards' queues.
+    pub stolen: u64,
+    /// Coalesced batches (>= 2 requests in one pipeline pass) served.
+    pub coalesced_batches: u64,
+    /// Requests served inside coalesced batches.
+    pub coalesced_requests: u64,
     /// Outstanding requests (queued + in service) at snapshot time.
     pub queue_depth: usize,
+    /// Highest outstanding depth ever latched on this shard.
     pub peak_queue_depth: usize,
-    /// Latency percentiles over the last [`LATENCY_RING_CAP`] requests.
+    /// Median service latency over the last [`LATENCY_RING_CAP`]
+    /// requests (coalesced requests report the batch wall time).
     pub p50_us: f64,
+    /// 99th-percentile service latency over the same window.
     pub p99_us: f64,
+    /// Maximum service latency over the same window.
     pub max_us: f64,
 }
 
-/// Pool-wide snapshot: one [`ShardStats`] per shard.
+/// Pool-level scheduler state attached to a [`ServerStats`] snapshot.
+///
+/// `active_shards == 0` means the snapshot did not come from a live
+/// pool (e.g. bare [`ShardCounters`] aggregation in tests) and the
+/// pool line is omitted from [`ServerStats::render`].
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    /// Shards the dispatcher currently routes to.
+    pub active_shards: usize,
+    /// Autoscaler grow events since spawn.
+    pub scale_ups: u64,
+    /// Autoscaler shrink events since spawn.
+    pub scale_downs: u64,
+}
+
+/// Pool-wide snapshot: one [`ShardStats`] per shard, plus the
+/// scheduler's pool-level gauges.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
+    /// Per-shard counters, in shard order.
     pub shards: Vec<ShardStats>,
+    /// Live-shard-set state (zeroed when not snapshotted from a pool).
+    pub pool: PoolStats,
 }
 
 impl ServerStats {
     /// Snapshot every shard's counters, in shard order.
+    ///
+    /// ```
+    /// use equalizer::metrics::serving::{ServerStats, ShardCounters};
+    ///
+    /// let shard = ShardCounters::default();
+    /// shard.served(512, 80.0, false);
+    /// shard.served(256, 40.0, false);
+    /// let stats = ServerStats::snapshot([&shard]);
+    /// assert_eq!(stats.total_requests(), 2);
+    /// assert_eq!(stats.total_symbols(), 768);
+    /// print!("{}", stats.render()); // the per-shard table
+    /// ```
     pub fn snapshot<'a>(counters: impl IntoIterator<Item = &'a ShardCounters>) -> Self {
         Self {
             shards: counters.into_iter().enumerate().map(|(i, c)| c.snapshot(i)).collect(),
+            pool: PoolStats::default(),
         }
     }
 
+    /// Attach pool-level scheduler gauges to this snapshot.
+    pub fn with_pool(mut self, pool: PoolStats) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    /// Requests completed pool-wide.
     pub fn total_requests(&self) -> u64 {
         self.shards.iter().map(|s| s.requests).sum()
     }
 
+    /// Failed requests pool-wide.
     pub fn total_errors(&self) -> u64 {
         self.shards.iter().map(|s| s.errors).sum()
     }
 
+    /// Soft symbols produced pool-wide.
     pub fn total_symbols(&self) -> u64 {
         self.shards.iter().map(|s| s.symbols).sum()
     }
@@ -179,25 +277,50 @@ impl ServerStats {
         self.total_symbols() as f64 / busy_s / 1e6
     }
 
-    /// Human-readable per-shard table (ends with a newline).
+    /// Requests served inside coalesced batches, pool-wide.
+    pub fn total_coalesced_requests(&self) -> u64 {
+        self.shards.iter().map(|s| s.coalesced_requests).sum()
+    }
+
+    /// Bursts that migrated between shards via work stealing.
+    pub fn total_stolen(&self) -> u64 {
+        self.shards.iter().map(|s| s.stolen).sum()
+    }
+
+    /// Human-readable per-shard table (ends with a newline).  A pool
+    /// line with the live shard set and scale events is appended when
+    /// the snapshot came from a pool ([`PoolStats::active_shards`]
+    /// non-zero).
     pub fn render(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
         let _ = writeln!(
             out,
-            "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>10} {:>10} {:>10}",
-            "shard", "requests", "errors", "symbols", "queue", "peak", "p50 us", "p99 us", "busy ms"
+            "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>6} {:>6} {:>10} {:>10} {:>10}",
+            "shard",
+            "requests",
+            "errors",
+            "symbols",
+            "queue",
+            "peak",
+            "stolen",
+            "coal",
+            "p50 us",
+            "p99 us",
+            "busy ms"
         );
         for s in &self.shards {
             let _ = writeln!(
                 out,
-                "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>10.1} {:>10.1} {:>10.2}",
+                "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>6} {:>6} {:>10.1} {:>10.1} {:>10.2}",
                 s.shard,
                 s.requests,
                 s.errors,
                 s.symbols,
                 s.queue_depth,
                 s.peak_queue_depth,
+                s.stolen,
+                s.coalesced_requests,
                 s.p50_us,
                 s.p99_us,
                 s.busy_us as f64 / 1e3
@@ -211,6 +334,19 @@ impl ServerStats {
             self.total_symbols(),
             self.busy_msym_per_s()
         );
+        if self.pool.active_shards > 0 {
+            let _ = writeln!(
+                out,
+                "pool: {}/{} shards live  (scale-ups {}, scale-downs {}, stolen {}, \
+                 coalesced {})",
+                self.pool.active_shards,
+                self.shards.len(),
+                self.pool.scale_ups,
+                self.pool.scale_downs,
+                self.total_stolen(),
+                self.total_coalesced_requests()
+            );
+        }
         out
     }
 }
@@ -263,6 +399,45 @@ mod tests {
         let table = stats.render();
         assert!(table.contains("shard"));
         assert!(table.lines().count() == 4, "{table}");
+    }
+
+    #[test]
+    fn coalesced_busy_attribution_stays_wall_clock_true() {
+        // 4 requests coalesced into one 1000 us pass: every request
+        // observed 1000 us of latency, but the shard was busy 1000 us
+        // total — not 4000.
+        let c = ShardCounters::default();
+        for _ in 0..4 {
+            c.served_with_busy(128, 1000.0, 250.0, false);
+        }
+        let s = c.snapshot(0);
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.busy_us, 1000);
+        assert_eq!(s.p50_us, 1000.0);
+        assert_eq!(s.max_us, 1000.0);
+    }
+
+    #[test]
+    fn scheduler_counters_accumulate_and_render() {
+        let c = ShardCounters::default();
+        c.stole(3);
+        c.coalesced(4);
+        c.coalesced(2);
+        let s = c.snapshot(0);
+        assert_eq!(s.stolen, 3);
+        assert_eq!(s.coalesced_batches, 2);
+        assert_eq!(s.coalesced_requests, 6);
+        let stats = ServerStats::snapshot([&c]);
+        assert_eq!(stats.total_stolen(), 3);
+        assert_eq!(stats.total_coalesced_requests(), 6);
+        // Without pool gauges the table has no pool line...
+        assert_eq!(stats.render().lines().count(), 3);
+        // ...with them, the live-set line appears.
+        let stats = stats.with_pool(PoolStats { active_shards: 1, scale_ups: 2, scale_downs: 1 });
+        let table = stats.render();
+        assert_eq!(table.lines().count(), 4, "{table}");
+        assert!(table.contains("1/1 shards live"), "{table}");
+        assert!(table.contains("scale-ups 2"), "{table}");
     }
 
     #[test]

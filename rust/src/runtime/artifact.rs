@@ -16,7 +16,9 @@
 //!   zero Python/XLA dependencies.
 
 use crate::equalizer::cnn::FixedPointCnn;
-use crate::equalizer::weights::{CnnWeights, FirWeights, VolterraWeights};
+use crate::equalizer::fir::FirEqualizer;
+use crate::equalizer::volterra::VolterraEqualizer;
+use crate::equalizer::weights::{CnnTopologyCfg, CnnWeights, FirWeights, VolterraWeights};
 use crate::fixedpoint::QuantSpec;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, Result};
@@ -425,6 +427,104 @@ impl ArtifactRegistry {
                 )
             })
     }
+
+    /// Resolve a serving profile ([`Self::profile_entry`]) and load its
+    /// datapath **once** into a [`ProfileBlueprint`].  Pool shards —
+    /// including ones the autoscaler parks and later revives — stamp
+    /// cheap clones from the blueprint instead of re-parsing weight
+    /// JSONs per shard x instance; work stealing likewise relies on
+    /// every shard's engines being clones of the same loaded datapath.
+    pub fn profile_blueprint(&self, profile: &str) -> Result<ProfileBlueprint> {
+        ProfileBlueprint::load(self, profile)
+    }
+}
+
+/// The datapath loaded once per serving profile; shard engines stamp
+/// cheap clones from it instead of re-parsing the weight JSONs per
+/// instance (see [`ArtifactRegistry::profile_blueprint`]).
+pub enum ProfileDatapath {
+    /// Native fixed-point CNN (f32 / fake-quant / int16 selected by
+    /// the provability gate).
+    Cnn(FixedPointCnn),
+    /// Linear FIR baseline.
+    Fir(FirEqualizer),
+    /// Order-3 Volterra baseline.
+    Volterra(Box<VolterraEqualizer>),
+    /// PJRT executables own per-instance clients — loaded per
+    /// instance, not shareable through the blueprint.
+    Hlo,
+}
+
+/// Everything a profile contributes to a serving pool, resolved and
+/// parsed exactly once: the widest-bucket width, the family-specific
+/// overlap geometry, and the loaded datapath.
+pub struct ProfileBlueprint {
+    /// Fixed artifact width (`l_ol`) every stamped instance accepts.
+    pub width: usize,
+    /// Overlap per border in samples, on the `n_os` grid.
+    pub o_act: usize,
+    /// Oversampling factor (samples per symbol).
+    pub n_os: usize,
+    /// The loaded datapath instances clone from.
+    pub datapath: ProfileDatapath,
+}
+
+impl ProfileBlueprint {
+    /// Load the blueprint behind `profile` (see
+    /// [`ArtifactRegistry::profile_blueprint`]).
+    pub fn load(reg: &ArtifactRegistry, profile: &str) -> Result<Self> {
+        let entry = reg.profile_entry(profile)?;
+        let width = entry.width();
+        Ok(match entry.kind {
+            ArtifactKind::NativeCnn => {
+                let cnn = entry.load_native_cnn()?;
+                let cfg = *cnn.cfg();
+                anyhow::ensure!(
+                    cfg.out_symbols(width) * cfg.n_os == width,
+                    "width {width} is off the decimation grid of {cfg:?}"
+                );
+                Self {
+                    width,
+                    o_act: cfg.o_act_samples(),
+                    n_os: cfg.n_os,
+                    datapath: ProfileDatapath::Cnn(cnn),
+                }
+            }
+            ArtifactKind::NativeFir => {
+                let w = FirWeights::load(&entry.abs_path)?;
+                // The filter window spans i-(m-1)/2 .. i+m/2 (see
+                // FirEqualizer::equalize), so m/2 covers the wider
+                // side for both tap-count parities.
+                let half = w.cfg.taps / 2;
+                Self {
+                    width,
+                    o_act: half.next_multiple_of(w.cfg.n_os),
+                    n_os: w.cfg.n_os,
+                    datapath: ProfileDatapath::Fir(FirEqualizer::from_weights(&w)),
+                }
+            }
+            ArtifactKind::NativeVolterra => {
+                let w = VolterraWeights::load(&entry.abs_path)?;
+                let half = w.m1.max(w.m2).max(w.m3).div_ceil(2);
+                Self {
+                    width,
+                    o_act: half.next_multiple_of(w.n_os),
+                    n_os: w.n_os,
+                    datapath: ProfileDatapath::Volterra(Box::new(w.to_equalizer())),
+                }
+            }
+            ArtifactKind::Hlo => {
+                // HLO entries are CNN lowerings of the selected topology.
+                let cfg = CnnTopologyCfg::SELECTED;
+                Self {
+                    width,
+                    o_act: cfg.o_act_samples(),
+                    n_os: cfg.n_os,
+                    datapath: ProfileDatapath::Hlo,
+                }
+            }
+        })
+    }
 }
 
 #[cfg(test)]
@@ -535,6 +635,26 @@ mod tests {
         let cnn = e.load_native_cnn().unwrap();
         assert!(cnn.uses_integer_path(), "committed quant entry must take the int path");
         assert!(reg.profile_entry("fir_imdd_quant").is_err(), "no quant FIR family");
+    }
+
+    #[test]
+    fn profile_blueprint_loads_geometry_and_datapath() {
+        let Some(reg) = registry() else { return };
+        let b = reg.profile_blueprint("cnn_imdd_quant").unwrap();
+        assert_eq!(b.width, *NATIVE_WIDTH_BUCKETS.last().unwrap());
+        assert_eq!(b.o_act % b.n_os, 0, "overlap must sit on the decimation grid");
+        match &b.datapath {
+            ProfileDatapath::Cnn(cnn) => {
+                assert!(cnn.uses_integer_path(), "quant blueprint runs int16")
+            }
+            _ => panic!("cnn profile must load a CNN datapath"),
+        }
+        let f = reg.profile_blueprint("fir_imdd").unwrap();
+        assert!(matches!(f.datapath, ProfileDatapath::Fir(_)));
+        assert_eq!(f.width, 4096);
+        let v = reg.profile_blueprint("volterra_imdd").unwrap();
+        assert!(matches!(v.datapath, ProfileDatapath::Volterra(_)));
+        assert!(reg.profile_blueprint("transformer_imdd").is_err());
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub mod exec;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use artifact::{ArtifactKind, ArtifactRegistry};
+pub use artifact::{ArtifactKind, ArtifactRegistry, ProfileBlueprint, ProfileDatapath};
 pub use exec::CompiledModel;
 
 use anyhow::Result;

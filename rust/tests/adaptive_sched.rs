@@ -1,0 +1,234 @@
+//! Adaptive-scheduler acceptance: cross-request coalescing must be
+//! bit-exact against the sequential per-request reference (mixed
+//! profiles, mixed burst sizes, quantized profiles included), work
+//! stealing must drain a deterministically skewed queue, and the
+//! autoscaler must grow under pressure, shrink when idle, and never
+//! flap at steady load (the pure-controller half of that property is
+//! unit-tested in `coordinator::sched`).
+
+use equalizer::coordinator::instance::EqualizerInstance;
+use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool, Shard};
+use equalizer::coordinator::sched::{AutoScaleConfig, SchedulerConfig};
+use equalizer::coordinator::seqlen::SeqLenOptimizer;
+use equalizer::coordinator::server::EqualizerServer;
+use equalizer::coordinator::timing::TimingModel;
+use equalizer::runtime::ArtifactRegistry;
+use std::time::{Duration, Instant};
+
+fn registry() -> ArtifactRegistry {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    ArtifactRegistry::discover(dir).expect("committed native artifacts")
+}
+
+fn optimizer() -> SeqLenOptimizer {
+    SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6))
+}
+
+fn lut_targets() -> Vec<f64> {
+    (1..=100).map(|i| i as f64 * 1e9).collect()
+}
+
+/// Decimates after a fixed sleep: lets tests hold shards busy and
+/// build queue depth deterministically.
+struct SlowInstance {
+    width: usize,
+    delay: Duration,
+}
+
+impl EqualizerInstance for SlowInstance {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        Ok(chunk.iter().step_by(2).copied().collect())
+    }
+}
+
+fn slow_shard(delay: Duration) -> Shard<SlowInstance> {
+    let engine = EqualizerServer::new(
+        vec![SlowInstance { width: 256, delay }],
+        32,
+        2,
+        &optimizer(),
+        &lut_targets(),
+    )
+    .unwrap();
+    Shard::single("slow", engine)
+}
+
+/// Poll `cond` until it holds or `timeout` elapses (returns whether it
+/// held) — scheduler effects are asynchronous but bounded.
+fn eventually(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    cond()
+}
+
+#[test]
+fn coalesced_pool_bit_exact_across_profiles_and_burst_sizes() {
+    // The acceptance bar for coalescing: a pool that batches queued
+    // bursts must answer every request bit-identically to the
+    // per-request sequential reference — across heterogeneous
+    // profiles (float CNN, int16 quantized CNN, FIR), burst sizes
+    // from sub-chunk to multi-chunk, and per-burst t_req selections.
+    let reg = registry();
+    let profiles = ["cnn_imdd", "cnn_imdd_quant", "fir_imdd"];
+    let reference_cfg = PoolConfig { shards: 1, instances_per_shard: 1, ..PoolConfig::default() };
+    let reference = ServerPool::from_registry(&reg, &profiles, &reference_cfg).unwrap().spawn();
+
+    struct Case {
+        profile: String,
+        rx: Vec<f32>,
+        t_req: Option<f64>,
+        want: Vec<f32>,
+        want_l_inst: usize,
+    }
+    let mut cases = Vec::new();
+    let lens = [80usize, 256, 2000, 6000];
+    for (i, profile) in profiles.iter().enumerate() {
+        for (j, &len) in lens.iter().enumerate() {
+            let rx: Vec<f32> =
+                (0..len).map(|k| ((k + 31 * i + 7 * j) as f32 * 0.13).sin()).collect();
+            let t_req = match j % 3 {
+                0 => None,
+                1 => Some(10e9),
+                _ => Some(90e9),
+            };
+            let want = reference.call(profile, rx.clone(), t_req).unwrap();
+            assert!(!want.soft_symbols.is_empty());
+            cases.push(Case {
+                profile: profile.to_string(),
+                rx,
+                t_req,
+                want: want.soft_symbols,
+                want_l_inst: want.l_inst,
+            });
+        }
+    }
+    reference.shutdown();
+
+    // One shard so every burst shares a queue; a 10 ms window so the
+    // whole submission wave lands inside the first collection pass.
+    let cfg = PoolConfig {
+        shards: 1,
+        instances_per_shard: 2,
+        scheduler: SchedulerConfig::default().with_coalescing(Duration::from_millis(10)),
+        ..PoolConfig::default()
+    };
+    let pool = ServerPool::from_registry(&reg, &profiles, &cfg).unwrap().spawn();
+    let pending: Vec<_> = cases
+        .iter()
+        .map(|c| pool.submit(&c.profile, c.rx.clone(), c.t_req).unwrap())
+        .collect();
+    let mut max_batch = 0usize;
+    for (case, rx) in cases.iter().zip(pending) {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{}: {:?}", case.profile, resp.error);
+        assert_eq!(resp.soft_symbols, case.want, "{} diverged under coalescing", case.profile);
+        assert_eq!(resp.l_inst, case.want_l_inst, "{} l_inst vs reference", case.profile);
+        max_batch = max_batch.max(resp.batched);
+    }
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), cases.len() as u64);
+    assert_eq!(stats.total_errors(), 0);
+    assert!(max_batch >= 2, "queued same-profile bursts must coalesce (max batch {max_batch})");
+    assert!(stats.total_coalesced_requests() >= 2);
+}
+
+#[test]
+fn stealing_rebalances_a_deterministically_skewed_queue() {
+    // All bursts pinned onto shard 0 (submit_to bypasses routing); the
+    // idle shard 1 must steal whole queued bursts and the pool must
+    // stay bit-exact.  Without stealing this workload is strictly
+    // serial on shard 0.
+    let delay = Duration::from_millis(20);
+    let pool = ServerPool::with_scheduler(
+        vec![slow_shard(delay), slow_shard(delay)],
+        RoutePolicy::RoundRobin,
+        16,
+        SchedulerConfig::default().with_stealing(),
+    )
+    .unwrap()
+    .spawn();
+    let client = pool.client();
+    let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+    let expect: Vec<f32> = burst.iter().step_by(2).copied().collect();
+    let pending: Vec<_> =
+        (0..8).map(|_| client.submit_to(0, "slow", burst.clone(), None).unwrap()).collect();
+    let mut served_by = [0usize; 2];
+    for rx in pending {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.soft_symbols, expect, "stolen bursts must stay bit-exact");
+        served_by[resp.shard] += 1;
+    }
+    drop(client);
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), 8);
+    assert_eq!(stats.total_errors(), 0);
+    assert!(
+        served_by[1] >= 1,
+        "the idle shard must steal work from the skewed queue (split {served_by:?})"
+    );
+    // Shard 1 received no routed traffic, so everything it served it
+    // must have stolen first (shard 0 may later counter-steal, so the
+    // per-shard counts are >=, not ==).
+    assert!(stats.total_stolen() as usize >= served_by[1]);
+    assert!(stats.shards[1].stolen >= 1);
+}
+
+#[test]
+fn autoscale_grows_under_pressure_and_parks_when_idle() {
+    // 4 constructed shards, 1 live at spawn.  A queue of slow bursts
+    // must push the live set up (scale-ups >= 1); draining it must
+    // bring the live set back to the floor (scale-downs >= 1).
+    // Stealing is on so revived shards actually help drain the
+    // backlog that accumulated while they were parked.
+    let delay = Duration::from_millis(5);
+    let autoscale = AutoScaleConfig {
+        min_shards: 1,
+        high_watermark: 2.0,
+        low_watermark: 0.5,
+        hysteresis_ticks: 2,
+        tick: Duration::from_millis(1),
+    };
+    let pool = ServerPool::with_scheduler(
+        (0..4).map(|_| slow_shard(delay)).collect(),
+        RoutePolicy::ShortestQueue,
+        64,
+        SchedulerConfig::default().with_stealing().with_autoscale(autoscale),
+    )
+    .unwrap()
+    .spawn();
+    assert_eq!(pool.live_shards(), 1, "autoscaled pools spawn at min_shards");
+
+    let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+    let expect: Vec<f32> = burst.iter().step_by(2).copied().collect();
+    let pending: Vec<_> =
+        (0..40).map(|_| pool.submit("slow", burst.clone(), None).unwrap()).collect();
+    assert!(
+        eventually(Duration::from_secs(5), || pool.live_shards() >= 2),
+        "sustained queue pressure must grow the live set (live {})",
+        pool.live_shards()
+    );
+    for rx in pending {
+        assert_eq!(rx.recv().unwrap().soft_symbols, expect);
+    }
+    assert!(
+        eventually(Duration::from_secs(5), || pool.live_shards() == 1),
+        "an idle pool must shrink back to min_shards (live {})",
+        pool.live_shards()
+    );
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), 40);
+    assert_eq!(stats.total_errors(), 0);
+    assert!(stats.pool.scale_ups >= 1, "{:?}", stats.pool);
+    assert!(stats.pool.scale_downs >= 1, "{:?}", stats.pool);
+    assert_eq!(stats.pool.active_shards, 1);
+}
