@@ -140,4 +140,63 @@ fn main() {
         "\ncoalescing is {:.2}x per-request execution on the small-burst mix",
         rates[1] / rates[0]
     );
+
+    // ---- latency SLO: fixed window vs adaptive window ---------------
+    // Same small-burst mix, third way: the 1 ms window *under a p99
+    // budget*.  The SLO loop shrinks each shard's window until the
+    // measured end-to-end p99 fits the budget — batching then comes
+    // only from draining what is already queued, so throughput stays
+    // close to the fixed-window run while the window-induced tail
+    // disappears.  `repro bench --json` records the same comparison as
+    // `serving_slo_*` rows (with p50/p99) in BENCH_pr5.json.
+    header("pool latency SLO (64 clients x 128-symbol bursts, p99 budget 400 us)");
+    use equalizer::coordinator::sched::LatencySlo;
+    use equalizer::metrics::stats::LatencyStats;
+    let fixed = SchedulerConfig::default().with_coalescing(Duration::from_millis(1));
+    let slo_modes = [
+        ("fixed-window", fixed.clone()),
+        ("slo-adaptive", fixed.with_slo(LatencySlo::new(400.0))),
+    ];
+    for (name, scheduler) in slo_modes {
+        let cfg = PoolConfig {
+            shards: 2,
+            instances_per_shard: 4,
+            policy: RoutePolicy::ShortestQueue,
+            queue_cap: clients,
+            scheduler,
+            ..PoolConfig::default()
+        };
+        let pool = match ServerPool::from_registry(&reg, &["cnn_imdd_quant"], &cfg) {
+            Ok(p) => p.spawn(),
+            Err(e) => {
+                println!("(cnn_imdd_quant profile unavailable: {e})");
+                return;
+            }
+        };
+        let mut lat = LatencyStats::new();
+        let mut total_symbols = 0usize;
+        let t0 = std::time::Instant::now();
+        for _ in 0..16 {
+            let pending: Vec<_> = (0..clients)
+                .map(|_| pool.submit("cnn_imdd_quant", burst.clone(), None).unwrap())
+                .collect();
+            for rx in pending {
+                let resp = rx.recv().unwrap();
+                lat.record_us(resp.latency_us);
+                total_symbols += resp.soft_symbols.len();
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let t = Throughput::from_rate(total_symbols as f64, wall);
+        println!(
+            "pool_slo {name:35} {}  p50 {:.1} us  p99 {:.1} us",
+            t.line(),
+            lat.percentile_us(50.0),
+            lat.percentile_us(99.0)
+        );
+        let stats = pool.shutdown();
+        let windows: Vec<String> =
+            stats.shards.iter().map(|s| format!("{:.0}", s.window_us)).collect();
+        println!("       (final per-shard windows: {} us)", windows.join(" / "));
+    }
 }

@@ -25,12 +25,14 @@ pub mod instance;
 pub mod msm;
 pub mod ogm;
 pub mod orm;
+#[warn(missing_docs)]
 pub mod pipeline;
 #[warn(missing_docs)]
 pub mod pool;
 #[warn(missing_docs)]
 pub mod sched;
 pub mod seqlen;
+#[warn(missing_docs)]
 pub mod server;
 pub mod sim;
 pub mod ssm;

@@ -51,6 +51,9 @@ pub fn plan_bucket(
 /// [`EqualizerPipeline::equalize_batch`] paths.
 pub struct EqualizerPipeline<I: EqualizerInstance = Box<dyn EqualizerInstance>> {
     instances: Vec<I>,
+    /// Instances the execution paths currently use (a prefix of
+    /// `instances`; see [`Self::set_active_instances`]).
+    active: usize,
     l_inst: usize,
     o_act: usize,
     n_os: usize,
@@ -73,25 +76,61 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
                 inst.width()
             );
         }
-        Ok(Self { instances, l_inst, o_act, n_os })
+        let active = instances.len();
+        Ok(Self { instances, active, l_inst, o_act, n_os })
     }
 
+    /// Instances this pipeline was constructed with (the DOP ceiling).
     pub fn n_instances(&self) -> usize {
         self.instances.len()
     }
 
+    /// Instances the execution paths currently fan out to (`<=`
+    /// [`Self::n_instances`]; all of them unless
+    /// [`Self::set_active_instances`] lowered it).
+    pub fn active_instances(&self) -> usize {
+        self.active
+    }
+
+    /// Set the live degree of parallelism: route chunks over only the
+    /// first `n` instances.  `n` must be a power of two (the SSM tree
+    /// shape) between 1 and [`Self::n_instances`].
+    ///
+    /// This is the paper's DOP knob made a *runtime* control: the
+    /// autoscaler widens a serving pipeline under latency pressure
+    /// without reloading weights (the parked instances stay
+    /// constructed).  Outputs are bit-identical at every setting —
+    /// only the chunk → instance assignment changes, chunks are
+    /// processed independently, and every instance is an identical
+    /// datapath (asserted in the tests below and end to end in
+    /// `tests/adaptive_sched.rs`).
+    pub fn set_active_instances(&mut self, n: usize) -> Result<()> {
+        anyhow::ensure!(
+            n >= 1 && n <= self.instances.len(),
+            "active instances {n} outside [1, {}]",
+            self.instances.len()
+        );
+        anyhow::ensure!(n.is_power_of_two(), "active instances must be a power of two, got {n}");
+        self.active = n;
+        Ok(())
+    }
+
+    /// Payload samples per chunk (`l_ol - 2 o_act`).
     pub fn l_inst(&self) -> usize {
         self.l_inst
     }
 
+    /// Overlap samples per chunk border.
     pub fn o_act(&self) -> usize {
         self.o_act
     }
 
+    /// Oversampling factor (samples per symbol).
     pub fn n_os(&self) -> usize {
         self.n_os
     }
 
+    /// Fixed instance input width (`l_inst + 2 o_act`).
     pub fn l_ol(&self) -> usize {
         self.l_inst + 2 * self.o_act
     }
@@ -110,10 +149,10 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
     /// Equalize a sample stream into soft symbols (sequential).
     pub fn equalize(&mut self, x: &[f32]) -> Result<Vec<f32>> {
         let chunks = ogm::make_chunks(x, self.l_inst, self.o_act);
-        let queues = ssm::distribute(&chunks, self.instances.len());
+        let queues = ssm::distribute(&chunks, self.active);
 
-        let mut per_instance: Vec<Vec<Vec<f32>>> = Vec::with_capacity(self.instances.len());
-        for (inst, queue) in self.instances.iter_mut().zip(&queues) {
+        let mut per_instance: Vec<Vec<Vec<f32>>> = Vec::with_capacity(self.active);
+        for (inst, queue) in self.instances[..self.active].iter_mut().zip(&queues) {
             let mut outs = Vec::with_capacity(queue.len());
             for &ci in queue {
                 outs.push(inst.process(&chunks[ci].data)?);
@@ -131,12 +170,12 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
         I: Send,
     {
         let chunks = ogm::make_chunks(x, self.l_inst, self.o_act);
-        let queues = ssm::distribute(&chunks, self.instances.len());
+        let queues = ssm::distribute(&chunks, self.active);
 
-        let mut per_instance: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.instances.len()];
+        let mut per_instance: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.active];
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
-            for (inst, queue) in self.instances.iter_mut().zip(&queues) {
+            for (inst, queue) in self.instances[..self.active].iter_mut().zip(&queues) {
                 let chunks = &chunks;
                 handles.push(scope.spawn(move || -> Result<Vec<Vec<f32>>> {
                     let mut outs = Vec::with_capacity(queue.len());
@@ -272,13 +311,13 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
     where
         I: Send,
     {
-        let queues = ssm::distribute(chunks, self.instances.len());
+        let queues = ssm::distribute(chunks, self.active);
         let l_ol = self.l_ol();
 
-        let mut per_instance: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.instances.len()];
+        let mut per_instance: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.active];
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
-            for (inst, queue) in self.instances.iter_mut().zip(&queues) {
+            for (inst, queue) in self.instances[..self.active].iter_mut().zip(&queues) {
                 handles.push(scope.spawn(move || -> Result<Vec<Vec<f32>>> {
                     let mut batch = Vec::with_capacity(queue.len() * l_ol);
                     for &ci in queue {
@@ -396,6 +435,37 @@ mod tests {
         assert!(pool.equalize_coalesced(&[x.as_slice()], 511).is_err());
         assert!(pool.equalize_coalesced(&[x.as_slice()], 0).is_err());
         assert!(pool.equalize_coalesced(&[x.as_slice()], 514).is_err());
+    }
+
+    #[test]
+    fn active_instance_rescaling_is_bit_exact() {
+        // The runtime DOP knob: a pipeline built at N_i = 8 serving at
+        // active = 1 / 2 / 4 / 8 must produce identical outputs on
+        // every execution path — only the chunk → instance assignment
+        // changes, and the instances are identical datapaths.
+        let x: Vec<f32> = (0..8192).map(|i| (i as f32 * 0.23).sin()).collect();
+        let mut reference = decimator_pipeline(8, 512, 64);
+        let want = reference.equalize_batch(&x).unwrap();
+        let mut p = decimator_pipeline(8, 512, 64);
+        assert_eq!(p.n_instances(), 8);
+        for active in [1usize, 2, 4, 8] {
+            p.set_active_instances(active).unwrap();
+            assert_eq!(p.active_instances(), active);
+            assert_eq!(p.equalize_batch(&x).unwrap(), want, "batch, active {active}");
+            assert_eq!(p.equalize(&x).unwrap(), want, "seq, active {active}");
+            assert_eq!(p.equalize_resized(&x, 256).unwrap(), want, "resized, active {active}");
+        }
+        // Mid-stream widening (the autoscaler's move): still exact.
+        p.set_active_instances(2).unwrap();
+        let _ = p.equalize_batch(&x).unwrap();
+        p.set_active_instances(8).unwrap();
+        assert_eq!(p.equalize_batch(&x).unwrap(), want);
+        // Invalid settings are rejected and leave the pipeline usable.
+        assert!(p.set_active_instances(0).is_err());
+        assert!(p.set_active_instances(3).is_err(), "non-power-of-two");
+        assert!(p.set_active_instances(16).is_err(), "beyond the built ceiling");
+        assert_eq!(p.active_instances(), 8);
+        assert_eq!(p.equalize_batch(&x).unwrap(), want);
     }
 
     #[test]

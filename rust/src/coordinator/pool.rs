@@ -29,7 +29,21 @@
 //! * **Routing** — [`RoutePolicy::RoundRobin`] or
 //!   [`RoutePolicy::ShortestQueue`] over the live per-shard queue
 //!   depths ([`crate::metrics::serving::ShardCounters`]), restricted
-//!   to the shards the autoscaler currently keeps live.
+//!   to the shards the autoscaler currently keeps live.  With
+//!   coalescing on, shortest-queue is **warmth-aware**: each shard
+//!   publishes the (profile, `l_inst`) key of its open coalescing
+//!   group, and a submit whose key matches gets a bounded score bonus
+//!   — it joins a batch that is already forming (no new window opens)
+//!   instead of landing on a cold shard.
+//! * **Latency SLO** — with [`SchedulerConfig::slo`] set, a monitor
+//!   thread closes the paper's latency-reduction loop at pool scale:
+//!   per shard, an [`super::sched::SloController`] adapts the
+//!   coalescing window against the measured recent p99 (the
+//!   [`ShardCounters`] reservoir records *end-to-end* latency on every
+//!   path), and the [`super::sched::AutoScaler`]'s latency axis widens
+//!   the per-shard DOP (live instances, via
+//!   [`super::server::EqualizerServer::set_active_instances`] — no
+//!   weight reload) before growing the shard count.
 //!
 //! # Scheduler invariants
 //!
@@ -48,13 +62,20 @@
 //! chunks — from the *front* (oldest end) of the deepest live queue,
 //! at most half of it (bounded by the thief's free capacity), and
 //! appends them to its own queue — empty when it decided to steal,
-//! save for racing submissions — in the same order.  Per-request
-//! integrity and FIFO dispatch order are
+//! save for racing submissions — in the same order.  The take is
+//! **warmth-aware**: when the victim's worker has an open coalescing
+//! group, the leading bursts that match it are left in place (they
+//! batch with that group the moment the victim's window closes —
+//! moving them would trade an imminent batched pass for a solo pass
+//! elsewhere) and the thief steals from the cold remainder behind
+//! them.  Per-request integrity and FIFO dispatch order are
 //! preserved; cross-request *completion* order was never guaranteed by
 //! a multi-shard pool (two shards always race) and stealing does not
 //! change that.  Stealing requires every shard to serve identical
 //! engines per profile (validated at construction), so a stolen burst
 //! picks the same `l_inst` and produces the same bits on the thief.
+//! A stolen burst keeps its submit timestamp, so its reservoir sample
+//! still measures enqueue → completion.
 //!
 //! **Autoscale stability.**  The monitor thread feeds queue pressure
 //! into the hysteretic [`super::sched::AutoScaler`]; parked shards
@@ -65,12 +86,12 @@
 use super::instance::{
     AnyInstance, EqualizerInstance, FirInstance, NativeInstance, VolterraInstance,
 };
-use super::sched::{AutoScaleConfig, AutoScaler, ScaleDecision, SchedulerConfig};
+use super::sched::{AutoScaler, ScaleDecision, ScaleSignals, SchedulerConfig, SloController};
 use super::seqlen::SeqLenOptimizer;
-use super::server::EqualizerServer;
+use super::server::{EqualizerServer, LutPicker};
 use super::timing::TimingModel;
 use crate::equalizer::weights::CnnTopologyCfg;
-use crate::metrics::serving::{PoolStats, ServerStats, ShardCounters};
+use crate::metrics::serving::{PoolStats, ServerStats, ShardCounters, SLO_RECENT_WINDOW};
 use crate::runtime::artifact::{ProfileBlueprint, ProfileDatapath};
 use crate::runtime::ArtifactRegistry;
 use anyhow::Result;
@@ -81,6 +102,13 @@ use std::time::{Duration, Instant};
 
 /// Default bound on each shard's request queue.
 pub const DEFAULT_QUEUE_CAP: usize = 64;
+
+/// Warmth bonus in the shortest-queue score (see `route_score`): a
+/// shard with an open coalescing group matching the submit wins over a
+/// cold shard up to one queued request deeper — enough that a forming
+/// batch attracts its peers, bounded so warmth can never pile a queue
+/// arbitrarily high.
+const WARM_ROUTE_BONUS: i64 = 6;
 
 /// How often an idle shard re-checks other queues for stealable work
 /// (doubles up to [`STEAL_POLL_MAX`] while nothing is stealable, so a
@@ -126,6 +154,10 @@ pub struct PoolRequest {
     pub samples: Vec<f32>,
     /// Optional net-throughput requirement driving l_inst selection.
     pub t_req: Option<f64>,
+    /// Submit time — travels with the burst (through steals and
+    /// coalescing) so the latency reservoir always records
+    /// enqueue → completion.
+    pub enqueued_at: Instant,
     /// Reply channel.
     pub reply: mpsc::Sender<PoolResponse>,
 }
@@ -141,10 +173,14 @@ pub struct PoolResponse {
     pub shard: usize,
     /// Profile the burst was equalized under.
     pub profile: String,
-    /// Wall-clock time on the shard worker.  For a coalesced burst
-    /// this is the whole batch's pass time — the latency the request
-    /// actually observed.
+    /// Wall-clock time on the shard worker (for a coalesced burst: the
+    /// whole batch's pass time).
     pub elapsed_us: f64,
+    /// End-to-end latency: submit to reply, including queueing, any
+    /// coalescing-window wait and steal migration.  This is the sample
+    /// the shard's latency reservoir records — the quantity a
+    /// [`super::sched::LatencySlo`] budgets.
+    pub latency_us: f64,
     /// Requests that shared this burst's batched pipeline pass
     /// (1 = served alone).
     pub batched: usize,
@@ -194,10 +230,18 @@ impl<I: EqualizerInstance + Send + 'static> Default for Shard<I> {
 pub struct PoolConfig {
     /// Number of shards (worker threads x full pipeline complexes).
     /// With autoscaling this is the *maximum* live set; see
-    /// [`AutoScaleConfig::min_shards`].
+    /// [`super::sched::AutoScaleConfig::min_shards`].
     pub shards: usize,
-    /// Instances per engine inside each shard (power of two).
+    /// Instances per engine inside each shard (power of two).  With
+    /// the DOP axis enabled this is the *floor* the autoscaler never
+    /// narrows below.
     pub instances_per_shard: usize,
+    /// DOP ceiling for the autoscaler's second axis (power of two,
+    /// `>= instances_per_shard`).  Engines are stamped at this count —
+    /// cheap clones of the profile blueprint, so widening never
+    /// reloads weights — with only the first `instances_per_shard`
+    /// live at spawn.  0 (the default) keeps the axis off.
+    pub max_instances_per_shard: usize,
     /// Dispatch policy over the live shards.
     pub policy: RoutePolicy,
     /// Bounded per-shard queue length (backpressure).
@@ -216,6 +260,7 @@ impl Default for PoolConfig {
         Self {
             shards: 2,
             instances_per_shard: 2,
+            max_instances_per_shard: 0,
             policy: RoutePolicy::ShortestQueue,
             queue_cap: DEFAULT_QUEUE_CAP,
             lut_instances: 64,
@@ -232,6 +277,8 @@ pub struct ServerPool<I: EqualizerInstance + Send + 'static> {
     policy: RoutePolicy,
     queue_cap: usize,
     scheduler: SchedulerConfig,
+    /// (floor, ceiling) of the autoscaler's DOP axis; (0, 0) = off.
+    dop_range: (usize, usize),
 }
 
 impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
@@ -287,7 +334,55 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
         if let Some(auto) = &scheduler.autoscale {
             auto.validate(shards.len())?;
         }
-        Ok(Self { shards, policy, queue_cap, scheduler })
+        if let Some(slo) = &scheduler.slo {
+            slo.validate()?;
+            // An SLO with nothing to actuate is a silent no-op (and
+            // would spawn a monitor thread with no work): require at
+            // least one lever the budget can move.
+            anyhow::ensure!(
+                scheduler.coalescing() || scheduler.autoscale.is_some(),
+                "a latency SLO needs an actuator: enable coalescing (adaptive window) \
+                 and/or autoscaling (DOP / shard axis)"
+            );
+        }
+        Ok(Self { shards, policy, queue_cap, scheduler, dop_range: (0, 0) })
+    }
+
+    /// Enable the autoscaler's DOP axis on a hand-built pool: every
+    /// engine must be constructed with at least `max_dop` instances;
+    /// the live count starts at `min_dop` and the monitor widens or
+    /// narrows it within `[min_dop, max_dop]` (both powers of two).
+    /// Requires both an autoscaler (the decision loop) and a latency
+    /// SLO (the signal that drives widening) in the scheduler —
+    /// without them the stamped headroom could never activate.
+    /// Registry-backed pools get this from
+    /// [`PoolConfig::max_instances_per_shard`].
+    pub fn with_dop_range(mut self, min_dop: usize, max_dop: usize) -> Result<Self> {
+        anyhow::ensure!(
+            self.scheduler.autoscale.is_some() && self.scheduler.slo.is_some(),
+            "the DOP axis needs a driver: configure both an autoscaler and a latency SLO \
+             (DOP widens under latency pressure) before with_dop_range"
+        );
+        anyhow::ensure!(
+            min_dop >= 1 && min_dop <= max_dop,
+            "DOP range requires 1 <= min ({min_dop}) <= max ({max_dop})"
+        );
+        anyhow::ensure!(
+            min_dop.is_power_of_two() && max_dop.is_power_of_two(),
+            "DOP bounds must be powers of two (SSM tree), got {min_dop}..{max_dop}"
+        );
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            for (name, engine) in s.profiles.iter_mut() {
+                anyhow::ensure!(
+                    engine.n_instances() >= max_dop,
+                    "shard {i} {name:?} has {} instances, DOP ceiling needs {max_dop}",
+                    engine.n_instances()
+                );
+                engine.set_active_instances(min_dop)?;
+            }
+        }
+        self.dop_range = (min_dop, max_dop);
+        Ok(self)
     }
 
     /// Shards this pool was constructed with (the maximum live set).
@@ -295,31 +390,44 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
         self.shards.len()
     }
 
-    /// Start one worker thread per shard (plus the autoscale monitor
-    /// when configured) and return the dispatch handle.
+    /// Start one worker thread per shard (plus the monitor thread when
+    /// autoscaling or an SLO is configured) and return the dispatch
+    /// handle.
     pub fn spawn(self) -> PoolHandle {
-        let Self { shards, policy, queue_cap, scheduler } = self;
+        let Self { shards, policy, queue_cap, scheduler, dop_range } = self;
         let n = shards.len();
         let profiles: Arc<[String]> = shards[0].profile_names().into();
+        let pickers: BTreeMap<String, LutPicker> =
+            shards[0].profiles.iter().map(|(name, e)| (name.clone(), e.lut_picker())).collect();
         let live = scheduler.autoscale.as_ref().map_or(n, |a| a.min_shards.min(n));
+        let (min_dop, max_dop) = dop_range;
         let core = Arc::new(SchedCore {
             slots: (0..n).map(|_| ShardSlot::default()).collect(),
             counters: (0..n).map(|_| Arc::new(ShardCounters::default())).collect(),
             queue_cap,
+            pickers,
             sched: scheduler,
             active: AtomicUsize::new(live),
             open: AtomicBool::new(true),
             scale_ups: AtomicU64::new(0),
             scale_downs: AtomicU64::new(0),
+            min_dop,
+            max_dop,
+            dop: AtomicUsize::new(min_dop),
+            dop_ups: AtomicU64::new(0),
+            dop_downs: AtomicU64::new(0),
         });
+        for c in &core.counters {
+            c.set_window(core.sched.coalesce_window);
+        }
         let mut joins = Vec::with_capacity(n + 1);
         for (id, shard) in shards.into_iter().enumerate() {
             let worker_core = Arc::clone(&core);
             joins.push(std::thread::spawn(move || worker_loop(shard, id, worker_core)));
         }
-        if let Some(auto) = core.sched.autoscale.clone() {
+        if core.sched.autoscale.is_some() || core.sched.slo.is_some() {
             let monitor_core = Arc::clone(&core);
-            joins.push(std::thread::spawn(move || monitor_loop(monitor_core, auto)));
+            joins.push(std::thread::spawn(move || monitor_loop(monitor_core)));
         }
         let clients_guard = Arc::new(ClientsGuard { core: Arc::clone(&core) });
         PoolHandle {
@@ -342,10 +450,33 @@ struct ShardSlot {
     /// Mirror of `queue.len()` so victim selection and routing never
     /// take the lock.
     queued: AtomicUsize,
+    /// Hash of the (profile, `l_inst`) group the worker is currently
+    /// collecting (see `group_key`), 0 when no window is open — the
+    /// warmth signal for routing and the warmth-aware thief.  A hash
+    /// collision can only mispredict affinity (a routing/steal
+    /// heuristic), never correctness.
+    warm: AtomicU64,
     /// Signalled on every push (and on activation / shutdown).
     not_empty: Condvar,
     /// Signalled whenever the worker frees queue capacity.
     not_full: Condvar,
+}
+
+/// FNV-1a hash of a coalescing-group key (profile, `l_inst`), biased
+/// away from 0 so 0 can mean "no open group".
+fn group_key(profile: &str, l_inst: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in profile.as_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+    }
+    for b in (l_inst as u64).to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+    }
+    if h == 0 {
+        1
+    } else {
+        h
+    }
 }
 
 /// State shared by the dispatcher, the shard workers and the monitor.
@@ -353,6 +484,10 @@ struct SchedCore {
     slots: Vec<ShardSlot>,
     counters: Vec<Arc<ShardCounters>>,
     queue_cap: usize,
+    /// Per-profile `t_req` -> `l_inst` pickers snapshotted from shard
+    /// 0 at spawn: lets the dispatcher and the thief compute a burst's
+    /// coalescing-group key without touching any engine.
+    pickers: BTreeMap<String, LutPicker>,
     sched: SchedulerConfig,
     /// Shards the dispatcher routes to (a prefix of `slots`).
     active: AtomicUsize,
@@ -360,6 +495,13 @@ struct SchedCore {
     open: AtomicBool,
     scale_ups: AtomicU64,
     scale_downs: AtomicU64,
+    /// DOP floor/ceiling; `max_dop == 0` disables the axis.
+    min_dop: usize,
+    max_dop: usize,
+    /// Live instances per shard the workers should converge to.
+    dop: AtomicUsize,
+    dop_ups: AtomicU64,
+    dop_downs: AtomicU64,
 }
 
 impl SchedCore {
@@ -368,8 +510,31 @@ impl SchedCore {
             active_shards: self.active.load(Ordering::SeqCst),
             scale_ups: self.scale_ups.load(Ordering::Relaxed),
             scale_downs: self.scale_downs.load(Ordering::Relaxed),
+            dop: if self.max_dop > 0 { self.dop.load(Ordering::SeqCst) } else { 0 },
+            dop_ups: self.dop_ups.load(Ordering::Relaxed),
+            dop_downs: self.dop_downs.load(Ordering::Relaxed),
         }
     }
+
+    /// The coalescing-group key a submit of (`profile`, `t_req`) would
+    /// batch under, when coalescing is on and the profile is known.
+    fn warm_key(&self, profile: &str, t_req: Option<f64>) -> Option<u64> {
+        if !self.sched.coalescing() {
+            return None;
+        }
+        let picker = self.pickers.get(profile)?;
+        Some(group_key(profile, picker.pick(t_req)))
+    }
+}
+
+/// Shortest-queue routing score: lower wins.  Depth dominates; a warm
+/// same-group shard gets a bounded bonus ([`WARM_ROUTE_BONUS`] over a
+/// 4x depth scale, i.e. it wins up to one request deeper and loses
+/// beyond that), so bursts join a forming batch instead of opening a
+/// fresh window on a cold shard, without warmth ever overriding a real
+/// queue imbalance.
+fn route_score(depth: usize, warm: bool) -> i64 {
+    4 * depth as i64 - if warm { WARM_ROUTE_BONUS } else { 0 }
 }
 
 /// Dropped when the last client goes away: flips `open` and wakes
@@ -395,7 +560,27 @@ fn worker_loop<I: EqualizerInstance + Send + 'static>(
     core: Arc<SchedCore>,
 ) {
     while let Some(batch) = next_batch(&core, id, &shard) {
+        apply_dop(&mut shard, &core);
         execute_batch(&mut shard, id, &core, batch);
+    }
+}
+
+/// Converge this shard's engines onto the monitor's current DOP
+/// target (clamped per engine to its constructed instance count).  A
+/// no-op outside the configured DOP axis; called with work in hand, so
+/// an idle shard never spins on it.
+fn apply_dop<I: EqualizerInstance + Send + 'static>(shard: &mut Shard<I>, core: &SchedCore) {
+    if core.max_dop == 0 {
+        return;
+    }
+    let dop = core.dop.load(Ordering::SeqCst).max(1);
+    for engine in shard.profiles.values_mut() {
+        let want = dop.min(engine.n_instances());
+        if engine.active_instances() != want {
+            // min/max of powers of two is a power of two, and `want`
+            // is within [1, n_instances], so this cannot fail.
+            let _ = engine.set_active_instances(want);
+        }
     }
 }
 
@@ -439,10 +624,19 @@ fn next_batch<I: EqualizerInstance + Send + 'static>(
 }
 
 /// Starting from `first`, gather queued requests with the same
-/// (profile, picked `l_inst`) key — waiting up to the coalescing
-/// window for more to arrive — and return them as one batch.  Requests
-/// with other keys keep their queue positions (and their relative
-/// order).
+/// (profile, picked `l_inst`) key — waiting up to the shard's
+/// *effective* coalescing window for more to arrive — and return them
+/// as one batch.  Requests with other keys keep their queue positions
+/// (and their relative order).
+///
+/// The window is read from the shard's [`ShardCounters`] gauge: the
+/// configured base normally, whatever the SLO loop adapted it to
+/// otherwise.  A zero effective window still batches everything
+/// already queued (the drain scan below costs no waiting) — under a
+/// tight SLO the shard stops *waiting* for company, it never stops
+/// taking it.  While collecting, the shard publishes the group key
+/// (`ShardSlot::warm`) so routing steers same-group submits here and
+/// thieves leave the group's queued members alone.
 fn collect_group<I: EqualizerInstance + Send + 'static>(
     core: &SchedCore,
     id: usize,
@@ -460,8 +654,9 @@ fn collect_group<I: EqualizerInstance + Send + 'static>(
     let max = core.sched.coalesce_max;
     let l_inst = engine.pick_l_inst(first.t_req);
     let profile = first.profile.clone();
+    slot.warm.store(group_key(&profile, l_inst), Ordering::Relaxed);
     let mut batch = vec![first];
-    let deadline = Instant::now() + core.sched.coalesce_window;
+    let deadline = Instant::now() + core.counters[id].window();
     loop {
         let mut i = 0;
         while i < q.len() && batch.len() < max {
@@ -483,12 +678,17 @@ fn collect_group<I: EqualizerInstance + Send + 'static>(
         let (guard, _) = slot.not_empty.wait_timeout(q, deadline - now).expect("shard queue");
         q = guard;
     }
+    slot.warm.store(0, Ordering::Relaxed);
     batch
 }
 
 /// Move up to half of the deepest live queue (oldest bursts first,
-/// whole bursts only) onto `thief`'s queue.  Never holds two queue
-/// locks at once.  Returns whether anything moved.
+/// whole bursts only) onto `thief`'s queue.  Warmth-aware: bursts at
+/// the queue front that match the victim's open coalescing group stay
+/// put — they batch with that group the moment its window closes, so
+/// moving them would trade an imminent batched pass for a solo pass on
+/// the thief.  Never holds two queue locks at once.  Returns whether
+/// anything moved.
 fn steal_into(core: &SchedCore, thief: usize) -> bool {
     let live = core.active.load(Ordering::SeqCst).min(core.slots.len());
     let mut victim: Option<usize> = None;
@@ -517,11 +717,30 @@ fn steal_into(core: &SchedCore, thief: usize) -> bool {
     }
     let stolen: Vec<PoolRequest> = {
         let mut vq = core.slots[v].queue.lock().expect("shard queue");
-        let take = (vq.len() / 2).min(free);
+        // Leave the leading run of bursts that belong to the victim's
+        // open coalescing group (they are about to batch there); steal
+        // oldest-first from the cold remainder.
+        let victim_warm = core.slots[v].warm.load(Ordering::Relaxed);
+        let mut lead = 0usize;
+        if victim_warm != 0 && core.sched.coalescing() {
+            while lead < vq.len() {
+                let r = &vq[lead];
+                let matches = core
+                    .pickers
+                    .get(&r.profile)
+                    .is_some_and(|p| group_key(&r.profile, p.pick(r.t_req)) == victim_warm);
+                if matches {
+                    lead += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        let take = (vq.len().saturating_sub(lead) / 2).min(free);
         if take == 0 {
             return false;
         }
-        let stolen = vq.drain(..take).collect();
+        let stolen = vq.drain(lead..lead + take).collect();
         core.slots[v].queued.store(vq.len(), Ordering::SeqCst);
         stolen
     };
@@ -558,14 +777,19 @@ fn execute_batch<I: EqualizerInstance + Send + 'static>(
             if let Ok(outs) = outs {
                 let n = batch.len();
                 let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
-                // Latency: every request observed the whole pass.
-                // Busy: the shard ran the pass once, so each request
-                // carries a 1/n share (keeps summed busy time
-                // wall-clock-true under coalescing).
+                // Latency: each request's own enqueue -> completion
+                // time (queueing + window wait + pass — the same
+                // end-to-end quantity every other path records, so p99
+                // is comparable across modes and the SLO loop sees the
+                // window-induced wait it controls).  Busy: the shard
+                // ran the pass once, so each request carries a 1/n
+                // share (keeps summed busy time wall-clock-true under
+                // coalescing).
                 let busy_share_us = elapsed_us / n as f64;
                 counters.coalesced(n as u64);
                 for (req, soft) in batch.into_iter().zip(outs) {
-                    counters.served_with_busy(soft.len(), elapsed_us, busy_share_us, false);
+                    let latency_us = req.enqueued_at.elapsed().as_secs_f64() * 1e6;
+                    counters.served_with_busy(soft.len(), latency_us, busy_share_us, false);
                     counters.dequeued();
                     let _ = req.reply.send(PoolResponse {
                         soft_symbols: soft,
@@ -573,6 +797,7 @@ fn execute_batch<I: EqualizerInstance + Send + 'static>(
                         shard: id,
                         profile: req.profile,
                         elapsed_us,
+                        latency_us,
                         batched: n,
                         error: None,
                     });
@@ -589,7 +814,11 @@ fn execute_batch<I: EqualizerInstance + Send + 'static>(
     }
 }
 
-/// The pre-scheduler request path: serve one burst on its own.
+/// The pre-scheduler request path: serve one burst on its own.  The
+/// reservoir sample is still end-to-end (enqueue -> completion), so a
+/// burst that sat behind others in the queue — or migrated via a steal
+/// — reports the latency its client actually saw, not just the pass
+/// time.
 fn serve_single<I: EqualizerInstance + Send + 'static>(
     shard: &mut Shard<I>,
     id: usize,
@@ -608,7 +837,8 @@ fn serve_single<I: EqualizerInstance + Send + 'static>(
         }
     };
     let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
-    counters.served(soft_symbols.len(), elapsed_us, error.is_some());
+    let latency_us = req.enqueued_at.elapsed().as_secs_f64() * 1e6;
+    counters.served_with_busy(soft_symbols.len(), latency_us, elapsed_us, error.is_some());
     counters.dequeued();
     let _ = req.reply.send(PoolResponse {
         soft_symbols,
@@ -616,20 +846,97 @@ fn serve_single<I: EqualizerInstance + Send + 'static>(
         shard: id,
         profile: req.profile,
         elapsed_us,
+        latency_us,
         batched: 1,
         error,
     });
 }
 
-/// Autoscale monitor: periodically feed queue pressure into the
-/// hysteretic controller and apply its decisions to the live set.
-fn monitor_loop(core: Arc<SchedCore>, cfg: AutoScaleConfig) {
-    let mut scaler = AutoScaler::new(cfg.clone(), core.slots.len());
+/// Scheduler monitor: the pool's control plane.  Each tick it
+///
+/// 1. feeds every shard's recent p99 into that shard's
+///    [`SloController`], publishing the adapted coalescing window
+///    through the [`ShardCounters`] gauge the worker reads (only when
+///    an SLO *and* coalescing are configured);
+/// 2. feeds the pool observation ([`ScaleSignals`]) into the
+///    [`AutoScaler`] and applies its decision — shard grow/shrink as
+///    in PR 4, plus the DOP axis: widening/narrowing the live
+///    instances per shard that `apply_dop` converges the engines onto.
+///
+/// Decision logic is entirely in `coordinator::sched` (pure,
+/// unit-tested); this thread only moves observations and actuations.
+fn monitor_loop(core: Arc<SchedCore>) {
+    let slo = core.sched.slo.clone();
+    let auto = core.sched.autoscale.clone();
+    // Each loop keeps its *own* configured cadence: the thread sleeps
+    // at the finer of the two ticks and gates each loop on its own
+    // accumulated interval, so configuring a 1 ms SLO tick next to a
+    // 1 s autoscale tick does not make the scaler observe (and act)
+    // 1000x faster than `hysteresis_ticks * tick` promises.
+    let window_tick = slo.as_ref().map(|s| s.tick);
+    let scale_tick = auto.as_ref().map(|a| a.tick);
+    let tick = match (window_tick, scale_tick) {
+        (Some(w), Some(s)) => w.min(s),
+        (Some(w), None) => w,
+        (None, Some(s)) => s,
+        (None, None) => return,
+    };
+    let mut scaler = auto.map(|cfg| AutoScaler::new(cfg, core.slots.len()));
+    let mut windows: Vec<SloController> = match &slo {
+        Some(s) if core.sched.coalescing() => core
+            .counters
+            .iter()
+            .map(|_| SloController::new(s.clone(), core.sched.coalesce_window))
+            .collect(),
+        _ => Vec::new(),
+    };
+    let mut since_window = Duration::ZERO;
+    let mut since_scale = Duration::ZERO;
     while core.open.load(Ordering::SeqCst) {
-        std::thread::sleep(cfg.tick);
+        std::thread::sleep(tick);
+        since_window += tick;
+        since_scale += tick;
+        let window_due = window_tick.is_some_and(|t| since_window >= t);
+        let scale_due = scaler.is_some() && scale_tick.is_some_and(|t| since_scale >= t);
+        if !window_due && !scale_due {
+            continue;
+        }
         let live = core.active.load(Ordering::SeqCst);
+        // One reservoir read per shard per tick, shared by both loops.
+        let need_p99 = slo.is_some() && ((window_due && !windows.is_empty()) || scale_due);
+        let shard_p99: Vec<f64> = if need_p99 {
+            core.counters.iter().map(|c| c.recent_p99_us(SLO_RECENT_WINDOW)).collect()
+        } else {
+            Vec::new()
+        };
+        if window_due {
+            since_window = Duration::ZERO;
+            // Window adaptation runs for every shard (a parked shard
+            // can still serve pinned submits, and adapting it is free).
+            for (ctl, (counters, &p99)) in
+                windows.iter_mut().zip(core.counters.iter().zip(&shard_p99))
+            {
+                counters.set_window(ctl.observe(p99));
+            }
+        }
+        if !scale_due {
+            continue;
+        }
+        since_scale = Duration::ZERO;
+        let Some(scaler) = scaler.as_mut() else { continue };
         let outstanding: usize = core.counters.iter().map(|c| c.queue_depth()).sum();
-        match scaler.observe(live, outstanding) {
+        let p99_us = slo
+            .as_ref()
+            .map(|_| shard_p99.iter().take(live.max(1)).copied().fold(0.0, f64::max));
+        let signals = ScaleSignals {
+            live_shards: live,
+            outstanding,
+            dop: if core.max_dop > 0 { core.dop.load(Ordering::SeqCst) } else { 0 },
+            min_dop: core.min_dop,
+            max_dop: core.max_dop,
+            p99_us,
+        };
+        match scaler.observe_signals(&signals, slo.as_ref()) {
             ScaleDecision::Hold => {}
             ScaleDecision::Grow => {
                 core.active.store(live + 1, Ordering::SeqCst);
@@ -648,6 +955,16 @@ fn monitor_loop(core: Arc<SchedCore>, cfg: AutoScaleConfig) {
             ScaleDecision::Shrink => {
                 core.active.store(live - 1, Ordering::SeqCst);
                 core.scale_downs.fetch_add(1, Ordering::Relaxed);
+            }
+            ScaleDecision::WidenDop => {
+                let dop = core.dop.load(Ordering::SeqCst);
+                core.dop.store((dop * 2).min(core.max_dop), Ordering::SeqCst);
+                core.dop_ups.fetch_add(1, Ordering::Relaxed);
+            }
+            ScaleDecision::NarrowDop => {
+                let dop = core.dop.load(Ordering::SeqCst);
+                core.dop.store((dop / 2).max(core.min_dop), Ordering::SeqCst);
+                core.dop_downs.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -687,19 +1004,28 @@ pub struct PoolClient {
 }
 
 impl PoolClient {
-    fn route(&self) -> usize {
-        let live = self.core.active.load(Ordering::SeqCst).max(1);
+    /// Pick a live shard for (`profile`, `t_req`).  Shortest-queue is
+    /// warmth-aware when coalescing is on: the score combines queue
+    /// depth with whether the shard's open coalescing group matches
+    /// this burst's (profile, `l_inst`) key (see `route_score`), so a
+    /// burst lands where it batches immediately instead of opening a
+    /// new window on a cold shard.
+    fn route(&self, profile: &str, t_req: Option<f64>) -> usize {
+        let live = self.core.active.load(Ordering::SeqCst).max(1).min(self.core.slots.len());
         match self.policy {
             RoutePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % live,
-            RoutePolicy::ShortestQueue => self
-                .core
-                .counters
-                .iter()
-                .take(live)
-                .enumerate()
-                .min_by_key(|(_, c)| c.queue_depth())
-                .map(|(i, _)| i)
-                .unwrap_or(0),
+            RoutePolicy::ShortestQueue => {
+                let want = self.core.warm_key(profile, t_req);
+                (0..live)
+                    .min_by_key(|&i| {
+                        let depth = self.core.counters[i].queue_depth();
+                        let warm = want.is_some_and(|k| {
+                            self.core.slots[i].warm.load(Ordering::Relaxed) == k
+                        });
+                        route_score(depth, warm)
+                    })
+                    .unwrap_or(0)
+            }
         }
     }
 
@@ -748,7 +1074,7 @@ impl PoolClient {
         t_req: Option<f64>,
     ) -> Result<mpsc::Receiver<PoolResponse>> {
         self.check_profile(profile)?;
-        self.submit_to(self.route(), profile, samples, t_req)
+        self.submit_to(self.route(profile, t_req), profile, samples, t_req)
     }
 
     /// Enqueue one burst on a specific shard, bypassing the routing
@@ -777,7 +1103,13 @@ impl PoolClient {
             q = slot.not_full.wait(q).expect("shard queue");
         }
         self.core.counters[shard].enqueued();
-        q.push_back(PoolRequest { profile: profile.to_string(), samples, t_req, reply });
+        q.push_back(PoolRequest {
+            profile: profile.to_string(),
+            samples,
+            t_req,
+            enqueued_at: Instant::now(),
+            reply,
+        });
         slot.queued.store(q.len(), Ordering::SeqCst);
         drop(q);
         slot.not_empty.notify_all();
@@ -795,7 +1127,7 @@ impl PoolClient {
         t_req: Option<f64>,
     ) -> Result<TrySubmit> {
         self.check_profile(profile)?;
-        let shard = self.route();
+        let shard = self.route(profile, t_req);
         let slot = &self.core.slots[shard];
         let mut q = slot.queue.lock().expect("shard queue");
         if q.len() >= self.core.queue_cap {
@@ -803,7 +1135,13 @@ impl PoolClient {
         }
         let (reply, rx) = mpsc::channel();
         let depth = self.core.counters[shard].enqueued_pending();
-        q.push_back(PoolRequest { profile: profile.to_string(), samples, t_req, reply });
+        q.push_back(PoolRequest {
+            profile: profile.to_string(),
+            samples,
+            t_req,
+            enqueued_at: Instant::now(),
+            reply,
+        });
         slot.queued.store(q.len(), Ordering::SeqCst);
         drop(q);
         self.core.counters[shard].commit_peak(depth);
@@ -977,6 +1315,20 @@ impl ServerPool<AnyInstance> {
             "instances_per_shard must be a power of two (SSM tree), got {}",
             cfg.instances_per_shard
         );
+        // DOP axis: engines are stamped at the ceiling (clones of the
+        // loaded blueprint — no extra weight parsing), serving at the
+        // floor until the autoscaler widens them.
+        let max_dop = if cfg.max_instances_per_shard == 0 {
+            cfg.instances_per_shard
+        } else {
+            cfg.max_instances_per_shard
+        };
+        anyhow::ensure!(
+            max_dop.is_power_of_two() && max_dop >= cfg.instances_per_shard,
+            "max_instances_per_shard must be a power of two >= instances_per_shard, \
+             got {max_dop} vs {}",
+            cfg.instances_per_shard
+        );
         let topo = CnnTopologyCfg::SELECTED;
         let timing =
             TimingModel::new(cfg.lut_instances, topo.vp, topo.layers, topo.kernel, cfg.f_clk);
@@ -992,19 +1344,18 @@ impl ServerPool<AnyInstance> {
         for _ in 0..cfg.shards {
             let mut shard = Shard::new();
             for (name, blueprint) in &blueprints {
-                let engine = stamp_engine(
-                    blueprint,
-                    reg,
-                    name,
-                    cfg.instances_per_shard,
-                    &optimizer,
-                    &lut_targets,
-                )?;
+                let engine =
+                    stamp_engine(blueprint, reg, name, max_dop, &optimizer, &lut_targets)?;
                 shard = shard.with_profile(name.clone(), engine);
             }
             shards.push(shard);
         }
-        Self::with_scheduler(shards, cfg.policy, cfg.queue_cap, cfg.scheduler.clone())
+        let pool = Self::with_scheduler(shards, cfg.policy, cfg.queue_cap, cfg.scheduler.clone())?;
+        if max_dop > cfg.instances_per_shard {
+            pool.with_dop_range(cfg.instances_per_shard, max_dop)
+        } else {
+            Ok(pool)
+        }
     }
 }
 
@@ -1012,6 +1363,7 @@ impl ServerPool<AnyInstance> {
 mod tests {
     use super::*;
     use crate::coordinator::instance::DecimatorInstance;
+    use crate::coordinator::sched::{AutoScaleConfig, LatencySlo};
 
     fn optimizer() -> SeqLenOptimizer {
         SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6))
@@ -1077,6 +1429,29 @@ mod tests {
         assert!(ServerPool::with_scheduler(mk(), RoutePolicy::RoundRobin, 4, bad).is_err());
         let ok = SchedulerConfig::default().with_autoscale(AutoScaleConfig::default());
         assert!(ServerPool::with_scheduler(mk(), RoutePolicy::RoundRobin, 4, ok).is_ok());
+    }
+
+    #[test]
+    fn slo_requires_an_actuator() {
+        let mk = || vec![Shard::single("a", engine(2, 256, 32))];
+        // An SLO alone has nothing to move: rejected.
+        let inert = SchedulerConfig::default().with_slo(LatencySlo::new(500.0));
+        assert!(ServerPool::with_scheduler(mk(), RoutePolicy::RoundRobin, 4, inert).is_err());
+        // Coalescing (adaptive window) or autoscaling (DOP / shard
+        // axis) each make the budget actionable.
+        let windowed = SchedulerConfig::default()
+            .with_coalescing(Duration::from_millis(1))
+            .with_slo(LatencySlo::new(500.0));
+        assert!(ServerPool::with_scheduler(mk(), RoutePolicy::RoundRobin, 4, windowed).is_ok());
+        let scaled = SchedulerConfig::default()
+            .with_autoscale(AutoScaleConfig::default())
+            .with_slo(LatencySlo::new(500.0));
+        assert!(ServerPool::with_scheduler(mk(), RoutePolicy::RoundRobin, 4, scaled).is_ok());
+        // And the budget itself is still validated.
+        let bad = SchedulerConfig::default()
+            .with_coalescing(Duration::from_millis(1))
+            .with_slo(LatencySlo::new(-1.0));
+        assert!(ServerPool::with_scheduler(mk(), RoutePolicy::RoundRobin, 4, bad).is_err());
     }
 
     #[test]
@@ -1153,6 +1528,221 @@ mod tests {
             std::thread::sleep(self.delay);
             Ok(chunk.iter().step_by(2).copied().collect())
         }
+    }
+
+    #[test]
+    fn group_key_is_stable_and_nonzero() {
+        let a = group_key("cnn_imdd", 4096);
+        assert_eq!(a, group_key("cnn_imdd", 4096), "pure function");
+        assert_ne!(a, 0);
+        assert_ne!(a, group_key("cnn_imdd", 2048), "l_inst distinguishes groups");
+        assert_ne!(a, group_key("fir_imdd", 4096), "profile distinguishes groups");
+    }
+
+    #[test]
+    fn route_score_bounds_the_warmth_bonus() {
+        // Warmth wins ties and a one-deeper queue, loses beyond that —
+        // a forming batch attracts peers without starving cold shards.
+        assert!(route_score(1, true) < route_score(0, false), "one deeper: warm still wins");
+        assert!(route_score(2, true) > route_score(0, false), "two deeper: depth wins");
+        assert!(route_score(3, true) < route_score(4, false), "equal-ish depths prefer warm");
+        assert_eq!(route_score(5, false), 20, "cold score is pure depth");
+    }
+
+    #[test]
+    fn warm_routing_joins_the_open_group() {
+        // Shard 0 opens a coalescing group (long window, max 2); a
+        // same-key submit must route onto the warm shard 0 — despite
+        // its deeper queue — and complete the batch.  With cold
+        // shortest-queue routing the second burst would land on the
+        // idle shard 1 and be served alone.
+        let shards: Vec<_> = (0..2).map(|_| Shard::single("d", engine(2, 256, 32))).collect();
+        let mut sched = SchedulerConfig::default().with_coalescing(Duration::from_millis(400));
+        sched.coalesce_max = 2;
+        let pool = ServerPool::with_scheduler(shards, RoutePolicy::ShortestQueue, 16, sched)
+            .unwrap()
+            .spawn();
+        let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+        let expect: Vec<f32> = burst.iter().step_by(2).copied().collect();
+        let rx_a = pool.submit("d", burst.clone(), None).unwrap();
+        // Wait until shard 0's worker has popped the burst and
+        // published its group (bounded poll, not a blind sleep — the
+        // 400 ms window leaves ample margin after detection).
+        let t0 = Instant::now();
+        while pool.client.core.slots[0].warm.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "worker never opened a window");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let rx_b = pool.submit("d", burst.clone(), None).unwrap();
+        let a = rx_a.recv().unwrap();
+        let b = rx_b.recv().unwrap();
+        assert_eq!(a.soft_symbols, expect);
+        assert_eq!(b.soft_symbols, expect);
+        assert_eq!((a.shard, b.shard), (0, 0), "second burst joined the warm shard");
+        assert_eq!(a.batched, 2, "the pair coalesced into one pass");
+        assert_eq!(b.batched, 2);
+        let stats = pool.shutdown();
+        assert_eq!(stats.shards[0].requests, 2);
+        assert_eq!(stats.shards[1].requests, 0, "the cold shard saw nothing");
+    }
+
+    /// A bare [`SchedCore`] with two slots for exercising `steal_into`
+    /// deterministically (no worker threads).
+    fn bare_core(sched: SchedulerConfig) -> SchedCore {
+        let mut pickers = BTreeMap::new();
+        pickers.insert("d".to_string(), engine(2, 256, 32).lut_picker());
+        SchedCore {
+            slots: (0..2).map(|_| ShardSlot::default()).collect(),
+            counters: (0..2).map(|_| Arc::new(ShardCounters::default())).collect(),
+            queue_cap: 16,
+            pickers,
+            sched,
+            active: AtomicUsize::new(2),
+            open: AtomicBool::new(true),
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
+            min_dop: 0,
+            max_dop: 0,
+            dop: AtomicUsize::new(0),
+            dop_ups: AtomicU64::new(0),
+            dop_downs: AtomicU64::new(0),
+        }
+    }
+
+    fn queued_request(t_req: Option<f64>) -> PoolRequest {
+        let (reply, _rx) = mpsc::channel();
+        PoolRequest {
+            profile: "d".to_string(),
+            samples: vec![0.0; 64],
+            t_req,
+            enqueued_at: Instant::now(),
+            reply,
+        }
+    }
+
+    #[test]
+    fn thief_skips_the_victims_warm_leading_run() {
+        let sched = SchedulerConfig::default().with_coalescing(Duration::from_millis(10));
+        let core = bare_core(sched);
+        let probe = engine(2, 256, 32);
+        let l = probe.pick_l_inst(None);
+        // A 5 GSa/s requirement resolves to a smaller payload than the
+        // full 192 — a different coalescing group than t_req = None.
+        assert_ne!(probe.pick_l_inst(Some(5e9)), l, "cold burst must be another group");
+        // Victim queue: two bursts of the open group, one cold burst
+        // (different t_req -> different l_inst -> different key), one
+        // more of the open group behind it.
+        {
+            let mut q = core.slots[0].queue.lock().unwrap();
+            q.push_back(queued_request(None));
+            q.push_back(queued_request(None));
+            q.push_back(queued_request(Some(5e9)));
+            q.push_back(queued_request(None));
+            core.slots[0].queued.store(q.len(), Ordering::SeqCst);
+            for _ in 0..q.len() {
+                core.counters[0].enqueued();
+            }
+        }
+        core.slots[0].warm.store(group_key("d", l), Ordering::Relaxed);
+        // The leading warm run (2 bursts) is protected; half of the
+        // cold remainder (2 bursts) moves: exactly one, the cold one.
+        assert!(steal_into(&core, 1));
+        {
+            let tq = core.slots[1].queue.lock().unwrap();
+            assert_eq!(tq.len(), 1);
+            assert_eq!(tq[0].t_req, Some(5e9), "the cold burst is what moved");
+        }
+        assert_eq!(core.slots[0].queued.load(Ordering::SeqCst), 3);
+        // An all-warm queue is untouched while the group is open...
+        {
+            let mut q = core.slots[0].queue.lock().unwrap();
+            q.clear();
+            q.push_back(queued_request(None));
+            q.push_back(queued_request(None));
+            q.push_back(queued_request(None));
+            q.push_back(queued_request(None));
+            core.slots[0].queued.store(q.len(), Ordering::SeqCst);
+        }
+        {
+            let mut tq = core.slots[1].queue.lock().unwrap();
+            tq.clear();
+            core.slots[1].queued.store(0, Ordering::SeqCst);
+        }
+        assert!(!steal_into(&core, 1), "warm leading run must not be stolen");
+        assert_eq!(core.slots[0].queued.load(Ordering::SeqCst), 4);
+        // ...and becomes stealable the moment the window closes.
+        core.slots[0].warm.store(0, Ordering::Relaxed);
+        assert!(steal_into(&core, 1));
+        assert_eq!(core.slots[1].queue.lock().unwrap().len(), 2, "half of the cold queue");
+    }
+
+    #[test]
+    fn dop_range_validated_against_engines() {
+        let mk = |n_i: usize| vec![Shard::single("a", engine(n_i, 256, 32))];
+        // The full driver: the DOP axis needs an autoscaler (decision
+        // loop) plus an SLO (the widening signal).
+        let driven = || {
+            SchedulerConfig::default()
+                .with_coalescing(Duration::from_millis(1))
+                .with_slo(LatencySlo::new(500.0))
+                .with_autoscale(AutoScaleConfig::default())
+        };
+        let mk_pool = |n_i: usize| {
+            ServerPool::with_scheduler(mk(n_i), RoutePolicy::RoundRobin, 4, driven()).unwrap()
+        };
+        // Without the driver the stamped headroom could never
+        // activate: rejected outright.
+        assert!(ServerPool::new(mk(4), RoutePolicy::RoundRobin, 4)
+            .unwrap()
+            .with_dop_range(1, 4)
+            .is_err());
+        // Ceiling beyond the constructed instances is rejected.
+        assert!(mk_pool(2).with_dop_range(1, 4).is_err());
+        // Non-power-of-two and inverted bounds are rejected.
+        assert!(mk_pool(4).with_dop_range(3, 4).is_err());
+        assert!(mk_pool(4).with_dop_range(4, 2).is_err());
+        assert!(mk_pool(4).with_dop_range(0, 2).is_err());
+        // A valid range starts the engines at the floor.
+        let pool = mk_pool(4).with_dop_range(1, 4).unwrap();
+        assert_eq!(pool.shards[0].profiles["a"].active_instances(), 1);
+    }
+
+    #[test]
+    fn end_to_end_latency_includes_queue_wait() {
+        // One slow shard (20 ms per burst), four bursts submitted at
+        // once: the last burst completes ~3 service times after its
+        // enqueue.  Recording only service time would cap every sample
+        // near 20 ms; the end-to-end reservoir must show the wait.
+        let slow = EqualizerServer::new(
+            vec![SlowInstance { width: 256, delay: Duration::from_millis(20) }],
+            32,
+            2,
+            &optimizer(),
+            &lut_targets(),
+        )
+        .unwrap();
+        let pool = ServerPool::new(vec![Shard::single("slow", slow)], RoutePolicy::RoundRobin, 8)
+            .unwrap()
+            .spawn();
+        let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+        let pending: Vec<_> =
+            (0..4).map(|_| pool.submit("slow", burst.clone(), None).unwrap()).collect();
+        let mut max_latency = 0.0f64;
+        for rx in pending {
+            let resp = rx.recv().unwrap();
+            assert!(resp.latency_us >= resp.elapsed_us - 1.0, "e2e cannot undercut service");
+            max_latency = max_latency.max(resp.latency_us);
+        }
+        let stats = pool.shutdown();
+        assert!(
+            max_latency >= 50_000.0,
+            "queue wait must show in the e2e latency ({max_latency} us)"
+        );
+        assert!(
+            stats.shards[0].max_us >= 50_000.0,
+            "the reservoir records the same e2e quantity ({} us)",
+            stats.shards[0].max_us
+        );
     }
 
     #[test]

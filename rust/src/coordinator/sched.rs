@@ -1,6 +1,8 @@
 //! Adaptive scheduling policy for the serving pool: configuration for
-//! cross-request batch coalescing and cross-shard work stealing, plus
-//! the hysteretic autoscaler that grows/shrinks the live shard set.
+//! cross-request batch coalescing, cross-shard work stealing, the
+//! latency-SLO control loop, plus the hysteretic autoscaler that
+//! grows/shrinks the live shard set and widens/narrows the per-shard
+//! degree of parallelism (DOP).
 //!
 //! The paper's throughput claim rests on *filling the datapath*: the
 //! FPGA engine batches a continuous symbol stream through a fixed-DOP
@@ -27,8 +29,23 @@
 //!   set of shards the dispatcher routes to.  Hysteresis (distinct
 //!   high/low watermarks plus a consecutive-tick requirement) keeps
 //!   the pool stable at steady load.
+//! * **Latency SLO** ([`SchedulerConfig::slo`]) — the paper's third
+//!   contribution is a framework that *reduces latency under a
+//!   throughput constraint* (Sec. 6.2): the LUT picks the smallest
+//!   `l_inst` that still meets `T_req`.  [`LatencySlo`] is the
+//!   serving-scale mirror of that idea: the operator states a p99
+//!   per-burst budget, and the scheduler spends exactly as much
+//!   batching latency as the budget allows.  Two control loops act on
+//!   the per-shard latency reservoir
+//!   ([`crate::metrics::serving::ShardCounters`]): the
+//!   [`SloController`] shrinks/re-grows each shard's coalescing window
+//!   (multiplicative decrease on violation, cautious doubling once
+//!   comfortably under budget), and the [`AutoScaler`]'s latency axis
+//!   ([`AutoScaler::observe_signals`]) widens the per-shard DOP —
+//!   more live instances per engine, the paper's `N_i` knob, with no
+//!   weight reload — before it resorts to growing the shard count.
 //!
-//! The decision logic lives here as plain data + a pure state machine
+//! The decision logic lives here as plain data + pure state machines
 //! so it can be unit-tested without threads; the mechanism (queues,
 //! workers, the monitor thread) lives in [`crate::coordinator::pool`].
 
@@ -61,6 +78,12 @@ pub struct SchedulerConfig {
     /// Dynamic shard scaling; `None` (the default) keeps every shard
     /// live.
     pub autoscale: Option<AutoScaleConfig>,
+    /// Per-burst p99 latency budget; `None` (the default) keeps the
+    /// coalescing window fixed and the autoscaler queue-driven.  With
+    /// a budget set, each shard's [`SloController`] adapts its window
+    /// against the measured p99, and the autoscaler gains the latency
+    /// axis (widen DOP, then grow shards).
+    pub slo: Option<LatencySlo>,
 }
 
 /// Default [`SchedulerConfig::coalesce_max`] used by
@@ -93,6 +116,163 @@ impl SchedulerConfig {
     pub fn with_autoscale(mut self, cfg: AutoScaleConfig) -> Self {
         self.autoscale = Some(cfg);
         self
+    }
+
+    /// Builder: set a per-burst p99 latency budget (enables the SLO
+    /// control loops).
+    pub fn with_slo(mut self, slo: LatencySlo) -> Self {
+        self.slo = Some(slo);
+        self
+    }
+}
+
+/// A per-burst latency service-level objective: the p99 budget every
+/// scheduled burst (coalesced, stolen or served alone) should meet,
+/// end to end — enqueue to reply.
+///
+/// This is the serving-scale form of the paper's latency-reduction
+/// framework (Sec. 6.2): where the LUT trades `l_inst` against a
+/// throughput floor per burst, the SLO trades *batching* (coalescing
+/// window, DOP) against a latency ceiling per pool.  The default
+/// controller tuning reacts within one tick to a violation and
+/// re-grows conservatively ([`SloController`]).
+///
+/// ```
+/// use equalizer::coordinator::sched::{LatencySlo, SloController};
+/// use std::time::Duration;
+///
+/// let slo = LatencySlo::new(500.0); // p99 budget: 500 us end to end
+/// slo.validate()?;
+/// let mut ctl = SloController::new(slo, Duration::from_millis(2));
+/// // A violating p99 halves the coalescing window immediately...
+/// let shrunk = ctl.observe(800.0);
+/// assert_eq!(shrunk, Duration::from_millis(1));
+/// // ...and sustained violations drive it all the way to zero
+/// // (coalesce only what is already queued, wait for nothing).
+/// for _ in 0..12 {
+///     ctl.observe(800.0);
+/// }
+/// assert_eq!(ctl.window(), Duration::ZERO);
+/// // Comfortably under budget, the window re-grows — but only after
+/// // `grow_ticks` consecutive calm observations, never past the base.
+/// for _ in 0..64 {
+///     ctl.observe(100.0);
+/// }
+/// assert_eq!(ctl.window(), Duration::from_millis(2));
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct LatencySlo {
+    /// Target 99th-percentile end-to-end burst latency, microseconds.
+    pub p99_target_us: f64,
+    /// Fraction of the target below which the controllers may relax
+    /// (re-grow the window / narrow DOP).  The band between
+    /// `relax_fraction * target` and `target` is dead — neither
+    /// direction acts — which is what prevents flapping.
+    pub relax_fraction: f64,
+    /// Consecutive calm ticks required before a relax step (>= 1).
+    /// Violations act immediately; recovery is deliberately slower.
+    pub grow_ticks: u32,
+    /// Observation interval of the SLO loop when no autoscaler tick
+    /// governs the monitor thread.
+    pub tick: Duration,
+}
+
+impl LatencySlo {
+    /// An SLO with the default controller tuning: relax below half the
+    /// target, after 4 consecutive calm ticks, observed every 1 ms.
+    pub fn new(p99_target_us: f64) -> Self {
+        Self { p99_target_us, relax_fraction: 0.5, grow_ticks: 4, tick: Duration::from_millis(1) }
+    }
+
+    /// Validate the budget and controller tuning.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.p99_target_us.is_finite() && self.p99_target_us > 0.0,
+            "SLO p99 target must be positive, got {}",
+            self.p99_target_us
+        );
+        anyhow::ensure!(
+            self.relax_fraction > 0.0 && self.relax_fraction < 1.0,
+            "SLO relax_fraction must be in (0, 1), got {}",
+            self.relax_fraction
+        );
+        anyhow::ensure!(self.grow_ticks >= 1, "SLO grow_ticks must be >= 1");
+        anyhow::ensure!(!self.tick.is_zero(), "SLO tick must be non-zero");
+        Ok(())
+    }
+
+    /// True when `p99_us` violates the budget.
+    pub fn violated(&self, p99_us: f64) -> bool {
+        p99_us > self.p99_target_us
+    }
+
+    /// True when `p99_us` is comfortably under budget (below the relax
+    /// band), so batching may be re-expanded.
+    pub fn relaxed(&self, p99_us: f64) -> bool {
+        p99_us < self.relax_fraction * self.p99_target_us
+    }
+}
+
+/// Smallest non-zero window the [`SloController`] steps through: the
+/// base window divided by this.  One shrink below it lands at zero
+/// (pure drain-what-is-queued coalescing); one grow from zero returns
+/// to it.
+const SLO_WINDOW_FLOOR_DIV: u32 = 64;
+
+/// Per-shard coalescing-window controller: multiplicative decrease on
+/// an SLO violation, cautious doubling once comfortably under budget.
+///
+/// The asymmetry is deliberate (and the classic shape for a
+/// tail-latency loop): a violated p99 is user-visible, so the window
+/// halves on *every* violating observation, down to zero — at zero the
+/// shard still batches whatever is already queued (the drain scan costs
+/// no latency), it just stops *waiting* for company.  Recovery doubles
+/// the window only after [`LatencySlo::grow_ticks`] consecutive calm
+/// observations and never exceeds the configured base window, so a
+/// borderline load settles at the largest window the budget tolerates
+/// instead of oscillating.
+#[derive(Debug, Clone)]
+pub struct SloController {
+    slo: LatencySlo,
+    base: Duration,
+    window: Duration,
+    calm: u32,
+}
+
+impl SloController {
+    /// A controller for one shard, starting at the configured
+    /// `base_window` ([`SchedulerConfig::coalesce_window`]).
+    pub fn new(slo: LatencySlo, base_window: Duration) -> Self {
+        Self { slo, base: base_window, window: base_window, calm: 0 }
+    }
+
+    /// The window the shard should currently use.
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Feed one p99 observation (microseconds, over the shard's recent
+    /// completions); returns the adapted window to apply.
+    pub fn observe(&mut self, p99_us: f64) -> Duration {
+        let floor = self.base / SLO_WINDOW_FLOOR_DIV;
+        if self.slo.violated(p99_us) {
+            self.calm = 0;
+            self.window = if self.window <= floor { Duration::ZERO } else { self.window / 2 };
+        } else if self.slo.relaxed(p99_us) && self.window < self.base {
+            self.calm += 1;
+            if self.calm >= self.slo.grow_ticks {
+                self.calm = 0;
+                self.window = if self.window.is_zero() {
+                    floor.max(Duration::from_nanos(1))
+                } else {
+                    (self.window * 2).min(self.base)
+                };
+            }
+        } else {
+            self.calm = 0;
+        }
+        self.window
     }
 }
 
@@ -164,11 +344,39 @@ pub enum ScaleDecision {
     Grow,
     /// Park one shard (its queue is drained before it goes idle).
     Shrink,
+    /// Double the live instances per shard (the paper's DOP knob) —
+    /// the latency axis's first resort: more parallelism inside the
+    /// shards that are already warm, no queue migration, no weight
+    /// reload ([`crate::coordinator::pipeline::EqualizerPipeline::set_active_instances`]).
+    WidenDop,
+    /// Halve the live instances per shard (back toward the configured
+    /// floor) once the pool is comfortably under its latency budget.
+    NarrowDop,
 }
 
-/// Hysteretic scale controller: a pure state machine over
-/// (live shards, outstanding requests) observations, kept free of
-/// clocks and threads so the flapping behavior is unit-testable.
+/// One tick's worth of inputs to [`AutoScaler::observe_signals`]: the
+/// pool state the monitor thread snapshots.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleSignals {
+    /// Shards the dispatcher currently routes to.
+    pub live_shards: usize,
+    /// Outstanding requests pool-wide (queued + in service).
+    pub outstanding: usize,
+    /// Current live instances per shard; 0 disables the DOP axis.
+    pub dop: usize,
+    /// DOP floor (the configured `instances_per_shard`).
+    pub min_dop: usize,
+    /// DOP ceiling (`max_instances_per_shard`; engines are stamped at
+    /// this count, a prefix of which is live).
+    pub max_dop: usize,
+    /// Worst recent per-shard p99 (microseconds), when an SLO is set.
+    pub p99_us: Option<f64>,
+}
+
+/// Hysteretic scale controller: a pure state machine over pool
+/// observations — queue pressure, and (when an SLO is set) recent p99
+/// plus the DOP state ([`ScaleSignals`]) — kept free of clocks and
+/// threads so the flapping behavior is unit-testable.
 ///
 /// Pressure is `outstanding / live_shards`.  A [`ScaleDecision::Grow`]
 /// fires only after [`AutoScaleConfig::hysteresis_ticks`] *consecutive*
@@ -184,16 +392,90 @@ pub struct AutoScaler {
     max_shards: usize,
     above: u32,
     below: u32,
+    lat_above: u32,
+    lat_below: u32,
 }
 
 impl AutoScaler {
     /// A controller for a pool constructed with `max_shards` shards.
     pub fn new(cfg: AutoScaleConfig, max_shards: usize) -> Self {
-        Self { cfg, max_shards, above: 0, below: 0 }
+        Self { cfg, max_shards, above: 0, below: 0, lat_above: 0, lat_below: 0 }
     }
 
-    /// Feed one observation; returns the action to take *now*.
+    /// Feed one queue-pressure observation; returns the action to take
+    /// *now*.  This is the PR-4 single-axis controller, kept as the
+    /// entry point for pools without a latency SLO
+    /// ([`Self::observe_signals`] is the two-axis form).
     pub fn observe(&mut self, live_shards: usize, outstanding: usize) -> ScaleDecision {
+        self.queue_axis(live_shards, outstanding, true)
+    }
+
+    /// Feed one full observation; returns the action to take *now*.
+    ///
+    /// Axis priority mirrors the paper's knob ordering (DOP is the
+    /// cheap lever, Sec. 5/7 — more engines inside a running complex;
+    /// new shards are the expensive one):
+    ///
+    /// 1. **Latency over budget** (after the usual consecutive-tick
+    ///    hysteresis): widen DOP while it has headroom, only then grow
+    ///    the shard count.  While violated, the queue axis may still
+    ///    grow but never shrinks — parking capacity under a missed SLO
+    ///    would be self-defeating.
+    /// 2. **Latency comfortably under budget** *and* queue pressure
+    ///    below the high watermark: narrow DOP back toward its floor
+    ///    (capacity the budget doesn't need).
+    /// 3. **Queue axis** as in [`Self::observe`].
+    pub fn observe_signals(
+        &mut self,
+        s: &ScaleSignals,
+        slo: Option<&LatencySlo>,
+    ) -> ScaleDecision {
+        let queue_pressure = s.outstanding as f64 / s.live_shards.max(1) as f64;
+        let mut violated = false;
+        if let (Some(p99), Some(slo)) = (s.p99_us, slo) {
+            if slo.violated(p99) {
+                violated = true;
+                self.lat_below = 0;
+                self.lat_above += 1;
+                if self.lat_above >= self.cfg.hysteresis_ticks {
+                    self.lat_above = 0;
+                    if s.dop != 0 && s.dop < s.max_dop {
+                        return ScaleDecision::WidenDop;
+                    }
+                    if s.live_shards < self.max_shards {
+                        return ScaleDecision::Grow;
+                    }
+                }
+            } else if slo.relaxed(p99) {
+                self.lat_above = 0;
+                self.lat_below += 1;
+                if self.lat_below >= self.cfg.hysteresis_ticks {
+                    if s.dop > s.min_dop && queue_pressure < self.cfg.high_watermark {
+                        self.lat_below = 0;
+                        return ScaleDecision::NarrowDop;
+                    }
+                    // Nothing to narrow right now (DOP at its floor or
+                    // queue pressure too high): hold the streak at the
+                    // threshold so an eligible tick acts immediately
+                    // and a healthy long-lived pool cannot overflow
+                    // the counter.
+                    self.lat_below = self.cfg.hysteresis_ticks;
+                }
+            } else {
+                self.lat_above = 0;
+                self.lat_below = 0;
+            }
+        }
+        self.queue_axis(s.live_shards, s.outstanding, !violated)
+    }
+
+    /// The queue-pressure axis shared by both observe entry points.
+    fn queue_axis(
+        &mut self,
+        live_shards: usize,
+        outstanding: usize,
+        allow_shrink: bool,
+    ) -> ScaleDecision {
         let pressure = outstanding as f64 / live_shards.max(1) as f64;
         if pressure > self.cfg.high_watermark && live_shards < self.max_shards {
             self.below = 0;
@@ -204,10 +486,14 @@ impl AutoScaler {
             }
         } else if pressure < self.cfg.low_watermark && live_shards > self.cfg.min_shards {
             self.above = 0;
-            self.below += 1;
-            if self.below >= self.cfg.hysteresis_ticks {
+            if allow_shrink {
+                self.below += 1;
+                if self.below >= self.cfg.hysteresis_ticks {
+                    self.below = 0;
+                    return ScaleDecision::Shrink;
+                }
+            } else {
                 self.below = 0;
-                return ScaleDecision::Shrink;
             }
         } else {
             self.above = 0;
@@ -307,6 +593,170 @@ mod tests {
         assert!(no_hysteresis.validate(4).is_err());
         let zero_tick = AutoScaleConfig { tick: Duration::ZERO, ..AutoScaleConfig::default() };
         assert!(zero_tick.validate(4).is_err());
+    }
+
+    fn signals(live: usize, outstanding: usize, dop: usize, p99: f64) -> ScaleSignals {
+        ScaleSignals {
+            live_shards: live,
+            outstanding,
+            dop,
+            min_dop: 1,
+            max_dop: 4,
+            p99_us: Some(p99),
+        }
+    }
+
+    #[test]
+    fn latency_pressure_widens_dop_before_growing_shards() {
+        let slo = LatencySlo::new(500.0);
+        let mut s = AutoScaler::new(cfg(2), 4);
+        // Queue pressure in-band (pressure 1.0), p99 violated: the
+        // latency axis acts, and DOP is the first lever.
+        assert_eq!(s.observe_signals(&signals(2, 2, 1, 900.0), Some(&slo)), ScaleDecision::Hold);
+        assert_eq!(
+            s.observe_signals(&signals(2, 2, 1, 900.0), Some(&slo)),
+            ScaleDecision::WidenDop
+        );
+        // DOP at its ceiling: sustained violation falls through to the
+        // shard axis.
+        assert_eq!(s.observe_signals(&signals(2, 2, 4, 900.0), Some(&slo)), ScaleDecision::Hold);
+        assert_eq!(s.observe_signals(&signals(2, 2, 4, 900.0), Some(&slo)), ScaleDecision::Grow);
+        // DOP ceiling *and* shard ceiling: nothing left to do.
+        for _ in 0..10 {
+            assert_eq!(
+                s.observe_signals(&signals(4, 4, 4, 900.0), Some(&slo)),
+                ScaleDecision::Hold
+            );
+        }
+    }
+
+    #[test]
+    fn latency_violation_suppresses_queue_shrink() {
+        let slo = LatencySlo::new(500.0);
+        let mut s = AutoScaler::new(cfg(1), 4);
+        // Idle queue (pressure 0 < low watermark) would normally
+        // shrink; a violated SLO must veto that — the first violating
+        // tick widens DOP instead (hysteresis 1).
+        assert_eq!(
+            s.observe_signals(&signals(3, 0, 1, 900.0), Some(&slo)),
+            ScaleDecision::WidenDop
+        );
+        // DOP maxed and shards maxed: violated + idle still never
+        // shrinks.
+        for _ in 0..10 {
+            assert_eq!(
+                s.observe_signals(&signals(4, 0, 4, 900.0), Some(&slo)),
+                ScaleDecision::Hold
+            );
+        }
+    }
+
+    #[test]
+    fn calm_latency_narrows_dop_then_queue_axis_resumes() {
+        let slo = LatencySlo::new(500.0);
+        let mut s = AutoScaler::new(cfg(2), 4);
+        // Comfortably under budget (p99 < 250), queue pressure low:
+        // narrow DOP after the hysteresis, then (DOP at floor) the
+        // queue axis shrinks shards as before.
+        assert_eq!(s.observe_signals(&signals(3, 0, 4, 100.0), Some(&slo)), ScaleDecision::Hold);
+        assert_eq!(
+            s.observe_signals(&signals(3, 0, 4, 100.0), Some(&slo)),
+            ScaleDecision::NarrowDop
+        );
+        // DOP back at its floor: the queue axis takes over (its idle
+        // streak kept counting through the NarrowDop tick).
+        assert_eq!(s.observe_signals(&signals(3, 0, 1, 100.0), Some(&slo)), ScaleDecision::Shrink);
+        // In the dead band (250 <= p99 <= 500) the latency axis never
+        // acts and in-band queue pressure holds: no flapping.
+        for _ in 0..100 {
+            assert_eq!(
+                s.observe_signals(&signals(2, 2, 2, 400.0), Some(&slo)),
+                ScaleDecision::Hold
+            );
+        }
+    }
+
+    #[test]
+    fn calm_streak_saturates_when_there_is_nothing_to_narrow() {
+        let slo = LatencySlo::new(500.0);
+        let mut s = AutoScaler::new(cfg(2), 4);
+        // DOP already at its floor: a healthy pool observes `relaxed`
+        // forever — the streak must hold (bounded, no overflow), never
+        // act...
+        for _ in 0..10_000 {
+            assert_eq!(
+                s.observe_signals(&signals(2, 2, 1, 100.0), Some(&slo)),
+                ScaleDecision::Hold
+            );
+        }
+        // ...and the first tick with narrowing headroom acts at once.
+        assert_eq!(
+            s.observe_signals(&signals(2, 2, 4, 100.0), Some(&slo)),
+            ScaleDecision::NarrowDop
+        );
+    }
+
+    #[test]
+    fn no_slo_reduces_to_queue_axis() {
+        let mut a = AutoScaler::new(cfg(2), 4);
+        let mut b = AutoScaler::new(cfg(2), 4);
+        for (live, outstanding) in [(1, 10), (1, 10), (2, 10), (2, 0), (2, 0), (2, 2)] {
+            let sig = ScaleSignals {
+                live_shards: live,
+                outstanding,
+                dop: 2,
+                min_dop: 1,
+                max_dop: 4,
+                p99_us: None,
+            };
+            assert_eq!(a.observe_signals(&sig, None), b.observe(live, outstanding));
+        }
+    }
+
+    #[test]
+    fn slo_controller_shrinks_fast_and_regrows_slowly() {
+        let base = Duration::from_millis(1);
+        let mut c = SloController::new(LatencySlo::new(200.0), base);
+        assert_eq!(c.window(), base);
+        // Every violating tick halves; the floor (base/64) collapses
+        // to zero.
+        assert_eq!(c.observe(300.0), base / 2);
+        assert_eq!(c.observe(300.0), base / 4);
+        for _ in 0..10 {
+            c.observe(300.0);
+        }
+        assert_eq!(c.window(), Duration::ZERO);
+        // A single calm tick does nothing (grow_ticks = 4)...
+        assert_eq!(c.observe(50.0), Duration::ZERO);
+        // ...and an in-band tick (not relaxed, not violated) resets the
+        // calm streak.
+        c.observe(50.0);
+        c.observe(50.0);
+        assert_eq!(c.observe(150.0), Duration::ZERO, "dead band resets the streak");
+        // Four consecutive calm ticks re-open the floor window.
+        for _ in 0..4 {
+            c.observe(50.0);
+        }
+        assert_eq!(c.window(), base / 64);
+        // Sustained calm climbs back to (and never past) the base.
+        for _ in 0..64 {
+            c.observe(50.0);
+        }
+        assert_eq!(c.window(), base);
+    }
+
+    #[test]
+    fn slo_validation() {
+        assert!(LatencySlo::new(500.0).validate().is_ok());
+        assert!(LatencySlo::new(0.0).validate().is_err());
+        assert!(LatencySlo::new(-5.0).validate().is_err());
+        assert!(LatencySlo::new(f64::NAN).validate().is_err());
+        let bad_relax = LatencySlo { relax_fraction: 1.0, ..LatencySlo::new(500.0) };
+        assert!(bad_relax.validate().is_err());
+        let bad_ticks = LatencySlo { grow_ticks: 0, ..LatencySlo::new(500.0) };
+        assert!(bad_ticks.validate().is_err());
+        let bad_tick = LatencySlo { tick: Duration::ZERO, ..LatencySlo::new(500.0) };
+        assert!(bad_tick.validate().is_err());
     }
 
     #[test]

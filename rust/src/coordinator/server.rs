@@ -40,11 +40,48 @@ pub struct EqualizeRequest {
 /// Server reply.
 #[derive(Debug)]
 pub struct EqualizeResponse {
+    /// Equalized soft symbols.
     pub soft_symbols: Vec<f32>,
     /// l_inst used for this burst (samples).
     pub l_inst: usize,
     /// Wall-clock processing time.
     pub elapsed_us: f64,
+}
+
+/// A detached copy of one engine's LUT-driven `l_inst` selection: the
+/// pure function (`t_req` -> payload) without the engine.
+///
+/// The pool's scheduler needs the pick *outside* the shard workers —
+/// warmth-aware routing scores a submit against each shard's open
+/// coalescing group, and the thief skips a victim's about-to-batch
+/// bursts — so every pool snapshots one picker per profile at spawn.
+/// Pool shards are stamped from one blueprint, so the snapshot picks
+/// exactly as the engines do ([`EqualizerServer::pick_l_inst`] shares
+/// the implementation).
+#[derive(Debug, Clone)]
+pub struct LutPicker {
+    lut: Vec<LutRow>,
+    max_payload: usize,
+    grid: usize,
+}
+
+impl LutPicker {
+    /// The `l_inst` an engine with this LUT would select for `t_req`.
+    pub fn pick(&self, t_req: Option<f64>) -> usize {
+        pick_from(&self.lut, self.max_payload, self.grid, t_req)
+    }
+}
+
+/// Shared pick implementation: LUT hit if a requirement is given and
+/// achievable at this fixed artifact width, rounded onto the `grid`,
+/// else the full payload.
+fn pick_from(lut: &[LutRow], max_payload: usize, grid: usize, t_req: Option<f64>) -> usize {
+    match t_req {
+        None => max_payload,
+        Some(t) => SeqLenOptimizer::lookup(lut, t)
+            .map(|row| row.l_inst.min(max_payload).next_multiple_of(grid).min(max_payload))
+            .unwrap_or(max_payload),
+    }
 }
 
 /// Single-stream serving engine around a fixed set of instances: LUT-
@@ -59,6 +96,7 @@ pub struct EqualizerServer<
 /// Handle to a running single-stream server (a one-shard pool behind a
 /// forwarding thread that keeps the legacy request type).
 pub struct ServerHandle {
+    /// Request channel into the forwarding loop.
     pub tx: mpsc::Sender<EqualizeRequest>,
     join: std::thread::JoinHandle<()>,
 }
@@ -81,6 +119,8 @@ impl ServerHandle {
 }
 
 impl<I: EqualizerInstance + Send + 'static> EqualizerServer<I> {
+    /// An engine over `instances` (all accepting the same width),
+    /// building its Fig. 11 LUT from `optimizer` at `lut_targets`.
     pub fn new(
         instances: Vec<I>,
         o_act: usize,
@@ -110,6 +150,34 @@ impl<I: EqualizerInstance + Send + 'static> EqualizerServer<I> {
         self.pipe.n_os()
     }
 
+    /// Instances this engine was constructed with (the DOP ceiling).
+    pub fn n_instances(&self) -> usize {
+        self.pipe.n_instances()
+    }
+
+    /// Instances the engine currently fans out to (see
+    /// [`EqualizerPipeline::active_instances`]).
+    pub fn active_instances(&self) -> usize {
+        self.pipe.active_instances()
+    }
+
+    /// Set the live degree of parallelism — the autoscaler's DOP axis
+    /// (see [`EqualizerPipeline::set_active_instances`]; bit-identical
+    /// at every setting).
+    pub fn set_active_instances(&mut self, n: usize) -> Result<()> {
+        self.pipe.set_active_instances(n)
+    }
+
+    /// Snapshot this engine's `t_req` -> `l_inst` selection as a
+    /// detached pure function (see [`LutPicker`]).
+    pub fn lut_picker(&self) -> LutPicker {
+        LutPicker {
+            lut: self.lut.clone(),
+            max_payload: self.pipe.l_inst(),
+            grid: self.pipe.n_os(),
+        }
+    }
+
     /// Pick l_inst for a request: LUT hit if a requirement is given and
     /// achievable with this fixed artifact width, else the full payload.
     ///
@@ -120,16 +188,7 @@ impl<I: EqualizerInstance + Send + 'static> EqualizerServer<I> {
     /// identical engines (pool shards stamped from one blueprint) pick
     /// identically.
     pub fn pick_l_inst(&self, t_req: Option<f64>) -> usize {
-        let max_payload = self.pipe.l_inst();
-        let grid = self.pipe.n_os();
-        match t_req {
-            None => max_payload,
-            Some(t) => SeqLenOptimizer::lookup(&self.lut, t)
-                .map(|row| {
-                    row.l_inst.min(max_payload).next_multiple_of(grid).min(max_payload)
-                })
-                .unwrap_or(max_payload),
-        }
+        pick_from(&self.lut, self.pipe.l_inst(), self.pipe.n_os(), t_req)
     }
 
     /// Serve one burst: select `l_inst`, equalize, return the soft
@@ -253,6 +312,35 @@ mod tests {
             assert_eq!(l_one, l);
             assert_eq!(got, &want.unwrap());
         }
+    }
+
+    #[test]
+    fn lut_picker_matches_the_engine_pick() {
+        // The detached picker (used by warmth-aware routing and the
+        // warmth-aware thief) must agree with the engine for every
+        // t_req shape: None, below/above the LUT range, mid-table.
+        let engine = server(2, 2048, 128);
+        let picker = engine.lut_picker();
+        for t_req in [None, Some(1e9), Some(10e9), Some(40e9), Some(90e9), Some(500e9)] {
+            assert_eq!(picker.pick(t_req), engine.pick_l_inst(t_req), "t_req {t_req:?}");
+        }
+    }
+
+    #[test]
+    fn engine_dop_rescaling_is_bit_exact() {
+        let mut engine = server(4, 512, 64);
+        assert_eq!(engine.n_instances(), 4);
+        assert_eq!(engine.active_instances(), 4);
+        let x: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.17).cos()).collect();
+        let (want, l) = engine.serve_one(&x, None);
+        let want = want.unwrap();
+        for active in [1usize, 2, 4] {
+            engine.set_active_instances(active).unwrap();
+            let (got, l_got) = engine.serve_one(&x, None);
+            assert_eq!(got.unwrap(), want, "active {active}");
+            assert_eq!(l_got, l);
+        }
+        assert!(engine.set_active_instances(8).is_err(), "beyond the built ceiling");
     }
 
     #[test]

@@ -56,7 +56,9 @@ pub mod prelude {
     pub use crate::coordinator::pool::{
         PoolClient, PoolConfig, PoolHandle, RoutePolicy, ServerPool, TrySubmit,
     };
-    pub use crate::coordinator::sched::{AutoScaleConfig, AutoScaler, SchedulerConfig};
+    pub use crate::coordinator::sched::{
+        AutoScaleConfig, AutoScaler, LatencySlo, SchedulerConfig, SloController,
+    };
     pub use crate::coordinator::{
         pipeline::EqualizerPipeline, seqlen::SeqLenOptimizer, timing::TimingModel,
     };

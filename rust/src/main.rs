@@ -39,15 +39,23 @@ COMMANDS:
             [--clients M] [--requests K] [--spb SYMBOLS]
             [--profiles P1,P2,..] [--policy round-robin|shortest-queue]
             [--queue-cap N] [--coalesce-window US] [--coalesce-max N]
-            [--steal] [--autoscale MIN]                multi-stream serving demo
+            [--steal] [--autoscale MIN] [--slo-p99-us US]
+            [--dop-autoscale MAXDOP]                   multi-stream serving demo
             (--coalesce-window batches same-profile bursts, --steal lets
              idle shards take queued work, --autoscale MIN starts MIN
-             shards and grows/shrinks up to --shards under pressure)
+             shards and grows/shrinks up to --shards under pressure;
+             --slo-p99-us sets a per-burst p99 budget: shards adapt
+             their coalescing window against it and the autoscaler
+             gains the latency axis; --dop-autoscale MAXDOP (requires
+             --slo-p99-us) lets it widen instances per shard from
+             --instances up to MAXDOP before growing shards — see
+             docs/SCHEDULING.md)
   bench     [--artifacts DIR] [--json [PATH]] [--quick]
                                                        hot-path + serving throughput
                                                        (f32 / fake-quant / int16 +
-                                                       pipeline + pool coalescing);
-                                                       --json writes BENCH_pr4.json
+                                                       pipeline + pool coalescing +
+                                                       serving_slo p50/p99 rows);
+                                                       --json writes BENCH_pr5.json
   config    [--profile high-throughput|low-power]      print JSON config
 ";
 
@@ -188,11 +196,13 @@ fn equalize(args: &Args) -> Result<()> {
 /// that cycle through the requested profiles with randomized per-burst
 /// throughput requirements.  Reports per-request routing and the
 /// per-shard stats table.  The adaptive scheduler is driven by
-/// `--coalesce-window` (us), `--steal` and `--autoscale MIN`.
+/// `--coalesce-window` (us), `--steal`, `--autoscale MIN`,
+/// `--slo-p99-us US` (per-burst p99 budget) and `--dop-autoscale
+/// MAXDOP` (instances-per-shard as a second autoscale axis).
 fn serve(args: &Args) -> Result<()> {
     use equalizer::channel::mt19937::Mt19937;
     use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
-    use equalizer::coordinator::sched::{AutoScaleConfig, SchedulerConfig};
+    use equalizer::coordinator::sched::{AutoScaleConfig, LatencySlo, SchedulerConfig};
 
     let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
     let shards = args.usize_or("shards", 2)?.max(1);
@@ -216,6 +226,38 @@ fn serve(args: &Args) -> Result<()> {
         let min_shards = if v == "true" { 1 } else { v.parse()? };
         scheduler.autoscale = Some(AutoScaleConfig { min_shards, ..AutoScaleConfig::default() });
     }
+    let slo_p99_us = args.f64_or("slo-p99-us", 0.0)?;
+    if slo_p99_us > 0.0 {
+        scheduler.slo = Some(LatencySlo::new(slo_p99_us));
+    }
+    let max_dop = match args.usize_or("dop-autoscale", 0)? {
+        0 => 0,
+        d => {
+            let cap = d.next_power_of_two();
+            // Reject inert configurations outright instead of silently
+            // stamping (or clamping away) instances that can never
+            // activate: the ceiling must leave headroom over the
+            // floor, and the DOP axis is latency-driven.
+            anyhow::ensure!(
+                cap > instances,
+                "--dop-autoscale {d} (rounded to {cap}) must exceed --instances {instances} \
+                 — the DOP ceiling needs headroom over the floor"
+            );
+            anyhow::ensure!(
+                scheduler.slo.is_some(),
+                "--dop-autoscale requires --slo-p99-us (DOP widens under latency pressure; \
+                 without a budget the extra instances would never activate)"
+            );
+            if scheduler.autoscale.is_none() {
+                // The DOP axis lives in the autoscaler; without
+                // --autoscale keep the shard count fixed and let only
+                // DOP move.
+                scheduler.autoscale =
+                    Some(AutoScaleConfig { min_shards: shards, ..AutoScaleConfig::default() });
+            }
+            cap
+        }
+    };
     let profiles: Vec<String> = args
         .str_or("profiles", "cnn_imdd,fir_imdd")
         .split(',')
@@ -229,6 +271,7 @@ fn serve(args: &Args) -> Result<()> {
     let cfg = PoolConfig {
         shards,
         instances_per_shard: instances,
+        max_instances_per_shard: max_dop,
         policy,
         queue_cap,
         scheduler,
@@ -239,16 +282,25 @@ fn serve(args: &Args) -> Result<()> {
         "pool: {shards} shard(s) x {instances} instance(s), profiles {profiles:?}, \
          {policy:?}, queue cap {queue_cap}"
     );
-    if cfg.scheduler.coalescing() || cfg.scheduler.steal || cfg.scheduler.autoscale.is_some() {
+    let sched_on = cfg.scheduler.coalescing()
+        || cfg.scheduler.steal
+        || cfg.scheduler.autoscale.is_some()
+        || cfg.scheduler.slo.is_some();
+    if sched_on {
         println!(
-            "scheduler: coalesce {} (max {}), steal {}, autoscale {}",
+            "scheduler: coalesce {} (max {}), steal {}, autoscale {}, slo {}, dop {}",
             if cfg.scheduler.coalescing() { format!("{coalesce_us:.0} us") } else { "off".into() },
             cfg.scheduler.coalesce_max,
             if cfg.scheduler.steal { "on" } else { "off" },
             match &cfg.scheduler.autoscale {
                 Some(a) => format!("{}..{shards} shards", a.min_shards),
                 None => "off".into(),
-            }
+            },
+            match &cfg.scheduler.slo {
+                Some(s) => format!("p99 <= {:.0} us", s.p99_target_us),
+                None => "off".into(),
+            },
+            if max_dop > instances { format!("{instances}..{max_dop}") } else { "off".into() }
         );
     }
     println!("workload: {clients} client(s) x {requests} burst(s) x {spb} symbols\n");
@@ -295,11 +347,12 @@ fn serve(args: &Args) -> Result<()> {
                 ber.update(&resp.soft_symbols, &reference[..resp.soft_symbols.len()]);
                 println!(
                     "  client {c} req {r}  {profile:>14} -> shard {}  t_req {:>9}  \
-                     l_inst {:>6}  {:>9.1} us  BER {:.2e}",
+                     l_inst {:>6}  {:>9.1} us ({:>9.1} e2e)  BER {:.2e}",
                     resp.shard,
                     t_req.map(|t| format!("{:.0}G", t / 1e9)).unwrap_or_else(|| "-".into()),
                     resp.l_inst,
                     resp.elapsed_us,
+                    resp.latency_us,
                     ber.ber()
                 );
                 symbols += resp.soft_symbols.len();
@@ -325,14 +378,16 @@ fn serve(args: &Args) -> Result<()> {
 
 /// Machine-readable hot-path benchmark: the native CNN datapath on all
 /// three execution paths (f32 / fake-quant f32 / int16), the batched
-/// pipeline on the float + quantized profiles, and the serving pool on
-/// a many-small-bursts mix with coalescing off/on — reported as the
-/// unified `{profile, path, symbols/s, ns/symbol, GBd-equivalent}`
-/// records (`util::bench::Throughput`).  `--json [PATH]` additionally
-/// writes the records as a JSON array (default `BENCH_pr4.json`) so
-/// the perf trajectory stays machine-readable across PRs.  The integer
-/// path is asserted bit-identical to the fake-quant reference before
-/// anything is timed.
+/// pipeline on the float + quantized profiles, the serving pool on a
+/// many-small-bursts mix with coalescing off/on, and the `serving_slo`
+/// comparison (fixed window vs SLO-adaptive window at the same offered
+/// load, with p50/p99 end-to-end latency) — reported as the unified
+/// `{profile, path, symbols/s, ns/symbol, GBd-equivalent}` records
+/// (`util::bench::Throughput`; the SLO rows add `p50_us`/`p99_us`).
+/// `--json [PATH]` additionally writes the records as a JSON array
+/// (default `BENCH_pr5.json`) so the perf trajectory stays
+/// machine-readable across PRs.  The integer path is asserted
+/// bit-identical to the fake-quant reference before anything is timed.
 fn bench_cmd(args: &Args) -> Result<()> {
     use equalizer::equalizer::cnn::CnnScratch;
     use equalizer::util::bench::{header, Bencher, Throughput};
@@ -343,7 +398,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
     let b = if quick { Bencher::quick() } else { Bencher::default() };
     let json_path = args
         .get("json")
-        .map(|v| if v == "true" { "BENCH_pr4.json".to_string() } else { v.to_string() });
+        .map(|v| if v == "true" { "BENCH_pr5.json".to_string() } else { v.to_string() });
 
     let float_cnn = reg.exact("cnn_imdd_w1024")?.load_native_cnn()?;
     let q_cnn = reg.exact("cnn_imdd_quant_w1024")?.load_native_cnn()?;
@@ -451,6 +506,75 @@ fn bench_cmd(args: &Args) -> Result<()> {
         println!(
             "\ncoalescing is {:.2}x per-request pool execution on the small-burst mix",
             pool_rates[1] / pool_rates[0]
+        );
+    }
+
+    header("serving SLO (64 clients x 128-symbol bursts: fixed window vs adaptive)");
+    {
+        use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
+        use equalizer::coordinator::sched::{LatencySlo, SchedulerConfig};
+        use equalizer::metrics::stats::LatencyStats;
+        use std::time::Duration;
+
+        // The acceptance workload: the PR-4 fixed 1 ms window versus
+        // the same window under a p99 budget.  Throughput comes from
+        // the same wave shape as the serving rows above; latency is
+        // collected client-side from every reply's end-to-end sample,
+        // so the percentiles are pool-wide and exact.
+        let clients = 64usize;
+        let burst: Vec<f32> = (0..256).map(|i| (i as f32 * 0.19).sin()).collect();
+        let waves = if quick { 6 } else { 24 };
+        let warmup = if quick { 2 } else { 6 };
+        let slo_target_us = 400.0;
+        let fixed = SchedulerConfig::default().with_coalescing(Duration::from_millis(1));
+        let adaptive = fixed.clone().with_slo(LatencySlo::new(slo_target_us));
+        let modes = [("serving_slo_fixed", fixed), ("serving_slo_adaptive", adaptive)];
+        let mut slo_stats: Vec<(f64, f64)> = Vec::new();
+        for (path, scheduler) in modes {
+            let cfg = PoolConfig {
+                shards: 2,
+                instances_per_shard: 4,
+                policy: RoutePolicy::ShortestQueue,
+                queue_cap: clients,
+                scheduler,
+                ..PoolConfig::default()
+            };
+            let pool = ServerPool::from_registry(&reg, &["cnn_imdd_quant"], &cfg)?.spawn();
+            let mut lat = LatencyStats::new();
+            let mut symbols = 0usize;
+            let mut wall = 0.0f64;
+            for wave in 0..(warmup + waves) {
+                let t0 = std::time::Instant::now();
+                let pending: Vec<_> = (0..clients)
+                    .map(|_| pool.submit("cnn_imdd_quant", burst.clone(), None).unwrap())
+                    .collect();
+                let mut wave_lat = Vec::with_capacity(clients);
+                for rx in pending {
+                    let resp = rx.recv().unwrap();
+                    wave_lat.push(resp.latency_us);
+                    symbols += resp.soft_symbols.len();
+                }
+                if wave >= warmup {
+                    wall += t0.elapsed().as_secs_f64();
+                    for us in wave_lat {
+                        lat.record_us(us);
+                    }
+                } else {
+                    symbols = 0;
+                }
+            }
+            let t = Throughput::from_rate(symbols as f64, wall);
+            let (p50, p99) = (lat.percentile_us(50.0), lat.percentile_us(99.0));
+            println!("{path:44} {}  p50 {p50:.1} us  p99 {p99:.1} us", t.line());
+            slo_stats.push((t.symbols_per_s, p99));
+            records.push(t.to_json_with_latency("cnn_imdd_quant", path, p50, p99));
+            pool.shutdown();
+        }
+        println!(
+            "\nSLO-adaptive window: p99 {:.1} us vs {:.1} us fixed ({:.2}x throughput)",
+            slo_stats[1].1,
+            slo_stats[0].1,
+            slo_stats[1].0 / slo_stats[0].0
         );
     }
 

@@ -11,14 +11,27 @@
 //!
 //! Latency percentiles are computed over a bounded reservoir of the
 //! most recent [`LATENCY_RING_CAP`] requests, so a long-lived pool's
-//! memory and snapshot cost stay constant.
+//! memory and snapshot cost stay constant.  Every sample is the
+//! **end-to-end** burst latency — enqueue to completion — on every
+//! scheduled path (served alone, coalesced, stolen), so p50/p99 are
+//! comparable across scheduler modes and usable as the SLO control
+//! signal.  The SLO loop reads a *recent* sub-window
+//! ([`ShardCounters::recent_p99_us`]) so recovery becomes visible
+//! without waiting for the full ring to wash out.
 
 use super::stats::LatencyStats;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// Latency samples retained per shard (ring buffer of the most recent).
 pub const LATENCY_RING_CAP: usize = 4096;
+
+/// Samples the SLO control loop looks back over when it computes the
+/// recent p99 ([`ShardCounters::recent_p99_us`]): small enough that
+/// recovery after a violation shows within a few batches, large enough
+/// that a p99 over it is meaningful.
+pub const SLO_RECENT_WINDOW: usize = 256;
 
 /// Ring buffer of the last [`LATENCY_RING_CAP`] latency samples.
 #[derive(Debug, Default)]
@@ -44,6 +57,26 @@ impl LatencyRing {
         }
         s
     }
+
+    /// Stats over only the most recent `last` samples (insertion
+    /// order): when the ring is full, `next` is the oldest slot and
+    /// `next - 1` (wrapping) the newest.
+    fn recent(&self, last: usize) -> LatencyStats {
+        let n = self.samples_us.len();
+        let k = last.min(n);
+        let mut s = LatencyStats::new();
+        if n < LATENCY_RING_CAP {
+            for &us in &self.samples_us[n - k..] {
+                s.record_us(us);
+            }
+        } else {
+            for i in 0..k {
+                let idx = (self.next + LATENCY_RING_CAP - 1 - i) % LATENCY_RING_CAP;
+                s.record_us(self.samples_us[idx]);
+            }
+        }
+        s
+    }
 }
 
 /// Live counters for one shard (all methods are `&self`; safe to share
@@ -65,6 +98,10 @@ pub struct ShardCounters {
     stolen: AtomicU64,
     coalesced_batches: AtomicU64,
     coalesced_requests: AtomicU64,
+    /// Effective coalescing window, nanoseconds — written by the SLO
+    /// control loop, read by the shard worker on every collection pass
+    /// and surfaced in snapshots.
+    coalesce_window_ns: AtomicU64,
     latency: Mutex<LatencyRing>,
 }
 
@@ -142,6 +179,25 @@ impl ShardCounters {
         self.coalesced_requests.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Publish the effective coalescing window for this shard (the SLO
+    /// loop's actuator; also set once at spawn to the configured base).
+    pub fn set_window(&self, window: Duration) {
+        let ns = u64::try_from(window.as_nanos()).unwrap_or(u64::MAX);
+        self.coalesce_window_ns.store(ns, Ordering::Relaxed);
+    }
+
+    /// The effective coalescing window the shard worker should use.
+    pub fn window(&self) -> Duration {
+        Duration::from_nanos(self.coalesce_window_ns.load(Ordering::Relaxed))
+    }
+
+    /// p99 end-to-end latency over the most recent `last` completions
+    /// (0.0 while no sample exists) — the SLO control signal.  Bounded
+    /// by the reservoir, so a long-lived shard pays a constant cost.
+    pub fn recent_p99_us(&self, last: usize) -> f64 {
+        self.latency.lock().expect("latency lock").recent(last).percentile_us(99.0)
+    }
+
     /// Immutable snapshot of this shard's counters (latency stats over
     /// the last [`LATENCY_RING_CAP`] requests).
     pub fn snapshot(&self, shard: usize) -> ShardStats {
@@ -157,6 +213,7 @@ impl ShardCounters {
             coalesced_requests: self.coalesced_requests.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::SeqCst),
             peak_queue_depth: self.peak_queue_depth.load(Ordering::SeqCst),
+            window_us: self.coalesce_window_ns.load(Ordering::Relaxed) as f64 / 1e3,
             p50_us: latency.percentile_us(50.0),
             p99_us: latency.percentile_us(99.0),
             max_us: latency.max_us(),
@@ -190,12 +247,17 @@ pub struct ShardStats {
     pub queue_depth: usize,
     /// Highest outstanding depth ever latched on this shard.
     pub peak_queue_depth: usize,
-    /// Median service latency over the last [`LATENCY_RING_CAP`]
-    /// requests (coalesced requests report the batch wall time).
+    /// Effective coalescing window at snapshot time, microseconds
+    /// (the base window unless the SLO loop adapted it; 0 when
+    /// coalescing is off).
+    pub window_us: f64,
+    /// Median end-to-end latency (enqueue → completion) over the last
+    /// [`LATENCY_RING_CAP`] requests, on every scheduled path.
     pub p50_us: f64,
-    /// 99th-percentile service latency over the same window.
+    /// 99th-percentile end-to-end latency over the same window — the
+    /// quantity a [`crate::coordinator::sched::LatencySlo`] budgets.
     pub p99_us: f64,
-    /// Maximum service latency over the same window.
+    /// Maximum end-to-end latency over the same window.
     pub max_us: f64,
 }
 
@@ -212,6 +274,13 @@ pub struct PoolStats {
     pub scale_ups: u64,
     /// Autoscaler shrink events since spawn.
     pub scale_downs: u64,
+    /// Live instances per shard (the DOP gauge); 0 when the DOP axis
+    /// is not configured.
+    pub dop: usize,
+    /// Autoscaler DOP widenings since spawn.
+    pub dop_ups: u64,
+    /// Autoscaler DOP narrowings since spawn.
+    pub dop_downs: u64,
 }
 
 /// Pool-wide snapshot: one [`ShardStats`] per shard, plus the
@@ -296,7 +365,7 @@ impl ServerStats {
         let mut out = String::new();
         let _ = writeln!(
             out,
-            "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>6} {:>6} {:>10} {:>10} {:>10}",
+            "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>6} {:>6} {:>8} {:>10} {:>10} {:>10}",
             "shard",
             "requests",
             "errors",
@@ -305,6 +374,7 @@ impl ServerStats {
             "peak",
             "stolen",
             "coal",
+            "win us",
             "p50 us",
             "p99 us",
             "busy ms"
@@ -312,7 +382,8 @@ impl ServerStats {
         for s in &self.shards {
             let _ = writeln!(
                 out,
-                "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>6} {:>6} {:>10.1} {:>10.1} {:>10.2}",
+                "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>6} {:>6} {:>8.0} {:>10.1} {:>10.1} \
+                 {:>10.2}",
                 s.shard,
                 s.requests,
                 s.errors,
@@ -321,6 +392,7 @@ impl ServerStats {
                 s.peak_queue_depth,
                 s.stolen,
                 s.coalesced_requests,
+                s.window_us,
                 s.p50_us,
                 s.p99_us,
                 s.busy_us as f64 / 1e3
@@ -335,10 +407,18 @@ impl ServerStats {
             self.busy_msym_per_s()
         );
         if self.pool.active_shards > 0 {
+            let dop = if self.pool.dop > 0 {
+                format!(
+                    ", dop {} (+{}/-{})",
+                    self.pool.dop, self.pool.dop_ups, self.pool.dop_downs
+                )
+            } else {
+                String::new()
+            };
             let _ = writeln!(
                 out,
                 "pool: {}/{} shards live  (scale-ups {}, scale-downs {}, stolen {}, \
-                 coalesced {})",
+                 coalesced {}{dop})",
                 self.pool.active_shards,
                 self.shards.len(),
                 self.pool.scale_ups,
@@ -433,11 +513,75 @@ mod tests {
         // Without pool gauges the table has no pool line...
         assert_eq!(stats.render().lines().count(), 3);
         // ...with them, the live-set line appears.
-        let stats = stats.with_pool(PoolStats { active_shards: 1, scale_ups: 2, scale_downs: 1 });
+        let stats = stats.with_pool(PoolStats {
+            active_shards: 1,
+            scale_ups: 2,
+            scale_downs: 1,
+            ..PoolStats::default()
+        });
         let table = stats.render();
         assert_eq!(table.lines().count(), 4, "{table}");
         assert!(table.contains("1/1 shards live"), "{table}");
         assert!(table.contains("scale-ups 2"), "{table}");
+        assert!(!table.contains("dop"), "no DOP info while the axis is off: {table}");
+        // With the DOP axis configured the pool line carries the gauge.
+        let stats = stats.with_pool(PoolStats {
+            active_shards: 1,
+            dop: 4,
+            dop_ups: 3,
+            dop_downs: 1,
+            ..PoolStats::default()
+        });
+        let table = stats.render();
+        assert!(table.contains("dop 4 (+3/-1)"), "{table}");
+    }
+
+    #[test]
+    fn window_gauge_round_trips_and_snapshots() {
+        let c = ShardCounters::default();
+        assert_eq!(c.window(), Duration::ZERO);
+        c.set_window(Duration::from_micros(750));
+        assert_eq!(c.window(), Duration::from_micros(750));
+        assert_eq!(c.snapshot(0).window_us, 750.0);
+        c.set_window(Duration::ZERO);
+        assert_eq!(c.snapshot(0).window_us, 0.0);
+    }
+
+    #[test]
+    fn recent_p99_tracks_recovery_the_full_ring_hides() {
+        // 300 slow samples then 300 fast ones: the full-ring p99 still
+        // reports the old violations, while the recent window (256)
+        // sees the recovery — exactly why the SLO loop reads recent().
+        let c = ShardCounters::default();
+        for _ in 0..300 {
+            c.served(1, 10_000.0, false);
+        }
+        assert!(c.recent_p99_us(SLO_RECENT_WINDOW) >= 10_000.0);
+        for _ in 0..300 {
+            c.served(1, 50.0, false);
+        }
+        assert_eq!(c.recent_p99_us(SLO_RECENT_WINDOW), 50.0);
+        assert!(c.snapshot(0).p99_us >= 10_000.0, "full ring still remembers");
+        // Degenerate windows behave.
+        assert_eq!(c.recent_p99_us(0), 0.0);
+        assert_eq!(ShardCounters::default().recent_p99_us(SLO_RECENT_WINDOW), 0.0);
+    }
+
+    #[test]
+    fn recent_window_wraps_the_full_ring_correctly() {
+        // Overfill the ring so `next` has wrapped, then check recent()
+        // really returns the newest samples across the wrap seam.
+        let c = ShardCounters::default();
+        for i in 0..(LATENCY_RING_CAP + 100) {
+            c.served(1, i as f64, false);
+        }
+        // Newest 10 samples are CAP+90 .. CAP+99.
+        assert_eq!(c.recent_p99_us(10), (LATENCY_RING_CAP + 99) as f64);
+        let c2 = ShardCounters::default();
+        for i in 0..(2 * LATENCY_RING_CAP + 7) {
+            c2.served(1, i as f64, false);
+        }
+        assert_eq!(c2.recent_p99_us(1), (2 * LATENCY_RING_CAP + 6) as f64);
     }
 
     #[test]

@@ -45,13 +45,21 @@ pub const NATIVE_WIDTH_BUCKETS: [usize; 6] = [256, 512, 1024, 2048, 4096, 8192];
 /// One exported model from the manifest (or a synthesized native entry).
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// Unique artifact name, e.g. `cnn_imdd_quant_w1024`.
     pub name: String,
+    /// File name relative to the artifact directory.
     pub path: String,
+    /// Input tensor shape; the last axis is the width in samples.
     pub input_shape: Vec<usize>,
+    /// Model family: `cnn`, `fir` or `volterra`.
     pub model: String,
+    /// Channel the weights were trained on: `imdd` or `proakis`.
     pub channel: String,
+    /// Soft symbols one execution produces (width / N_os).
     pub out_symbols: usize,
+    /// Whether this is the quantized variant of the family.
     pub quant: bool,
+    /// Sequences per execution (1 except batched HLO exports).
     pub batch: usize,
     /// Absolute path, filled at load time.
     pub abs_path: PathBuf,
@@ -187,8 +195,11 @@ impl ArtifactEntry {
 /// All models exported by the build path.
 #[derive(Debug)]
 pub struct ArtifactRegistry {
+    /// Artifact directory the registry was discovered from.
     pub dir: PathBuf,
+    /// Every executable entry, across families, widths and flavors.
     pub models: Vec<ArtifactEntry>,
+    /// Training/eval BER per model family, as exported by the build.
     pub train_ber: std::collections::BTreeMap<String, f64>,
 }
 

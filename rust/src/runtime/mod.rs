@@ -13,6 +13,7 @@
 //! artifacts + `pjrt` feature -> PJRT, otherwise native.  Python never
 //! runs on the request path in either mode.
 
+#[warn(missing_docs)]
 pub mod artifact;
 pub mod exec;
 #[cfg(feature = "pjrt")]

@@ -83,6 +83,26 @@ impl Throughput {
         m.insert("gbd".to_string(), Json::Num(self.gbd));
         Json::Obj(m)
     }
+
+    /// [`Self::to_json`] extended with per-burst latency percentiles —
+    /// the `serving_slo` records: a throughput row that also carries
+    /// the p50/p99 end-to-end latency observed at that offered load,
+    /// so `BENCH_*.json` tracks the latency trajectory, not just
+    /// throughput.
+    pub fn to_json_with_latency(
+        &self,
+        profile: &str,
+        path: &str,
+        p50_us: f64,
+        p99_us: f64,
+    ) -> Json {
+        let mut j = self.to_json(profile, path);
+        if let Json::Obj(m) = &mut j {
+            m.insert("p50_us".to_string(), Json::Num(p50_us));
+            m.insert("p99_us".to_string(), Json::Num(p99_us));
+        }
+        j
+    }
 }
 
 fn fmt_dur(d: Duration) -> String {
@@ -228,5 +248,9 @@ mod tests {
         assert_eq!(j.req("path").unwrap().as_str(), Some("int16"));
         assert!(j.req("gbd").unwrap().as_f64().unwrap() > 1.9);
         assert!(t2.line().contains("GBd-eq"));
+        let jl = t2.to_json_with_latency("cnn_imdd_quant", "serving_slo_adaptive", 120.5, 310.0);
+        assert_eq!(jl.req("p50_us").unwrap().as_f64(), Some(120.5));
+        assert_eq!(jl.req("p99_us").unwrap().as_f64(), Some(310.0));
+        assert_eq!(jl.req("path").unwrap().as_str(), Some("serving_slo_adaptive"));
     }
 }

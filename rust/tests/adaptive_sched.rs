@@ -1,14 +1,17 @@
 //! Adaptive-scheduler acceptance: cross-request coalescing must be
 //! bit-exact against the sequential per-request reference (mixed
 //! profiles, mixed burst sizes, quantized profiles included), work
-//! stealing must drain a deterministically skewed queue, and the
+//! stealing must drain a deterministically skewed queue, the
 //! autoscaler must grow under pressure, shrink when idle, and never
 //! flap at steady load (the pure-controller half of that property is
-//! unit-tested in `coordinator::sched`).
+//! unit-tested in `coordinator::sched`), the latency-SLO loop must
+//! shrink the coalescing window until p99 recovers, and DOP rescaling
+//! must widen under latency pressure — all without changing a single
+//! output bit.
 
 use equalizer::coordinator::instance::EqualizerInstance;
 use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool, Shard};
-use equalizer::coordinator::sched::{AutoScaleConfig, SchedulerConfig};
+use equalizer::coordinator::sched::{AutoScaleConfig, LatencySlo, SchedulerConfig};
 use equalizer::coordinator::seqlen::SeqLenOptimizer;
 use equalizer::coordinator::server::EqualizerServer;
 use equalizer::coordinator::timing::TimingModel;
@@ -143,6 +146,145 @@ fn coalesced_pool_bit_exact_across_profiles_and_burst_sizes() {
 }
 
 #[test]
+fn slo_shrinks_the_window_and_p99_recovers_bit_exactly() {
+    // The SLO acceptance bar.  A 200 ms coalescing window against a
+    // 20 ms p99 budget on a slow profile: the first wave is window-
+    // bound (every burst waits out the window — a gross violation),
+    // after which the SLO loop must have collapsed the shard's
+    // effective window; a second wave must then complete far below the
+    // window bound (p99 recovered), with every reply still the exact
+    // decimation.
+    let delay = Duration::from_millis(5);
+    let base_window = Duration::from_millis(200);
+    let slo = LatencySlo::new(20_000.0); // 20 ms p99 budget
+    let sched = SchedulerConfig::default().with_coalescing(base_window).with_slo(slo);
+    let pool = ServerPool::with_scheduler(
+        vec![slow_shard(delay)],
+        RoutePolicy::ShortestQueue,
+        64,
+        sched,
+    )
+    .unwrap()
+    .spawn();
+    let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+    let expect: Vec<f32> = burst.iter().step_by(2).copied().collect();
+
+    // Wave 1: 8 bursts land inside one collection pass; the batch
+    // (8 < coalesce_max) waits out the full window, so every e2e
+    // latency is >= the 200 ms window — far over budget.
+    let pending: Vec<_> =
+        (0..8).map(|_| pool.submit("slow", burst.clone(), None).unwrap()).collect();
+    let mut wave1_min = f64::INFINITY;
+    for rx in pending {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.soft_symbols, expect);
+        wave1_min = wave1_min.min(resp.latency_us);
+    }
+    assert!(
+        wave1_min >= 150_000.0,
+        "wave 1 must be window-bound ({wave1_min} us) or the test proves nothing"
+    );
+
+    // The controller must now collapse the window (multiplicative
+    // decrease on every violating tick).
+    assert!(
+        eventually(Duration::from_secs(5), || {
+            pool.stats().shards[0].window_us <= base_window.as_micros() as f64 / 4.0
+        }),
+        "SLO loop must shrink the effective window (still {} us)",
+        pool.stats().shards[0].window_us
+    );
+
+    // Wave 2: same submission shape, but the shard no longer waits
+    // for company — it batches only what is already queued.  Worst
+    // case it serves the 8 bursts as singles (8 x 5 ms) plus
+    // scheduling noise: far below the 200 ms window bound.
+    let pending: Vec<_> =
+        (0..8).map(|_| pool.submit("slow", burst.clone(), None).unwrap()).collect();
+    let mut wave2_max = 0.0f64;
+    for rx in pending {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.soft_symbols, expect, "adapted window must stay bit-exact");
+        wave2_max = wave2_max.max(resp.latency_us);
+    }
+    assert!(
+        wave2_max < 150_000.0,
+        "p99 must recover once the window adapts (wave 2 max {wave2_max} us)"
+    );
+    assert!(wave2_max < wave1_min, "recovery must be visible against wave 1");
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), 16);
+    assert_eq!(stats.total_errors(), 0);
+    assert!(
+        stats.shards[0].window_us < base_window.as_micros() as f64,
+        "final snapshot keeps the adapted window visible"
+    );
+}
+
+#[test]
+fn dop_widens_under_latency_pressure_and_stays_bit_exact() {
+    // The DOP-axis acceptance bar: a 1-shard registry pool stamped at
+    // 4 instances but serving at 1, under an unmeetable SLO (1 us) —
+    // the autoscaler must widen DOP to the ceiling (the shard axis is
+    // already maxed), and replies before/after the widening must be
+    // bit-identical to the sequential reference.
+    let reg = registry();
+    let profiles = ["cnn_imdd_quant"];
+    let reference_cfg = PoolConfig { shards: 1, instances_per_shard: 1, ..PoolConfig::default() };
+    let reference = ServerPool::from_registry(&reg, &profiles, &reference_cfg).unwrap().spawn();
+    let bursts: Vec<Vec<f32>> = (0..4)
+        .map(|b| (0..3000).map(|i| ((i + 97 * b) as f32 * 0.11).sin()).collect())
+        .collect();
+    let want: Vec<Vec<f32>> = bursts
+        .iter()
+        .map(|x| reference.call("cnn_imdd_quant", x.clone(), None).unwrap().soft_symbols)
+        .collect();
+    reference.shutdown();
+
+    let autoscale = AutoScaleConfig {
+        min_shards: 1,
+        hysteresis_ticks: 2,
+        tick: Duration::from_millis(1),
+        ..AutoScaleConfig::default()
+    };
+    let cfg = PoolConfig {
+        shards: 1,
+        instances_per_shard: 1,
+        max_instances_per_shard: 4,
+        scheduler: SchedulerConfig::default()
+            .with_coalescing(Duration::from_millis(1))
+            .with_slo(LatencySlo::new(1.0)) // any real latency violates
+            .with_autoscale(autoscale),
+        ..PoolConfig::default()
+    };
+    let pool = ServerPool::from_registry(&reg, &["cnn_imdd_quant"], &cfg).unwrap().spawn();
+    assert_eq!(pool.stats().pool.dop, 1, "DOP starts at the configured floor");
+
+    // First pass seeds the latency reservoir (violating by orders of
+    // magnitude), which must drive DOP to its ceiling.
+    for (x, w) in bursts.iter().zip(&want) {
+        let resp = pool.call("cnn_imdd_quant", x.clone(), None).unwrap();
+        assert_eq!(&resp.soft_symbols, w, "pre-widening replies match the reference");
+    }
+    assert!(
+        eventually(Duration::from_secs(5), || pool.stats().pool.dop == 4),
+        "sustained violation must widen DOP to the ceiling (dop {})",
+        pool.stats().pool.dop
+    );
+
+    // Served *after* the rescale: still bit-identical.
+    for (x, w) in bursts.iter().zip(&want) {
+        let resp = pool.call("cnn_imdd_quant", x.clone(), None).unwrap();
+        assert_eq!(&resp.soft_symbols, w, "DOP-rescaled replies match the reference");
+    }
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_errors(), 0);
+    assert_eq!(stats.pool.dop, 4);
+    assert!(stats.pool.dop_ups >= 2, "{:?}", stats.pool);
+    assert_eq!(stats.pool.active_shards, 1, "the shard axis had no headroom to spend");
+}
+
+#[test]
 fn stealing_rebalances_a_deterministically_skewed_queue() {
     // All bursts pinned onto shard 0 (submit_to bypasses routing); the
     // idle shard 1 must steal whole queued bursts and the pool must
@@ -166,6 +308,10 @@ fn stealing_rebalances_a_deterministically_skewed_queue() {
     for rx in pending {
         let resp = rx.recv().unwrap();
         assert_eq!(resp.soft_symbols, expect, "stolen bursts must stay bit-exact");
+        // The submit timestamp travels with a stolen burst, so its
+        // reservoir sample is the same end-to-end quantity as every
+        // other path's (never less than its own service time).
+        assert!(resp.latency_us >= resp.elapsed_us - 1.0, "{resp:?}");
         served_by[resp.shard] += 1;
     }
     drop(client);

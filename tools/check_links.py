@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for this repo's docs.
+
+Validates, for every markdown file passed on the command line:
+
+  * relative file links resolve to an existing file or directory
+    (fragment stripped first);
+  * intra-file anchors (``[..](#section)``) and cross-file anchors
+    (``[..](OTHER.md#section)``) match a heading slug in the target,
+    using GitHub's slugging rules (lowercase, spaces -> dashes,
+    punctuation dropped);
+  * reference-style definitions (``[label]: target``) get the same
+    treatment.
+
+Skipped on purpose: absolute URLs (http/https/mailto) — this checker
+must run offline — and repo-external relative paths like the
+``../../actions/..`` CI badge, which are GitHub-site URLs, not files.
+
+Exit status: number of broken links (0 = clean).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# Inline links [text](target) — skipping images' leading ! is harmless
+# (image paths deserve checking too).  Reference defs handled apart.
+INLINE_LINK = re.compile(r"\[[^\]\[]*\]\(([^()\s]+)(?:\s+\"[^\"]*\")?\)")
+REF_DEF = re.compile(r"^\s*\[[^\]]+\]:\s*(\S+)", re.MULTILINE)
+HEADING = re.compile(r"^(#{1,6})\s+(.*)$", re.MULTILINE)
+CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """Approximate GitHub's heading -> anchor slug."""
+    # Drop inline code/markdown decoration, then slugify.
+    text = re.sub(r"[`*_]", "", heading.strip())
+    # Markdown links in headings keep only their text.
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(md_text: str) -> set:
+    """All anchor slugs a markdown file exposes (with GitHub's -1, -2
+    suffixing for duplicate headings)."""
+    slugs: set = set()
+    counts: dict = {}
+    for match in HEADING.finditer(CODE_FENCE.sub("", md_text)):
+        slug = github_slug(match.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def is_external(target: str) -> bool:
+    return target.startswith(("http://", "https://", "mailto:", "ftp://"))
+
+
+def check_file(md_path: Path, repo_root: Path) -> list:
+    """Return a list of (target, reason) problems for one file."""
+    text = md_path.read_text(encoding="utf-8")
+    problems = []
+    # Strip fenced code blocks for both scans: example links inside
+    # ``` fences are illustrations, not links to validate.
+    prose = CODE_FENCE.sub("", text)
+    targets = [m.group(1) for m in INLINE_LINK.finditer(prose)]
+    targets += [m.group(1) for m in REF_DEF.finditer(prose)]
+    for target in targets:
+        if is_external(target):
+            continue
+        if target.startswith("#"):
+            if target[1:] not in heading_slugs(text):
+                problems.append((target, "missing anchor"))
+            continue
+        path_part, _, fragment = target.partition("#")
+        resolved = (md_path.parent / path_part).resolve()
+        try:
+            resolved.relative_to(repo_root)
+        except ValueError:
+            # Repo-external relative path (e.g. the ../../actions CI
+            # badge): a GitHub-site URL, not a file — out of scope.
+            continue
+        if not resolved.exists():
+            problems.append((target, "missing file"))
+            continue
+        if fragment and resolved.suffix == ".md":
+            if fragment not in heading_slugs(resolved.read_text(encoding="utf-8")):
+                problems.append((target, "missing anchor in target"))
+    return problems
+
+
+def main(argv: list) -> int:
+    if len(argv) < 2:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    repo_root = Path(__file__).resolve().parent.parent
+    broken = 0
+    for name in argv[1:]:
+        md_path = Path(name)
+        if not md_path.exists():
+            print(f"{name}: file not found", file=sys.stderr)
+            broken += 1
+            continue
+        for target, reason in check_file(md_path, repo_root):
+            print(f"{name}: broken link {target!r} ({reason})", file=sys.stderr)
+            broken += 1
+    if broken == 0:
+        print(f"check_links: {len(argv) - 1} file(s) clean")
+    return min(broken, 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
