@@ -5,7 +5,9 @@
 //! request coalescing on a 64-client small-burst mix, the regime where
 //! per-request execution leaves the datapath mostly idle (the paper's
 //! small-batch collapse, Sec. 7, re-created and then closed in
-//! software).
+//! software) — plus the overload story: an open-loop 2x-capacity trace
+//! with admission control off vs on, showing the bounded-queue latency
+//! blowup turn into shed rate with the admitted p99 held near budget.
 
 use equalizer::coordinator::instance::DecimatorInstance;
 use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool, Shard};
@@ -198,5 +200,80 @@ fn main() {
         let windows: Vec<String> =
             stats.shards.iter().map(|s| format!("{:.0}", s.window_us)).collect();
         println!("       (final per-shard windows: {} us)", windows.join(" / "));
+    }
+
+    // ---- admission control: open-loop 2x overload, off vs on --------
+    // The closed-loop runs above measure clients that wait their turn;
+    // an open-loop trace keeps offering work at 2x the measured
+    // coalesced capacity no matter how the pool copes.  Without
+    // admission the bounded queue absorbs the excess as latency (p99
+    // climbs toward queue_cap x service time, then Full rejections);
+    // with it the backlog estimator deadline-rejects at the
+    // margin x budget line, so the excess shows up as shed rate while
+    // the admitted p99 stays near the budget.  `repro bench --json`
+    // records the same sweep as `serving_open_loop_*` rows in
+    // BENCH_pr6.json.
+    header("pool admission (open-loop 2x overload, cnn_imdd_quant, p99 budget 2 ms)");
+    use equalizer::coordinator::pool::TrySubmit;
+    use equalizer::coordinator::sched::AdmissionConfig;
+    use equalizer::util::loadgen::OpenLoopSpec;
+    let coalesced_rps = rates[1] / (burst.len() as f64 / 2.0);
+    let offered = 2.0 * coalesced_rps;
+    let budget_us = 2_000.0;
+    let window = SchedulerConfig::default().with_coalescing(Duration::from_millis(1));
+    let adm_modes = [
+        ("admission-off", window.clone()),
+        ("admission-on", window.with_admission(AdmissionConfig::new(LatencySlo::new(budget_us)))),
+    ];
+    for (name, scheduler) in adm_modes {
+        let cfg = PoolConfig {
+            shards: 2,
+            instances_per_shard: 4,
+            policy: RoutePolicy::ShortestQueue,
+            queue_cap: clients,
+            scheduler,
+            ..PoolConfig::default()
+        };
+        let pool = ServerPool::from_registry(&reg, &["cnn_imdd_quant"], &cfg).unwrap().spawn();
+        // Seed the service-time EWMA so the estimator is live from the
+        // first arrival.
+        pool.call("cnn_imdd_quant", burst.clone(), None).unwrap();
+        let trace = OpenLoopSpec::poisson("cnn_imdd_quant", offered, Duration::from_millis(500))
+            .schedule()
+            .unwrap();
+        let client = pool.client();
+        let t0 = std::time::Instant::now();
+        let mut pending = Vec::new();
+        let (mut shed, mut full) = (0u64, 0u64);
+        for a in &trace {
+            while t0.elapsed() < a.at {
+                std::thread::yield_now();
+            }
+            match client.try_submit("cnn_imdd_quant", burst.clone(), None).unwrap() {
+                TrySubmit::Queued(rx) => pending.push(rx),
+                TrySubmit::Shed(_) => shed += 1,
+                TrySubmit::Full(_) => full += 1,
+            }
+        }
+        let mut lat = LatencyStats::new();
+        let mut total_symbols = 0usize;
+        for rx in pending {
+            let resp = rx.recv().unwrap();
+            lat.record_us(resp.latency_us);
+            total_symbols += resp.soft_symbols.len();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        drop(client);
+        pool.shutdown();
+        let t = Throughput::from_rate(total_symbols as f64, wall);
+        println!(
+            "pool_admission {name:14} offered {:.0} rps  {}  p99 {:.0} us  \
+             shed {:.0}%  full {:.0}%",
+            offered,
+            t.line(),
+            lat.percentile_us(99.0),
+            100.0 * shed as f64 / trace.len() as f64,
+            100.0 * full as f64 / trace.len() as f64
+        );
     }
 }

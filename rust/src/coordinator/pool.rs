@@ -26,6 +26,16 @@
 //! * **Backpressure** — shard queues are bounded:
 //!   [`PoolClient::submit`] blocks while the routed shard is full,
 //!   [`PoolClient::try_submit`] reports fullness instead.
+//! * **Admission control** — with
+//!   [`SchedulerConfig::admission`] set, the ingress estimates each
+//!   burst's enqueue-to-reply latency on the routed shard (queue depth
+//!   x amortized service EWMA + coalescing window, floored by the
+//!   recent age-limited p99) and deadline-rejects it when its
+//!   profile's budget is provably blown: the burst comes back as a
+//!   [`Shed`] verdict instead of queueing toward a reply that would
+//!   arrive too late.  An empty shard always admits, so zero offered
+//!   load never sheds — and every *admitted* request flows through the
+//!   unchanged datapath, so admission cannot perturb bit-exactness.
 //! * **Routing** — [`RoutePolicy::RoundRobin`] or
 //!   [`RoutePolicy::ShortestQueue`] over the live per-shard queue
 //!   depths ([`crate::metrics::serving::ShardCounters`]), restricted
@@ -60,7 +70,9 @@
 //!
 //! **Steal ordering.**  A thief takes whole bursts — never a burst's
 //! chunks — from the *front* (oldest end) of the deepest live queue,
-//! at most half of it (bounded by the thief's free capacity), and
+//! at most half of it (bounded by free capacity the thief *reserves
+//! under its own queue lock* before touching the victim, so racing
+//! submissions can never push the thief past `queue_cap`), and
 //! appends them to its own queue — empty when it decided to steal,
 //! save for racing submissions — in the same order.  The take is
 //! **warmth-aware**: when the victim's worker has an open coalescing
@@ -182,10 +194,31 @@ pub struct PoolResponse {
     /// [`super::sched::LatencySlo`] budgets.
     pub latency_us: f64,
     /// Requests that shared this burst's batched pipeline pass
-    /// (1 = served alone).
+    /// (1 = served alone, 0 = shed at admission — never dispatched).
     pub batched: usize,
     /// Processing failure, if any.
     pub error: Option<String>,
+    /// `Some` when admission control deadline-rejected this burst at
+    /// the ingress ([`SchedulerConfig::admission`]): it never reached
+    /// a queue, `soft_symbols` is empty, and the burst travels back in
+    /// [`Shed::samples`].  Distinct from [`Self::error`] — a shed is a
+    /// scheduling verdict, not a processing failure.
+    pub shed: Option<Shed>,
+}
+
+/// Admission-control verdict attached to a shed reply
+/// ([`PoolResponse::shed`], [`TrySubmit::Shed`]): the burst comes back
+/// untouched together with the estimate that condemned it.
+#[derive(Debug)]
+pub struct Shed {
+    /// The burst, handed back so the caller can retry later (or on
+    /// another pool) without re-cloning it.
+    pub samples: Vec<f32>,
+    /// Predicted enqueue-to-reply latency at the verdict, microseconds.
+    pub predicted_us: f64,
+    /// The profile's p99 budget the prediction provably blew
+    /// (`predicted > margin * budget`), microseconds.
+    pub budget_us: f64,
 }
 
 /// One shard: a set of per-profile serving engines that share a worker
@@ -334,6 +367,12 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
         if let Some(auto) = &scheduler.autoscale {
             auto.validate(shards.len())?;
         }
+        // Admission control is its own actuator (it sheds at the
+        // ingress), so unlike `slo` it needs no coalescing/autoscale
+        // lever — only a well-formed budget map.
+        if let Some(adm) = &scheduler.admission {
+            adm.validate()?;
+        }
         if let Some(slo) = &scheduler.slo {
             slo.validate()?;
             // An SLO with nothing to actuate is a silent no-op (and
@@ -450,6 +489,14 @@ struct ShardSlot {
     /// Mirror of `queue.len()` so victim selection and routing never
     /// take the lock.
     queued: AtomicUsize,
+    /// Queue slots reserved by an in-flight steal: the thief reserves
+    /// its take under this slot's queue lock *before* draining the
+    /// victim, and every submit checks `len + reserved` against the
+    /// cap under the same lock — so the hand-off can never push the
+    /// queue past `queue_cap` (the PR-5 race).  Only this slot's own
+    /// worker steals into it, so there is at most one reservation at
+    /// a time.
+    reserved: AtomicUsize,
     /// Hash of the (profile, `l_inst`) group the worker is currently
     /// collecting (see `group_key`), 0 when no window is open — the
     /// warmth signal for routing and the warmth-aware thief.  A hash
@@ -514,6 +561,40 @@ impl SchedCore {
             dop_ups: self.dop_ups.load(Ordering::Relaxed),
             dop_downs: self.dop_downs.load(Ordering::Relaxed),
         }
+    }
+
+    /// Admission verdict for a burst about to enqueue on `shard`:
+    /// `Some((predicted_us, budget_us))` when its profile's budget is
+    /// provably blown, `None` to admit.
+    ///
+    /// The estimate is the max of two signals: a *backlog* model —
+    /// `(depth + 1) x` the shard's amortized-service EWMA plus the
+    /// current coalescing window (the wait a fresh group would add) —
+    /// and the shard's recent age-limited p99 (what clients actually
+    /// saw lately; catches service-time regimes the EWMA smooths
+    /// over).  Three structural admit gates keep the estimator honest:
+    /// an *empty* shard admits unconditionally (zero offered load can
+    /// never shed), a shard with no service history admits (cold-start
+    /// measurements come before verdicts), and a profile with no
+    /// budget in the [`super::sched::AdmissionConfig`] map admits
+    /// (only budgeted traffic is policed).
+    fn admission_shed(&self, shard: usize, profile: &str) -> Option<(f64, f64)> {
+        let adm = self.sched.admission.as_ref()?;
+        let slo = adm.budget_for(profile)?;
+        let c = &self.counters[shard];
+        let depth = c.queue_depth();
+        if depth == 0 {
+            return None;
+        }
+        let service = c.service_ewma_us();
+        if service <= 0.0 {
+            return None;
+        }
+        let window_us = c.window().as_secs_f64() * 1e6;
+        let backlog = (depth as f64 + 1.0) * service + window_us;
+        let recent = c.recent_p99_us(SLO_RECENT_WINDOW, slo.stale_after);
+        let predicted = backlog.max(recent);
+        (predicted > adm.margin * slo.p99_target_us).then_some((predicted, slo.p99_target_us))
     }
 
     /// The coalescing-group key a submit of (`profile`, `t_req`) would
@@ -706,12 +787,22 @@ fn steal_into(core: &SchedCore, thief: usize) -> bool {
     let Some(v) = victim else {
         return false;
     };
-    // Bound the take by the thief's free capacity so a racing
-    // submission wave cannot push the thief far past `queue_cap` (the
-    // thief's queue was empty when it decided to steal, so `free` is
-    // normally the full cap; the mirror read keeps a race to a
-    // transient overshoot of at most the in-flight submissions).
-    let free = core.queue_cap.saturating_sub(core.slots[thief].queued.load(Ordering::SeqCst));
+    // Bound the take by the thief's free capacity, *reserved under the
+    // thief's own queue lock* so racing submissions — which check
+    // `len + reserved` under the same lock — can never push the queue
+    // past `queue_cap` while the hand-off is in flight.  (A bare
+    // mirror read here, as PR 5 shipped, left exactly that window
+    // open: submits landing between the read and the extend
+    // overshot the cap.)
+    let free = {
+        let tq = core.slots[thief].queue.lock().expect("shard queue");
+        let used = tq.len() + core.slots[thief].reserved.load(Ordering::SeqCst);
+        let free = core.queue_cap.saturating_sub(used);
+        if free > 0 {
+            core.slots[thief].reserved.fetch_add(free, Ordering::SeqCst);
+        }
+        free
+    };
     if free == 0 {
         return false;
     }
@@ -738,6 +829,10 @@ fn steal_into(core: &SchedCore, thief: usize) -> bool {
         }
         let take = (vq.len().saturating_sub(lead) / 2).min(free);
         if take == 0 {
+            // Release the victim's lock before touching the thief's —
+            // never hold two queue locks at once.
+            drop(vq);
+            unreserve(&core.slots[thief], free);
             return false;
         }
         let stolen = vq.drain(lead..lead + take).collect();
@@ -750,10 +845,34 @@ fn steal_into(core: &SchedCore, thief: usize) -> bool {
         core.counters[thief].enqueued();
     }
     core.counters[thief].stole(stolen.len() as u64);
+    let taken = stolen.len();
     let mut tq = core.slots[thief].queue.lock().expect("shard queue");
     tq.extend(stolen);
     core.slots[thief].queued.store(tq.len(), Ordering::SeqCst);
+    core.slots[thief].reserved.fetch_sub(free, Ordering::SeqCst);
+    drop(tq);
+    // The take may have come in under the reservation (victim shrank
+    // or its warm run grew): the freed headroom must wake any submit
+    // blocked on `len + reserved`.
+    if taken < free {
+        core.slots[thief].not_full.notify_all();
+    }
     true
+}
+
+/// Release an unused steal reservation on `slot` and wake submitters
+/// blocked on it.  The decrement happens under the queue mutex: a
+/// submitter reads `reserved` under that mutex before deciding to
+/// wait, so a bare decrement could land between its read and its
+/// `wait()` — and the wakeup would be lost.
+fn unreserve(slot: &ShardSlot, n: usize) {
+    if n == 0 {
+        return;
+    }
+    let guard = slot.queue.lock().expect("shard queue");
+    slot.reserved.fetch_sub(n, Ordering::SeqCst);
+    drop(guard);
+    slot.not_full.notify_all();
 }
 
 /// Serve one batch: a single coalesced pipeline pass when the batch
@@ -800,6 +919,7 @@ fn execute_batch<I: EqualizerInstance + Send + 'static>(
                         latency_us,
                         batched: n,
                         error: None,
+                        shed: None,
                     });
                 }
                 return;
@@ -849,6 +969,7 @@ fn serve_single<I: EqualizerInstance + Send + 'static>(
         latency_us,
         batched: 1,
         error,
+        shed: None,
     });
 }
 
@@ -903,9 +1024,14 @@ fn monitor_loop(core: Arc<SchedCore>) {
         }
         let live = core.active.load(Ordering::SeqCst);
         // One reservoir read per shard per tick, shared by both loops.
+        // The read is age-limited by the SLO's `stale_after`: an idle
+        // shard's pre-burst violations age out of the signal, so the
+        // window regrows (and the scaler relaxes) once the burst is
+        // actually over — instead of replaying stale pain forever.
         let need_p99 = slo.is_some() && ((window_due && !windows.is_empty()) || scale_due);
         let shard_p99: Vec<f64> = if need_p99 {
-            core.counters.iter().map(|c| c.recent_p99_us(SLO_RECENT_WINDOW)).collect()
+            let stale = slo.as_ref().map_or(Duration::MAX, |s| s.stale_after);
+            core.counters.iter().map(|c| c.recent_p99_us(SLO_RECENT_WINDOW, stale)).collect()
         } else {
             Vec::new()
         };
@@ -978,6 +1104,12 @@ pub enum TrySubmit {
     /// The routed shard's queue was full — the burst comes back
     /// untouched so the caller can retry without re-cloning it.
     Full(Vec<f32>),
+    /// Admission control deadline-rejected the burst: the routed
+    /// shard's predicted enqueue-to-reply latency provably blows the
+    /// profile's budget.  Unlike [`Self::Full`] (a transient capacity
+    /// condition worth retrying immediately), a shed says the pool is
+    /// *overloaded* for this profile's SLO — back off or divert.
+    Shed(Shed),
 }
 
 impl TrySubmit {
@@ -985,7 +1117,7 @@ impl TrySubmit {
     pub fn queued(self) -> Option<mpsc::Receiver<PoolResponse>> {
         match self {
             TrySubmit::Queued(rx) => Some(rx),
-            TrySubmit::Full(_) => None,
+            TrySubmit::Full(_) | TrySubmit::Shed(_) => None,
         }
     }
 }
@@ -1083,6 +1215,12 @@ impl PoolClient {
     /// queue is full.  Any constructed shard is addressable — a parked
     /// shard still drains its queue, it just receives no *routed*
     /// traffic.
+    ///
+    /// With [`SchedulerConfig::admission`] configured, a burst whose
+    /// profile budget is provably blown is deadline-rejected instead
+    /// of enqueued: the returned receiver immediately yields a
+    /// [`PoolResponse`] whose [`PoolResponse::shed`] carries the burst
+    /// back (so the ordinary submit/recv flow needs no new code path).
     pub fn submit_to(
         &self,
         shard: usize,
@@ -1097,9 +1235,24 @@ impl PoolClient {
             self.core.slots.len()
         );
         let (reply, rx) = mpsc::channel();
+        if let Some((predicted_us, budget_us)) = self.core.admission_shed(shard, profile) {
+            self.core.counters[shard].shed_one();
+            let _ = reply.send(PoolResponse {
+                soft_symbols: Vec::new(),
+                l_inst: 0,
+                shard,
+                profile: profile.to_string(),
+                elapsed_us: 0.0,
+                latency_us: 0.0,
+                batched: 0,
+                error: None,
+                shed: Some(Shed { samples, predicted_us, budget_us }),
+            });
+            return Ok(rx);
+        }
         let slot = &self.core.slots[shard];
         let mut q = slot.queue.lock().expect("shard queue");
-        while q.len() >= self.core.queue_cap {
+        while q.len() + slot.reserved.load(Ordering::SeqCst) >= self.core.queue_cap {
             q = slot.not_full.wait(q).expect("shard queue");
         }
         self.core.counters[shard].enqueued();
@@ -1119,7 +1272,9 @@ impl PoolClient {
     /// Non-blocking submit: on backpressure the burst is handed back
     /// untouched ([`TrySubmit::Full`]) so retries never re-clone it,
     /// and the rejected attempt leaves no trace in the peak-depth
-    /// stats.
+    /// stats.  With [`SchedulerConfig::admission`] configured, a burst
+    /// whose profile budget is provably blown comes back as
+    /// [`TrySubmit::Shed`] with the condemning estimate attached.
     pub fn try_submit(
         &self,
         profile: &str,
@@ -1128,9 +1283,13 @@ impl PoolClient {
     ) -> Result<TrySubmit> {
         self.check_profile(profile)?;
         let shard = self.route(profile, t_req);
+        if let Some((predicted_us, budget_us)) = self.core.admission_shed(shard, profile) {
+            self.core.counters[shard].shed_one();
+            return Ok(TrySubmit::Shed(Shed { samples, predicted_us, budget_us }));
+        }
         let slot = &self.core.slots[shard];
         let mut q = slot.queue.lock().expect("shard queue");
-        if q.len() >= self.core.queue_cap {
+        if q.len() + slot.reserved.load(Ordering::SeqCst) >= self.core.queue_cap {
             return Ok(TrySubmit::Full(samples));
         }
         let (reply, rx) = mpsc::channel();
@@ -1150,7 +1309,9 @@ impl PoolClient {
     }
 
     /// Submit one burst and wait for its reply; processing failures
-    /// come back as `Err`.
+    /// and admission sheds come back as `Err` (callers that want the
+    /// shed verdict — and the burst back — use [`Self::submit`] or
+    /// [`Self::try_submit`] and inspect the reply).
     pub fn call(
         &self,
         profile: &str,
@@ -1159,6 +1320,16 @@ impl PoolClient {
     ) -> Result<PoolResponse> {
         let rx = self.submit(profile, samples, t_req)?;
         let resp = rx.recv().map_err(|_| anyhow::anyhow!("shard dropped the reply"))?;
+        if let Some(shed) = &resp.shed {
+            anyhow::bail!(
+                "admission shed on shard {}: predicted {:.0} us exceeds the {:.0} us budget \
+                 (profile {:?})",
+                resp.shard,
+                shed.predicted_us,
+                shed.budget_us,
+                resp.profile
+            );
+        }
         match &resp.error {
             Some(e) => anyhow::bail!("profile {:?} on shard {}: {e}", resp.profile, resp.shard),
             None => Ok(resp),
@@ -1363,7 +1534,7 @@ impl ServerPool<AnyInstance> {
 mod tests {
     use super::*;
     use crate::coordinator::instance::DecimatorInstance;
-    use crate::coordinator::sched::{AutoScaleConfig, LatencySlo};
+    use crate::coordinator::sched::{AdmissionConfig, AutoScaleConfig, LatencySlo};
 
     fn optimizer() -> SeqLenOptimizer {
         SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6))
@@ -1783,5 +1954,218 @@ mod tests {
         assert!(max_batch >= 2, "queued bursts must coalesce (max batch {max_batch})");
         assert!(stats.total_coalesced_requests() >= 2);
         assert!(stats.shards[0].coalesced_batches >= 1);
+    }
+
+    #[test]
+    fn steal_reserves_capacity_under_the_thief_lock() {
+        // Regression for the PR-5 race: `free` was computed from the
+        // `queued` mirror *before* the thief's lock was taken, so a
+        // submission wave racing the hand-off pushed the thief's queue
+        // past `queue_cap`.  Three threads hammer a bare core — a
+        // refiller keeping the victim deep, a submitter doing exactly
+        // the capacity check `submit_to` does, and a thief looping
+        // `steal_into` — while the invariant `len <= queue_cap` is
+        // asserted on every observation.
+        let core = bare_core(SchedulerConfig::default().with_stealing());
+        let cap = core.queue_cap;
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            // Refiller: keep the victim (slot 0) around 12 deep.
+            s.spawn(|| {
+                while !stop.load(Ordering::SeqCst) {
+                    {
+                        let mut q = core.slots[0].queue.lock().unwrap();
+                        while q.len() < 12 {
+                            q.push_back(queued_request(None));
+                            core.counters[0].enqueued();
+                        }
+                        core.slots[0].queued.store(q.len(), Ordering::SeqCst);
+                    }
+                    std::thread::yield_now();
+                }
+            });
+            // Submitter: race the hand-off with the same check the
+            // real submit path performs (len + reserved under the
+            // thief's lock).
+            s.spawn(|| {
+                while !stop.load(Ordering::SeqCst) {
+                    {
+                        let mut q = core.slots[1].queue.lock().unwrap();
+                        if q.len() + core.slots[1].reserved.load(Ordering::SeqCst) < cap {
+                            q.push_back(queued_request(None));
+                            core.counters[1].enqueued();
+                            core.slots[1].queued.store(q.len(), Ordering::SeqCst);
+                        }
+                        assert!(q.len() <= cap, "submit overshot the cap: {}", q.len());
+                    }
+                    std::thread::yield_now();
+                }
+            });
+            // Thief: steal into slot 1, verify the invariant, drain.
+            s.spawn(|| {
+                while !stop.load(Ordering::SeqCst) {
+                    steal_into(&core, 1);
+                    let drained = {
+                        let mut q = core.slots[1].queue.lock().unwrap();
+                        assert!(q.len() <= cap, "steal overshot the cap: {}", q.len());
+                        let n = q.len();
+                        q.clear();
+                        core.slots[1].queued.store(0, Ordering::SeqCst);
+                        n
+                    };
+                    for _ in 0..drained {
+                        core.counters[1].dequeued();
+                    }
+                    std::thread::yield_now();
+                }
+            });
+            std::thread::sleep(Duration::from_millis(300));
+            stop.store(true, Ordering::SeqCst);
+        });
+        assert_eq!(
+            core.slots[1].reserved.load(Ordering::SeqCst),
+            0,
+            "every reservation must be released"
+        );
+        assert!(core.counters[1].snapshot(1).stolen > 0, "the stress never exercised a steal");
+    }
+
+    #[test]
+    fn admission_estimator_gates_on_depth_service_and_recent_p99() {
+        let sched = SchedulerConfig::default()
+            .with_admission(AdmissionConfig::new(LatencySlo::new(1000.0)));
+        let core = bare_core(sched);
+        // Empty shard: always admit (zero offered load never sheds).
+        assert!(core.admission_shed(0, "d").is_none());
+        // Depth without service history: cold start admits.
+        core.counters[0].enqueued();
+        assert!(core.admission_shed(0, "d").is_none());
+        // Seed the EWMA at 500 us/request: depth 1 predicts
+        // (1+1)*500 = 1000 us <= 1.5x1000 — still admitted.
+        core.counters[0].served_with_busy(64, 500.0, 500.0, false);
+        assert!(core.admission_shed(0, "d").is_none());
+        // Depth 3 predicts 4*500 = 2000 us > 1500: shed, with the
+        // condemning estimate attached.
+        core.counters[0].enqueued();
+        core.counters[0].enqueued();
+        let (predicted, budget) = core.admission_shed(0, "d").expect("blown budget must shed");
+        assert!((predicted - 2000.0).abs() < 1e-6, "backlog estimate ({predicted})");
+        assert_eq!(budget, 1000.0);
+        // The verdict is per shard: the idle shard still admits.
+        assert!(core.admission_shed(1, "d").is_none());
+    }
+
+    #[test]
+    fn admission_recent_p99_floor_overrides_an_optimistic_backlog() {
+        // Busy time says ~100 us/request, but clients have recently
+        // seen 9 ms end to end (queueing the EWMA can't express): the
+        // recent-p99 floor must carry the verdict.
+        let sched = SchedulerConfig::default()
+            .with_admission(AdmissionConfig::new(LatencySlo::new(1000.0)));
+        let core = bare_core(sched);
+        for _ in 0..8 {
+            core.counters[0].served_with_busy(64, 9000.0, 100.0, false);
+        }
+        core.counters[0].enqueued();
+        let (predicted, _) = core.admission_shed(0, "d").expect("recent p99 must trigger");
+        assert!((predicted - 9000.0).abs() < 1e-6, "p99 floor ({predicted})");
+    }
+
+    #[test]
+    fn submit_sheds_with_a_blown_budget_and_admits_when_idle() {
+        // A 5 ms engine against a 100 us budget: the first burst of a
+        // wave is admitted (empty shard), the rest are deadline-
+        // rejected while it holds the worker.  The shed replies carry
+        // the bursts back untouched, the counters isolate sheds from
+        // serves, and an idle pool admits again.
+        let slow = EqualizerServer::new(
+            vec![SlowInstance { width: 256, delay: Duration::from_millis(5) }],
+            32,
+            2,
+            &optimizer(),
+            &lut_targets(),
+        )
+        .unwrap();
+        let sched = SchedulerConfig::default()
+            .with_admission(AdmissionConfig::new(LatencySlo::new(100.0)));
+        let pool = ServerPool::with_scheduler(
+            vec![Shard::single("slow", slow)],
+            RoutePolicy::RoundRobin,
+            16,
+            sched,
+        )
+        .unwrap()
+        .spawn();
+        let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+        let expect: Vec<f32> = burst.iter().step_by(2).copied().collect();
+        // Warm-up: seeds the service EWMA (and the reservoir) at ~5 ms.
+        let warm = pool.call("slow", burst.clone(), None).unwrap();
+        assert_eq!(warm.soft_symbols, expect);
+        // Rapid wave of 6: the first lands on an empty shard and is
+        // admitted; the submits issued while it is in service see
+        // depth >= 1 with a 5 ms EWMA against a 100 us budget — shed.
+        let pending: Vec<_> =
+            (0..6).map(|_| pool.submit("slow", burst.clone(), None).unwrap()).collect();
+        let (mut served, mut shed) = (0usize, 0usize);
+        for rx in pending {
+            let resp = rx.recv().unwrap();
+            match resp.shed {
+                Some(s) => {
+                    shed += 1;
+                    assert_eq!(s.samples, burst, "the burst comes back untouched");
+                    assert!(s.predicted_us > s.budget_us);
+                    assert_eq!(resp.batched, 0, "a shed burst was never dispatched");
+                    assert!(resp.soft_symbols.is_empty());
+                    assert!(resp.error.is_none(), "a shed is not a processing failure");
+                }
+                None => {
+                    served += 1;
+                    assert_eq!(resp.soft_symbols, expect, "admitted replies stay bit-exact");
+                }
+            }
+        }
+        assert!(served >= 1, "the empty-shard burst must be admitted");
+        assert!(shed >= 4, "the saturated wave must shed (got {shed}/{})", served + shed);
+        // Non-blocking path: occupy the worker, then try_submit must
+        // come back as a Shed verdict (not Full — capacity is free).
+        let rx = pool.submit("slow", burst.clone(), None).unwrap();
+        let client = pool.client();
+        match client.try_submit("slow", burst.clone(), None).unwrap() {
+            TrySubmit::Shed(s) => {
+                assert_eq!(s.samples, burst);
+                assert_eq!(s.budget_us, 100.0);
+            }
+            other => panic!("expected a shed verdict, got {other:?}"),
+        }
+        rx.recv().unwrap();
+        drop(client);
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_shed(), shed as u64 + 1, "every verdict is counted");
+        assert_eq!(stats.total_requests(), served as u64 + 2, "sheds never count as requests");
+        assert_eq!(stats.total_errors(), 0);
+    }
+
+    #[test]
+    fn sequential_load_never_sheds() {
+        // Even an absurdly tight budget cannot shed a sequential
+        // client: each call waits for its reply, so every submit sees
+        // an empty shard — the zero-offered-load structural gate.
+        let sched =
+            SchedulerConfig::default().with_admission(AdmissionConfig::new(LatencySlo::new(1.0)));
+        let pool = ServerPool::with_scheduler(
+            vec![Shard::single("d", engine(2, 256, 32))],
+            RoutePolicy::RoundRobin,
+            8,
+            sched,
+        )
+        .unwrap()
+        .spawn();
+        for _ in 0..20 {
+            let resp = pool.call("d", vec![0.0; 512], None).unwrap();
+            assert_eq!(resp.soft_symbols.len(), 256);
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_shed(), 0, "sequential load must never shed");
+        assert_eq!(stats.total_requests(), 20);
     }
 }

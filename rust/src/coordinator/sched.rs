@@ -50,6 +50,7 @@
 //! workers, the monitor thread) lives in [`crate::coordinator::pool`].
 
 use anyhow::Result;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 /// Scheduling policy for a [`crate::coordinator::pool::ServerPool`].
@@ -84,6 +85,13 @@ pub struct SchedulerConfig {
     /// against the measured p99, and the autoscaler gains the latency
     /// axis (widen DOP, then grow shards).
     pub slo: Option<LatencySlo>,
+    /// SLO-aware admission control at the ingress; `None` (the
+    /// default) admits every request the queue capacity allows, which
+    /// is the pre-PR-6 behavior.  With a config set, `submit`/
+    /// `try_submit` estimate the enqueue-to-reply latency of the
+    /// routed shard and shed the burst when its profile's budget is
+    /// provably blown (see [`AdmissionConfig`]).
+    pub admission: Option<AdmissionConfig>,
 }
 
 /// Default [`SchedulerConfig::coalesce_max`] used by
@@ -123,6 +131,123 @@ impl SchedulerConfig {
     pub fn with_slo(mut self, slo: LatencySlo) -> Self {
         self.slo = Some(slo);
         self
+    }
+
+    /// Builder: enable SLO-aware admission control at the ingress.
+    pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
+        self.admission = Some(admission);
+        self
+    }
+}
+
+/// Default [`AdmissionConfig::margin`]: shed only when the estimate
+/// exceeds the budget by half again, so estimation noise (a cold EWMA,
+/// a batch mid-flight) errs toward admitting.
+pub const DEFAULT_ADMISSION_MARGIN: f64 = 1.5;
+
+/// SLO-aware admission control: deadline-reject a burst at the ingress
+/// when its profile's latency budget is *provably* blown, instead of
+/// queueing it toward a reply that will arrive too late.
+///
+/// The estimator is instantaneous, not historical: a shard predicts
+/// the enqueue-to-reply latency of a new burst as
+/// `(depth + 1) * service_ewma + window` — every outstanding request
+/// ahead of it costs one amortized service time (the EWMA of per-burst
+/// busy share, so coalescing's amortization is priced in), plus its
+/// own service, plus the open coalescing window it may wait out.  The
+/// shard's recent (age-limited) p99 is folded in as a feedback floor:
+/// if admitted requests are *measured* missing their budget right now,
+/// the prediction cannot claim better.  A burst is shed only when the
+/// shard has work outstanding **and** the prediction exceeds
+/// `margin * budget` — an empty shard always admits, so zero offered
+/// load can never shed, and a shed verdict is cheap (two atomic loads
+/// plus one reservoir read; no queue lock, no allocation).
+///
+/// The per-profile map lets latency-critical and bulk profiles share
+/// shards safely: each profile is judged against its own
+/// [`LatencySlo::p99_target_us`], with [`Self::default_budget`]
+/// covering profiles absent from the map (`None` = such profiles are
+/// always admitted).
+///
+/// Bound on admitted latency: a burst is admitted only while the
+/// prediction is at most `margin * budget`, so under sustained
+/// overload the admitted-request p99 settles near
+/// `margin * budget + service` (one batch can start between the
+/// verdict and the enqueue) while the excess load surfaces as shed
+/// rate — the documented constant factor of the SLO.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Budget for profiles without a [`Self::per_profile`] entry;
+    /// `None` admits them unconditionally.
+    pub default_budget: Option<LatencySlo>,
+    /// Per-profile budgets (latency-critical vs bulk).
+    pub per_profile: BTreeMap<String, LatencySlo>,
+    /// Provability margin (>= 1): shed only when the predicted latency
+    /// exceeds `margin * budget`.
+    pub margin: f64,
+}
+
+impl Default for AdmissionConfig {
+    /// No budgets, default margin — a blank slate for
+    /// [`Self::with_profile_budget`] (note [`Self::validate`] rejects
+    /// a config left with no budget at all).
+    fn default() -> Self {
+        Self {
+            default_budget: None,
+            per_profile: BTreeMap::new(),
+            margin: DEFAULT_ADMISSION_MARGIN,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// An admission policy with one budget for every profile and the
+    /// default margin.
+    pub fn new(default_budget: LatencySlo) -> Self {
+        Self {
+            default_budget: Some(default_budget),
+            per_profile: BTreeMap::new(),
+            margin: DEFAULT_ADMISSION_MARGIN,
+        }
+    }
+
+    /// Builder: budget for one specific profile (overrides the
+    /// default).
+    pub fn with_profile_budget(mut self, profile: impl Into<String>, slo: LatencySlo) -> Self {
+        self.per_profile.insert(profile.into(), slo);
+        self
+    }
+
+    /// Builder: set the provability margin.
+    pub fn with_margin(mut self, margin: f64) -> Self {
+        self.margin = margin;
+        self
+    }
+
+    /// The budget `profile` is judged against, if any.
+    pub fn budget_for(&self, profile: &str) -> Option<&LatencySlo> {
+        self.per_profile.get(profile).or(self.default_budget.as_ref())
+    }
+
+    /// Validate every budget and the margin.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.margin.is_finite() && self.margin >= 1.0,
+            "admission margin must be >= 1 (shed only when provably blown), got {}",
+            self.margin
+        );
+        anyhow::ensure!(
+            self.default_budget.is_some() || !self.per_profile.is_empty(),
+            "admission control with no budget at all would never shed: set a default \
+             budget or at least one per-profile budget"
+        );
+        if let Some(slo) = &self.default_budget {
+            slo.validate()?;
+        }
+        for (profile, slo) in &self.per_profile {
+            slo.validate().map_err(|e| e.context(format!("profile {profile:?} budget")))?;
+        }
+        Ok(())
     }
 }
 
@@ -176,13 +301,35 @@ pub struct LatencySlo {
     /// Observation interval of the SLO loop when no autoscaler tick
     /// governs the monitor thread.
     pub tick: Duration,
+    /// Reservoir samples older than this are ignored by the recent-p99
+    /// control signal ([`crate::metrics::serving::ShardCounters::recent_p99_us`]).
+    /// Without the age-out, an *idle* shard keeps replaying its
+    /// pre-burst violations forever — the reservoir only washes out
+    /// when new requests arrive — so the [`SloController`] never
+    /// regrows the coalescing window after a burst subsides (the PR-5
+    /// known issue).  With it, a shard that has served nothing for
+    /// `stale_after` reads as calm and recovers its base window.
+    pub stale_after: Duration,
 }
+
+/// Default [`LatencySlo::stale_after`]: long enough that a live shard
+/// never ages out mid-traffic (hundreds of ticks), short enough that an
+/// idle shard recovers its window within a fraction of a second.
+pub const DEFAULT_SLO_STALE_AFTER: Duration = Duration::from_millis(250);
 
 impl LatencySlo {
     /// An SLO with the default controller tuning: relax below half the
-    /// target, after 4 consecutive calm ticks, observed every 1 ms.
+    /// target, after 4 consecutive calm ticks, observed every 1 ms,
+    /// with reservoir samples aging out of the control signal after
+    /// [`DEFAULT_SLO_STALE_AFTER`].
     pub fn new(p99_target_us: f64) -> Self {
-        Self { p99_target_us, relax_fraction: 0.5, grow_ticks: 4, tick: Duration::from_millis(1) }
+        Self {
+            p99_target_us,
+            relax_fraction: 0.5,
+            grow_ticks: 4,
+            tick: Duration::from_millis(1),
+            stale_after: DEFAULT_SLO_STALE_AFTER,
+        }
     }
 
     /// Validate the budget and controller tuning.
@@ -199,6 +346,7 @@ impl LatencySlo {
         );
         anyhow::ensure!(self.grow_ticks >= 1, "SLO grow_ticks must be >= 1");
         anyhow::ensure!(!self.tick.is_zero(), "SLO tick must be non-zero");
+        anyhow::ensure!(!self.stale_after.is_zero(), "SLO stale_after must be non-zero");
         Ok(())
     }
 
@@ -757,6 +905,53 @@ mod tests {
         assert!(bad_ticks.validate().is_err());
         let bad_tick = LatencySlo { tick: Duration::ZERO, ..LatencySlo::new(500.0) };
         assert!(bad_tick.validate().is_err());
+        let bad_stale = LatencySlo { stale_after: Duration::ZERO, ..LatencySlo::new(500.0) };
+        assert!(bad_stale.validate().is_err());
+    }
+
+    #[test]
+    fn admission_budget_resolution_and_validation() {
+        // No budget at all: rejected (it would never shed).
+        assert!(AdmissionConfig::default().validate().is_err());
+        // Default-only: every profile resolves to it.
+        let adm = AdmissionConfig::new(LatencySlo::new(500.0));
+        adm.validate().unwrap();
+        assert_eq!(adm.margin, DEFAULT_ADMISSION_MARGIN);
+        assert_eq!(adm.budget_for("cnn_imdd").unwrap().p99_target_us, 500.0);
+        assert_eq!(adm.budget_for("anything").unwrap().p99_target_us, 500.0);
+        // A per-profile entry overrides the default; other profiles
+        // keep falling through.
+        let adm = adm.with_profile_budget("bulk", LatencySlo::new(50_000.0));
+        assert_eq!(adm.budget_for("bulk").unwrap().p99_target_us, 50_000.0);
+        assert_eq!(adm.budget_for("cnn_imdd").unwrap().p99_target_us, 500.0);
+        // Map-only (no default): unmapped profiles are always admitted.
+        let adm = AdmissionConfig::default()
+            .with_profile_budget("critical", LatencySlo::new(300.0));
+        adm.validate().unwrap();
+        assert!(adm.budget_for("critical").is_some());
+        assert!(adm.budget_for("bulk").is_none(), "no default: unmapped profiles admit");
+        // Margins below 1 (shedding on *unproven* misses) and invalid
+        // budgets are rejected.
+        assert!(AdmissionConfig::new(LatencySlo::new(500.0)).with_margin(0.9).validate().is_err());
+        assert!(AdmissionConfig::new(LatencySlo::new(500.0))
+            .with_margin(f64::NAN)
+            .validate()
+            .is_err());
+        assert!(AdmissionConfig::new(LatencySlo::new(-1.0)).validate().is_err());
+        assert!(AdmissionConfig::default()
+            .with_profile_budget("p", LatencySlo::new(0.0))
+            .validate()
+            .is_err());
+        // Margin exactly 1 is the tightest legal policy.
+        assert!(AdmissionConfig::new(LatencySlo::new(500.0)).with_margin(1.0).validate().is_ok());
+    }
+
+    #[test]
+    fn scheduler_config_carries_admission() {
+        let cfg = SchedulerConfig::default();
+        assert!(cfg.admission.is_none(), "default pools admit everything");
+        let cfg = cfg.with_admission(AdmissionConfig::new(LatencySlo::new(400.0)));
+        assert_eq!(cfg.admission.unwrap().budget_for("x").unwrap().p99_target_us, 400.0);
     }
 
     #[test]

@@ -17,12 +17,23 @@
 //! comparable across scheduler modes and usable as the SLO control
 //! signal.  The SLO loop reads a *recent* sub-window
 //! ([`ShardCounters::recent_p99_us`]) so recovery becomes visible
-//! without waiting for the full ring to wash out.
+//! without waiting for the full ring to wash out — and that sub-window
+//! is **age-limited**: each sample carries its completion time, and
+//! samples older than the caller's `max_age` are ignored, so an idle
+//! shard stops replaying pre-burst violations once they go stale
+//! (the ring itself only washes out under new traffic).
+//!
+//! Accounting rules (PR 6): only *successfully served* requests
+//! contribute symbols, busy time and latency samples.  Errored
+//! requests count in `requests`/`errors` only — a fast failure must
+//! not deflate p99 or inflate the throughput the autoscaler's signals
+//! are computed from.  Admission-shed requests never reach a queue at
+//! all and count only in `shed`.
 
 use super::stats::LatencyStats;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Latency samples retained per shard (ring buffer of the most recent).
 pub const LATENCY_RING_CAP: usize = 4096;
@@ -33,47 +44,59 @@ pub const LATENCY_RING_CAP: usize = 4096;
 /// that a p99 over it is meaningful.
 pub const SLO_RECENT_WINDOW: usize = 256;
 
-/// Ring buffer of the last [`LATENCY_RING_CAP`] latency samples.
+/// Ring buffer of the last [`LATENCY_RING_CAP`] latency samples, each
+/// timestamped at completion so control-signal reads can age out stale
+/// history ([`LatencyRing::recent`]).
 #[derive(Debug, Default)]
 struct LatencyRing {
-    samples_us: Vec<f64>,
+    /// (latency in us, completion time), insertion order modulo wrap.
+    samples: Vec<(f64, Instant)>,
     next: usize,
 }
 
 impl LatencyRing {
     fn record(&mut self, us: f64) {
-        if self.samples_us.len() < LATENCY_RING_CAP {
-            self.samples_us.push(us);
+        let entry = (us, Instant::now());
+        if self.samples.len() < LATENCY_RING_CAP {
+            self.samples.push(entry);
         } else {
-            self.samples_us[self.next] = us;
+            self.samples[self.next] = entry;
             self.next = (self.next + 1) % LATENCY_RING_CAP;
         }
     }
 
+    /// Full-reservoir stats — the *reporting* view (snapshots, the
+    /// stats table), deliberately not age-limited: history stays
+    /// visible until it washes out of the ring.
     fn stats(&self) -> LatencyStats {
         let mut s = LatencyStats::new();
-        for &us in &self.samples_us {
+        for &(us, _) in &self.samples {
             s.record_us(us);
         }
         s
     }
 
-    /// Stats over only the most recent `last` samples (insertion
-    /// order): when the ring is full, `next` is the oldest slot and
-    /// `next - 1` (wrapping) the newest.
-    fn recent(&self, last: usize) -> LatencyStats {
-        let n = self.samples_us.len();
+    /// Stats over the most recent `last` samples no older than
+    /// `max_age` — the *control-signal* view.  Walks newest to oldest
+    /// (when the ring is full, `next` is the oldest slot and `next - 1`
+    /// the newest) and stops at the first stale sample: anything
+    /// behind it is older still.
+    fn recent(&self, last: usize, max_age: Duration) -> LatencyStats {
+        let n = self.samples.len();
         let k = last.min(n);
+        let now = Instant::now();
         let mut s = LatencyStats::new();
-        if n < LATENCY_RING_CAP {
-            for &us in &self.samples_us[n - k..] {
-                s.record_us(us);
+        for i in 0..k {
+            let idx = if n < LATENCY_RING_CAP {
+                n - 1 - i
+            } else {
+                (self.next + LATENCY_RING_CAP - 1 - i) % LATENCY_RING_CAP
+            };
+            let (us, at) = self.samples[idx];
+            if now.saturating_duration_since(at) > max_age {
+                break;
             }
-        } else {
-            for i in 0..k {
-                let idx = (self.next + LATENCY_RING_CAP - 1 - i) % LATENCY_RING_CAP;
-                s.record_us(self.samples_us[idx]);
-            }
+            s.record_us(us);
         }
         s
     }
@@ -93,8 +116,13 @@ pub struct ShardCounters {
     peak_queue_depth: AtomicUsize,
     requests: AtomicU64,
     errors: AtomicU64,
+    shed: AtomicU64,
     symbols: AtomicU64,
     busy_us: AtomicU64,
+    /// EWMA of per-request busy share (f64 bits) — the amortized
+    /// service time the admission estimator prices a queue position
+    /// at.  Written only by the owning shard worker.
+    service_ewma_bits: AtomicU64,
     stolen: AtomicU64,
     coalesced_batches: AtomicU64,
     coalesced_requests: AtomicU64,
@@ -151,6 +179,12 @@ impl ShardCounters {
     /// wall time **once** — so each request contributes its share
     /// (`busy_us = batch wall time / batch size`) and summed busy
     /// time stays wall-clock-true.
+    ///
+    /// An errored request counts in `requests`/`errors` only: its
+    /// symbols (there are none), busy time and latency sample are all
+    /// dropped, because a fast failure would deflate p99 and skew the
+    /// queue-pressure / DOP signals the autoscaler derives from
+    /// throughput — exactly the accounting the scheduler must not see.
     pub fn served_with_busy(
         &self,
         symbols: usize,
@@ -161,10 +195,38 @@ impl ShardCounters {
         self.requests.fetch_add(1, Ordering::Relaxed);
         if is_error {
             self.errors.fetch_add(1, Ordering::Relaxed);
+            return;
         }
         self.symbols.fetch_add(symbols as u64, Ordering::Relaxed);
-        self.busy_us.fetch_add(busy_us.max(0.0).round() as u64, Ordering::Relaxed);
+        let busy = busy_us.max(0.0);
+        self.busy_us.fetch_add(busy.round() as u64, Ordering::Relaxed);
+        // EWMA over per-request busy share (alpha = 1/16).  Only the
+        // owning worker writes, so a plain load/store pair is exact.
+        let prev = f64::from_bits(self.service_ewma_bits.load(Ordering::Relaxed));
+        let next = if prev <= 0.0 { busy } else { prev + (busy - prev) / 16.0 };
+        self.service_ewma_bits.store(next.to_bits(), Ordering::Relaxed);
         self.latency.lock().expect("latency lock").record(latency_us);
+    }
+
+    /// Record one admission-shed request: visible in the shed count,
+    /// invisible everywhere else (no symbols, busy time, latency
+    /// sample or queue-depth movement — the burst never reached a
+    /// queue).
+    pub fn shed_one(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests shed by admission control on this shard.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// EWMA of per-request busy share, microseconds (0.0 before the
+    /// first completion) — the amortized cost of one queue position,
+    /// which prices coalescing in: a batch of n at wall time w
+    /// contributes n samples of w/n.
+    pub fn service_ewma_us(&self) -> f64 {
+        f64::from_bits(self.service_ewma_bits.load(Ordering::Relaxed))
     }
 
     /// Record `n` bursts stolen *by* this shard from another queue.
@@ -192,10 +254,14 @@ impl ShardCounters {
     }
 
     /// p99 end-to-end latency over the most recent `last` completions
-    /// (0.0 while no sample exists) — the SLO control signal.  Bounded
-    /// by the reservoir, so a long-lived shard pays a constant cost.
-    pub fn recent_p99_us(&self, last: usize) -> f64 {
-        self.latency.lock().expect("latency lock").recent(last).percentile_us(99.0)
+    /// no older than `max_age` (0.0 while no live sample exists) — the
+    /// SLO control signal.  Bounded by the reservoir, so a long-lived
+    /// shard pays a constant cost.  The age limit is what lets an idle
+    /// shard recover: with no new completions the ring never washes
+    /// out, so without it a pre-burst violation would pin the signal
+    /// forever (pass [`Duration::MAX`] for the unaged view).
+    pub fn recent_p99_us(&self, last: usize, max_age: Duration) -> f64 {
+        self.latency.lock().expect("latency lock").recent(last, max_age).percentile_us(99.0)
     }
 
     /// Immutable snapshot of this shard's counters (latency stats over
@@ -206,6 +272,7 @@ impl ShardCounters {
             shard,
             requests: self.requests.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             symbols: self.symbols.load(Ordering::Relaxed),
             busy_us: self.busy_us.load(Ordering::Relaxed),
             stolen: self.stolen.load(Ordering::Relaxed),
@@ -228,8 +295,14 @@ pub struct ShardStats {
     pub shard: usize,
     /// Requests this shard completed (including stolen ones).
     pub requests: u64,
-    /// Completed requests that failed.
+    /// Completed requests that failed.  Errored requests contribute no
+    /// symbols, busy time or latency samples
+    /// ([`ShardCounters::served_with_busy`]).
     pub errors: u64,
+    /// Requests admission control deadline-rejected at the ingress for
+    /// this shard.  Shed requests never reached the queue: they appear
+    /// here and nowhere else.
+    pub shed: u64,
     /// Soft symbols produced (== bits for PAM-2).
     pub symbols: u64,
     /// Summed wall time the shard worker spent serving.  Coalesced
@@ -330,6 +403,11 @@ impl ServerStats {
         self.shards.iter().map(|s| s.errors).sum()
     }
 
+    /// Requests shed by admission control pool-wide.
+    pub fn total_shed(&self) -> u64 {
+        self.shards.iter().map(|s| s.shed).sum()
+    }
+
     /// Soft symbols produced pool-wide.
     pub fn total_symbols(&self) -> u64 {
         self.shards.iter().map(|s| s.symbols).sum()
@@ -365,10 +443,11 @@ impl ServerStats {
         let mut out = String::new();
         let _ = writeln!(
             out,
-            "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>6} {:>6} {:>8} {:>10} {:>10} {:>10}",
+            "{:>5} {:>9} {:>7} {:>6} {:>12} {:>6} {:>6} {:>6} {:>6} {:>8} {:>10} {:>10} {:>10}",
             "shard",
             "requests",
             "errors",
+            "shed",
             "symbols",
             "queue",
             "peak",
@@ -382,11 +461,12 @@ impl ServerStats {
         for s in &self.shards {
             let _ = writeln!(
                 out,
-                "{:>5} {:>9} {:>7} {:>12} {:>6} {:>6} {:>6} {:>6} {:>8.0} {:>10.1} {:>10.1} \
-                 {:>10.2}",
+                "{:>5} {:>9} {:>7} {:>6} {:>12} {:>6} {:>6} {:>6} {:>6} {:>8.0} {:>10.1} \
+                 {:>10.1} {:>10.2}",
                 s.shard,
                 s.requests,
                 s.errors,
+                s.shed,
                 s.symbols,
                 s.queue_depth,
                 s.peak_queue_depth,
@@ -400,9 +480,10 @@ impl ServerStats {
         }
         let _ = writeln!(
             out,
-            "total {:>9} {:>7} {:>12}  ({:.2} Msym/s per busy shard)",
+            "total {:>9} {:>7} {:>6} {:>12}  ({:.2} Msym/s per busy shard)",
             self.total_requests(),
             self.total_errors(),
+            self.total_shed(),
             self.total_symbols(),
             self.busy_msym_per_s()
         );
@@ -435,6 +516,10 @@ impl ServerStats {
 mod tests {
     use super::*;
 
+    /// A max-age that never triggers in a test's lifetime: the unaged
+    /// control-signal view.
+    const NO_AGE: Duration = Duration::from_secs(3600);
+
     #[test]
     fn queue_depth_tracks_peak() {
         let c = ShardCounters::default();
@@ -457,10 +542,68 @@ mod tests {
         assert_eq!(s.shard, 3);
         assert_eq!(s.requests, 2);
         assert_eq!(s.errors, 1);
-        assert_eq!(s.symbols, 768);
-        assert_eq!(s.busy_us, 400);
-        assert_eq!(s.max_us, 300.0);
-        assert!(s.p50_us >= 100.0 && s.p50_us <= 300.0);
+        // The errored request is visible in the counts above and
+        // nowhere else: no symbols, busy time or latency sample.
+        assert_eq!(s.symbols, 512);
+        assert_eq!(s.busy_us, 100);
+        assert_eq!(s.max_us, 100.0);
+        assert_eq!(s.p50_us, 100.0);
+    }
+
+    #[test]
+    fn errors_leave_throughput_and_latency_signals_untouched() {
+        // The PR-6 accounting bugfix: a storm of fast failures must not
+        // deflate p99 or add busy time / symbols — those feed the
+        // autoscaler's queue-pressure and DOP signals.
+        let c = ShardCounters::default();
+        c.served(128, 5_000.0, false);
+        for _ in 0..100 {
+            c.served(0, 1.0, true);
+        }
+        let s = c.snapshot(0);
+        assert_eq!(s.requests, 101);
+        assert_eq!(s.errors, 100);
+        assert_eq!(s.symbols, 128);
+        assert_eq!(s.busy_us, 5_000);
+        assert_eq!(s.p99_us, 5_000.0, "error latencies never enter the reservoir");
+        assert_eq!(c.recent_p99_us(SLO_RECENT_WINDOW, NO_AGE), 5_000.0);
+        assert_eq!(c.service_ewma_us(), 5_000.0, "EWMA sees served work only");
+    }
+
+    #[test]
+    fn shed_counts_are_isolated() {
+        let c = ShardCounters::default();
+        c.shed_one();
+        c.shed_one();
+        assert_eq!(c.shed(), 2);
+        let s = c.snapshot(0);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.requests, 0, "a shed request never completed");
+        assert_eq!(s.symbols, 0);
+        assert_eq!(s.busy_us, 0);
+        assert_eq!(s.queue_depth, 0, "a shed request never queued");
+        assert_eq!(s.p99_us, 0.0);
+        let stats = ServerStats::snapshot([&c]);
+        assert_eq!(stats.total_shed(), 2);
+        assert!(stats.render().contains("shed"), "shed column renders");
+    }
+
+    #[test]
+    fn service_ewma_tracks_busy_share() {
+        let c = ShardCounters::default();
+        assert_eq!(c.service_ewma_us(), 0.0, "cold start");
+        c.served_with_busy(128, 400.0, 100.0, false);
+        assert_eq!(c.service_ewma_us(), 100.0, "first sample seeds the EWMA");
+        // A long run at 200 us converges toward 200 from 100.
+        for _ in 0..200 {
+            c.served_with_busy(128, 400.0, 200.0, false);
+        }
+        let ewma = c.service_ewma_us();
+        assert!((ewma - 200.0).abs() < 1.0, "converged: {ewma}");
+        // One outlier moves it by only 1/16 of the gap.
+        c.served_with_busy(128, 400.0, 3400.0, false);
+        let after = c.service_ewma_us();
+        assert!(after > ewma && after < 450.0, "smoothed: {after}");
     }
 
     #[test]
@@ -556,15 +699,44 @@ mod tests {
         for _ in 0..300 {
             c.served(1, 10_000.0, false);
         }
-        assert!(c.recent_p99_us(SLO_RECENT_WINDOW) >= 10_000.0);
+        assert!(c.recent_p99_us(SLO_RECENT_WINDOW, NO_AGE) >= 10_000.0);
         for _ in 0..300 {
             c.served(1, 50.0, false);
         }
-        assert_eq!(c.recent_p99_us(SLO_RECENT_WINDOW), 50.0);
+        assert_eq!(c.recent_p99_us(SLO_RECENT_WINDOW, NO_AGE), 50.0);
         assert!(c.snapshot(0).p99_us >= 10_000.0, "full ring still remembers");
         // Degenerate windows behave.
-        assert_eq!(c.recent_p99_us(0), 0.0);
-        assert_eq!(ShardCounters::default().recent_p99_us(SLO_RECENT_WINDOW), 0.0);
+        assert_eq!(c.recent_p99_us(0, NO_AGE), 0.0);
+        assert_eq!(ShardCounters::default().recent_p99_us(SLO_RECENT_WINDOW, NO_AGE), 0.0);
+    }
+
+    #[test]
+    fn stale_samples_age_out_of_the_control_signal() {
+        // The PR-6 regrow bugfix: an idle shard's reservoir never
+        // washes out (nothing new is served), so without the age-out
+        // the pre-burst violations below would pin recent_p99 at
+        // 10 ms forever and the SLO loop would never regrow the
+        // window.
+        let c = ShardCounters::default();
+        for _ in 0..50 {
+            c.served(1, 10_000.0, false);
+        }
+        assert!(c.recent_p99_us(SLO_RECENT_WINDOW, NO_AGE) >= 10_000.0);
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(
+            c.recent_p99_us(SLO_RECENT_WINDOW, Duration::from_millis(30)),
+            0.0,
+            "aged out: the idle shard reads as calm"
+        );
+        assert!(
+            c.recent_p99_us(SLO_RECENT_WINDOW, NO_AGE) >= 10_000.0,
+            "the unaged view (and the reporting snapshot) still remember"
+        );
+        assert!(c.snapshot(0).p99_us >= 10_000.0);
+        // Fresh traffic re-enters the signal immediately — and masks
+        // the stale history behind it.
+        c.served(1, 70.0, false);
+        assert_eq!(c.recent_p99_us(SLO_RECENT_WINDOW, Duration::from_millis(30)), 70.0);
     }
 
     #[test]
@@ -576,12 +748,12 @@ mod tests {
             c.served(1, i as f64, false);
         }
         // Newest 10 samples are CAP+90 .. CAP+99.
-        assert_eq!(c.recent_p99_us(10), (LATENCY_RING_CAP + 99) as f64);
+        assert_eq!(c.recent_p99_us(10, NO_AGE), (LATENCY_RING_CAP + 99) as f64);
         let c2 = ShardCounters::default();
         for i in 0..(2 * LATENCY_RING_CAP + 7) {
             c2.served(1, i as f64, false);
         }
-        assert_eq!(c2.recent_p99_us(1), (2 * LATENCY_RING_CAP + 6) as f64);
+        assert_eq!(c2.recent_p99_us(1, NO_AGE), (2 * LATENCY_RING_CAP + 6) as f64);
     }
 
     #[test]

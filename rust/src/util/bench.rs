@@ -103,6 +103,35 @@ impl Throughput {
         }
         j
     }
+
+    /// [`Self::to_json_with_latency`] extended with the open-loop
+    /// overload columns — the `serving_open_loop` records: `self` is
+    /// the *admitted* throughput, `offered_rps` the open-loop arrival
+    /// rate the generator replayed (`arrival` names its shape), and
+    /// `shed_rate` the fraction of arrivals admission control
+    /// deadline-rejected.  Together the rows trace p50/p99/shed-rate
+    /// vs offered load — the curve that shows admitted p99 staying
+    /// bounded while excess load shows up as shed rate instead of
+    /// latency.
+    #[allow(clippy::too_many_arguments)]
+    pub fn to_json_open_loop(
+        &self,
+        profile: &str,
+        path: &str,
+        arrival: &str,
+        offered_rps: f64,
+        shed_rate: f64,
+        p50_us: f64,
+        p99_us: f64,
+    ) -> Json {
+        let mut j = self.to_json_with_latency(profile, path, p50_us, p99_us);
+        if let Json::Obj(m) = &mut j {
+            m.insert("arrival".to_string(), Json::Str(arrival.to_string()));
+            m.insert("offered_rps".to_string(), Json::Num(offered_rps));
+            m.insert("shed_rate".to_string(), Json::Num(shed_rate));
+        }
+        j
+    }
 }
 
 fn fmt_dur(d: Duration) -> String {
@@ -252,5 +281,24 @@ mod tests {
         assert_eq!(jl.req("p50_us").unwrap().as_f64(), Some(120.5));
         assert_eq!(jl.req("p99_us").unwrap().as_f64(), Some(310.0));
         assert_eq!(jl.req("path").unwrap().as_str(), Some("serving_slo_adaptive"));
+    }
+
+    #[test]
+    fn open_loop_record_carries_overload_columns() {
+        let t = Throughput::from_rate(1e6, 1.0);
+        let j = t.to_json_open_loop(
+            "cnn_imdd",
+            "serving_open_loop",
+            "poisson",
+            4_000.0,
+            0.35,
+            150.0,
+            900.0,
+        );
+        assert_eq!(j.req("arrival").unwrap().as_str(), Some("poisson"));
+        assert_eq!(j.req("offered_rps").unwrap().as_f64(), Some(4_000.0));
+        assert_eq!(j.req("shed_rate").unwrap().as_f64(), Some(0.35));
+        assert_eq!(j.req("p99_us").unwrap().as_f64(), Some(900.0));
+        assert!(j.req("symbols_per_s").unwrap().as_f64().unwrap() > 0.0, "admitted throughput");
     }
 }

@@ -8,4 +8,5 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod loadgen;
 pub mod prop;

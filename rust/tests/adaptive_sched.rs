@@ -7,7 +7,9 @@
 //! unit-tested in `coordinator::sched`), the latency-SLO loop must
 //! shrink the coalescing window until p99 recovers, and DOP rescaling
 //! must widen under latency pressure — all without changing a single
-//! output bit.
+//! output bit.  The stale-reservoir regression pins the PR-6 age-out
+//! fix: an idle shard must stop replaying pre-burst violations and
+//! regrow its coalescing window back to base.
 
 use equalizer::coordinator::instance::EqualizerInstance;
 use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool, Shard};
@@ -219,6 +221,68 @@ fn slo_shrinks_the_window_and_p99_recovers_bit_exactly() {
         stats.shards[0].window_us < base_window.as_micros() as f64,
         "final snapshot keeps the adapted window visible"
     );
+}
+
+#[test]
+fn idle_shard_ages_out_stale_violations_and_regrows_its_window() {
+    // Regression for the PR-5 known issue fixed in PR-6: the recent-
+    // p99 control signal is a reservoir that only washes out when new
+    // requests arrive, so after a violating burst subsided an *idle*
+    // shard kept replaying its pre-burst violations forever and the
+    // SLO loop never regrew the coalescing window.  With
+    // `LatencySlo::stale_after`, samples age out of the signal: the
+    // idle shard reads as calm and must double its window back to
+    // base (4 calm ticks per doubling, so well under a second here).
+    let delay = Duration::from_millis(5);
+    let base_window = Duration::from_millis(200);
+    let slo = LatencySlo {
+        stale_after: Duration::from_millis(100),
+        ..LatencySlo::new(20_000.0) // 20 ms p99 budget
+    };
+    let sched = SchedulerConfig::default().with_coalescing(base_window).with_slo(slo);
+    let pool = ServerPool::with_scheduler(
+        vec![slow_shard(delay)],
+        RoutePolicy::ShortestQueue,
+        64,
+        sched,
+    )
+    .unwrap()
+    .spawn();
+    let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+
+    // One window-bound wave: every e2e latency ~200 ms >> 20 ms, so
+    // the controller collapses the window (same setup as the SLO
+    // shrink test above).
+    let pending: Vec<_> =
+        (0..8).map(|_| pool.submit("slow", burst.clone(), None).unwrap()).collect();
+    for rx in pending {
+        assert!(rx.recv().unwrap().error.is_none());
+    }
+    assert!(
+        eventually(Duration::from_secs(5), || {
+            pool.stats().shards[0].window_us <= base_window.as_micros() as f64 / 4.0
+        }),
+        "the violating wave must shrink the window first (still {} us)",
+        pool.stats().shards[0].window_us
+    );
+
+    // Now the shard is idle: no new samples ever replace the
+    // violating ones.  Once they age past `stale_after` the signal
+    // reads 0 us (calm), and the window must regrow all the way back
+    // to base — without the age-out this poll times out, because the
+    // stale 200 ms samples keep the controller in violation forever.
+    let base_us = base_window.as_micros() as f64;
+    assert!(
+        eventually(Duration::from_secs(10), || {
+            pool.stats().shards[0].window_us >= base_us
+        }),
+        "an idle shard must age out stale violations and regrow to base (at {} us of {} us)",
+        pool.stats().shards[0].window_us,
+        base_us
+    );
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), 8);
+    assert_eq!(stats.total_errors(), 0);
 }
 
 #[test]

@@ -279,7 +279,7 @@ fn try_submit_reports_backpressure() {
     // backpressure — and gets its samples handed back untouched.
     let returned = match pool.try_submit("slow", burst.clone(), None).unwrap() {
         TrySubmit::Full(samples) => samples,
-        TrySubmit::Queued(_) => panic!("bounded queue must report Full"),
+        other => panic!("bounded queue must report Full, got {other:?}"),
     };
     assert_eq!(returned, burst, "rejected burst comes back intact");
     // Both queued bursts complete normally.
