@@ -52,6 +52,43 @@ fn main() {
         pool.shutdown();
     }
 
+    // ---- net front end: loopback TCP vs in-process --------------------
+    // Same near-free decimator compute, one burst at a time, in process
+    // vs through the full wire path (frame codec + loopback TCP + the
+    // server's reader thread).  The gap is the per-request cost of
+    // having an outside — docs/PROTOCOL.md documents the frame format,
+    // docs/OPERATIONS.md what to expect of it under load.
+    header("net front end (loopback TCP vs in-process, 8k-sample bursts)");
+    {
+        use equalizer::coordinator::net::{NetClient, NetServer};
+        let pool = ServerPool::new(
+            vec![decimator_shard(2, 4096, 64)],
+            RoutePolicy::ShortestQueue,
+            64,
+        )
+        .unwrap()
+        .spawn();
+        let m = b.bench("net_inprocess call", || {
+            pool.call("default", burst.clone(), None).unwrap();
+        });
+        let local = m.throughput(1.0);
+        println!("    -> {:.1} kreq/s in-process", local / 1e3);
+        let server = NetServer::spawn(pool.client(), "127.0.0.1:0").unwrap();
+        let net = NetClient::connect(server.local_addr()).unwrap();
+        let m = b.bench("net_loopback call", || {
+            net.call("default", burst.clone(), None).unwrap();
+        });
+        let remote = m.throughput(1.0);
+        println!(
+            "    -> {:.1} kreq/s over loopback ({:.2}x in-process: wire + frame codec)",
+            remote / 1e3,
+            remote / local
+        );
+        drop(net);
+        server.shutdown();
+        pool.shutdown();
+    }
+
     // ---- shard scaling on the real native CNN profile ---------------
     let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     let Ok(reg) = ArtifactRegistry::discover(dir) else {

@@ -17,12 +17,17 @@
 //! is validated against (Fig. 12), [`seqlen`] the Sec. 6.2
 //! optimization framework, [`server`] the single-stream serving
 //! engine, [`pool`] the sharded multi-stream pool with per-request
-//! profile selection built on top of it, and [`sched`] the adaptive
+//! profile selection built on top of it, [`sched`] the adaptive
 //! scheduling policy (cross-request coalescing, work stealing,
-//! hysteretic shard autoscaling) that pool runs under load.
+//! hysteretic shard autoscaling) that pool runs under load, and
+//! [`net`] the TCP front end that serves the pool's client surface —
+//! backpressure, admission sheds, retry-after hints and all — to
+//! remote processes over the docs/PROTOCOL.md frame format.
 
 pub mod instance;
 pub mod msm;
+#[warn(missing_docs)]
+pub mod net;
 pub mod ogm;
 pub mod orm;
 #[warn(missing_docs)]

@@ -1,0 +1,238 @@
+//! Remote client mirroring the [`PoolClient`] surface over a TCP
+//! connection: `submit` / `try_submit` / `call` with the same verdict
+//! vocabulary (`Full` hands the burst back, `Shed` attaches the
+//! condemning estimate and the [`Shed::retry_after_us`] backoff hint),
+//! so load generators written against the in-process pool — including
+//! `util::loadgen` replay — drive real sockets unchanged.
+
+use super::super::pool::{PoolResponse, Shed, TrySubmit};
+use super::wire::{self, Frame, Request, Response, Status};
+use anyhow::{Context, Result};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
+
+/// How long [`NetClient::submit`] sleeps before retrying a
+/// [`Status::Full`] backpressure verdict.  `Full` carries no estimate
+/// (the queue may drain any moment), so a short fixed pause is the
+/// honest strategy; `Shed` retries are paced by the server's
+/// [`Shed::retry_after_us`] instead.
+const FULL_RETRY_PAUSE: Duration = Duration::from_micros(200);
+
+/// A remote [`PoolClient`]-alike speaking the docs/PROTOCOL.md frame
+/// format over one TCP connection.  Requests on a single `NetClient`
+/// are serialized (one frame in flight per connection, enforced by an
+/// internal lock); for concurrency, open one `NetClient` per thread —
+/// connections are cheap and the server spawns one reader each.
+///
+/// [`PoolClient`]: super::super::pool::PoolClient
+///
+/// # Examples
+///
+/// Serve a pool over loopback and equalize a burst remotely:
+///
+/// ```
+/// use equalizer::coordinator::instance::DecimatorInstance;
+/// use equalizer::coordinator::net::{NetClient, NetServer};
+/// use equalizer::coordinator::pool::{RoutePolicy, ServerPool, Shard};
+/// use equalizer::coordinator::seqlen::SeqLenOptimizer;
+/// use equalizer::coordinator::server::EqualizerServer;
+/// use equalizer::coordinator::timing::TimingModel;
+///
+/// let optimizer = SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6));
+/// let targets: Vec<f64> = (1..=10).map(|i| i as f64 * 1e9).collect();
+/// let engine = EqualizerServer::new(
+///     vec![DecimatorInstance { width: 256, n_os: 2 }],
+///     32,
+///     2,
+///     &optimizer,
+///     &targets,
+/// )?;
+/// let pool =
+///     ServerPool::new(vec![Shard::single("demo", engine)], RoutePolicy::RoundRobin, 8)?.spawn();
+///
+/// let server = NetServer::spawn(pool.client(), "127.0.0.1:0")?;
+/// let client = NetClient::connect(server.local_addr())?;
+/// let resp = client.submit("demo", vec![0.0; 512], None)?;
+/// assert_eq!(resp.soft_symbols.len(), 256); // N_os = 2 halves the burst
+/// drop(client);
+/// server.shutdown();
+/// pool.shutdown();
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+pub struct NetClient {
+    stream: Mutex<TcpStream>,
+    next_id: AtomicU64,
+}
+
+impl NetClient {
+    /// Connect to a [`NetServer`](super::NetServer) (or any speaker of
+    /// the protocol) at `addr`.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr).context("connecting to the serving endpoint")?;
+        stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+        Ok(NetClient { stream: Mutex::new(stream), next_id: AtomicU64::new(1) })
+    }
+
+    /// One locked write-then-read exchange on the connection.
+    fn roundtrip(&self, frame: &Frame) -> Result<Frame> {
+        let mut stream = self.stream.lock().expect("net client stream");
+        wire::write_frame(&mut *stream, frame)?;
+        wire::read_frame(&mut *stream)?
+            .ok_or_else(|| anyhow::anyhow!("server closed the connection before replying"))
+    }
+
+    /// Send one request and return `(samples, response)` — the burst
+    /// comes back out of the owned request frame (no clone), so `Full`
+    /// retries and `Shed` reconstruction reuse the caller's allocation
+    /// exactly like the in-process pool does.
+    fn exchange(
+        &self,
+        profile: &str,
+        samples: Vec<f32>,
+        t_req: Option<f64>,
+    ) -> Result<(Vec<f32>, Response)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let frame = Frame::Request(Request { id, profile: profile.to_string(), t_req, samples });
+        let reply = self.roundtrip(&frame)?;
+        let Frame::Request(req) = frame else { unreachable!("constructed as a request") };
+        let Frame::Response(resp) = reply else {
+            anyhow::bail!("server sent a non-response frame");
+        };
+        anyhow::ensure!(
+            resp.id == id,
+            "response id {} does not match request id {id} (pipelining is not supported)",
+            resp.id
+        );
+        if resp.status == Status::Error {
+            anyhow::bail!("server error: {}", resp.detail);
+        }
+        Ok((req.samples, resp))
+    }
+
+    /// Remote twin of `PoolClient::try_submit`: one non-blocking-at-
+    /// the-pool attempt.  `Full` hands the burst back untouched, `Shed`
+    /// wraps it in a [`Shed`] with the server's estimates, and an
+    /// admitted burst comes back as `Queued` with the reply already
+    /// buffered in the receiver (the exchange is synchronous on the
+    /// wire — the channel exists so pool-written drivers run
+    /// unmodified).  Server-reported errors are `Err`, like an
+    /// in-process unknown-profile rejection.
+    pub fn try_submit(
+        &self,
+        profile: &str,
+        samples: Vec<f32>,
+        t_req: Option<f64>,
+    ) -> Result<TrySubmit> {
+        let (samples, resp) = self.exchange(profile, samples, t_req)?;
+        Ok(match resp.status {
+            Status::Full => TrySubmit::Full(samples),
+            Status::Shed => TrySubmit::Shed(shed_from(samples, &resp)),
+            Status::Ok | Status::Error => {
+                let (tx, rx) = mpsc::channel();
+                tx.send(pool_response_from(profile, resp)).expect("fresh channel");
+                TrySubmit::Queued(rx)
+            }
+        })
+    }
+
+    /// Remote twin of `PoolClient::submit` + `recv`: block until the
+    /// burst is served or shed.  `Full` backpressure is retried after
+    /// [`FULL_RETRY_PAUSE`] (the blocking wait the in-process submit
+    /// does on the queue condvar); a shed comes back as a
+    /// [`PoolResponse`] with [`PoolResponse::shed`] set, carrying the
+    /// burst and the retry-after hint.
+    pub fn submit(
+        &self,
+        profile: &str,
+        mut samples: Vec<f32>,
+        t_req: Option<f64>,
+    ) -> Result<PoolResponse> {
+        loop {
+            let (returned, resp) = self.exchange(profile, samples, t_req)?;
+            if resp.status == Status::Full {
+                samples = returned;
+                std::thread::sleep(FULL_RETRY_PAUSE);
+                continue;
+            }
+            let mut out = pool_response_from(profile, resp);
+            if let Some(shed) = &mut out.shed {
+                shed.samples = returned;
+            }
+            return Ok(out);
+        }
+    }
+
+    /// Remote twin of `PoolClient::call`: submit and wait, with sheds
+    /// and processing failures surfaced as `Err` (the shed error names
+    /// the retry-after hint, matching the in-process message shape).
+    pub fn call(
+        &self,
+        profile: &str,
+        samples: Vec<f32>,
+        t_req: Option<f64>,
+    ) -> Result<PoolResponse> {
+        let resp = self.submit(profile, samples, t_req)?;
+        if let Some(shed) = &resp.shed {
+            anyhow::bail!(
+                "admission shed on shard {}: predicted {:.0} us exceeds the {:.0} us budget \
+                 (profile {:?}; retry after {:.0} us)",
+                resp.shard,
+                shed.predicted_us,
+                shed.budget_us,
+                resp.profile,
+                shed.retry_after_us
+            );
+        }
+        Ok(resp)
+    }
+
+    /// Ask the server to shut down gracefully (drain in-flight
+    /// requests, close connections).  Returns once the server has
+    /// acknowledged the control frame — the shutdown itself completes
+    /// asynchronously in the server's `wait`/`shutdown` path.
+    pub fn shutdown_server(&self) -> Result<()> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let reply = self.roundtrip(&Frame::Shutdown { id })?;
+        let Frame::Response(resp) = reply else {
+            anyhow::bail!("server sent a non-response frame");
+        };
+        anyhow::ensure!(
+            resp.status == Status::Ok && resp.id == id,
+            "shutdown not acknowledged: {:?} {}",
+            resp.status,
+            resp.detail
+        );
+        Ok(())
+    }
+}
+
+fn shed_from(samples: Vec<f32>, resp: &Response) -> Shed {
+    Shed {
+        samples,
+        predicted_us: resp.predicted_us,
+        budget_us: resp.budget_us,
+        retry_after_us: resp.retry_after_us,
+    }
+}
+
+/// Rebuild the [`PoolResponse`] a local caller would have received.
+/// The profile travels from the caller (the wire does not echo it) and
+/// shed samples are patched in by [`NetClient::submit`]; `latency_us`
+/// is the *server-side* enqueue-to-reply figure — wire time is the
+/// caller's to measure.
+fn pool_response_from(profile: &str, resp: Response) -> PoolResponse {
+    let shed = (resp.status == Status::Shed).then(|| shed_from(Vec::new(), &resp));
+    PoolResponse {
+        soft_symbols: resp.soft_symbols,
+        l_inst: resp.l_inst as usize,
+        shard: resp.shard as usize,
+        profile: profile.to_string(),
+        elapsed_us: resp.elapsed_us,
+        latency_us: resp.latency_us,
+        batched: resp.batched as usize,
+        error: (resp.status == Status::Error).then(|| resp.detail.clone()),
+        shed,
+    }
+}

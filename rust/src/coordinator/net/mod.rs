@@ -1,0 +1,35 @@
+//! Networked serving front end: the length-prefixed TCP protocol that
+//! serves a [`PoolClient`](super::pool::PoolClient) to remote
+//! processes (docs/PROTOCOL.md holds the byte-level spec,
+//! docs/OPERATIONS.md the operator runbook).
+//!
+//! Three layers, smallest first:
+//!
+//! * [`wire`] — the versioned frame codec: pure `encode`/`decode`
+//!   functions over byte slices (property-tested without sockets) plus
+//!   length-prefixed `read_frame`/`write_frame` stream helpers with a
+//!   hard pre-allocation size cap.
+//! * [`NetServer`] — one acceptor plus one blocking reader thread per
+//!   connection, each submitting through its own `PoolClient` clone via
+//!   `try_submit`, so remote callers see the pool's own backpressure
+//!   (`Full`), admission verdicts (`Shed` with
+//!   [`retry_after_us`](super::pool::Shed::retry_after_us) hints) and
+//!   bit-identical soft symbols.  Graceful shutdown drains admitted
+//!   requests before closing.
+//! * [`NetClient`] — the remote `PoolClient`-alike: `submit` /
+//!   `try_submit` / `call` with the same types, so `util::loadgen`
+//!   traces replay over real sockets unchanged (`repro client` is the
+//!   CLI driver).
+//!
+//! In-process and remote callers are deliberately indistinguishable
+//! above this module: the loopback integration test
+//! (`tests/net_loopback.rs`) asserts concurrent `NetClient`s produce
+//! soft symbols bit-identical to the sequential in-process reference.
+
+pub mod wire;
+
+mod client;
+mod server;
+
+pub use client::NetClient;
+pub use server::NetServer;

@@ -1,0 +1,233 @@
+//! TCP serving front end: one acceptor thread plus one blocking reader
+//! thread per connection, each submitting into the pool through its own
+//! [`PoolClient`] clone via `try_submit` — so the bounded-queue
+//! backpressure and admission verdicts remote callers see are *exactly*
+//! the in-process ones, translated to wire [`Status`](super::wire::Status)
+//! discriminants instead of enum variants.
+//!
+//! Graceful shutdown reuses the pool's drain path: stopping the server
+//! half-closes each connection's **read** side only, so readers blocked
+//! between frames wake with a clean EOF while handlers that already
+//! admitted a request stay blocked on the pool reply, write it out, and
+//! only then exit — an admitted request is never dropped.  The pool
+//! itself keeps running; callers shut it down afterwards via
+//! `PoolHandle::shutdown` once every `PoolClient` clone (the server held
+//! one per live connection) has dropped.
+
+use super::super::pool::{PoolClient, PoolResponse, TrySubmit};
+use super::wire::{self, Frame, Request, Response};
+use anyhow::{Context, Result};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Shared server state: the stop latch plus the registries the teardown
+/// path needs to interrupt blocked readers and join their threads.
+struct Inner {
+    stop: Mutex<bool>,
+    stopped: Condvar,
+    /// One `try_clone` of each live connection, kept so shutdown can
+    /// half-close its read side from outside the reader thread.
+    conns: Mutex<Vec<TcpStream>>,
+    /// Per-connection handler threads, joined at teardown.
+    joins: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Inner {
+    fn request_stop(&self) {
+        *self.stop.lock().expect("stop latch") = true;
+        self.stopped.notify_all();
+    }
+
+    fn stop_requested(&self) -> bool {
+        *self.stop.lock().expect("stop latch")
+    }
+}
+
+/// A running TCP front end over a [`PoolClient`] — see the module docs
+/// for the threading and shutdown model.  Constructed with
+/// [`NetServer::spawn`]; runs until [`NetServer::wait`],
+/// [`NetServer::shutdown`], or a client's
+/// [`NetClient::shutdown_server`](super::NetClient::shutdown_server).
+pub struct NetServer {
+    inner: Arc<Inner>,
+    addr: SocketAddr,
+    acceptor: JoinHandle<()>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections, serving `client`'s pool to them.
+    /// Returns as soon as the listener is bound; the bound address —
+    /// with the real port — is [`NetServer::local_addr`].
+    pub fn spawn(client: PoolClient, addr: impl ToSocketAddrs) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).context("binding the listen address")?;
+        let addr = listener.local_addr().context("reading the bound address")?;
+        let inner = Arc::new(Inner {
+            stop: Mutex::new(false),
+            stopped: Condvar::new(),
+            conns: Mutex::new(Vec::new()),
+            joins: Mutex::new(Vec::new()),
+        });
+        let acceptor = {
+            let inner = Arc::clone(&inner);
+            std::thread::spawn(move || accept_loop(listener, client, inner))
+        };
+        Ok(NetServer { inner, addr, acceptor })
+    }
+
+    /// The bound listen address (the real port when spawned on `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the server to stop after `d` without blocking the caller: a
+    /// detached timer thread trips the stop latch, which a concurrent
+    /// [`NetServer::wait`] then observes.  Used by
+    /// `repro serve --listen ... --serve-for-ms` so CI runs terminate
+    /// even if no client ever sends a shutdown frame.
+    pub fn shutdown_after(&self, d: Duration) {
+        let inner = Arc::clone(&self.inner);
+        std::thread::spawn(move || {
+            std::thread::sleep(d);
+            inner.request_stop();
+        });
+    }
+
+    /// Block until the stop latch trips — a client shutdown frame or a
+    /// [`NetServer::shutdown_after`] timer — then tear down: drain
+    /// in-flight requests, close connections, join every thread.
+    pub fn wait(self) {
+        let mut stop = self.inner.stop.lock().expect("stop latch");
+        while !*stop {
+            stop = self.inner.stopped.wait(stop).expect("stop latch");
+        }
+        drop(stop);
+        self.teardown();
+    }
+
+    /// Trip the stop latch and tear down immediately (the programmatic
+    /// twin of a client shutdown frame).  In-flight requests complete
+    /// and their responses are written before connections close.
+    pub fn shutdown(self) {
+        self.inner.request_stop();
+        self.teardown();
+    }
+
+    fn teardown(self) {
+        // Unblock the acceptor: `TcpListener` has no shutdown, so poke
+        // it with a throwaway connection, which it will see, check the
+        // latch, and exit on.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.acceptor.join();
+        // Half-close the read side of every connection.  Readers
+        // blocked between frames see EOF and exit; handlers mid-request
+        // are blocked on the pool reply (not the socket), so they
+        // finish, write the response, and exit on the next read.
+        for conn in self.inner.conns.lock().expect("conn registry").drain(..) {
+            let _ = conn.shutdown(Shutdown::Read);
+        }
+        let joins: Vec<_> = self.inner.joins.lock().expect("join registry").drain(..).collect();
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, client: PoolClient, inner: Arc<Inner>) {
+    for conn in listener.incoming() {
+        if inner.stop_requested() {
+            return; // the teardown poke, or a race with it
+        }
+        let Ok(conn) = conn else { continue };
+        let _ = conn.set_nodelay(true);
+        if let Ok(clone) = conn.try_clone() {
+            inner.conns.lock().expect("conn registry").push(clone);
+        }
+        let client = client.clone();
+        let inner2 = Arc::clone(&inner);
+        let join = std::thread::spawn(move || handle_conn(conn, client, inner2));
+        inner.joins.lock().expect("join registry").push(join);
+    }
+}
+
+/// Per-connection loop: read frames until EOF/stop, serve each through
+/// the pool, write the response.  Protocol errors (bad magic, wrong
+/// version, truncation) get a best-effort typed error reply, then the
+/// connection closes — one malformed peer never takes the server down.
+fn handle_conn(mut conn: TcpStream, client: PoolClient, inner: Arc<Inner>) {
+    loop {
+        let frame = match wire::read_frame(&mut conn) {
+            Ok(Some(f)) => f,
+            Ok(None) => return, // clean EOF (client done, or shutdown half-close)
+            Err(e) => {
+                let resp = Response::error(0, format!("protocol error: {e:#}"));
+                let _ = wire::write_frame(&mut conn, &Frame::Response(resp));
+                return;
+            }
+        };
+        let resp = match frame {
+            Frame::Request(req) => serve_request(&client, req),
+            Frame::Shutdown { id } => {
+                // Ack first so the requesting client sees the frame
+                // land, then trip the latch for `wait()` to act on.
+                let _ = wire::write_frame(&mut conn, &Frame::Response(Response::ok_empty(id)));
+                inner.request_stop();
+                return;
+            }
+            Frame::Response(r) => Response::error(r.id, "unexpected response frame from a client"),
+        };
+        if wire::write_frame(&mut conn, &Frame::Response(resp)).is_err() {
+            return; // peer gone; the pool already did the work
+        }
+    }
+}
+
+/// Serve one request through the pool, mapping every in-process verdict
+/// to its wire form: `Full` and `Shed` come from `try_submit` (so the
+/// bounded queue back-pressures remote callers exactly like local
+/// ones), and the blocking `recv` on an admitted request is what makes
+/// shutdown drain-safe — the handler cannot exit between admission and
+/// reply.
+fn serve_request(client: &PoolClient, req: Request) -> Response {
+    let Request { id, profile, t_req, samples } = req;
+    match client.try_submit(&profile, samples, t_req) {
+        Err(e) => Response::error(id, format!("{e:#}")),
+        Ok(TrySubmit::Full(_)) => Response::full(id),
+        Ok(TrySubmit::Shed(verdict)) => {
+            // The samples ride back *conceptually* — the client kept
+            // its own copy, so the wire carries only the estimates.
+            Response::shed(id, 0, &verdict)
+        }
+        Ok(TrySubmit::Queued(rx)) => match rx.recv() {
+            Err(_) => Response::error(id, "shard dropped the reply"),
+            Ok(resp) => response_from_pool(id, resp),
+        },
+    }
+}
+
+fn response_from_pool(id: u64, resp: PoolResponse) -> Response {
+    if let Some(e) = &resp.error {
+        return Response::error(id, format!("profile {:?}: {e}", resp.profile));
+    }
+    if let Some(shed) = &resp.shed {
+        // submit_to-style sheds arrive through the reply channel; fold
+        // them onto the same wire discriminant as try_submit sheds.
+        return Response::shed(id, resp.shard as u32, shed);
+    }
+    Response {
+        id,
+        status: wire::Status::Ok,
+        shard: resp.shard as u32,
+        l_inst: resp.l_inst as u32,
+        batched: resp.batched as u32,
+        elapsed_us: resp.elapsed_us,
+        latency_us: resp.latency_us,
+        predicted_us: 0.0,
+        budget_us: 0.0,
+        retry_after_us: 0.0,
+        detail: String::new(),
+        soft_symbols: resp.soft_symbols,
+    }
+}

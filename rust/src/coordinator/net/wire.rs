@@ -1,0 +1,566 @@
+//! Wire codec for the TCP serving protocol (docs/PROTOCOL.md).
+//!
+//! Every message is one *frame*: a little-endian `u32` length prefix
+//! followed by that many body bytes.  [`encode`] and [`decode`] map a
+//! [`Frame`] to/from body bytes as **pure functions** — no sockets, no
+//! allocation beyond the output — so the codec is property-testable in
+//! isolation (roundtrip and malformed-frame rejection live in this
+//! file's test module).  [`read_frame`]/[`write_frame`] add the length
+//! prefix over any `Read`/`Write`, enforcing [`MAX_FRAME_LEN`] *before*
+//! allocating, so a hostile or corrupt length prefix can never drive an
+//! unbounded allocation; declared element counts inside a body are
+//! likewise checked against the bytes actually present.
+//!
+//! Versioning rule: a speaker of version `N` accepts exactly version
+//! `N` (the header is identical across versions up to and including
+//! the version field, so a future server can still *parse* an old
+//! hello far enough to reject it with a typed error naming both
+//! versions).  There is no negotiation handshake — the client's first
+//! request is the hello.
+
+use super::super::pool::Shed;
+use anyhow::Result;
+use std::io::{Read, Write};
+
+/// Frame magic, first four body bytes of every frame: `b"EQLZ"`.
+pub const MAGIC: [u8; 4] = *b"EQLZ";
+
+/// Protocol version this build speaks (and the only one it accepts).
+pub const VERSION: u16 = 1;
+
+/// Hard cap on a frame body (64 MiB ≈ 16M f32 samples).  Checked
+/// against the length prefix before any allocation, and at encode time
+/// so a conforming peer can never emit an unreadable frame.
+pub const MAX_FRAME_LEN: usize = 1 << 26;
+
+/// Frame kind discriminant at body offset 6.
+const KIND_REQUEST: u8 = 0;
+const KIND_RESPONSE: u8 = 1;
+const KIND_SHUTDOWN: u8 = 2;
+
+/// Request flag bits (body offset 7 of a request frame).
+const FLAG_T_REQ: u8 = 1;
+
+/// Typed response discriminant (body offset 7 of a response frame):
+/// the wire form of the pool's Ok / error / [`Shed`] / Full verdicts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Served: `soft_symbols` carries the equalized burst.
+    Ok,
+    /// Processing or protocol failure: `detail` carries the message.
+    Error,
+    /// Admission control deadline-rejected the burst; the retry-after
+    /// hint fields are live.  The samples are *not* echoed back — the
+    /// client still owns its copy (see docs/PROTOCOL.md).
+    Shed,
+    /// The routed shard's bounded queue was full (backpressure); retry
+    /// after a short pause.
+    Full,
+}
+
+impl Status {
+    fn to_u8(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Error => 1,
+            Status::Shed => 2,
+            Status::Full => 3,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self> {
+        match b {
+            0 => Ok(Status::Ok),
+            1 => Ok(Status::Error),
+            2 => Ok(Status::Shed),
+            3 => Ok(Status::Full),
+            other => anyhow::bail!("unknown response status {other}"),
+        }
+    }
+}
+
+/// One equalization request (client → server).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Client-chosen correlation id, echoed back in the response.
+    pub id: u64,
+    /// Profile name the pool resolves through its registry.
+    pub profile: String,
+    /// Optional net-throughput requirement (samples/s) driving the
+    /// server-side `l_inst` selection, exactly like the in-process
+    /// `t_req`.
+    pub t_req: Option<f64>,
+    /// Receiver samples (`N_os` per symbol), f32 little-endian on the
+    /// wire.
+    pub samples: Vec<f32>,
+}
+
+/// One response (server → client): the wire form of a `PoolResponse`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    /// Correlation id echoed from the request (0 when the server could
+    /// not parse far enough to learn it).
+    pub id: u64,
+    /// Typed verdict discriminant.
+    pub status: Status,
+    /// Shard that served (or shed) the burst.
+    pub shard: u32,
+    /// `l_inst` the engine selected for this burst (samples).
+    pub l_inst: u32,
+    /// Requests that shared the burst's batched pipeline pass.
+    pub batched: u32,
+    /// Wall-clock time on the shard worker, microseconds.
+    pub elapsed_us: f64,
+    /// End-to-end latency (enqueue → reply) on the server, in
+    /// microseconds; wire transfer time is *not* included.
+    pub latency_us: f64,
+    /// Predicted enqueue-to-reply latency behind a [`Status::Shed`].
+    pub predicted_us: f64,
+    /// The profile's p99 budget behind a [`Status::Shed`].
+    pub budget_us: f64,
+    /// Informed-backoff hint behind a [`Status::Shed`] (`> 0` on every
+    /// shed, `0` otherwise).
+    pub retry_after_us: f64,
+    /// Error message for [`Status::Error`], empty otherwise.
+    pub detail: String,
+    /// Equalized soft symbols for [`Status::Ok`], empty otherwise.
+    pub soft_symbols: Vec<f32>,
+}
+
+impl Response {
+    fn zeroed(id: u64, status: Status) -> Self {
+        Self {
+            id,
+            status,
+            shard: 0,
+            l_inst: 0,
+            batched: 0,
+            elapsed_us: 0.0,
+            latency_us: 0.0,
+            predicted_us: 0.0,
+            budget_us: 0.0,
+            retry_after_us: 0.0,
+            detail: String::new(),
+            soft_symbols: Vec::new(),
+        }
+    }
+
+    /// An error response carrying `detail` (protocol or processing
+    /// failures; `id` is 0 when the request id never decoded).
+    pub fn error(id: u64, detail: impl Into<String>) -> Self {
+        Self { detail: detail.into(), ..Self::zeroed(id, Status::Error) }
+    }
+
+    /// A queue-full (backpressure) response.
+    pub fn full(id: u64) -> Self {
+        Self::zeroed(id, Status::Full)
+    }
+
+    /// A shed response carrying the verdict's estimates — but not the
+    /// samples, which the client kept.
+    pub fn shed(id: u64, shard: u32, verdict: &Shed) -> Self {
+        Self {
+            shard,
+            predicted_us: verdict.predicted_us,
+            budget_us: verdict.budget_us,
+            retry_after_us: verdict.retry_after_us,
+            ..Self::zeroed(id, Status::Shed)
+        }
+    }
+
+    /// The bare-acknowledgement Ok (shutdown control acks).
+    pub fn ok_empty(id: u64) -> Self {
+        Self::zeroed(id, Status::Ok)
+    }
+}
+
+/// One protocol frame: what [`encode`]/[`decode`] and the
+/// [`read_frame`]/[`write_frame`] stream helpers carry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server equalization request.
+    Request(Request),
+    /// Server → client reply.
+    Response(Response),
+    /// Client → server control frame: ack with an empty Ok, then shut
+    /// the server down gracefully (drain in-flight work, stop
+    /// accepting).  `id` correlates the ack.
+    Shutdown {
+        /// Correlation id for the shutdown ack.
+        id: u64,
+    },
+}
+
+fn header(out: &mut Vec<u8>, kind: u8, aux: u8, id: u64) {
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(aux);
+    out.extend_from_slice(&id.to_le_bytes());
+}
+
+fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    let n = u32::try_from(xs.len()).expect("payload exceeds u32 elements");
+    out.extend_from_slice(&n.to_le_bytes());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_str(out: &mut Vec<u8>, s: &str) {
+    let n = u16::try_from(s.len()).expect("string field exceeds u16 bytes");
+    out.extend_from_slice(&n.to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Encode a frame to its body bytes (no length prefix) — the exact
+/// layout documented field by field in docs/PROTOCOL.md.  Pure;
+/// panics only on out-of-spec field sizes (profile name > 64 KiB,
+/// payload > 4G elements), both far beyond [`MAX_FRAME_LEN`].
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::new();
+    match frame {
+        Frame::Request(r) => {
+            let flags = if r.t_req.is_some() { FLAG_T_REQ } else { 0 };
+            header(&mut out, KIND_REQUEST, flags, r.id);
+            out.extend_from_slice(&r.t_req.unwrap_or(0.0).to_le_bytes());
+            push_str(&mut out, &r.profile);
+            push_f32s(&mut out, &r.samples);
+        }
+        Frame::Response(r) => {
+            header(&mut out, KIND_RESPONSE, r.status.to_u8(), r.id);
+            out.extend_from_slice(&r.shard.to_le_bytes());
+            out.extend_from_slice(&r.l_inst.to_le_bytes());
+            out.extend_from_slice(&r.batched.to_le_bytes());
+            out.extend_from_slice(&r.elapsed_us.to_le_bytes());
+            out.extend_from_slice(&r.latency_us.to_le_bytes());
+            out.extend_from_slice(&r.predicted_us.to_le_bytes());
+            out.extend_from_slice(&r.budget_us.to_le_bytes());
+            out.extend_from_slice(&r.retry_after_us.to_le_bytes());
+            push_str(&mut out, &r.detail);
+            push_f32s(&mut out, &r.soft_symbols);
+        }
+        Frame::Shutdown { id } => header(&mut out, KIND_SHUTDOWN, 0, *id),
+    }
+    out
+}
+
+/// Bounds-checked little-endian cursor over a frame body.
+struct Cur<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.at.checked_add(n).filter(|&e| e <= self.buf.len());
+        let Some(end) = end else {
+            anyhow::bail!(
+                "truncated frame: need {n} bytes at offset {}, body has {}",
+                self.at,
+                self.buf.len()
+            );
+        };
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("string field is not UTF-8: {e}"))?
+            .to_string())
+    }
+
+    /// An f32 array with its declared count validated against the
+    /// bytes actually present *before* allocating.
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let remaining = self.buf.len() - self.at;
+        anyhow::ensure!(
+            n.checked_mul(4).is_some_and(|bytes| bytes <= remaining),
+            "declared {n} f32 elements but only {remaining} bytes remain"
+        );
+        let bytes = self.take(4 * n)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.at == self.buf.len(),
+            "{} trailing bytes after a complete frame",
+            self.buf.len() - self.at
+        );
+        Ok(())
+    }
+}
+
+/// Decode one frame body (the bytes after the length prefix).  Strict:
+/// bad magic, unsupported version, unknown kind/status, truncated
+/// fields, element counts exceeding the bytes present, and trailing
+/// garbage are all typed errors — and none of them allocates
+/// proportionally to a declared (rather than actual) size.
+pub fn decode(body: &[u8]) -> Result<Frame> {
+    let mut c = Cur { buf: body, at: 0 };
+    let magic = c.take(4)?;
+    anyhow::ensure!(magic == MAGIC, "bad magic {magic:02x?} (expected {MAGIC:02x?})");
+    let version = c.u16()?;
+    anyhow::ensure!(
+        version == VERSION,
+        "protocol version {version} unsupported (this build speaks {VERSION})"
+    );
+    let kind = c.u8()?;
+    let aux = c.u8()?;
+    let id = c.u64()?;
+    let frame = match kind {
+        KIND_REQUEST => {
+            let t_req_raw = c.f64()?;
+            let t_req = (aux & FLAG_T_REQ != 0).then_some(t_req_raw);
+            let profile = c.str()?;
+            let samples = c.f32s()?;
+            Frame::Request(Request { id, profile, t_req, samples })
+        }
+        KIND_RESPONSE => Frame::Response(Response {
+            id,
+            status: Status::from_u8(aux)?,
+            shard: c.u32()?,
+            l_inst: c.u32()?,
+            batched: c.u32()?,
+            elapsed_us: c.f64()?,
+            latency_us: c.f64()?,
+            predicted_us: c.f64()?,
+            budget_us: c.f64()?,
+            retry_after_us: c.f64()?,
+            detail: c.str()?,
+            soft_symbols: c.f32s()?,
+        }),
+        KIND_SHUTDOWN => Frame::Shutdown { id },
+        other => anyhow::bail!("unknown frame kind {other}"),
+    };
+    c.done()?;
+    Ok(frame)
+}
+
+/// Write one length-prefixed frame and flush.  Refuses (rather than
+/// emits) a frame whose body exceeds [`MAX_FRAME_LEN`].
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let body = encode(frame);
+    anyhow::ensure!(
+        body.len() <= MAX_FRAME_LEN,
+        "frame body {} bytes exceeds the {MAX_FRAME_LEN}-byte cap",
+        body.len()
+    );
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Fill `buf` from `r`; `Ok(false)` on a clean EOF before the first
+/// byte, an error on EOF mid-buffer.
+fn fill<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                anyhow::ensure!(
+                    got == 0,
+                    "connection closed mid-frame ({got} of {} bytes read)",
+                    buf.len()
+                );
+                return Ok(false);
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one length-prefixed frame; `Ok(None)` on a clean EOF at a
+/// frame boundary (the peer closed between frames).  The length prefix
+/// is validated against [`MAX_FRAME_LEN`] *before* the body buffer is
+/// allocated, so a hostile prefix cannot drive an unbounded (or even
+/// large) allocation.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut prefix = [0u8; 4];
+    if !fill(r, &mut prefix)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    anyhow::ensure!(
+        len <= MAX_FRAME_LEN,
+        "frame length prefix {len} exceeds the {MAX_FRAME_LEN}-byte cap"
+    );
+    let mut body = vec![0u8; len];
+    anyhow::ensure!(fill(r, &mut body)?, "connection closed before the frame body");
+    decode(&body).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn gen_profile(g: &mut Gen) -> String {
+        // Mixed ASCII + a multibyte char, so byte length != char count
+        // is exercised against the u16 byte-length field.
+        let chars = ['a', 'Z', '0', '_', '-', 'µ'];
+        (0..g.usize_in(0, 40)).map(|_| *g.choose(&chars)).collect()
+    }
+
+    fn gen_request(g: &mut Gen) -> Frame {
+        Frame::Request(Request {
+            id: g.usize_in(0, 1 << 48) as u64,
+            profile: gen_profile(g),
+            t_req: if g.bool() { Some(g.f32_in(0.5, 100.0) as f64 * 1e9) } else { None },
+            samples: g.vec_f32(g.usize_in(0, 515), -4.0, 4.0),
+        })
+    }
+
+    fn gen_response(g: &mut Gen) -> Frame {
+        let status = *g.choose(&[Status::Ok, Status::Error, Status::Shed, Status::Full]);
+        Frame::Response(Response {
+            id: g.usize_in(0, 1 << 48) as u64,
+            status,
+            shard: g.usize_in(0, 64) as u32,
+            l_inst: g.usize_in(0, 1 << 16) as u32,
+            batched: g.usize_in(0, 64) as u32,
+            elapsed_us: g.f32_in(0.0, 1e6) as f64,
+            latency_us: g.f32_in(0.0, 1e6) as f64,
+            predicted_us: g.f32_in(0.0, 1e6) as f64,
+            budget_us: g.f32_in(0.0, 1e6) as f64,
+            retry_after_us: g.f32_in(0.0, 1e6) as f64,
+            detail: if status == Status::Error { gen_profile(g) } else { String::new() },
+            soft_symbols: g.vec_f32(g.usize_in(0, 515), -4.0, 4.0),
+        })
+    }
+
+    #[test]
+    fn codec_roundtrips_arbitrary_requests_and_responses() {
+        // Arbitrary profile names (including empty and multibyte),
+        // burst sizes and payload widths survive encode → decode
+        // bit-exactly, as do all four response statuses and the
+        // shutdown control frame.
+        check(300, |g| {
+            let f = if g.bool() { gen_request(g) } else { gen_response(g) };
+            assert_eq!(decode(&encode(&f)).unwrap(), f, "roundtrip must be identity");
+        });
+        let s = Frame::Shutdown { id: 7 };
+        assert_eq!(decode(&encode(&s)).unwrap(), s);
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        // A frame cut anywhere — header, counts, mid-payload — must
+        // decode to an error, never to a shorter valid frame.
+        check(60, |g| {
+            let f = if g.bool() { gen_request(g) } else { gen_response(g) };
+            let body = encode(&f);
+            let cut = g.usize_in(0, body.len() - 1);
+            assert!(decode(&body[..cut]).is_err(), "cut at {cut}/{} must fail", body.len());
+        });
+    }
+
+    #[test]
+    fn bad_magic_version_kind_status_and_trailing_bytes_are_rejected() {
+        let body = encode(&Frame::Request(Request {
+            id: 1,
+            profile: "demo".into(),
+            t_req: None,
+            samples: vec![1.0, -1.0],
+        }));
+        let mut bad = body.clone();
+        bad[0] ^= 0xff;
+        assert!(decode(&bad).unwrap_err().to_string().contains("magic"));
+        let mut bad = body.clone();
+        bad[4] = 0x63; // version 99
+        let msg = decode(&bad).unwrap_err().to_string();
+        assert!(msg.contains("version 99") && msg.contains("speaks 1"), "{msg}");
+        let mut bad = body.clone();
+        bad[6] = 9; // kind
+        assert!(decode(&bad).unwrap_err().to_string().contains("kind"));
+        let mut bad = encode(&Frame::Response(Response::ok_empty(3)));
+        bad[7] = 9; // status
+        assert!(decode(&bad).unwrap_err().to_string().contains("status"));
+        let mut bad = body;
+        bad.push(0);
+        assert!(decode(&bad).unwrap_err().to_string().contains("trailing"));
+    }
+
+    #[test]
+    fn oversize_declared_counts_never_allocate() {
+        // A body whose sample-count field claims u32::MAX elements
+        // (16 GiB) must be rejected by the count-vs-remaining check —
+        // before any allocation — not by an OOM.
+        let mut body = encode(&Frame::Request(Request {
+            id: 1,
+            profile: "p".into(),
+            t_req: None,
+            samples: vec![],
+        }));
+        let count_at = body.len() - 4;
+        body[count_at..].copy_from_slice(&u32::MAX.to_le_bytes());
+        let msg = decode(&body).unwrap_err().to_string();
+        assert!(msg.contains("declared"), "{msg}");
+    }
+
+    #[test]
+    fn oversize_length_prefix_never_allocates() {
+        // A stream whose length prefix claims 4 GiB is rejected at the
+        // prefix check; the body buffer is never allocated.
+        let mut stream = std::io::Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        let msg = read_frame(&mut stream).unwrap_err().to_string();
+        assert!(msg.contains("length prefix"), "{msg}");
+    }
+
+    #[test]
+    fn stream_framing_roundtrips_and_reports_clean_eof() {
+        let a = Frame::Request(Request {
+            id: 9,
+            profile: "demo".into(),
+            t_req: Some(5e9),
+            samples: vec![0.25; 8],
+        });
+        let b = Frame::Response(Response::full(9));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &a).unwrap();
+        write_frame(&mut buf, &b).unwrap();
+        let mut stream = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut stream).unwrap(), Some(a));
+        assert_eq!(read_frame(&mut stream).unwrap(), Some(b));
+        assert_eq!(read_frame(&mut stream).unwrap(), None, "clean EOF at a frame boundary");
+        // EOF *inside* a frame is an error, not a silent None.
+        let mut partial = Vec::new();
+        write_frame(&mut partial, &Frame::Shutdown { id: 1 }).unwrap();
+        partial.truncate(partial.len() - 3);
+        let mut stream = std::io::Cursor::new(partial);
+        assert!(read_frame(&mut stream).is_err(), "mid-frame EOF must error");
+    }
+}

@@ -33,9 +33,17 @@
 //!   recent age-limited p99) and deadline-rejects it when its
 //!   profile's budget is provably blown: the burst comes back as a
 //!   [`Shed`] verdict instead of queueing toward a reply that would
-//!   arrive too late.  An empty shard always admits, so zero offered
-//!   load never sheds — and every *admitted* request flows through the
-//!   unchanged datapath, so admission cannot perturb bit-exactness.
+//!   arrive too late, carrying a [`Shed::retry_after_us`] hint — the
+//!   predicted backlog-drain time — so callers back off *informed*
+//!   instead of guessing.  An empty shard always admits, so zero
+//!   offered load never sheds — and every *admitted* request flows
+//!   through the unchanged datapath, so admission cannot perturb
+//!   bit-exactness.
+//! * **Network ingress** — [`super::net`] serves this exact client
+//!   surface (`submit`/`try_submit`, Full/Shed verdicts, retry-after
+//!   hints) to remote processes over a length-prefixed TCP protocol
+//!   (docs/PROTOCOL.md); in-process and remote callers see the same
+//!   semantics.
 //! * **Routing** — [`RoutePolicy::RoundRobin`] or
 //!   [`RoutePolicy::ShortestQueue`] over the live per-shard queue
 //!   depths ([`crate::metrics::serving::ShardCounters`]), restricted
@@ -219,6 +227,15 @@ pub struct Shed {
     /// The profile's p99 budget the prediction provably blew
     /// (`predicted > margin * budget`), microseconds.
     pub budget_us: f64,
+    /// Informed-backoff hint: the estimator's prediction of how long
+    /// the pool needs to drain back under the admission line,
+    /// `(predicted − margin × budget) / live_shards`, floored at one
+    /// amortized service time and capped at `queue_cap × service_ewma`
+    /// (a full queue drains in at most that long, so a larger hint
+    /// could never be honest).  Always `> 0` on a shed — open-loop
+    /// drivers and remote [`super::net::NetClient`]s suppress retries
+    /// for this long instead of hammering a saturated ingress.
+    pub retry_after_us: f64,
 }
 
 /// One shard: a set of per-profile serving engines that share a worker
@@ -564,8 +581,8 @@ impl SchedCore {
     }
 
     /// Admission verdict for a burst about to enqueue on `shard`:
-    /// `Some((predicted_us, budget_us))` when its profile's budget is
-    /// provably blown, `None` to admit.
+    /// `Some((predicted_us, budget_us, retry_after_us))` when its
+    /// profile's budget is provably blown, `None` to admit.
     ///
     /// The estimate is the max of two signals: a *backlog* model —
     /// `(depth + 1) x` the shard's amortized-service EWMA plus the
@@ -578,7 +595,14 @@ impl SchedCore {
     /// measurements come before verdicts), and a profile with no
     /// budget in the [`super::sched::AdmissionConfig`] map admits
     /// (only budgeted traffic is policed).
-    fn admission_shed(&self, shard: usize, profile: &str) -> Option<(f64, f64)> {
+    ///
+    /// The retry-after hint is the predicted backlog-drain time: the
+    /// excess over the admission line spread across the live shards
+    /// (any of which could absorb the retry), floored at one service
+    /// time (a shed this instant cannot clear sooner) and capped at
+    /// `queue_cap × service_ewma` (the longest a bounded queue can
+    /// take to drain — see docs/SCHEDULING.md's invariant table).
+    fn admission_shed(&self, shard: usize, profile: &str) -> Option<(f64, f64, f64)> {
         let adm = self.sched.admission.as_ref()?;
         let slo = adm.budget_for(profile)?;
         let c = &self.counters[shard];
@@ -594,7 +618,15 @@ impl SchedCore {
         let backlog = (depth as f64 + 1.0) * service + window_us;
         let recent = c.recent_p99_us(SLO_RECENT_WINDOW, slo.stale_after);
         let predicted = backlog.max(recent);
-        (predicted > adm.margin * slo.p99_target_us).then_some((predicted, slo.p99_target_us))
+        let line = adm.margin * slo.p99_target_us;
+        if predicted <= line {
+            return None;
+        }
+        let live = self.active.load(Ordering::SeqCst).max(1).min(self.slots.len()) as f64;
+        let retry = ((predicted - line) / live)
+            .max(service)
+            .min(self.queue_cap as f64 * service);
+        Some((predicted, slo.p99_target_us, retry))
     }
 
     /// The coalescing-group key a submit of (`profile`, `t_req`) would
@@ -1235,7 +1267,9 @@ impl PoolClient {
             self.core.slots.len()
         );
         let (reply, rx) = mpsc::channel();
-        if let Some((predicted_us, budget_us)) = self.core.admission_shed(shard, profile) {
+        if let Some((predicted_us, budget_us, retry_after_us)) =
+            self.core.admission_shed(shard, profile)
+        {
             self.core.counters[shard].shed_one();
             let _ = reply.send(PoolResponse {
                 soft_symbols: Vec::new(),
@@ -1246,7 +1280,7 @@ impl PoolClient {
                 latency_us: 0.0,
                 batched: 0,
                 error: None,
-                shed: Some(Shed { samples, predicted_us, budget_us }),
+                shed: Some(Shed { samples, predicted_us, budget_us, retry_after_us }),
             });
             return Ok(rx);
         }
@@ -1283,9 +1317,11 @@ impl PoolClient {
     ) -> Result<TrySubmit> {
         self.check_profile(profile)?;
         let shard = self.route(profile, t_req);
-        if let Some((predicted_us, budget_us)) = self.core.admission_shed(shard, profile) {
+        if let Some((predicted_us, budget_us, retry_after_us)) =
+            self.core.admission_shed(shard, profile)
+        {
             self.core.counters[shard].shed_one();
-            return Ok(TrySubmit::Shed(Shed { samples, predicted_us, budget_us }));
+            return Ok(TrySubmit::Shed(Shed { samples, predicted_us, budget_us, retry_after_us }));
         }
         let slot = &self.core.slots[shard];
         let mut q = slot.queue.lock().expect("shard queue");
@@ -1323,11 +1359,12 @@ impl PoolClient {
         if let Some(shed) = &resp.shed {
             anyhow::bail!(
                 "admission shed on shard {}: predicted {:.0} us exceeds the {:.0} us budget \
-                 (profile {:?})",
+                 (profile {:?}; retry after {:.0} us)",
                 resp.shard,
                 shed.predicted_us,
                 shed.budget_us,
-                resp.profile
+                resp.profile,
+                shed.retry_after_us
             );
         }
         match &resp.error {
@@ -2048,9 +2085,15 @@ mod tests {
         // condemning estimate attached.
         core.counters[0].enqueued();
         core.counters[0].enqueued();
-        let (predicted, budget) = core.admission_shed(0, "d").expect("blown budget must shed");
+        let (predicted, budget, retry) =
+            core.admission_shed(0, "d").expect("blown budget must shed");
         assert!((predicted - 2000.0).abs() < 1e-6, "backlog estimate ({predicted})");
         assert_eq!(budget, 1000.0);
+        // Retry-after: the 500 us excess over the 1500 us line spread
+        // over 2 live shards is 250 us — under one 500 us service
+        // time, so the floor carries the hint.
+        let service = core.counters[0].service_ewma_us();
+        assert!((retry - service).abs() < 1e-6, "floor must carry ({retry} vs {service})");
         // The verdict is per shard: the idle shard still admits.
         assert!(core.admission_shed(1, "d").is_none());
     }
@@ -2067,8 +2110,15 @@ mod tests {
             core.counters[0].served_with_busy(64, 9000.0, 100.0, false);
         }
         core.counters[0].enqueued();
-        let (predicted, _) = core.admission_shed(0, "d").expect("recent p99 must trigger");
+        let (predicted, _, retry) = core.admission_shed(0, "d").expect("recent p99 must trigger");
         assert!((predicted - 9000.0).abs() < 1e-6, "p99 floor ({predicted})");
+        // The raw hint — (9000 − 1500) / 2 shards = 3750 us — exceeds
+        // what a full 16-deep queue of ~100 us services could take to
+        // drain: the `queue_cap × service_ewma` cap carries instead.
+        let service = core.counters[0].service_ewma_us();
+        let cap = core.queue_cap as f64 * service;
+        assert!((retry - cap).abs() < 1e-6, "cap must carry ({retry} vs {cap})");
+        assert!(retry >= service, "hint never undercuts one service time");
     }
 
     #[test]
@@ -2114,6 +2164,7 @@ mod tests {
                     shed += 1;
                     assert_eq!(s.samples, burst, "the burst comes back untouched");
                     assert!(s.predicted_us > s.budget_us);
+                    assert!(s.retry_after_us > 0.0, "every shed carries a drain hint");
                     assert_eq!(resp.batched, 0, "a shed burst was never dispatched");
                     assert!(resp.soft_symbols.is_empty());
                     assert!(resp.error.is_none(), "a shed is not a processing failure");
@@ -2134,6 +2185,7 @@ mod tests {
             TrySubmit::Shed(s) => {
                 assert_eq!(s.samples, burst);
                 assert_eq!(s.budget_us, 100.0);
+                assert!(s.retry_after_us > 0.0, "the non-blocking verdict hints too");
             }
             other => panic!("expected a shed verdict, got {other:?}"),
         }

@@ -175,6 +175,18 @@ pub const DEFAULT_ADMISSION_MARGIN: f64 = 1.5;
 /// `margin * budget + service` (one batch can start between the
 /// verdict and the enqueue) while the excess load surfaces as shed
 /// rate — the documented constant factor of the SLO.
+///
+/// Every shed verdict also carries a *retry-after hint*
+/// ([`Shed::retry_after_us`](super::pool::Shed::retry_after_us)): the
+/// excess of the prediction over the `margin * budget` admission line,
+/// spread across the live shards, floored at one amortized service
+/// time and capped at `queue_cap * service_ewma` — the estimator's
+/// honest guess at when the backlog will have drained back under the
+/// line.  In-process open-loop drivers and remote clients (the
+/// `coordinator::net` front end forwards the hint on the wire) use it
+/// as informed backoff instead of hammering a saturated ingress; the
+/// formula and its invariants are documented next to the admission
+/// bound in docs/SCHEDULING.md.
 #[derive(Debug, Clone)]
 pub struct AdmissionConfig {
     /// Budget for profiles without a [`Self::per_profile`] entry;

@@ -53,6 +53,7 @@ pub mod prelude {
     pub use crate::coordinator::instance::{AnyInstance, EqualizerInstance, NativeInstance};
     #[cfg(feature = "pjrt")]
     pub use crate::coordinator::instance::{PjrtInstance, SharedPjrtInstance};
+    pub use crate::coordinator::net::{NetClient, NetServer};
     pub use crate::coordinator::pool::{
         PoolClient, PoolConfig, PoolHandle, RoutePolicy, ServerPool, TrySubmit,
     };

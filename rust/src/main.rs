@@ -62,7 +62,34 @@ COMMANDS:
              per-profile budgets, and each sweep point reports
              p50/p99/shed-rate vs offered load — rows land in
              BENCH_pr6.json with --json; --assert-shed/--assert-no-shed
-             make the run a CI smoke)
+             make the run a CI smoke.  Shed replies carry a
+             retry_after_us hint the replay honors as informed backoff)
+  serve     --listen ADDR [--artifacts DIR] [--shards N]
+            [--instances N] [--profiles P1,P2,..]
+            [--policy round-robin|shortest-queue] [--queue-cap N]
+            [--coalesce-window US] [--coalesce-max N] [--steal]
+            [--admit US] [--slo-profile NAME=US,..]
+            [--admission-margin M] [--addr-file PATH]
+            [--serve-for-ms MS]                        TCP serving front end
+            (serves the pool to remote `repro client`s over the
+             docs/PROTOCOL.md frame format; remote callers see the
+             pool's own backpressure, admission sheds and retry-after
+             hints.  --listen 127.0.0.1:0 binds an ephemeral port and
+             --addr-file PATH publishes the bound address;
+             --serve-for-ms bounds the run for CI.  Stops gracefully —
+             draining admitted requests — on `repro client --shutdown`)
+  client    --addr HOST:PORT [--profiles P1,P2,..] [--clients M]
+            [--requests K] [--spb SYMBOLS]
+            [--open-loop --offered-load RPS [--arrival KIND]
+             [--duration-ms MS] [--load-seed N] [--logical-clients N]]
+            [--assert-shed] [--assert-no-shed]
+            [--shutdown]                               remote serving client
+            (drives a `repro serve --listen` endpoint: closed-loop
+             client threads by default, or --open-loop to replay a
+             seeded trace over the socket with informed backoff — a
+             Shed reply's retry_after_us suppresses arrivals for the
+             hinted window.  --shutdown asks the server to drain and
+             exit afterwards)
   bench     [--artifacts DIR] [--json [PATH]] [--quick]
                                                        hot-path + serving throughput
                                                        (f32 / fake-quant / int16 +
@@ -94,6 +121,7 @@ fn main() -> Result<()> {
         "timing" => timing(&args),
         "seqlen" => seqlen(&args),
         "serve" => serve(&args),
+        "client" => client_cmd(&args),
         "bench" => bench_cmd(&args),
         "figures" => {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
@@ -220,6 +248,9 @@ fn serve(args: &Args) -> Result<()> {
 
     if args.flag("open-loop") {
         return serve_open_loop(args);
+    }
+    if args.get("listen").is_some() {
+        return serve_listen(args);
     }
     let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
     let shards = args.usize_or("shards", 2)?.max(1);
@@ -399,22 +430,37 @@ struct OpenLoopOutcome {
     admitted: u64,
     shed: u64,
     full: u64,
+    /// Arrivals suppressed client-side by informed backoff: they fell
+    /// inside a shed reply's `retry_after_us` window and were never
+    /// submitted (so they appear in no server-side counter).
+    backed_off: u64,
     symbols: usize,
     wall_s: f64,
     p50_us: f64,
     p99_us: f64,
 }
 
-/// Replay a pre-generated open-loop trace against a live pool: each
-/// arrival is submitted non-blocking at its scheduled instant —
+/// Replay a pre-generated open-loop trace against a serving endpoint:
+/// each arrival is submitted non-blocking at its scheduled instant —
 /// regardless of how the pool is coping, which is the open-loop
 /// property closed-loop clients cannot express — then every admitted
 /// reply is drained.  Latency percentiles cover admitted requests
 /// only; admission sheds and queue-full rejections are counted
 /// separately (a `Full` under overload means admission was off or too
 /// lenient to protect the queue).
+///
+/// `try_submit` abstracts the endpoint: an in-process `PoolClient` or
+/// a remote `NetClient` — the verdict vocabulary is identical, which
+/// is the point of the wire protocol.
+///
+/// Shed verdicts drive *informed backoff*: a shed reply's
+/// `retry_after_us` (the server's predicted backlog-drain time, see
+/// docs/SCHEDULING.md) suppresses every arrival scheduled inside the
+/// hinted window.  Suppressed arrivals are counted as `backed_off`,
+/// not `shed` — they never reach the server, so caller-side and
+/// server-side shed accounting still agree exactly.
 fn replay_open_loop(
-    client: &equalizer::coordinator::pool::PoolClient,
+    try_submit: impl Fn(&str, Vec<f32>) -> Result<equalizer::coordinator::pool::TrySubmit>,
     trace: &[equalizer::util::loadgen::Arrival],
     profiles: &[String],
     bursts: &std::collections::BTreeMap<String, Vec<f32>>,
@@ -425,8 +471,16 @@ fn replay_open_loop(
 
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(trace.len());
-    let (mut shed, mut full) = (0u64, 0u64);
+    let (mut shed, mut full, mut backed_off) = (0u64, 0u64, 0u64);
+    let mut backoff_until: Option<Duration> = None;
     for a in trace {
+        if let Some(until) = backoff_until {
+            if a.at < until {
+                backed_off += 1;
+                continue;
+            }
+            backoff_until = None;
+        }
         loop {
             let now = t0.elapsed();
             if now >= a.at {
@@ -440,10 +494,13 @@ fn replay_open_loop(
             }
         }
         let profile = &profiles[a.profile];
-        match client.try_submit(profile, bursts[profile].clone(), None)? {
+        match try_submit(profile, bursts[profile].clone())? {
             TrySubmit::Queued(rx) => pending.push(rx),
             TrySubmit::Full(_) => full += 1,
-            TrySubmit::Shed(_) => shed += 1,
+            TrySubmit::Shed(s) => {
+                shed += 1;
+                backoff_until = Some(a.at + Duration::from_secs_f64(s.retry_after_us * 1e-6));
+            }
         }
     }
     let mut lat = LatencyStats::new();
@@ -463,6 +520,7 @@ fn replay_open_loop(
         admitted,
         shed,
         full,
+        backed_off,
         symbols,
         wall_s: t0.elapsed().as_secs_f64(),
         p50_us: lat.percentile_us(50.0),
@@ -470,51 +528,18 @@ fn replay_open_loop(
     })
 }
 
-/// `repro serve --open-loop`: sweep offered load with a seeded arrival
-/// process (Poisson / bursty / diurnal over a logical client
-/// population) and report p50/p99/shed-rate per sweep point — the
-/// curve that shows SLO-aware admission control keeping admitted p99
-/// bounded while the excess shows up as shed rate instead of latency.
-/// A fresh pool is spawned per sweep point so the points are
-/// independent.  `--assert-shed`/`--assert-no-shed` turn the run into
-/// a CI smoke; `--json` appends the rows to `BENCH_pr6.json`
-/// (replacing earlier `serving_open_loop` rows, preserving the rest).
-fn serve_open_loop(args: &Args) -> Result<()> {
-    use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
-    use equalizer::coordinator::sched::{
-        AdmissionConfig, LatencySlo, SchedulerConfig, DEFAULT_ADMISSION_MARGIN,
-    };
-    use equalizer::util::bench::Throughput;
-    use equalizer::util::json::Json;
-    use equalizer::util::loadgen::{ArrivalKind, OpenLoopSpec};
-    use std::collections::BTreeMap;
-    use std::time::Duration;
+/// Parse the shared admission-control flags (`--admit US`,
+/// `--slo-profile NAME=US,..`, `--admission-margin M`) into an
+/// [`AdmissionConfig`](equalizer::coordinator::sched::AdmissionConfig)
+/// — `None` when neither budget flag is given (admission off, the
+/// overload baseline).  Shared by `serve --open-loop` and
+/// `serve --listen` so both fronts police load identically.
+fn admission_from_args(
+    args: &Args,
+) -> Result<Option<equalizer::coordinator::sched::AdmissionConfig>> {
+    use equalizer::coordinator::sched::{AdmissionConfig, LatencySlo, DEFAULT_ADMISSION_MARGIN};
 
-    let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
-    let shards = args.usize_or("shards", 2)?.max(1);
-    let instances = args.usize_or("instances", 2)?.next_power_of_two();
-    let spb = args.usize_or("spb", 128)?.max(64);
-    let policy: RoutePolicy = args.str_or("policy", "shortest-queue").parse()?;
-    let queue_cap = args.usize_or("queue-cap", 64)?.max(1);
-    let duration = Duration::from_millis(args.usize_or("duration-ms", 1000)?.max(1) as u64);
-    let seed = args.usize_or("load-seed", 42)? as u32;
-    let clients = (args.usize_or("logical-clients", 100_000)?.max(1)) as u64;
-    let arrival_name = args.str_or("arrival", "poisson");
-    let arrival: ArrivalKind = arrival_name.parse()?;
     let margin = args.f64_or("admission-margin", DEFAULT_ADMISSION_MARGIN)?;
-    let profiles: Vec<String> = args
-        .str_or("profiles", "cnn_imdd_quant")
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
-    for p in &profiles {
-        reg.profile_entry(p)?;
-    }
-
-    // Admission budgets: `--admit US` sets the default for every
-    // profile; `--slo-profile NAME=US,..` overrides per profile.
-    // Without either, admission stays off (the overload baseline).
     let mut admission: Option<AdmissionConfig> = None;
     let default_budget = args.f64_or("admit", 0.0)?;
     if default_budget > 0.0 {
@@ -534,7 +559,52 @@ fn serve_open_loop(args: &Args) -> Result<()> {
         }
         admission = Some(adm);
     }
-    let admission = admission.map(|a| a.with_margin(margin));
+    Ok(admission.map(|a| a.with_margin(margin)))
+}
+
+/// `repro serve --open-loop`: sweep offered load with a seeded arrival
+/// process (Poisson / bursty / diurnal over a logical client
+/// population) and report p50/p99/shed-rate per sweep point — the
+/// curve that shows SLO-aware admission control keeping admitted p99
+/// bounded while the excess shows up as shed rate instead of latency.
+/// A fresh pool is spawned per sweep point so the points are
+/// independent.  `--assert-shed`/`--assert-no-shed` turn the run into
+/// a CI smoke; `--json` appends the rows to `BENCH_pr6.json`
+/// (replacing earlier `serving_open_loop` rows, preserving the rest).
+fn serve_open_loop(args: &Args) -> Result<()> {
+    use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
+    use equalizer::coordinator::sched::SchedulerConfig;
+    use equalizer::util::bench::Throughput;
+    use equalizer::util::json::Json;
+    use equalizer::util::loadgen::{ArrivalKind, OpenLoopSpec};
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
+    let shards = args.usize_or("shards", 2)?.max(1);
+    let instances = args.usize_or("instances", 2)?.next_power_of_two();
+    let spb = args.usize_or("spb", 128)?.max(64);
+    let policy: RoutePolicy = args.str_or("policy", "shortest-queue").parse()?;
+    let queue_cap = args.usize_or("queue-cap", 64)?.max(1);
+    let duration = Duration::from_millis(args.usize_or("duration-ms", 1000)?.max(1) as u64);
+    let seed = args.usize_or("load-seed", 42)? as u32;
+    let clients = (args.usize_or("logical-clients", 100_000)?.max(1)) as u64;
+    let arrival_name = args.str_or("arrival", "poisson");
+    let arrival: ArrivalKind = arrival_name.parse()?;
+    let profiles: Vec<String> = args
+        .str_or("profiles", "cnn_imdd_quant")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    for p in &profiles {
+        reg.profile_entry(p)?;
+    }
+
+    // Admission budgets: `--admit US` sets the default for every
+    // profile; `--slo-profile NAME=US,..` overrides per profile.
+    // Without either, admission stays off (the overload baseline).
+    let admission = admission_from_args(args)?;
 
     let mut scheduler = SchedulerConfig::default();
     let coalesce_us = args.f64_or("coalesce-window", 0.0)?.max(0.0);
@@ -572,10 +642,11 @@ fn serve_open_loop(args: &Args) -> Result<()> {
     );
     match &admission {
         Some(adm) => println!(
-            "admission: on (default budget {}, margin {margin:.2})",
+            "admission: on (default budget {}, margin {:.2})",
             adm.budget_for("").map(|s| format!("{:.0} us", s.p99_target_us)).unwrap_or_else(
                 || "per-profile only".to_string()
-            )
+            ),
+            adm.margin
         ),
         None => println!("admission: off (overload baseline — expect queue-full rejections)"),
     }
@@ -603,7 +674,8 @@ fn serve_open_loop(args: &Args) -> Result<()> {
         };
         let pool = ServerPool::from_registry(&reg, &profiles, &cfg)?.spawn();
         let client = pool.client();
-        let out = replay_open_loop(&client, &trace, &profiles, &bursts)?;
+        let out =
+            replay_open_loop(|p, s| client.try_submit(p, s, None), &trace, &profiles, &bursts)?;
         drop(client);
         let stats = pool.shutdown();
         anyhow::ensure!(
@@ -616,11 +688,12 @@ fn serve_open_loop(args: &Args) -> Result<()> {
         let t = Throughput::from_rate(out.symbols as f64, out.wall_s);
         println!(
             "  offered {rate:>8.0} rps ({:>6} arrivals): admitted {:>6}  shed {:>6} \
-             ({:>5.1}%)  full {:>5}  p50 {:>8.1} us  p99 {:>8.1} us  {}",
+             ({:>5.1}%)  backoff {:>5}  full {:>5}  p50 {:>8.1} us  p99 {:>8.1} us  {}",
             out.offered,
             out.admitted,
             out.shed,
             shed_rate * 100.0,
+            out.backed_off,
             out.full,
             out.p50_us,
             out.p99_us,
@@ -679,6 +752,246 @@ fn serve_open_loop(args: &Args) -> Result<()> {
         all.extend(records);
         std::fs::write(&path, format!("{}\n", Json::Arr(all).render()))?;
         println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+/// `repro serve --listen ADDR`: the TCP serving front end
+/// (docs/PROTOCOL.md) over a pool built from the same knobs as the
+/// other serve modes — profiles, shards, scheduler, and the shared
+/// admission flags ([`admission_from_args`]).  Runs until a client
+/// sends a shutdown frame (`repro client --shutdown`) or the
+/// `--serve-for-ms` deadline, then drains in-flight requests and
+/// prints the per-shard stats table.
+fn serve_listen(args: &Args) -> Result<()> {
+    use equalizer::coordinator::net::NetServer;
+    use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
+    use equalizer::coordinator::sched::SchedulerConfig;
+    use std::time::Duration;
+
+    let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
+    let shards = args.usize_or("shards", 2)?.max(1);
+    let instances = args.usize_or("instances", 2)?.next_power_of_two();
+    let policy: RoutePolicy = args.str_or("policy", "shortest-queue").parse()?;
+    let queue_cap = args.usize_or("queue-cap", 64)?.max(1);
+    let profiles: Vec<String> = args
+        .str_or("profiles", "cnn_imdd_quant")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    for p in &profiles {
+        reg.profile_entry(p)?;
+    }
+    let admission = admission_from_args(args)?;
+    let mut scheduler = SchedulerConfig::default();
+    let coalesce_us = args.f64_or("coalesce-window", 0.0)?.max(0.0);
+    if coalesce_us > 0.0 {
+        scheduler.coalesce_window = Duration::from_secs_f64(coalesce_us * 1e-6);
+        scheduler.coalesce_max = args.usize_or("coalesce-max", 32)?.max(2);
+    }
+    if args.flag("steal") {
+        scheduler.steal = true;
+    }
+    if let Some(adm) = admission.clone() {
+        scheduler = scheduler.with_admission(adm);
+    }
+
+    let cfg = PoolConfig {
+        shards,
+        instances_per_shard: instances,
+        policy,
+        queue_cap,
+        scheduler,
+        ..PoolConfig::default()
+    };
+    let pool = ServerPool::from_registry(&reg, &profiles, &cfg)?.spawn();
+    let server = NetServer::spawn(pool.client(), args.str_or("listen", "127.0.0.1:0").as_str())?;
+    println!(
+        "serving on {} — {shards} shard(s) x {instances} instance(s), profiles {profiles:?}, \
+         {policy:?}, queue cap {queue_cap}",
+        server.local_addr()
+    );
+    match &admission {
+        Some(adm) => println!(
+            "admission: on (default budget {}, margin {:.2}) — overload returns Shed frames \
+             with retry-after hints",
+            adm.budget_for("").map(|s| format!("{:.0} us", s.p99_target_us)).unwrap_or_else(
+                || "per-profile only".to_string()
+            ),
+            adm.margin
+        ),
+        None => println!("admission: off — overload returns Full frames once the queue fills"),
+    }
+    if let Some(path) = args.get("addr-file") {
+        // Published only after the listener is live, so a launcher can
+        // poll for this file instead of parsing stdout (the CI smoke
+        // does exactly that with --listen 127.0.0.1:0).
+        std::fs::write(path, format!("{}\n", server.local_addr()))?;
+        println!("address written to {path}");
+    }
+    let serve_for_ms = args.usize_or("serve-for-ms", 0)?;
+    if serve_for_ms > 0 {
+        println!("stopping after {serve_for_ms} ms (or on a client shutdown frame)");
+        server.shutdown_after(Duration::from_millis(serve_for_ms as u64));
+    } else {
+        println!("stopping on a client shutdown frame (repro client --shutdown)");
+    }
+    server.wait();
+    println!("\nshutdown: draining complete");
+    let stats = pool.shutdown();
+    print!("{}", stats.render());
+    Ok(())
+}
+
+/// `repro client --addr HOST:PORT`: drive a remote `repro serve
+/// --listen` endpoint.  Default mode runs M closed-loop client threads
+/// x K requests each; `--open-loop` replays a seeded arrival trace
+/// over the socket through the same [`replay_open_loop`] driver the
+/// in-process sweep uses — including informed backoff from the
+/// server's retry-after hints.  `--assert-shed`/`--assert-no-shed`
+/// turn either mode into a CI smoke; `--shutdown` asks the server to
+/// drain and exit afterwards.
+///
+/// Open-loop fidelity caveat: the protocol allows one frame in flight
+/// per connection, and an *admitted* request occupies the socket until
+/// it is served — so arrival timing degrades once service time exceeds
+/// the inter-arrival gap.  Shed and Full verdicts return immediately,
+/// which keeps the overload/backoff path (the part this mode exists to
+/// exercise) faithful.
+fn client_cmd(args: &Args) -> Result<()> {
+    use equalizer::coordinator::net::NetClient;
+    use equalizer::metrics::stats::LatencyStats;
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("repro client requires --addr HOST:PORT"))?
+        .to_string();
+    let profiles: Vec<String> = args
+        .str_or("profiles", "cnn_imdd_quant")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let spb = args.usize_or("spb", 128)?.max(64);
+    // One synthetic burst per profile, pre-generated so the run
+    // measures the wire + pool, not a channel simulator.
+    let bursts: BTreeMap<String, Vec<f32>> = profiles
+        .iter()
+        .map(|p| (p.clone(), (0..2 * spb).map(|i| (i as f32 * 0.19).sin()).collect()))
+        .collect();
+
+    let (total_shed, total_full) = if args.flag("open-loop") {
+        use equalizer::util::loadgen::{ArrivalKind, OpenLoopSpec};
+
+        let arrival: ArrivalKind = args.str_or("arrival", "poisson").parse()?;
+        let spec = OpenLoopSpec {
+            kind: arrival,
+            rate_rps: args.f64_or("offered-load", 500.0)?,
+            duration: Duration::from_millis(args.usize_or("duration-ms", 1000)?.max(1) as u64),
+            seed: args.usize_or("load-seed", 42)? as u32,
+            clients: (args.usize_or("logical-clients", 100_000)?.max(1)) as u64,
+            profiles: profiles.iter().map(|p| (p.clone(), 1.0)).collect(),
+        };
+        let trace = spec.schedule()?;
+        let net = NetClient::connect(addr.as_str())?;
+        println!(
+            "open loop over {addr}: {} arrivals, {} ms, profiles {profiles:?}",
+            trace.len(),
+            spec.duration.as_millis()
+        );
+        let out = replay_open_loop(|p, s| net.try_submit(p, s, None), &trace, &profiles, &bursts)?;
+        let shed_rate = out.shed as f64 / (out.offered.max(1)) as f64;
+        println!(
+            "  admitted {:>6}  shed {:>6} ({:>5.1}%)  backoff {:>5}  full {:>5}  \
+             p50 {:>8.1} us  p99 {:>8.1} us  {:.2} Msym/s",
+            out.admitted,
+            out.shed,
+            shed_rate * 100.0,
+            out.backed_off,
+            out.full,
+            out.p50_us,
+            out.p99_us,
+            out.symbols as f64 / out.wall_s / 1e6
+        );
+        (out.shed, out.full)
+    } else {
+        let clients = args.usize_or("clients", 2)?.max(1);
+        let requests = args.usize_or("requests", 8)?.max(1);
+        println!(
+            "closed loop over {addr}: {clients} client(s) x {requests} burst(s) x {spb} \
+             symbols, profiles {profiles:?}"
+        );
+        let t0 = std::time::Instant::now();
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = addr.clone();
+                let profiles = profiles.clone();
+                let bursts = bursts.clone();
+                std::thread::spawn(move || -> Result<(usize, u64, Vec<f64>)> {
+                    let net = NetClient::connect(addr.as_str())?;
+                    let (mut symbols, mut shed) = (0usize, 0u64);
+                    let mut lat = Vec::with_capacity(requests);
+                    for r in 0..requests {
+                        let profile = &profiles[(c + r) % profiles.len()];
+                        let resp = net.submit(profile, bursts[profile].clone(), None)?;
+                        match (&resp.shed, &resp.error) {
+                            (Some(_), _) => shed += 1,
+                            (None, Some(e)) => anyhow::bail!("remote error: {e}"),
+                            (None, None) => {
+                                symbols += resp.soft_symbols.len();
+                                lat.push(resp.latency_us);
+                            }
+                        }
+                    }
+                    Ok((symbols, shed, lat))
+                })
+            })
+            .collect();
+        let mut lat = LatencyStats::new();
+        let (mut symbols, mut shed) = (0usize, 0u64);
+        for j in joins {
+            let (s, sh, l) = j.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+            symbols += s;
+            shed += sh;
+            for us in l {
+                lat.record_us(us);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  served {:.2} Msym/s over {:.1} ms wall  shed {shed}  p50 {:.1} us  \
+             p99 {:.1} us (server-side)",
+            symbols as f64 / wall / 1e6,
+            wall * 1e3,
+            lat.percentile_us(50.0),
+            lat.percentile_us(99.0)
+        );
+        // `NetClient::submit` retries Full internally, so closed-loop
+        // clients never observe a Full verdict themselves.
+        (shed, 0)
+    };
+
+    if args.flag("assert-shed") {
+        anyhow::ensure!(
+            total_shed > 0,
+            "--assert-shed: expected shed frames under this load, saw none (full {total_full})"
+        );
+        println!("assert-shed: ok ({total_shed} sheds)");
+    }
+    if args.flag("assert-no-shed") {
+        anyhow::ensure!(
+            total_shed == 0,
+            "--assert-no-shed: expected zero shed frames, saw {total_shed}"
+        );
+        println!("assert-no-shed: ok");
+    }
+    if args.flag("shutdown") {
+        let net = NetClient::connect(addr.as_str())?;
+        net.shutdown_server()?;
+        println!("server shutdown acknowledged");
     }
     Ok(())
 }
@@ -935,7 +1248,8 @@ fn bench_cmd(args: &Args) -> Result<()> {
             };
             let pool = ServerPool::from_registry(&reg, &profiles, &cfg)?.spawn();
             let client = pool.client();
-            let out = replay_open_loop(&client, &trace, &profiles, &bursts)?;
+            let out =
+                replay_open_loop(|p, s| client.try_submit(p, s, None), &trace, &profiles, &bursts)?;
             drop(client);
             pool.shutdown();
             let shed_rate = out.shed as f64 / (out.offered.max(1)) as f64;

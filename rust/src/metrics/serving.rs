@@ -358,6 +358,12 @@ pub struct PoolStats {
 
 /// Pool-wide snapshot: one [`ShardStats`] per shard, plus the
 /// scheduler's pool-level gauges.
+///
+/// This is the operator's primary window into a serving pool — local
+/// or behind the `coordinator::net` TCP front end, where
+/// `repro serve --listen` prints [`ServerStats::render`] on shutdown.
+/// docs/OPERATIONS.md is the runbook for reading it under load
+/// (symptom → gauge → knob).
 #[derive(Debug, Clone)]
 pub struct ServerStats {
     /// Per-shard counters, in shard order.

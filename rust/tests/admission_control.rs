@@ -258,6 +258,7 @@ fn admitted_requests_stay_bit_identical_to_the_sequential_reference() {
                 assert_eq!(s.samples, bursts[idx], "shed bursts come back untouched");
                 assert_eq!(s.budget_us, budget_us);
                 assert!(s.predicted_us > s.budget_us);
+                assert!(s.retry_after_us > 0.0, "every shed carries a backoff hint");
                 assert!(resp.soft_symbols.is_empty(), "a shed computes nothing");
                 assert_eq!(resp.batched, 0);
             }

@@ -1,0 +1,221 @@
+//! Loopback acceptance for the TCP serving front end (`coordinator::
+//! net`): remote callers must be indistinguishable from in-process
+//! ones.  Concurrent `NetClient`s get soft symbols bit-identical to
+//! the sequential in-process reference; overload verdicts travel as
+//! typed `Shed` frames carrying a positive `retry_after_us` hint with
+//! the burst preserved caller-side; and graceful shutdown drains every
+//! admitted request before the connections close.
+
+use equalizer::coordinator::instance::EqualizerInstance;
+use equalizer::coordinator::net::{NetClient, NetServer};
+use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool, Shard, TrySubmit};
+use equalizer::coordinator::sched::{AdmissionConfig, LatencySlo, SchedulerConfig};
+use equalizer::coordinator::seqlen::SeqLenOptimizer;
+use equalizer::coordinator::server::EqualizerServer;
+use equalizer::coordinator::timing::TimingModel;
+use equalizer::runtime::ArtifactRegistry;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn registry() -> ArtifactRegistry {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    ArtifactRegistry::discover(dir).expect("committed native artifacts")
+}
+
+/// Decimates after a fixed sleep — a knowable service time, so a tight
+/// budget sheds deterministically and an in-flight request is easy to
+/// park behind while shutdown runs.
+struct SlowInstance {
+    width: usize,
+    delay: Duration,
+}
+
+impl EqualizerInstance for SlowInstance {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        Ok(chunk.iter().step_by(2).copied().collect())
+    }
+}
+
+fn slow_shard(delay: Duration) -> Shard<SlowInstance> {
+    let optimizer = SeqLenOptimizer::new(TimingModel::new(64, 8, 3, 9, 200e6));
+    let targets: Vec<f64> = (1..=100).map(|i| i as f64 * 1e9).collect();
+    let engine =
+        EqualizerServer::new(vec![SlowInstance { width: 256, delay }], 32, 2, &optimizer, &targets)
+            .unwrap();
+    Shard::single("slow", engine)
+}
+
+#[test]
+fn concurrent_net_clients_stay_bit_identical_to_the_sequential_reference() {
+    // The acceptance headline: N remote clients hammering the server
+    // concurrently must receive exactly the bytes a sequential
+    // in-process caller computes — the wire adds transport, never
+    // arithmetic.
+    let reg = registry();
+    let profiles = ["cnn_imdd_quant"];
+    let bursts: Vec<Vec<f32>> = (0..4)
+        .map(|b| (0..3000).map(|i| ((i + 131 * b) as f32 * 0.17).sin()).collect())
+        .collect();
+
+    let reference_cfg = PoolConfig { shards: 1, instances_per_shard: 1, ..PoolConfig::default() };
+    let reference = ServerPool::from_registry(&reg, &profiles, &reference_cfg).unwrap().spawn();
+    let want: Arc<Vec<Vec<f32>>> = Arc::new(
+        bursts
+            .iter()
+            .map(|x| reference.call("cnn_imdd_quant", x.clone(), None).unwrap().soft_symbols)
+            .collect(),
+    );
+    reference.shutdown();
+
+    let cfg = PoolConfig {
+        shards: 2,
+        instances_per_shard: 1,
+        policy: RoutePolicy::ShortestQueue,
+        ..PoolConfig::default()
+    };
+    let pool = ServerPool::from_registry(&reg, &profiles, &cfg).unwrap().spawn();
+    let server = NetServer::spawn(pool.client(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+
+    let bursts = Arc::new(bursts);
+    let workers: Vec<_> = (0..4)
+        .map(|w| {
+            let bursts = Arc::clone(&bursts);
+            let want = Arc::clone(&want);
+            std::thread::spawn(move || {
+                let client = NetClient::connect(addr).expect("loopback connect");
+                for round in 0..3 {
+                    let idx = (w + round) % bursts.len();
+                    let resp = client.call("cnn_imdd_quant", bursts[idx].clone(), None).unwrap();
+                    assert_eq!(
+                        resp.soft_symbols, want[idx],
+                        "client {w} round {round} diverged from the sequential reference"
+                    );
+                    assert!(resp.latency_us > 0.0);
+                    assert_eq!(resp.profile, "cnn_imdd_quant");
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("worker panicked");
+    }
+
+    server.shutdown();
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), 12, "4 clients x 3 rounds, all served");
+    assert_eq!(stats.total_errors(), 0);
+    assert_eq!(stats.total_shed(), 0);
+}
+
+#[test]
+fn shed_verdicts_travel_with_a_positive_retry_after_hint() {
+    // Overload semantics over the wire: a budget the slow shard can
+    // never meet once busy must come back as a typed Shed (not an
+    // error, not a hang) whose retry_after_us is positive, with the
+    // caller's burst intact — the wire does not echo samples, so the
+    // client library must hand back its own copy.
+    let delay = Duration::from_millis(5);
+    let budget_us = 100.0; // far below the ~5 ms service time
+    let sched = SchedulerConfig::default()
+        .with_admission(AdmissionConfig::new(LatencySlo::new(budget_us)));
+    let pool =
+        ServerPool::with_scheduler(vec![slow_shard(delay)], RoutePolicy::ShortestQueue, 64, sched)
+            .unwrap()
+            .spawn();
+    // Seed the service-time EWMA so the estimator is live (a cold
+    // estimator admits by design).
+    let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+    pool.call("slow", burst.clone(), None).unwrap();
+
+    let server = NetServer::spawn(pool.client(), "127.0.0.1:0").unwrap();
+    let occupier = NetClient::connect(server.local_addr()).unwrap();
+    let prober = NetClient::connect(server.local_addr()).unwrap();
+
+    // Park one request on the engine, then probe while it runs: the
+    // probe predicts behind a busy shard and sheds.
+    let held: Vec<f32> = (0..2048).map(|i| i as f32).collect();
+    let parked = std::thread::spawn(move || occupier.call("slow", held, None).unwrap());
+    std::thread::sleep(Duration::from_millis(1));
+    let mut saw_shed = false;
+    for _ in 0..20 {
+        match prober.try_submit("slow", burst.clone(), None).unwrap() {
+            TrySubmit::Shed(s) => {
+                assert!(s.retry_after_us > 0.0, "shed frames must carry a backoff hint");
+                assert!(s.predicted_us > s.budget_us, "the condemning estimate travels");
+                assert_eq!(s.budget_us, budget_us);
+                assert_eq!(s.samples, burst, "the client keeps its own burst on a shed");
+                saw_shed = true;
+                break;
+            }
+            TrySubmit::Queued(rx) => {
+                rx.recv().unwrap();
+            }
+            TrySubmit::Full(_) => {}
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(saw_shed, "a 100 us budget behind a 5 ms burst must shed");
+    parked.join().expect("parked request must still complete");
+
+    // The blocking submit surfaces the same verdict as a PoolResponse
+    // with shed set, mirroring the in-process submit/recv flow.
+    let occupier = NetClient::connect(server.local_addr()).unwrap();
+    let held: Vec<f32> = (0..2048).map(|i| i as f32).collect();
+    let parked = std::thread::spawn(move || occupier.call("slow", held, None).unwrap());
+    std::thread::sleep(Duration::from_millis(1));
+    let mut saw_shed = false;
+    for _ in 0..20 {
+        let resp = prober.submit("slow", burst.clone(), None).unwrap();
+        if let Some(s) = &resp.shed {
+            assert!(s.retry_after_us > 0.0);
+            assert_eq!(s.samples, burst);
+            assert!(resp.soft_symbols.is_empty(), "a shed computes nothing");
+            saw_shed = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(saw_shed, "submit must surface the shed verdict too");
+    parked.join().expect("parked request must still complete");
+
+    server.shutdown();
+    pool.shutdown();
+}
+
+#[test]
+fn server_shutdown_drains_admitted_requests_and_acks_the_control_frame() {
+    // Drain guarantee: a request already admitted into the pool when
+    // shutdown starts must complete and its response must reach the
+    // client — shutdown half-closes only the read side, so a handler
+    // blocked on the pool reply still writes it out.
+    let delay = Duration::from_millis(20);
+    let pool = ServerPool::new(vec![slow_shard(delay)], RoutePolicy::RoundRobin, 8)
+        .unwrap()
+        .spawn();
+    let server = NetServer::spawn(pool.client(), "127.0.0.1:0").unwrap();
+
+    let worker_client = NetClient::connect(server.local_addr()).unwrap();
+    let in_flight = std::thread::spawn(move || {
+        // ~20 ms on the engine: comfortably in flight when the
+        // shutdown frame lands.
+        let burst: Vec<f32> = (0..2048).map(|i| i as f32).collect();
+        worker_client.call("slow", burst, None).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(5));
+
+    let controller = NetClient::connect(server.local_addr()).unwrap();
+    controller.shutdown_server().expect("shutdown must be acknowledged");
+    server.wait(); // returns only after the drain completes
+
+    let resp = in_flight.join().expect("admitted request must not be dropped");
+    assert_eq!(resp.soft_symbols.len(), 1024, "the drained reply carries real output");
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), 1);
+    assert_eq!(stats.total_errors(), 0);
+}

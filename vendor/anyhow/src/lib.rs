@@ -22,6 +22,13 @@ impl Error {
     pub fn msg<M: Display>(m: M) -> Self {
         Error { msg: m.to_string() }
     }
+
+    /// Wrap the error with higher-level context, real-anyhow style:
+    /// the context leads and the original message follows, matching
+    /// what `{:#}` prints on a real `anyhow` chain.
+    pub fn context<C: Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
 }
 
 impl Display for Error {
@@ -52,6 +59,37 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
 
 /// `Result` with [`Error`] as the default error type.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Real-anyhow's context extension: attach a message to the error arm
+/// of a `Result`.  Two impls (std errors and [`Error`] itself) cover
+/// the workspace; they cannot overlap because [`Error`] deliberately
+/// does not implement `std::error::Error`.
+pub trait Context<T> {
+    /// Wrap the error, if any, with `context`.
+    fn context<C: Display>(self, context: C) -> Result<T>;
+    /// Wrap the error, if any, with lazily-evaluated context.
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
 
 /// Construct an [`Error`] from a format string.
 #[macro_export]
@@ -106,6 +144,16 @@ mod tests {
         }
         assert!(check(3).is_ok());
         assert!(check(1).unwrap_err().to_string().contains("n > 2"));
+    }
+
+    #[test]
+    fn context_wraps_both_error_families() {
+        let io: Result<(), std::io::Error> = Err(std::io::Error::other("boom"));
+        let e = io.context("opening socket").unwrap_err();
+        assert_eq!(e.to_string(), "opening socket: boom");
+        let own: Result<()> = Err(anyhow!("inner"));
+        let e = own.with_context(|| format!("pass {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "pass 2: inner");
     }
 
     #[test]
