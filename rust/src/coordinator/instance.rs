@@ -106,6 +106,9 @@ pub enum AnyInstance {
     Native(NativeInstance),
     Fir(FirInstance),
     Volterra(VolterraInstance),
+    /// Any flavor wrapped in deterministic fault injection
+    /// ([`FaultyInstance`]) — chaos testing and `--fault-spec` only.
+    Faulty(Box<FaultyInstance<AnyInstance>>),
     #[cfg(feature = "pjrt")]
     Pjrt(PjrtInstance),
 }
@@ -135,6 +138,12 @@ impl AnyInstance {
             entry.name
         )
     }
+
+    /// Wrap this instance in deterministic fault injection, drawing
+    /// decisions from `plan` (`util::faultinject`).
+    pub fn with_faults(self, plan: crate::util::faultinject::FaultPlan) -> Self {
+        Self::Faulty(Box::new(FaultyInstance::new(self, plan)))
+    }
 }
 
 impl EqualizerInstance for AnyInstance {
@@ -143,6 +152,7 @@ impl EqualizerInstance for AnyInstance {
             AnyInstance::Native(i) => i.width(),
             AnyInstance::Fir(i) => i.width(),
             AnyInstance::Volterra(i) => i.width(),
+            AnyInstance::Faulty(i) => i.width(),
             #[cfg(feature = "pjrt")]
             AnyInstance::Pjrt(i) => i.width(),
         }
@@ -153,6 +163,7 @@ impl EqualizerInstance for AnyInstance {
             AnyInstance::Native(i) => i.process(chunk),
             AnyInstance::Fir(i) => i.process(chunk),
             AnyInstance::Volterra(i) => i.process(chunk),
+            AnyInstance::Faulty(i) => i.process(chunk),
             #[cfg(feature = "pjrt")]
             AnyInstance::Pjrt(i) => i.process(chunk),
         }
@@ -163,6 +174,7 @@ impl EqualizerInstance for AnyInstance {
             AnyInstance::Native(i) => i.process_batch(chunks, n_chunks),
             AnyInstance::Fir(i) => i.process_batch(chunks, n_chunks),
             AnyInstance::Volterra(i) => i.process_batch(chunks, n_chunks),
+            AnyInstance::Faulty(i) => i.process_batch(chunks, n_chunks),
             #[cfg(feature = "pjrt")]
             AnyInstance::Pjrt(i) => i.process_batch(chunks, n_chunks),
         }
@@ -300,6 +312,46 @@ impl EqualizerInstance for SharedPjrtInstance {
     }
 }
 
+/// Deterministic fault-injection wrapper: before each pass, draw one
+/// decision from the seeded plan ([`crate::util::faultinject`]) and
+/// panic / fail / delay accordingly — otherwise delegate to the inner
+/// instance untouched, so non-faulted outputs stay bit-identical to
+/// the bare backend.  Chaos tests and `repro serve --fault-spec` only;
+/// nothing constructs this in a production path.
+pub struct FaultyInstance<I> {
+    inner: I,
+    plan: crate::util::faultinject::FaultPlan,
+}
+
+impl<I: EqualizerInstance> FaultyInstance<I> {
+    /// Wrap `inner`, drawing fault decisions from `plan`.
+    pub fn new(inner: I, plan: crate::util::faultinject::FaultPlan) -> Self {
+        Self { inner, plan }
+    }
+}
+
+impl<I: EqualizerInstance> EqualizerInstance for FaultyInstance<I> {
+    fn width(&self) -> usize {
+        self.inner.width()
+    }
+
+    fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+        use crate::util::faultinject::{Fault, FatalFault};
+        match self.plan.draw() {
+            Some(Fault::Panic) => panic!("injected engine panic (faultinject)"),
+            Some(Fault::Fatal) => std::panic::panic_any(FatalFault),
+            Some(Fault::Error) => anyhow::bail!("injected engine error (faultinject)"),
+            Some(Fault::Delay(d)) => std::thread::sleep(d),
+            None => {}
+        }
+        self.inner.process(chunk)
+    }
+
+    // The default process_batch loops over process(), so batched
+    // passes draw one fault decision per chunk — same per-request
+    // rates on every scheduled path.
+}
+
 /// Test instance: decimate by `n_os` (an "equalizer" with no memory).
 pub struct DecimatorInstance {
     pub width: usize,
@@ -366,6 +418,33 @@ mod tests {
         let entry = reg.exact("volterra_imdd_w1024").unwrap();
         let mut inst = AnyInstance::load(entry).unwrap();
         assert_eq!(inst.process(&x).unwrap().len(), 512);
+    }
+
+    #[test]
+    fn faulty_instance_is_deterministic_and_clean_passes_are_bit_identical() {
+        use crate::util::faultinject::FaultSpec;
+        let spec: FaultSpec = "error=0.3,seed=11".parse().unwrap();
+        let chunk: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let run = |spec: &FaultSpec| {
+            let inner = DecimatorInstance { width: 8, n_os: 2 };
+            let mut faulty = FaultyInstance::new(inner, spec.plan(0));
+            assert_eq!(faulty.width(), 8);
+            (0..50).map(|_| faulty.process(&chunk).is_ok()).collect::<Vec<_>>()
+        };
+        let a = run(&spec);
+        assert_eq!(a, run(&spec), "equal specs inject identical fault sequences");
+        let errors = a.iter().filter(|ok| !**ok).count();
+        assert!(errors > 0, "a 30% error rate must fire in 50 passes");
+        // Non-faulted passes are bit-identical to the bare instance.
+        let mut bare = DecimatorInstance { width: 8, n_os: 2 };
+        let mut faulty =
+            FaultyInstance::new(DecimatorInstance { width: 8, n_os: 2 }, spec.plan(0));
+        for ok in &a {
+            let out = faulty.process(&chunk);
+            if *ok {
+                assert_eq!(out.unwrap(), bare.process(&chunk).unwrap());
+            }
+        }
     }
 
     #[test]

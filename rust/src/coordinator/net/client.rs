@@ -11,7 +11,7 @@ use anyhow::{Context, Result};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How long [`NetClient::submit`] sleeps before retrying a
 /// [`Status::Full`] backpressure verdict.  `Full` carries no estimate
@@ -19,6 +19,19 @@ use std::time::Duration;
 /// honest strategy; `Shed` retries are paced by the server's
 /// [`Shed::retry_after_us`] instead.
 const FULL_RETRY_PAUSE: Duration = Duration::from_micros(200);
+
+/// Retry budget for consecutive [`Status::Full`] verdicts in
+/// [`NetClient::submit`] before it gives up with a typed error.  A
+/// healthy queue drains in a handful of service times; thousands of
+/// Full round trips mean the pool is wedged or the caller is hammering
+/// a saturated ingress — spinning forever (the pre-PR-8 behavior)
+/// turned either into a silent livelock.
+const FULL_RETRY_LIMIT: u32 = 5000;
+
+/// Overall wall-clock bound across [`NetClient::submit`]'s Full
+/// retries, enforced together with [`FULL_RETRY_LIMIT`] (whichever
+/// trips first).
+const FULL_RETRY_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// A remote [`PoolClient`]-alike speaking the docs/PROTOCOL.md frame
 /// format over one TCP connection.  Requests on a single `NetClient`
@@ -140,18 +153,31 @@ impl NetClient {
     /// Remote twin of `PoolClient::submit` + `recv`: block until the
     /// burst is served or shed.  `Full` backpressure is retried after
     /// [`FULL_RETRY_PAUSE`] (the blocking wait the in-process submit
-    /// does on the queue condvar); a shed comes back as a
-    /// [`PoolResponse`] with [`PoolResponse::shed`] set, carrying the
-    /// burst and the retry-after hint.
+    /// does on the queue condvar) — but only within a bounded budget
+    /// ([`FULL_RETRY_LIMIT`] attempts / [`FULL_RETRY_TIMEOUT`] overall),
+    /// after which a typed error surfaces instead of an unbounded spin
+    /// against a wedged pool.  A shed comes back as a [`PoolResponse`]
+    /// with [`PoolResponse::shed`] set, carrying the burst and the
+    /// retry-after hint.
     pub fn submit(
         &self,
         profile: &str,
         mut samples: Vec<f32>,
         t_req: Option<f64>,
     ) -> Result<PoolResponse> {
+        let started = Instant::now();
+        let mut full_retries = 0u32;
         loop {
             let (returned, resp) = self.exchange(profile, samples, t_req)?;
             if resp.status == Status::Full {
+                full_retries += 1;
+                anyhow::ensure!(
+                    full_retries < FULL_RETRY_LIMIT && started.elapsed() < FULL_RETRY_TIMEOUT,
+                    "server queue stayed full through {full_retries} retries over {:.1} s — \
+                     giving up (the pool is saturated or wedged; use try_submit to pace \
+                     retries yourself)",
+                    started.elapsed().as_secs_f64()
+                );
                 samples = returned;
                 std::thread::sleep(FULL_RETRY_PAUSE);
                 continue;
@@ -233,6 +259,11 @@ fn pool_response_from(profile: &str, resp: Response) -> PoolResponse {
         latency_us: resp.latency_us,
         batched: resp.batched as usize,
         error: (resp.status == Status::Error).then(|| resp.detail.clone()),
+        // The v1 wire collapses pool-side timeouts into typed Error
+        // frames (the detail carries the deadline message), so a
+        // remote caller sees them in `error` — the flag is local-pool
+        // metadata.
+        timed_out: false,
         shed,
     }
 }

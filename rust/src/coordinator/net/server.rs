@@ -16,22 +16,45 @@
 
 use super::super::pool::{PoolClient, PoolResponse, TrySubmit};
 use super::wire::{self, Frame, Request, Response};
+use crate::util::faultinject::FaultPlan;
 use anyhow::{Context, Result};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-/// Shared server state: the stop latch plus the registries the teardown
+/// Grace added on top of the pool's request deadline when a reader
+/// bounds its blocking reply wait ([`serve_request`]): the deadline is
+/// enforced at *dequeue*, so a request admitted just under the wire
+/// legitimately replies up to one service time late.  Only a wedged
+/// shard (worker stuck inside an engine) blows deadline + slack — and
+/// then the reader sends a typed timeout error instead of hanging the
+/// socket forever.
+const REPLY_WAIT_SLACK: Duration = Duration::from_millis(250);
+
+/// One accepted connection: a `try_clone` of the socket (so teardown
+/// can half-close its read side from outside the reader thread; `None`
+/// when the clone failed) paired with the reader's join handle.
+struct ConnEntry {
+    conn: Option<TcpStream>,
+    reader: JoinHandle<()>,
+}
+
+/// Shared server state: the stop latch plus the registry the teardown
 /// path needs to interrupt blocked readers and join their threads.
 struct Inner {
     stop: Mutex<bool>,
     stopped: Condvar,
-    /// One `try_clone` of each live connection, kept so shutdown can
-    /// half-close its read side from outside the reader thread.
-    conns: Mutex<Vec<TcpStream>>,
-    /// Per-connection handler threads, joined at teardown.
-    joins: Mutex<Vec<JoinHandle<()>>>,
+    /// Live-connection registry.  Pruned on every accept
+    /// ([`accept_loop`]): entries whose reader already exited (peer
+    /// hung up, clean EOF) are dropped then, so the registry — and the
+    /// socket clones it pins — stays bounded by *live* connections
+    /// instead of growing with every connection ever accepted (the
+    /// pre-PR-8 reader/fd leak).
+    conns: Mutex<Vec<ConnEntry>>,
+    /// Deterministic connection-drop injector (chaos testing only; see
+    /// [`NetServer::spawn_with_faults`]).  `None` in production.
+    drop_plan: Option<Mutex<FaultPlan>>,
 }
 
 impl Inner {
@@ -42,6 +65,14 @@ impl Inner {
 
     fn stop_requested(&self) -> bool {
         *self.stop.lock().expect("stop latch")
+    }
+
+    /// One seeded draw from the connection-drop injector (false when
+    /// no fault plan is configured).
+    fn draw_drop(&self) -> bool {
+        self.drop_plan
+            .as_ref()
+            .is_some_and(|p| p.lock().unwrap_or_else(|e| e.into_inner()).draw_drop())
     }
 }
 
@@ -62,13 +93,28 @@ impl NetServer {
     /// Returns as soon as the listener is bound; the bound address —
     /// with the real port — is [`NetServer::local_addr`].
     pub fn spawn(client: PoolClient, addr: impl ToSocketAddrs) -> Result<NetServer> {
+        Self::spawn_with_faults(client, addr, None)
+    }
+
+    /// [`NetServer::spawn`] plus a deterministic connection-drop
+    /// injector for chaos testing (`repro serve --fault-spec drop=...`):
+    /// each incoming request frame makes one seeded draw, and a hit
+    /// severs the connection *without replying* — the client observes a
+    /// mid-request disconnect, exactly the failure the reader-leak and
+    /// reply-guarantee paths must absorb.  Pass `None` for production
+    /// behavior (identical to `spawn`).
+    pub fn spawn_with_faults(
+        client: PoolClient,
+        addr: impl ToSocketAddrs,
+        drop_plan: Option<FaultPlan>,
+    ) -> Result<NetServer> {
         let listener = TcpListener::bind(addr).context("binding the listen address")?;
         let addr = listener.local_addr().context("reading the bound address")?;
         let inner = Arc::new(Inner {
             stop: Mutex::new(false),
             stopped: Condvar::new(),
             conns: Mutex::new(Vec::new()),
-            joins: Mutex::new(Vec::new()),
+            drop_plan: drop_plan.map(Mutex::new),
         });
         let acceptor = {
             let inner = Arc::clone(&inner);
@@ -124,13 +170,19 @@ impl NetServer {
         // Half-close the read side of every connection.  Readers
         // blocked between frames see EOF and exit; handlers mid-request
         // are blocked on the pool reply (not the socket), so they
-        // finish, write the response, and exit on the next read.
-        for conn in self.inner.conns.lock().expect("conn registry").drain(..) {
-            let _ = conn.shutdown(Shutdown::Read);
+        // finish, write the response, and exit on the next read.  Then
+        // join every reader — including ones whose peer disconnected
+        // long ago (their threads already returned; the join is
+        // immediate).
+        let entries: Vec<ConnEntry> =
+            self.inner.conns.lock().expect("conn registry").drain(..).collect();
+        for entry in &entries {
+            if let Some(conn) = &entry.conn {
+                let _ = conn.shutdown(Shutdown::Read);
+            }
         }
-        let joins: Vec<_> = self.inner.joins.lock().expect("join registry").drain(..).collect();
-        for j in joins {
-            let _ = j.join();
+        for entry in entries {
+            let _ = entry.reader.join();
         }
     }
 }
@@ -142,13 +194,18 @@ fn accept_loop(listener: TcpListener, client: PoolClient, inner: Arc<Inner>) {
         }
         let Ok(conn) = conn else { continue };
         let _ = conn.set_nodelay(true);
-        if let Ok(clone) = conn.try_clone() {
-            inner.conns.lock().expect("conn registry").push(clone);
-        }
+        let clone = conn.try_clone().ok();
         let client = client.clone();
         let inner2 = Arc::clone(&inner);
-        let join = std::thread::spawn(move || handle_conn(conn, client, inner2));
-        inner.joins.lock().expect("join registry").push(join);
+        let reader = std::thread::spawn(move || handle_conn(conn, client, inner2));
+        let mut registry = inner.conns.lock().expect("conn registry");
+        // Prune exited readers first: a client that dropped its socket
+        // ended its reader, and keeping the dead entry (thread handle +
+        // socket clone) around until teardown leaked both — a
+        // long-lived server accepting many short-lived connections
+        // grew without bound.
+        registry.retain(|entry| !entry.reader.is_finished());
+        registry.push(ConnEntry { conn: clone, reader });
     }
 }
 
@@ -168,7 +225,17 @@ fn handle_conn(mut conn: TcpStream, client: PoolClient, inner: Arc<Inner>) {
             }
         };
         let resp = match frame {
-            Frame::Request(req) => serve_request(&client, req),
+            Frame::Request(req) => {
+                if inner.draw_drop() {
+                    // Injected connection drop (chaos testing): sever
+                    // before admission, so the request never enters the
+                    // pool and the client sees a clean mid-request
+                    // disconnect.
+                    let _ = conn.shutdown(Shutdown::Both);
+                    return;
+                }
+                serve_request(&client, req)
+            }
             Frame::Shutdown { id } => {
                 // Ack first so the requesting client sees the frame
                 // land, then trip the latch for `wait()` to act on.
@@ -189,7 +256,12 @@ fn handle_conn(mut conn: TcpStream, client: PoolClient, inner: Arc<Inner>) {
 /// bounded queue back-pressures remote callers exactly like local
 /// ones), and the blocking `recv` on an admitted request is what makes
 /// shutdown drain-safe — the handler cannot exit between admission and
-/// reply.
+/// reply.  When the pool carries a request deadline
+/// ([`PoolClient::request_timeout`]) that wait is bounded at
+/// deadline + [`REPLY_WAIT_SLACK`]: the pool normally resolves expired
+/// requests itself at dequeue, so only a *wedged* shard reaches the
+/// bound — and then the caller gets a typed timeout error frame
+/// instead of a socket that hangs forever.
 fn serve_request(client: &PoolClient, req: Request) -> Response {
     let Request { id, profile, t_req, samples } = req;
     match client.try_submit(&profile, samples, t_req) {
@@ -200,9 +272,26 @@ fn serve_request(client: &PoolClient, req: Request) -> Response {
             // its own copy, so the wire carries only the estimates.
             Response::shed(id, 0, &verdict)
         }
-        Ok(TrySubmit::Queued(rx)) => match rx.recv() {
-            Err(_) => Response::error(id, "shard dropped the reply"),
-            Ok(resp) => response_from_pool(id, resp),
+        Ok(TrySubmit::Queued(rx)) => match client.request_timeout() {
+            None => match rx.recv() {
+                Err(_) => Response::error(id, "shard dropped the reply"),
+                Ok(resp) => response_from_pool(id, resp),
+            },
+            Some(deadline) => match rx.recv_timeout(deadline + REPLY_WAIT_SLACK) {
+                Ok(resp) => response_from_pool(id, resp),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    Response::error(id, "shard dropped the reply")
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => Response::error(
+                    id,
+                    format!(
+                        "request timed out: no reply within the {:.0} us deadline \
+                         (+{:.0} us slack) — shard wedged?",
+                        deadline.as_secs_f64() * 1e6,
+                        REPLY_WAIT_SLACK.as_secs_f64() * 1e6
+                    ),
+                ),
+            },
         },
     }
 }

@@ -102,6 +102,21 @@
 //! keep their engines resident (no weight reload on growth) and drain
 //! any straggling queue before going idle, so shrinking never strands
 //! a request.
+//!
+//! **Reply guarantee.**  Every *admitted* request resolves its reply
+//! channel exactly once, on every path: served (ok or engine error),
+//! deadline-expired at dequeue ([`SchedulerConfig::request_timeout`]
+//! -> [`PoolResponse::timed_out`]), dropped by an engine panic (the
+//! worker catches the unwind and a RAII guard error-replies the whole
+//! in-flight batch), or stranded by a dead worker (the monitor thread
+//! supervises a per-shard liveness beacon, fails the dead shard's
+//! queue with error replies, and — when the pool carries a respawn
+//! factory ([`ServerPool::with_respawn`], wired automatically by
+//! [`ServerPool::from_registry`]) — restamps the shard's engines from
+//! the resident blueprints and spawns a replacement worker, counted in
+//! [`PoolStats::panics`] / [`PoolStats::respawns`]).  Queue mutexes
+//! recover from poisoning (`lock_queue`) so one panicking thread can
+//! never wedge submitters, thieves or the monitor.
 
 use super::instance::{
     AnyInstance, EqualizerInstance, FirInstance, NativeInstance, VolterraInstance,
@@ -114,8 +129,10 @@ use crate::equalizer::weights::CnnTopologyCfg;
 use crate::metrics::serving::{PoolStats, ServerStats, ShardCounters, SLO_RECENT_WINDOW};
 use crate::runtime::artifact::{ProfileBlueprint, ProfileDatapath};
 use crate::runtime::ArtifactRegistry;
+use crate::util::faultinject::{FatalFault, FaultSpec};
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -142,6 +159,12 @@ const STEAL_POLL_MAX: Duration = Duration::from_millis(32);
 /// Minimum victim queue length before a steal is worthwhile (the last
 /// queued burst is left to its own shard).
 const STEAL_MIN: usize = 2;
+
+/// Liveness-supervision cadence: how often the monitor thread checks
+/// every shard's beacon for a dead worker.  The monitor's sleep is the
+/// finest of this and the configured SLO/autoscale ticks, so a killed
+/// worker is failed-over or respawned within a few milliseconds.
+const SUPERVISE_TICK: Duration = Duration::from_millis(2);
 
 /// How the dispatcher picks a shard for a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -206,6 +229,14 @@ pub struct PoolResponse {
     pub batched: usize,
     /// Processing failure, if any.
     pub error: Option<String>,
+    /// The request's [`SchedulerConfig::request_timeout`] deadline
+    /// expired while it sat in a queue: it was **never dispatched** to
+    /// an engine (`soft_symbols` is empty, `batched` is 0) and
+    /// [`Self::error`] carries the timeout message so callers that
+    /// only look at `error` still see a terminal failure.  Counted in
+    /// [`crate::metrics::serving::ShardStats::timeouts`], never in
+    /// `errors`.
+    pub timed_out: bool,
     /// `Some` when admission control deadline-rejected this burst at
     /// the ingress ([`SchedulerConfig::admission`]): it never reached
     /// a queue, `soft_symbols` is empty, and the burst travels back in
@@ -303,6 +334,14 @@ pub struct PoolConfig {
     /// Adaptive scheduling policy (coalescing / stealing / autoscale);
     /// the default disables all three.
     pub scheduler: SchedulerConfig,
+    /// Deterministic engine-fault injection (`repro serve
+    /// --fault-spec`, chaos tests): every stamped instance is wrapped
+    /// in a [`FaultyInstance`](super::instance::FaultyInstance)
+    /// drawing from its own decorrelated stream of this spec, so equal
+    /// specs fault identically run to run.  `None` (the default, and
+    /// any spec with zero engine rates) stamps bare instances — no
+    /// wrapper on the hot path.
+    pub fault_spec: Option<FaultSpec>,
 }
 
 impl Default for PoolConfig {
@@ -316,9 +355,16 @@ impl Default for PoolConfig {
             lut_instances: 64,
             f_clk: 200e6,
             scheduler: SchedulerConfig::default(),
+            fault_spec: None,
         }
     }
 }
+
+/// Builds a replacement [`Shard`] for a worker the supervisor found
+/// dead (see [`ServerPool::with_respawn`]).  Returning `None` declines
+/// the respawn: the monitor then fails the shard's queue with error
+/// replies instead (the reply guarantee holds either way).
+pub type RespawnFactory<I> = Box<dyn FnMut(usize) -> Option<Shard<I>> + Send>;
 
 /// A sharded, multi-profile serving pool (spawn with
 /// [`ServerPool::spawn`]).
@@ -329,6 +375,7 @@ pub struct ServerPool<I: EqualizerInstance + Send + 'static> {
     scheduler: SchedulerConfig,
     /// (floor, ceiling) of the autoscaler's DOP axis; (0, 0) = off.
     dop_range: (usize, usize),
+    respawn: Option<RespawnFactory<I>>,
 }
 
 impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
@@ -401,7 +448,26 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
                  and/or autoscaling (DOP / shard axis)"
             );
         }
-        Ok(Self { shards, policy, queue_cap, scheduler, dop_range: (0, 0) })
+        Ok(Self { shards, policy, queue_cap, scheduler, dop_range: (0, 0), respawn: None })
+    }
+
+    /// Register a supervised-respawn factory: when the monitor thread
+    /// finds a shard's worker dead (its liveness beacon cleared while
+    /// the pool is open — an engine panic that escaped the per-batch
+    /// catch, e.g. a [`FatalFault`]), it calls `factory(shard_id)` for
+    /// a replacement [`Shard`] and spawns a fresh worker on the same
+    /// queue — queued requests survive the worker, and the respawn is
+    /// counted in [`PoolStats::respawns`].  The factory must stamp
+    /// engines equivalent to the originals (registry-backed pools do
+    /// this from the resident [`ProfileBlueprint`]s — no weight
+    /// reload).  Without a factory a dead shard's queue is failed with
+    /// error replies instead, so no admitted request is ever stranded.
+    pub fn with_respawn(
+        mut self,
+        factory: impl FnMut(usize) -> Option<Shard<I>> + Send + 'static,
+    ) -> Self {
+        self.respawn = Some(Box::new(factory));
+        self
     }
 
     /// Enable the autoscaler's DOP axis on a hand-built pool: every
@@ -446,11 +512,11 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
         self.shards.len()
     }
 
-    /// Start one worker thread per shard (plus the monitor thread when
-    /// autoscaling or an SLO is configured) and return the dispatch
-    /// handle.
+    /// Start one worker thread per shard plus the monitor thread (the
+    /// control plane: liveness supervision always; window adaptation /
+    /// autoscaling when configured) and return the dispatch handle.
     pub fn spawn(self) -> PoolHandle {
-        let Self { shards, policy, queue_cap, scheduler, dop_range } = self;
+        let Self { shards, policy, queue_cap, scheduler, dop_range, respawn } = self;
         let n = shards.len();
         let profiles: Arc<[String]> = shards[0].profile_names().into();
         let pickers: BTreeMap<String, LutPicker> =
@@ -472,19 +538,24 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
             dop: AtomicUsize::new(min_dop),
             dop_ups: AtomicU64::new(0),
             dop_downs: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            respawned: Mutex::new(Vec::new()),
         });
         for c in &core.counters {
             c.set_window(core.sched.coalesce_window);
         }
         let mut joins = Vec::with_capacity(n + 1);
         for (id, shard) in shards.into_iter().enumerate() {
+            // The beacon is raised *before* the worker thread starts,
+            // so the supervisor can never race a slow spawn into a
+            // spurious "dead worker" verdict.
+            core.slots[id].alive.store(true, Ordering::SeqCst);
             let worker_core = Arc::clone(&core);
             joins.push(std::thread::spawn(move || worker_loop(shard, id, worker_core)));
         }
-        if core.sched.autoscale.is_some() || core.sched.slo.is_some() {
-            let monitor_core = Arc::clone(&core);
-            joins.push(std::thread::spawn(move || monitor_loop(monitor_core)));
-        }
+        let monitor_core = Arc::clone(&core);
+        joins.push(std::thread::spawn(move || monitor_loop(monitor_core, respawn)));
         let clients_guard = Arc::new(ClientsGuard { core: Arc::clone(&core) });
         PoolHandle {
             client: PoolClient {
@@ -520,6 +591,12 @@ struct ShardSlot {
     /// collision can only mispredict affinity (a routing/steal
     /// heuristic), never correctness.
     warm: AtomicU64,
+    /// Liveness beacon: raised (by `spawn` / the respawn path) before
+    /// the worker thread starts, cleared by the worker's RAII
+    /// [`Beacon`] on *any* exit — normal drain or unwind.  While the
+    /// pool is open, a cleared beacon therefore means the worker died;
+    /// the monitor's supervision pass respawns or fails the shard.
+    alive: AtomicBool,
     /// Signalled on every push (and on activation / shutdown).
     not_empty: Condvar,
     /// Signalled whenever the worker frees queue capacity.
@@ -566,6 +643,14 @@ struct SchedCore {
     dop: AtomicUsize,
     dop_ups: AtomicU64,
     dop_downs: AtomicU64,
+    /// Engine panics caught by the workers' per-batch unwind guard
+    /// (every one resolved its batch with error replies).
+    panics: AtomicU64,
+    /// Dead workers the supervisor replaced ([`ServerPool::with_respawn`]).
+    respawns: AtomicU64,
+    /// Join handles of supervised-respawn workers; drained by
+    /// [`PoolHandle::shutdown`] after the original joins.
+    respawned: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl SchedCore {
@@ -577,6 +662,8 @@ impl SchedCore {
             dop: if self.max_dop > 0 { self.dop.load(Ordering::SeqCst) } else { 0 },
             dop_ups: self.dop_ups.load(Ordering::Relaxed),
             dop_downs: self.dop_downs.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
         }
     }
 
@@ -665,16 +752,136 @@ impl Drop for ClientsGuard {
     }
 }
 
+/// Lock a shard queue, recovering from poison.  A thread that panicked
+/// while holding this mutex (a submitter asserting, a worker dying
+/// between guard scopes) marks it poisoned, but the protected
+/// `VecDeque` is structurally intact — every queue invariant the pool
+/// relies on (`queued` mirror, counters) is re-derived under the lock
+/// by whoever holds it next, so serving continues instead of every
+/// subsequent `.lock()` panicking the rest of the pool down.
+fn lock_queue(slot: &ShardSlot) -> MutexGuard<'_, VecDeque<PoolRequest>> {
+    slot.queue.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// [`Condvar::wait`] with the same poison recovery as [`lock_queue`].
+fn wait_not_empty<'a>(
+    slot: &ShardSlot,
+    q: MutexGuard<'a, VecDeque<PoolRequest>>,
+) -> MutexGuard<'a, VecDeque<PoolRequest>> {
+    slot.not_empty.wait(q).unwrap_or_else(|e| e.into_inner())
+}
+
+/// RAII liveness beacon: clears [`ShardSlot::alive`] when the worker
+/// exits — by normal drain or by unwinding — so the supervisor can
+/// tell a dead worker from a busy one without touching its thread.
+struct Beacon<'a> {
+    slot: &'a ShardSlot,
+}
+
+impl Drop for Beacon<'_> {
+    fn drop(&mut self) {
+        self.slot.alive.store(false, Ordering::SeqCst);
+    }
+}
+
+/// RAII reply guarantee for one dequeued batch: requests stay in
+/// `pending` until the instant their reply is sent, and whatever is
+/// still pending when the guard drops — an engine panic mid-pass, a
+/// worker death, any early exit — is resolved with an error reply and
+/// error-path accounting.  Every admitted request thus resolves its
+/// channel exactly once (see docs/SCHEDULING.md's invariant table).
+struct ReplyGuard<'a> {
+    pending: VecDeque<PoolRequest>,
+    shard: usize,
+    counters: &'a ShardCounters,
+    /// Error text used for replies resolved by `drop` (overwritten by
+    /// the panic handler with the panic's own message).
+    message: String,
+}
+
+impl<'a> ReplyGuard<'a> {
+    fn new(batch: Vec<PoolRequest>, shard: usize, counters: &'a ShardCounters) -> Self {
+        Self {
+            pending: batch.into(),
+            shard,
+            counters,
+            message: "shard worker dropped the request".to_string(),
+        }
+    }
+}
+
+impl Drop for ReplyGuard<'_> {
+    fn drop(&mut self) {
+        for req in self.pending.drain(..) {
+            let latency_us = req.enqueued_at.elapsed().as_secs_f64() * 1e6;
+            self.counters.served_with_busy(0, latency_us, 0.0, true);
+            self.counters.dequeued();
+            let _ = req.reply.send(PoolResponse {
+                soft_symbols: Vec::new(),
+                l_inst: 0,
+                shard: self.shard,
+                profile: req.profile,
+                elapsed_us: 0.0,
+                latency_us,
+                batched: 0,
+                error: Some(self.message.clone()),
+                timed_out: false,
+                shed: None,
+            });
+        }
+    }
+}
+
+/// Best-effort text of a panic payload for the error replies.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else if payload.is::<FatalFault>() {
+        "fatal injected fault"
+    } else {
+        "non-string panic payload"
+    }
+}
+
 /// Worker loop: serve batches from the own queue (stealing when idle)
 /// until every client is gone and the queue is drained.
+///
+/// Each batch runs under `catch_unwind`, so an engine panic resolves
+/// the batch with error replies (via the [`ReplyGuard`]) and the
+/// worker keeps serving.  On unwind-safety: the engines are the only
+/// state that crosses the catch boundary (`AssertUnwindSafe`), and a
+/// pass that unwound midway can leave an engine's internal scratch in
+/// a half-written state — that is sound to reuse *here* because every
+/// serve entry point rewrites its scratch from the inputs before
+/// reading it (the pipeline is a pure function of the burst plus
+/// immutable weights; no output is derived from leftover scratch).
+/// A panic whose payload is [`FatalFault`] is re-raised after the
+/// replies resolve: the worker dies deliberately (beacon cleared on
+/// the way out) and the supervisor takes over — the deterministic
+/// worker-death path the fault-injection harness uses to exercise
+/// respawn.
 fn worker_loop<I: EqualizerInstance + Send + 'static>(
     mut shard: Shard<I>,
     id: usize,
     core: Arc<SchedCore>,
 ) {
+    let _beacon = Beacon { slot: &core.slots[id] };
     while let Some(batch) = next_batch(&core, id, &shard) {
         apply_dop(&mut shard, &core);
-        execute_batch(&mut shard, id, &core, batch);
+        let mut guard = ReplyGuard::new(batch, id, &core.counters[id]);
+        let pass = catch_unwind(AssertUnwindSafe(|| {
+            execute_batch(&mut shard, id, &core, &mut guard);
+        }));
+        if let Err(payload) = pass {
+            core.panics.fetch_add(1, Ordering::Relaxed);
+            guard.message = format!("engine panic on shard {id}: {}", panic_message(&*payload));
+            drop(guard);
+            if payload.is::<FatalFault>() {
+                resume_unwind(payload);
+            }
+        }
     }
 }
 
@@ -708,7 +915,7 @@ fn next_batch<I: EqualizerInstance + Send + 'static>(
 ) -> Option<Vec<PoolRequest>> {
     let slot = &core.slots[id];
     let mut steal_wait = STEAL_POLL;
-    let mut q = slot.queue.lock().expect("shard queue");
+    let mut q = lock_queue(slot);
     loop {
         if let Some(first) = q.pop_front() {
             slot.queued.store(q.len(), Ordering::SeqCst);
@@ -722,16 +929,19 @@ fn next_batch<I: EqualizerInstance + Send + 'static>(
         if stealing {
             drop(q);
             let stole = steal_into(core, id);
-            q = slot.queue.lock().expect("shard queue");
+            q = lock_queue(slot);
             if stole || !q.is_empty() {
                 steal_wait = STEAL_POLL;
                 continue;
             }
-            let (guard, _) = slot.not_empty.wait_timeout(q, steal_wait).expect("shard queue");
+            let (guard, _) = slot
+                .not_empty
+                .wait_timeout(q, steal_wait)
+                .unwrap_or_else(|e| e.into_inner());
             steal_wait = (steal_wait * 2).min(STEAL_POLL_MAX);
             q = guard;
         } else {
-            q = slot.not_empty.wait(q).expect("shard queue");
+            q = wait_not_empty(slot, q);
         }
     }
 }
@@ -788,7 +998,10 @@ fn collect_group<I: EqualizerInstance + Send + 'static>(
         if now >= deadline {
             break;
         }
-        let (guard, _) = slot.not_empty.wait_timeout(q, deadline - now).expect("shard queue");
+        let (guard, _) = slot
+            .not_empty
+            .wait_timeout(q, deadline - now)
+            .unwrap_or_else(|e| e.into_inner());
         q = guard;
     }
     slot.warm.store(0, Ordering::Relaxed);
@@ -827,7 +1040,7 @@ fn steal_into(core: &SchedCore, thief: usize) -> bool {
     // open: submits landing between the read and the extend
     // overshot the cap.)
     let free = {
-        let tq = core.slots[thief].queue.lock().expect("shard queue");
+        let tq = lock_queue(&core.slots[thief]);
         let used = tq.len() + core.slots[thief].reserved.load(Ordering::SeqCst);
         let free = core.queue_cap.saturating_sub(used);
         if free > 0 {
@@ -839,7 +1052,7 @@ fn steal_into(core: &SchedCore, thief: usize) -> bool {
         return false;
     }
     let stolen: Vec<PoolRequest> = {
-        let mut vq = core.slots[v].queue.lock().expect("shard queue");
+        let mut vq = lock_queue(&core.slots[v]);
         // Leave the leading run of bursts that belong to the victim's
         // open coalescing group (they are about to batch there); steal
         // oldest-first from the cold remainder.
@@ -878,7 +1091,7 @@ fn steal_into(core: &SchedCore, thief: usize) -> bool {
     }
     core.counters[thief].stole(stolen.len() as u64);
     let taken = stolen.len();
-    let mut tq = core.slots[thief].queue.lock().expect("shard queue");
+    let mut tq = lock_queue(&core.slots[thief]);
     tq.extend(stolen);
     core.slots[thief].queued.store(tq.len(), Ordering::SeqCst);
     core.slots[thief].reserved.fetch_sub(free, Ordering::SeqCst);
@@ -901,32 +1114,76 @@ fn unreserve(slot: &ShardSlot, n: usize) {
     if n == 0 {
         return;
     }
-    let guard = slot.queue.lock().expect("shard queue");
+    let guard = lock_queue(slot);
     slot.reserved.fetch_sub(n, Ordering::SeqCst);
     drop(guard);
     slot.not_full.notify_all();
 }
 
+/// Resolve every request whose [`SchedulerConfig::request_timeout`]
+/// deadline expired while it waited (queue time plus any coalescing
+/// window — everything up to this dequeue point) with a timeout reply;
+/// the request is never dispatched to an engine.  Timeout accounting
+/// follows the error-isolation rule: `requests` and `timeouts` only.
+fn expire_deadlined(guard: &mut ReplyGuard<'_>, core: &SchedCore, id: usize) {
+    let Some(timeout) = core.sched.request_timeout else {
+        return;
+    };
+    let counters: &ShardCounters = &core.counters[id];
+    let mut i = 0;
+    while i < guard.pending.len() {
+        let waited = guard.pending[i].enqueued_at.elapsed();
+        if waited < timeout {
+            i += 1;
+            continue;
+        }
+        let req = guard.pending.remove(i).expect("scanned index in range");
+        let latency_us = waited.as_secs_f64() * 1e6;
+        counters.timed_out_one();
+        counters.dequeued();
+        let _ = req.reply.send(PoolResponse {
+            soft_symbols: Vec::new(),
+            l_inst: 0,
+            shard: id,
+            profile: req.profile,
+            elapsed_us: 0.0,
+            latency_us,
+            batched: 0,
+            error: Some(format!(
+                "request deadline exceeded: waited {:.0} us, timeout {:.0} us",
+                latency_us,
+                timeout.as_secs_f64() * 1e6
+            )),
+            timed_out: true,
+            shed: None,
+        });
+    }
+}
+
 /// Serve one batch: a single coalesced pipeline pass when the batch
 /// has >= 2 requests (falling back to per-request service if the
 /// coalesced pass errors), the plain single-request path otherwise.
+/// Requests live in the [`ReplyGuard`] until the moment their reply is
+/// sent, so an unwind anywhere in here leaves them resolvable.
 fn execute_batch<I: EqualizerInstance + Send + 'static>(
     shard: &mut Shard<I>,
     id: usize,
     core: &SchedCore,
-    batch: Vec<PoolRequest>,
+    guard: &mut ReplyGuard<'_>,
 ) {
+    expire_deadlined(guard, core, id);
     let counters: &ShardCounters = &core.counters[id];
-    if batch.len() >= 2 {
+    if guard.pending.len() >= 2 {
         let t0 = Instant::now();
-        if let Some(engine) = shard.profiles.get_mut(&batch[0].profile) {
-            let l_inst = engine.pick_l_inst(batch[0].t_req);
+        if let Some(engine) = shard.profiles.get_mut(&guard.pending[0].profile) {
+            let l_inst = engine.pick_l_inst(guard.pending[0].t_req);
             let outs = {
-                let bursts: Vec<&[f32]> = batch.iter().map(|r| r.samples.as_slice()).collect();
+                let bursts: Vec<&[f32]> =
+                    guard.pending.iter().map(|r| r.samples.as_slice()).collect();
                 engine.serve_coalesced(&bursts, l_inst)
             };
             if let Ok(outs) = outs {
-                let n = batch.len();
+                let n = guard.pending.len();
                 let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
                 // Latency: each request's own enqueue -> completion
                 // time (queueing + window wait + pass — the same
@@ -938,7 +1195,8 @@ fn execute_batch<I: EqualizerInstance + Send + 'static>(
                 // coalescing).
                 let busy_share_us = elapsed_us / n as f64;
                 counters.coalesced(n as u64);
-                for (req, soft) in batch.into_iter().zip(outs) {
+                for soft in outs {
+                    let req = guard.pending.pop_front().expect("one output per request");
                     let latency_us = req.enqueued_at.elapsed().as_secs_f64() * 1e6;
                     counters.served_with_busy(soft.len(), latency_us, busy_share_us, false);
                     counters.dequeued();
@@ -951,6 +1209,7 @@ fn execute_batch<I: EqualizerInstance + Send + 'static>(
                         latency_us,
                         batched: n,
                         error: None,
+                        timed_out: false,
                         shed: None,
                     });
                 }
@@ -961,33 +1220,39 @@ fn execute_batch<I: EqualizerInstance + Send + 'static>(
             // batch neighbours.
         }
     }
-    for req in batch {
-        serve_single(shard, id, counters, req);
+    while !guard.pending.is_empty() {
+        serve_single(shard, id, counters, guard);
     }
 }
 
-/// The pre-scheduler request path: serve one burst on its own.  The
-/// reservoir sample is still end-to-end (enqueue -> completion), so a
-/// burst that sat behind others in the queue — or migrated via a steal
-/// — reports the latency its client actually saw, not just the pass
-/// time.
+/// The pre-scheduler request path: serve the guard's front burst on
+/// its own.  The burst stays in the guard while the engine runs (a
+/// panic mid-pass must leave it resolvable) and is popped only when
+/// its reply is ready.  The reservoir sample is still end-to-end
+/// (enqueue -> completion), so a burst that sat behind others in the
+/// queue — or migrated via a steal — reports the latency its client
+/// actually saw, not just the pass time.
 fn serve_single<I: EqualizerInstance + Send + 'static>(
     shard: &mut Shard<I>,
     id: usize,
     counters: &ShardCounters,
-    req: PoolRequest,
+    guard: &mut ReplyGuard<'_>,
 ) {
     let t0 = Instant::now();
-    let (soft_symbols, l_inst, error) = match shard.profiles.get_mut(&req.profile) {
-        None => (Vec::new(), 0, Some(format!("unknown profile {:?}", req.profile))),
-        Some(engine) => {
-            let (result, l_inst) = engine.serve_one(&req.samples, req.t_req);
-            match result {
-                Ok(soft) => (soft, l_inst, None),
-                Err(e) => (Vec::new(), l_inst, Some(e.to_string())),
+    let (soft_symbols, l_inst, error) = {
+        let req = &guard.pending[0];
+        match shard.profiles.get_mut(&req.profile) {
+            None => (Vec::new(), 0, Some(format!("unknown profile {:?}", req.profile))),
+            Some(engine) => {
+                let (result, l_inst) = engine.serve_one(&req.samples, req.t_req);
+                match result {
+                    Ok(soft) => (soft, l_inst, None),
+                    Err(e) => (Vec::new(), l_inst, Some(e.to_string())),
+                }
             }
         }
     };
+    let req = guard.pending.pop_front().expect("the burst just served");
     let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
     let latency_us = req.enqueued_at.elapsed().as_secs_f64() * 1e6;
     counters.served_with_busy(soft_symbols.len(), latency_us, elapsed_us, error.is_some());
@@ -1001,39 +1266,105 @@ fn serve_single<I: EqualizerInstance + Send + 'static>(
         latency_us,
         batched: 1,
         error,
+        timed_out: false,
         shed: None,
     });
 }
 
+/// Supervision pass: find shards whose worker died (beacon cleared
+/// while the pool is open), then either respawn a replacement worker
+/// from the factory — the queue and its requests survive the worker —
+/// or, without a factory, fail the queue with error replies so no
+/// admitted request is ever stranded behind a dead thread.
+fn supervise_shards<I: EqualizerInstance + Send + 'static>(
+    core: &Arc<SchedCore>,
+    respawn: &mut Option<RespawnFactory<I>>,
+) {
+    for id in 0..core.slots.len() {
+        let slot = &core.slots[id];
+        if slot.alive.load(Ordering::SeqCst) || !core.open.load(Ordering::SeqCst) {
+            continue;
+        }
+        if let Some(shard) = respawn.as_mut().and_then(|make| make(id)) {
+            core.respawns.fetch_add(1, Ordering::Relaxed);
+            // Beacon up before the thread exists — same no-race rule
+            // as `spawn`.
+            slot.alive.store(true, Ordering::SeqCst);
+            let worker_core = Arc::clone(core);
+            let join = std::thread::spawn(move || worker_loop(shard, id, worker_core));
+            core.respawned.lock().unwrap_or_else(|e| e.into_inner()).push(join);
+        } else {
+            fail_queue(core, id, "shard worker died and no respawn factory is configured");
+        }
+    }
+}
+
+/// Drain shard `id`'s queue and resolve every stranded request with an
+/// error reply (error-path accounting, same as the [`ReplyGuard`]).
+fn fail_queue(core: &SchedCore, id: usize, msg: &str) {
+    let slot = &core.slots[id];
+    let stranded: Vec<PoolRequest> = {
+        let mut q = lock_queue(slot);
+        let stranded = q.drain(..).collect();
+        slot.queued.store(0, Ordering::SeqCst);
+        stranded
+    };
+    slot.not_full.notify_all();
+    for req in stranded {
+        let latency_us = req.enqueued_at.elapsed().as_secs_f64() * 1e6;
+        core.counters[id].served_with_busy(0, latency_us, 0.0, true);
+        core.counters[id].dequeued();
+        let _ = req.reply.send(PoolResponse {
+            soft_symbols: Vec::new(),
+            l_inst: 0,
+            shard: id,
+            profile: req.profile,
+            elapsed_us: 0.0,
+            latency_us,
+            batched: 0,
+            error: Some(msg.to_string()),
+            timed_out: false,
+            shed: None,
+        });
+    }
+}
+
 /// Scheduler monitor: the pool's control plane.  Each tick it
 ///
-/// 1. feeds every shard's recent p99 into that shard's
+/// 1. supervises worker liveness — a shard whose beacon cleared while
+///    the pool is open is respawned from the factory
+///    ([`ServerPool::with_respawn`]) or has its queue failed with
+///    error replies (`supervise_shards`; always on);
+/// 2. feeds every shard's recent p99 into that shard's
 ///    [`SloController`], publishing the adapted coalescing window
 ///    through the [`ShardCounters`] gauge the worker reads (only when
 ///    an SLO *and* coalescing are configured);
-/// 2. feeds the pool observation ([`ScaleSignals`]) into the
+/// 3. feeds the pool observation ([`ScaleSignals`]) into the
 ///    [`AutoScaler`] and applies its decision — shard grow/shrink as
 ///    in PR 4, plus the DOP axis: widening/narrowing the live
 ///    instances per shard that `apply_dop` converges the engines onto.
 ///
 /// Decision logic is entirely in `coordinator::sched` (pure,
 /// unit-tested); this thread only moves observations and actuations.
-fn monitor_loop(core: Arc<SchedCore>) {
+fn monitor_loop<I: EqualizerInstance + Send + 'static>(
+    core: Arc<SchedCore>,
+    mut respawn: Option<RespawnFactory<I>>,
+) {
     let slo = core.sched.slo.clone();
     let auto = core.sched.autoscale.clone();
     // Each loop keeps its *own* configured cadence: the thread sleeps
-    // at the finer of the two ticks and gates each loop on its own
-    // accumulated interval, so configuring a 1 ms SLO tick next to a
-    // 1 s autoscale tick does not make the scaler observe (and act)
-    // 1000x faster than `hysteresis_ticks * tick` promises.
+    // at the finest of the ticks (supervision's included) and gates
+    // each loop on its own accumulated interval, so configuring a
+    // 1 ms SLO tick next to a 1 s autoscale tick does not make the
+    // scaler observe (and act) 1000x faster than
+    // `hysteresis_ticks * tick` promises.
     let window_tick = slo.as_ref().map(|s| s.tick);
     let scale_tick = auto.as_ref().map(|a| a.tick);
-    let tick = match (window_tick, scale_tick) {
-        (Some(w), Some(s)) => w.min(s),
-        (Some(w), None) => w,
-        (None, Some(s)) => s,
-        (None, None) => return,
-    };
+    let tick = [window_tick, scale_tick, Some(SUPERVISE_TICK)]
+        .into_iter()
+        .flatten()
+        .min()
+        .expect("supervision tick is always present");
     let mut scaler = auto.map(|cfg| AutoScaler::new(cfg, core.slots.len()));
     let mut windows: Vec<SloController> = match &slo {
         Some(s) if core.sched.coalescing() => core
@@ -1047,6 +1378,7 @@ fn monitor_loop(core: Arc<SchedCore>) {
     let mut since_scale = Duration::ZERO;
     while core.open.load(Ordering::SeqCst) {
         std::thread::sleep(tick);
+        supervise_shards(&core, &mut respawn);
         since_window += tick;
         since_scale += tick;
         let window_due = window_tick.is_some_and(|t| since_window >= t);
@@ -1106,7 +1438,7 @@ fn monitor_loop(core: Arc<SchedCore>) {
                 // wait, and miss a notify fired in between — parking
                 // the "grown" shard until the next routed request.
                 let slot = &core.slots[live];
-                let guard = slot.queue.lock().expect("shard queue");
+                let guard = lock_queue(slot);
                 slot.not_empty.notify_all();
                 drop(guard);
             }
@@ -1280,14 +1612,15 @@ impl PoolClient {
                 latency_us: 0.0,
                 batched: 0,
                 error: None,
+                timed_out: false,
                 shed: Some(Shed { samples, predicted_us, budget_us, retry_after_us }),
             });
             return Ok(rx);
         }
         let slot = &self.core.slots[shard];
-        let mut q = slot.queue.lock().expect("shard queue");
+        let mut q = lock_queue(slot);
         while q.len() + slot.reserved.load(Ordering::SeqCst) >= self.core.queue_cap {
-            q = slot.not_full.wait(q).expect("shard queue");
+            q = slot.not_full.wait(q).unwrap_or_else(|e| e.into_inner());
         }
         self.core.counters[shard].enqueued();
         q.push_back(PoolRequest {
@@ -1324,7 +1657,7 @@ impl PoolClient {
             return Ok(TrySubmit::Shed(Shed { samples, predicted_us, budget_us, retry_after_us }));
         }
         let slot = &self.core.slots[shard];
-        let mut q = slot.queue.lock().expect("shard queue");
+        let mut q = lock_queue(slot);
         if q.len() + slot.reserved.load(Ordering::SeqCst) >= self.core.queue_cap {
             return Ok(TrySubmit::Full(samples));
         }
@@ -1376,6 +1709,14 @@ impl PoolClient {
     /// Profiles every shard serves, sorted.
     pub fn profiles(&self) -> &[String] {
         &self.profiles
+    }
+
+    /// The pool's per-request deadline
+    /// ([`SchedulerConfig::request_timeout`]), if one is configured —
+    /// front ends use it to bound their blocking reply waits (a wedged
+    /// shard then yields a typed timeout instead of a hung caller).
+    pub fn request_timeout(&self) -> Option<Duration> {
+        self.core.sched.request_timeout
     }
 
     /// Shards this pool was constructed with (the maximum live set).
@@ -1459,6 +1800,11 @@ impl PoolHandle {
         self.client.stats()
     }
 
+    /// See [`PoolClient::request_timeout`].
+    pub fn request_timeout(&self) -> Option<Duration> {
+        self.client.request_timeout()
+    }
+
     /// Drop this handle's client, wait for every shard to drain, and
     /// return the final stats snapshot.  Blocks until all outstanding
     /// [`PoolClient`] clones are dropped too.
@@ -1469,24 +1815,39 @@ impl PoolHandle {
         for j in joins {
             let _ = j.join();
         }
+        // Supervised-respawn workers were spawned by the monitor (one
+        // of `joins`, so it is already gone — no more pushes race this
+        // drain); they observe the closed pool and exit like any other
+        // worker.
+        let respawned: Vec<_> =
+            core.respawned.lock().unwrap_or_else(|e| e.into_inner()).drain(..).collect();
+        for j in respawned {
+            let _ = j.join();
+        }
         ServerStats::snapshot(core.counters.iter().map(|c| c.as_ref()))
             .with_pool(core.pool_stats())
     }
 }
 
-/// Stamp one shard's serving engine for `profile`: `instances` workers
-/// cloned from the blueprint's loaded datapath.
+/// Stamp one shard's serving engine for a profile: `instances` workers
+/// cloned from the blueprint's loaded datapath.  `reg` is only needed
+/// for PJRT (`Hlo`) profiles, whose executables load per instance; the
+/// supervised-respawn factory passes `None` — it only exists for
+/// all-resident pools.  `faults` (a spec plus the first fault stream
+/// for this engine; instance `i` draws stream `base + i`) wraps every
+/// instance in deterministic fault injection — see
+/// [`PoolConfig::fault_spec`].
 fn stamp_engine(
     blueprint: &ProfileBlueprint,
-    reg: &ArtifactRegistry,
-    profile: &str,
+    reg: Option<(&ArtifactRegistry, &str)>,
     instances: usize,
     optimizer: &SeqLenOptimizer,
     lut_targets: &[f64],
+    faults: Option<(&FaultSpec, u32)>,
 ) -> Result<EqualizerServer<AnyInstance>> {
     let workers: Vec<AnyInstance> = (0..instances)
-        .map(|_| -> Result<AnyInstance> {
-            Ok(match &blueprint.datapath {
+        .map(|i| -> Result<AnyInstance> {
+            let instance = match &blueprint.datapath {
                 ProfileDatapath::Cnn(cnn) => {
                     AnyInstance::Native(NativeInstance::new(cnn.clone(), blueprint.width))
                 }
@@ -1496,7 +1857,16 @@ fn stamp_engine(
                 ProfileDatapath::Volterra(vol) => {
                     AnyInstance::Volterra(VolterraInstance::new(vol.clone(), blueprint.width))
                 }
-                ProfileDatapath::Hlo => AnyInstance::load(reg.profile_entry(profile)?)?,
+                ProfileDatapath::Hlo => {
+                    let (reg, profile) = reg.ok_or_else(|| {
+                        anyhow::anyhow!("PJRT profiles need the registry to stamp instances")
+                    })?;
+                    AnyInstance::load(reg.profile_entry(profile)?)?
+                }
+            };
+            Ok(match faults {
+                Some((spec, base)) => instance.with_faults(spec.plan(base + i as u32)),
+                None => instance,
             })
         })
         .collect::<Result<_>>()?;
@@ -1548,22 +1918,63 @@ impl ServerPool<AnyInstance> {
                 Ok((p.as_ref().to_string(), reg.profile_blueprint(p.as_ref())?))
             })
             .collect::<Result<_>>()?;
+        // Fault streams decorrelate per (shard, profile, instance):
+        // engine `p` of shard `s` owns streams `[(s*P + p)*D, +D)`.
+        // Respawned engines advance to a fresh epoch of streams so a
+        // replacement never replays its dead predecessor's draws.
+        let fault_spec = cfg.fault_spec.clone().filter(|spec| spec.any_engine_fault());
+        let n_profiles = blueprints.len();
+        let streams_per_epoch = (cfg.shards * n_profiles * max_dop) as u32;
         let mut shards = Vec::with_capacity(cfg.shards);
-        for _ in 0..cfg.shards {
+        for s in 0..cfg.shards {
             let mut shard = Shard::new();
-            for (name, blueprint) in &blueprints {
-                let engine =
-                    stamp_engine(blueprint, reg, name, max_dop, &optimizer, &lut_targets)?;
+            for (p, (name, blueprint)) in blueprints.iter().enumerate() {
+                let faults = fault_spec
+                    .as_ref()
+                    .map(|spec| (spec, ((s * n_profiles + p) * max_dop) as u32));
+                let engine = stamp_engine(
+                    blueprint,
+                    Some((reg, name)),
+                    max_dop,
+                    &optimizer,
+                    &lut_targets,
+                    faults,
+                )?;
                 shard = shard.with_profile(name.clone(), engine);
             }
             shards.push(shard);
         }
-        let pool = Self::with_scheduler(shards, cfg.policy, cfg.queue_cap, cfg.scheduler.clone())?;
+        let mut pool =
+            Self::with_scheduler(shards, cfg.policy, cfg.queue_cap, cfg.scheduler.clone())?;
         if max_dop > cfg.instances_per_shard {
-            pool.with_dop_range(cfg.instances_per_shard, max_dop)
-        } else {
-            Ok(pool)
+            pool = pool.with_dop_range(cfg.instances_per_shard, max_dop)?;
         }
+        // Supervised respawn: a dead shard's engines restamp from the
+        // *resident* blueprints — no weight reload, same geometry, so
+        // bit-exactness and steal compatibility survive the respawn.
+        // PJRT (`Hlo`) profiles load executables per instance and
+        // cannot be captured in a 'static factory; those pools fall
+        // back to failing a dead shard's queue with error replies.
+        let all_resident =
+            blueprints.iter().all(|(_, b)| !matches!(b.datapath, ProfileDatapath::Hlo));
+        if all_resident {
+            let mut epoch = 0u32;
+            pool = pool.with_respawn(move |shard_id| {
+                epoch += 1;
+                let mut shard = Shard::new();
+                for (p, (name, blueprint)) in blueprints.iter().enumerate() {
+                    let base = epoch * streams_per_epoch
+                        + ((shard_id * n_profiles + p) * max_dop) as u32;
+                    let faults = fault_spec.as_ref().map(|spec| (spec, base));
+                    let engine =
+                        stamp_engine(blueprint, None, max_dop, &optimizer, &lut_targets, faults)
+                            .ok()?;
+                    shard = shard.with_profile(name.clone(), engine);
+                }
+                Some(shard)
+            });
+        }
+        Ok(pool)
     }
 }
 
@@ -1814,6 +2225,9 @@ mod tests {
             dop: AtomicUsize::new(0),
             dop_ups: AtomicU64::new(0),
             dop_downs: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            respawned: Mutex::new(Vec::new()),
         }
     }
 
@@ -2195,6 +2609,242 @@ mod tests {
         assert_eq!(stats.total_shed(), shed as u64 + 1, "every verdict is counted");
         assert_eq!(stats.total_requests(), served as u64 + 2, "sheds never count as requests");
         assert_eq!(stats.total_errors(), 0);
+    }
+
+    /// Panics on every burst: exercises the reply guard.
+    struct PanicInstance {
+        width: usize,
+    }
+
+    impl EqualizerInstance for PanicInstance {
+        fn width(&self) -> usize {
+            self.width
+        }
+
+        fn process(&mut self, _chunk: &[f32]) -> Result<Vec<f32>> {
+            panic!("injected test panic")
+        }
+    }
+
+    /// Raises one [`FatalFault`] (killing the worker), then serves
+    /// decimation cleanly — the deterministic respawn probe.
+    struct FatalOnceInstance {
+        width: usize,
+        armed: Arc<AtomicBool>,
+    }
+
+    impl EqualizerInstance for FatalOnceInstance {
+        fn width(&self) -> usize {
+            self.width
+        }
+
+        fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
+            if self.armed.swap(false, Ordering::SeqCst) {
+                std::panic::panic_any(FatalFault);
+            }
+            Ok(chunk.iter().step_by(2).copied().collect())
+        }
+    }
+
+    #[test]
+    fn engine_panic_resolves_every_reply_with_an_error() {
+        let instances: Vec<PanicInstance> =
+            (0..2).map(|_| PanicInstance { width: 256 }).collect();
+        let eng = EqualizerServer::new(instances, 32, 2, &optimizer(), &lut_targets()).unwrap();
+        let pool = ServerPool::new(vec![Shard::single("boom", eng)], RoutePolicy::RoundRobin, 8)
+            .unwrap()
+            .spawn();
+        let pending: Vec<_> =
+            (0..4).map(|_| pool.submit("boom", vec![0.0; 512], None).unwrap()).collect();
+        for rx in pending {
+            let resp = rx.recv().expect("a panicking engine must still resolve the reply");
+            let msg = resp.error.expect("the reply must carry the panic as an error");
+            assert!(msg.contains("panic"), "unexpected error text: {msg}");
+            assert!(resp.soft_symbols.is_empty());
+            assert!(!resp.timed_out);
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_requests(), 4, "every panicked burst is accounted");
+        assert_eq!(stats.total_errors(), 4);
+        assert!(stats.pool.panics >= 1, "the pool gauge records the caught panics");
+        assert_eq!(stats.pool.respawns, 0, "a caught panic never kills the worker");
+    }
+
+    #[test]
+    fn supervisor_respawns_a_dead_worker() {
+        let armed = Arc::new(AtomicBool::new(true));
+        let mk_engine = {
+            let armed = Arc::clone(&armed);
+            move || {
+                let instances: Vec<FatalOnceInstance> = (0..2)
+                    .map(|_| FatalOnceInstance { width: 256, armed: Arc::clone(&armed) })
+                    .collect();
+                EqualizerServer::new(instances, 32, 2, &optimizer(), &lut_targets()).unwrap()
+            }
+        };
+        let factory_engine = mk_engine.clone();
+        let pool = ServerPool::new(
+            vec![Shard::single("d", mk_engine())],
+            RoutePolicy::RoundRobin,
+            8,
+        )
+        .unwrap()
+        .with_respawn(move |_| Some(Shard::single("d", factory_engine())))
+        .spawn();
+        // The first burst trips the fatal fault: the worker dies, but
+        // the reply guard still resolves the burst as an error.
+        let resp = pool.submit("d", vec![0.0; 512], None).unwrap().recv().unwrap();
+        assert!(resp.error.is_some(), "the dying worker must error-reply its batch");
+        // The supervisor respawns the worker from the factory (the
+        // shared disarmed flag makes the replacement serve cleanly);
+        // the queue survived, so an ordinary call just works.
+        let resp = pool.call("d", vec![0.0; 512], None).unwrap();
+        assert_eq!(resp.soft_symbols.len(), 256, "the respawned worker serves the same math");
+        let stats = pool.shutdown();
+        assert_eq!(stats.pool.respawns, 1, "exactly one supervised respawn");
+        assert!(stats.pool.panics >= 1);
+        assert_eq!(stats.total_requests(), 2);
+        assert_eq!(stats.total_errors(), 1);
+    }
+
+    #[test]
+    fn dead_worker_without_a_factory_fails_its_queue() {
+        // Kill the only worker, then park a request on its queue: the
+        // monitor must resolve it with an error instead of stranding
+        // it (the reply guarantee holds without respawn too).
+        let armed = Arc::new(AtomicBool::new(true));
+        let instances: Vec<FatalOnceInstance> =
+            (0..2).map(|_| FatalOnceInstance { width: 256, armed: Arc::clone(&armed) }).collect();
+        let eng = EqualizerServer::new(instances, 32, 2, &optimizer(), &lut_targets()).unwrap();
+        let pool = ServerPool::new(vec![Shard::single("d", eng)], RoutePolicy::RoundRobin, 8)
+            .unwrap()
+            .spawn();
+        let first = pool.submit("d", vec![0.0; 512], None).unwrap().recv().unwrap();
+        assert!(first.error.is_some(), "the fatal burst errors");
+        let stranded = pool.submit("d", vec![0.0; 512], None).unwrap();
+        let resp = stranded
+            .recv_timeout(Duration::from_secs(5))
+            .expect("the monitor must fail the dead shard's queue");
+        let msg = resp.error.expect("stranded requests resolve as errors");
+        assert!(msg.contains("worker died"), "unexpected error text: {msg}");
+        let stats = pool.shutdown();
+        assert_eq!(stats.pool.respawns, 0);
+        assert_eq!(stats.total_requests(), 2);
+        assert_eq!(stats.total_errors(), 2);
+    }
+
+    #[test]
+    fn pool_serves_through_a_poisoned_queue_lock() {
+        // Poison shard 0's queue mutex from a doomed thread, then
+        // submit: the client's lock, the worker's condvar wait and the
+        // final drain must all recover instead of cascading the panic.
+        let pool = ServerPool::new(
+            vec![Shard::single("d", engine(2, 256, 32))],
+            RoutePolicy::RoundRobin,
+            8,
+        )
+        .unwrap()
+        .spawn();
+        let core = Arc::clone(&pool.client.core);
+        let poisoner = std::thread::spawn(move || {
+            let _guard = core.slots[0].queue.lock().unwrap();
+            panic!("poison the shard queue");
+        });
+        assert!(poisoner.join().is_err(), "the poisoner must have panicked");
+        assert!(pool.client.core.slots[0].queue.is_poisoned());
+        let resp = pool.call("d", vec![0.0; 512], None).unwrap();
+        assert_eq!(resp.soft_symbols.len(), 256);
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_requests(), 1);
+        assert_eq!(stats.total_errors(), 0);
+    }
+
+    #[test]
+    fn poisoned_lock_recovery_spans_submit_steal_and_unreserve() {
+        let core = bare_core(SchedulerConfig::default().with_stealing());
+        // Poison both slots' queue mutexes.
+        for id in 0..2 {
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                let _guard = core.slots[id].queue.lock().unwrap();
+                panic!("poison");
+            }));
+            assert!(result.is_err());
+            assert!(core.slots[id].queue.is_poisoned());
+        }
+        // The submit path's lock recovers.
+        {
+            let mut q = lock_queue(&core.slots[0]);
+            for _ in 0..4 {
+                q.push_back(queued_request(None));
+                core.counters[0].enqueued();
+            }
+            core.slots[0].queued.store(4, Ordering::SeqCst);
+        }
+        // The steal path (thief reservation + victim drain + thief
+        // extend) recovers across both poisoned locks.
+        assert!(steal_into(&core, 1), "stealing must make progress on poisoned locks");
+        assert_eq!(core.slots[1].queue.lock().unwrap_or_else(|e| e.into_inner()).len(), 2);
+        assert_eq!(core.slots[1].reserved.load(Ordering::SeqCst), 0);
+        // And `unreserve` (the steal-abort path) recovers too.
+        core.slots[1].reserved.store(3, Ordering::SeqCst);
+        unreserve(&core.slots[1], 3);
+        assert_eq!(core.slots[1].reserved.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn expired_requests_time_out_at_dequeue() {
+        // A 30 ms engine with a 5 ms deadline: the first burst is
+        // dequeued immediately (it never waits), the bursts queued
+        // behind it expire in queue and must come back as typed
+        // timeouts — never dispatched, never counted as errors.
+        let slow = EqualizerServer::new(
+            vec![SlowInstance { width: 256, delay: Duration::from_millis(30) }],
+            32,
+            2,
+            &optimizer(),
+            &lut_targets(),
+        )
+        .unwrap();
+        let sched = SchedulerConfig::default().with_request_timeout(Duration::from_millis(5));
+        let pool = ServerPool::with_scheduler(
+            vec![Shard::single("slow", slow)],
+            RoutePolicy::RoundRobin,
+            8,
+            sched,
+        )
+        .unwrap()
+        .spawn();
+        assert_eq!(pool.request_timeout(), Some(Duration::from_millis(5)));
+        let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+        let first = pool.submit("slow", burst.clone(), None).unwrap();
+        // Wait until the worker has popped the first burst (the queued
+        // mirror drops to 0) so the stragglers provably wait >= 5 ms.
+        let t0 = Instant::now();
+        while pool.client.core.slots[0].queued.load(Ordering::SeqCst) > 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "worker never picked up the burst");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let pending: Vec<_> =
+            (0..3).map(|_| pool.submit("slow", burst.clone(), None).unwrap()).collect();
+        let r0 = first.recv().unwrap();
+        assert!(r0.error.is_none() && !r0.timed_out, "the first burst never waited");
+        let mut timed_out = 0u64;
+        for rx in pending {
+            let resp = rx.recv().unwrap();
+            if resp.timed_out {
+                timed_out += 1;
+                assert!(resp.soft_symbols.is_empty(), "an expired burst is never dispatched");
+                assert_eq!(resp.batched, 0);
+                let msg = resp.error.expect("timeouts carry a message in `error`");
+                assert!(msg.contains("deadline"), "unexpected timeout text: {msg}");
+                assert!(resp.latency_us >= 5_000.0, "it provably waited out the deadline");
+            }
+        }
+        assert_eq!(timed_out, 3, "every burst behind the 30 ms service must expire");
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_timeouts(), 3);
+        assert_eq!(stats.total_requests(), 4, "timeouts count as requests");
+        assert_eq!(stats.total_errors(), 0, "a timeout is not a processing error");
     }
 
     #[test]

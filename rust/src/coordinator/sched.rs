@@ -92,6 +92,14 @@ pub struct SchedulerConfig {
     /// routed shard and shed the burst when its profile's budget is
     /// provably blown (see [`AdmissionConfig`]).
     pub admission: Option<AdmissionConfig>,
+    /// Optional per-request deadline, measured from enqueue.  `None`
+    /// (the default) lets a request wait in queue indefinitely.  With a
+    /// deadline set, a worker that dequeues an already-expired request
+    /// resolves it with a *timeout* reply instead of servicing it
+    /// (stale work computes nothing), and the net front end bounds its
+    /// blocking reply wait at the same deadline plus slack — a wedged
+    /// shard yields a typed timeout error instead of a hung socket.
+    pub request_timeout: Option<Duration>,
 }
 
 /// Default [`SchedulerConfig::coalesce_max`] used by
@@ -136,6 +144,13 @@ impl SchedulerConfig {
     /// Builder: enable SLO-aware admission control at the ingress.
     pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
         self.admission = Some(admission);
+        self
+    }
+
+    /// Builder: set a per-request deadline (timeout replies for work
+    /// that expires in queue; non-zero, checked at pool construction).
+    pub fn with_request_timeout(mut self, timeout: Duration) -> Self {
+        self.request_timeout = Some(timeout);
         self
     }
 }
@@ -964,6 +979,14 @@ mod tests {
         assert!(cfg.admission.is_none(), "default pools admit everything");
         let cfg = cfg.with_admission(AdmissionConfig::new(LatencySlo::new(400.0)));
         assert_eq!(cfg.admission.unwrap().budget_for("x").unwrap().p99_target_us, 400.0);
+    }
+
+    #[test]
+    fn scheduler_config_carries_a_request_deadline() {
+        let cfg = SchedulerConfig::default();
+        assert!(cfg.request_timeout.is_none(), "default requests never expire");
+        let cfg = cfg.with_request_timeout(Duration::from_millis(5));
+        assert_eq!(cfg.request_timeout, Some(Duration::from_millis(5)));
     }
 
     #[test]

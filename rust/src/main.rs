@@ -54,22 +54,32 @@ COMMANDS:
             [--arrival poisson|bursty|diurnal] [--duration-ms MS]
             [--load-seed N] [--logical-clients N] [--admit US]
             [--slo-profile NAME=US,..] [--admission-margin M]
-            [--assert-shed] [--assert-no-shed]
+            [--request-timeout-us US] [--fault-spec SPEC]
+            [--assert-shed] [--assert-no-shed] [--assert-served]
             [--json [PATH]]                            open-loop overload sweep
             (a seeded arrival process replays offered load the pool
              cannot throttle; --admit US sets a default p99 budget and
              enables SLO-aware admission control, --slo-profile maps
              per-profile budgets, and each sweep point reports
              p50/p99/shed-rate vs offered load — rows land in
-             BENCH_pr6.json with --json; --assert-shed/--assert-no-shed
+             BENCH_pr8.json with --json; --assert-shed/--assert-no-shed
              make the run a CI smoke.  Shed replies carry a
-             retry_after_us hint the replay honors as informed backoff)
+             retry_after_us hint the replay honors as informed backoff.
+             --request-timeout-us puts a deadline on queued requests
+             (expired work gets a timeout reply, never a shard);
+             --fault-spec panic=0.02,error=0.01,seed=7 injects seeded
+             engine faults (panic|fatal|error|delay[,delay-us]) — the
+             chaos mode: panics become error replies, dead workers
+             respawn, and --assert-served checks every arrival
+             resolved exactly once: offered = ok + error + timeout +
+             shed + full + backoff, with ok > 0)
   serve     --listen ADDR [--artifacts DIR] [--shards N]
             [--instances N] [--profiles P1,P2,..]
             [--policy round-robin|shortest-queue] [--queue-cap N]
             [--coalesce-window US] [--coalesce-max N] [--steal]
             [--admit US] [--slo-profile NAME=US,..]
             [--admission-margin M] [--addr-file PATH]
+            [--request-timeout-us US] [--fault-spec SPEC]
             [--serve-for-ms MS]                        TCP serving front end
             (serves the pool to remote `repro client`s over the
              docs/PROTOCOL.md frame format; remote callers see the
@@ -77,7 +87,12 @@ COMMANDS:
              hints.  --listen 127.0.0.1:0 binds an ephemeral port and
              --addr-file PATH publishes the bound address;
              --serve-for-ms bounds the run for CI.  Stops gracefully —
-             draining admitted requests — on `repro client --shutdown`)
+             draining admitted requests — on `repro client --shutdown`.
+             --request-timeout-us also bounds each connection's reply
+             wait (a wedged shard yields a typed timeout frame, not a
+             hung socket); --fault-spec additionally takes drop=RATE —
+             the server severs that fraction of connections instead of
+             replying)
   client    --addr HOST:PORT [--profiles P1,P2,..] [--clients M]
             [--requests K] [--spb SYMBOLS]
             [--open-loop --offered-load RPS [--arrival KIND]
@@ -95,8 +110,9 @@ COMMANDS:
                                                        (f32 / fake-quant / int16 +
                                                        pipeline + pool coalescing +
                                                        serving_slo p50/p99 rows +
-                                                       open-loop shed-rate rows);
-                                                       --json writes BENCH_pr6.json
+                                                       open-loop shed-rate rows +
+                                                       serving_faulted chaos row);
+                                                       --json writes BENCH_pr8.json
   config    [--profile high-throughput|low-power]      print JSON config
 ";
 
@@ -427,7 +443,16 @@ fn serve(args: &Args) -> Result<()> {
 /// One open-loop replay outcome (see [`replay_open_loop`]).
 struct OpenLoopOutcome {
     offered: u64,
+    /// Admitted requests that came back clean (served symbols).
     admitted: u64,
+    /// Admitted requests that resolved with an error reply — injected
+    /// engine faults, panicked batches, or failed shards.  Every one
+    /// is still exactly one reply: admitted + errors + timeouts is the
+    /// total number of requests the pool accepted.
+    errors: u64,
+    /// Admitted requests that expired in queue (`--request-timeout-us`)
+    /// and resolved with a timeout reply instead of being serviced.
+    timeouts: u64,
     shed: u64,
     full: u64,
     /// Arrivals suppressed client-side by informed backoff: they fell
@@ -438,6 +463,22 @@ struct OpenLoopOutcome {
     wall_s: f64,
     p50_us: f64,
     p99_us: f64,
+}
+
+impl OpenLoopOutcome {
+    /// True when every arrival landed in exactly one bucket — the
+    /// client-side view of the pool's reply guarantee.  A dropped or
+    /// doubled reply breaks this balance (a dropped reply actually
+    /// fails the replay earlier, as a dead channel).
+    fn accounts_balance(&self) -> bool {
+        self.offered
+            == self.admitted
+                + self.errors
+                + self.timeouts
+                + self.shed
+                + self.full
+                + self.backed_off
+    }
 }
 
 /// Replay a pre-generated open-loop trace against a serving endpoint:
@@ -505,19 +546,27 @@ fn replay_open_loop(
     }
     let mut lat = LatencyStats::new();
     let mut symbols = 0usize;
-    let mut admitted = 0u64;
+    let (mut admitted, mut errors, mut timeouts) = (0u64, 0u64, 0u64);
     for rx in pending {
+        // A dead channel here means an admitted request never got its
+        // reply — a reply-guarantee violation, never expected (panics
+        // and dead shards resolve as *error* replies instead).
         let resp = rx.recv().map_err(|_| anyhow::anyhow!("shard dropped a reply"))?;
-        if resp.error.is_some() {
-            continue;
+        if resp.timed_out {
+            timeouts += 1;
+        } else if resp.error.is_some() {
+            errors += 1;
+        } else {
+            admitted += 1;
+            lat.record_us(resp.latency_us);
+            symbols += resp.soft_symbols.len();
         }
-        admitted += 1;
-        lat.record_us(resp.latency_us);
-        symbols += resp.soft_symbols.len();
     }
     Ok(OpenLoopOutcome {
         offered: trace.len() as u64,
         admitted,
+        errors,
+        timeouts,
         shed,
         full,
         backed_off,
@@ -562,6 +611,26 @@ fn admission_from_args(
     Ok(admission.map(|a| a.with_margin(margin)))
 }
 
+/// Fault stream the `--listen` front end draws connection-drop
+/// decisions from — far outside the per-engine stream range (engines
+/// index up from 0 by shard/profile/instance), so enabling drops never
+/// perturbs the engine-fault sequence.
+const NET_DROP_FAULT_STREAM: u32 = 0x00d7_0000;
+
+/// Parse `--fault-spec` (e.g. `panic=0.02,error=0.01,seed=7`) into a
+/// validated [`FaultSpec`](equalizer::util::faultinject::FaultSpec) —
+/// `None` when the flag is absent (no injection, the production
+/// default).  Shared by `serve --open-loop` (engine faults) and
+/// `serve --listen` (engine faults + connection drops).
+fn fault_spec_from_args(args: &Args) -> Result<Option<equalizer::util::faultinject::FaultSpec>> {
+    args.get("fault-spec")
+        .map(|s| {
+            s.parse::<equalizer::util::faultinject::FaultSpec>()
+                .map_err(|e| anyhow::anyhow!("--fault-spec: {e}"))
+        })
+        .transpose()
+}
+
 /// `repro serve --open-loop`: sweep offered load with a seeded arrival
 /// process (Poisson / bursty / diurnal over a logical client
 /// population) and report p50/p99/shed-rate per sweep point — the
@@ -569,8 +638,11 @@ fn admission_from_args(
 /// bounded while the excess shows up as shed rate instead of latency.
 /// A fresh pool is spawned per sweep point so the points are
 /// independent.  `--assert-shed`/`--assert-no-shed` turn the run into
-/// a CI smoke; `--json` appends the rows to `BENCH_pr6.json`
-/// (replacing earlier `serving_open_loop` rows, preserving the rest).
+/// a CI smoke; with `--fault-spec` + `--assert-served` it becomes the
+/// *chaos* smoke (seeded engine faults, every arrival must resolve
+/// exactly once, the pool must keep serving).  `--json` appends the
+/// rows to `BENCH_pr8.json` (replacing earlier `serving_open_loop`
+/// rows, preserving the rest).
 fn serve_open_loop(args: &Args) -> Result<()> {
     use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
     use equalizer::coordinator::sched::SchedulerConfig;
@@ -618,6 +690,11 @@ fn serve_open_loop(args: &Args) -> Result<()> {
     if let Some(adm) = admission.clone() {
         scheduler = scheduler.with_admission(adm);
     }
+    let timeout_us = args.f64_or("request-timeout-us", 0.0)?;
+    if timeout_us > 0.0 {
+        scheduler = scheduler.with_request_timeout(Duration::from_secs_f64(timeout_us * 1e-6));
+    }
+    let fault_spec = fault_spec_from_args(args)?;
 
     let rates: Vec<f64> = args
         .str_or("offered-load", "500,1000,2000,4000")
@@ -650,10 +727,22 @@ fn serve_open_loop(args: &Args) -> Result<()> {
         ),
         None => println!("admission: off (overload baseline — expect queue-full rejections)"),
     }
+    if let Some(spec) = &fault_spec {
+        println!(
+            "faults: on (panic {}, fatal {}, error {}, delay {} x {} us, seed {}) — \
+             chaos mode: expect error replies; the pool must keep serving",
+            spec.panic, spec.fatal, spec.error, spec.delay, spec.delay_us, spec.seed
+        );
+    }
+    if timeout_us > 0.0 {
+        println!("deadline: {timeout_us:.0} us per request (expired-in-queue => timeout reply)");
+    }
     println!();
 
     let mut records: Vec<Json> = Vec::new();
+    let (mut total_ok, mut total_err, mut total_tmo) = (0u64, 0u64, 0u64);
     let (mut total_shed, mut total_full) = (0u64, 0u64);
+    let (mut total_panics, mut total_respawns) = (0u64, 0u64);
     for &rate in &rates {
         let spec = OpenLoopSpec {
             kind: arrival,
@@ -670,6 +759,7 @@ fn serve_open_loop(args: &Args) -> Result<()> {
             policy,
             queue_cap,
             scheduler: scheduler.clone(),
+            fault_spec: fault_spec.clone(),
             ..PoolConfig::default()
         };
         let pool = ServerPool::from_registry(&reg, &profiles, &cfg)?.spawn();
@@ -684,13 +774,37 @@ fn serve_open_loop(args: &Args) -> Result<()> {
             stats.total_shed(),
             out.shed
         );
+        // The reply guarantee, observed from the caller's side: every
+        // arrival is in exactly one bucket, and the pool's own request
+        // counter agrees with the number of admitted replies drained.
+        anyhow::ensure!(
+            out.accounts_balance(),
+            "open-loop accounting broke: offered {} != ok {} + err {} + tmo {} + shed {} \
+             + full {} + backoff {}",
+            out.offered,
+            out.admitted,
+            out.errors,
+            out.timeouts,
+            out.shed,
+            out.full,
+            out.backed_off
+        );
+        anyhow::ensure!(
+            stats.total_requests() == out.admitted + out.errors + out.timeouts,
+            "pool counters disagree with the replay: {} requests vs {} replies drained",
+            stats.total_requests(),
+            out.admitted + out.errors + out.timeouts
+        );
         let shed_rate = out.shed as f64 / (out.offered.max(1)) as f64;
         let t = Throughput::from_rate(out.symbols as f64, out.wall_s);
         println!(
-            "  offered {rate:>8.0} rps ({:>6} arrivals): admitted {:>6}  shed {:>6} \
-             ({:>5.1}%)  backoff {:>5}  full {:>5}  p50 {:>8.1} us  p99 {:>8.1} us  {}",
+            "  offered {rate:>8.0} rps ({:>6} arrivals): ok {:>6}  err {:>5}  tmo {:>5}  \
+             shed {:>6} ({:>5.1}%)  backoff {:>5}  full {:>5}  p50 {:>8.1} us  \
+             p99 {:>8.1} us  {}",
             out.offered,
             out.admitted,
+            out.errors,
+            out.timeouts,
             out.shed,
             shed_rate * 100.0,
             out.backed_off,
@@ -699,8 +813,19 @@ fn serve_open_loop(args: &Args) -> Result<()> {
             out.p99_us,
             t.line()
         );
+        if stats.panics > 0 || stats.respawns > 0 {
+            println!(
+                "    faults: {} worker panic(s) caught, {} shard respawn(s)",
+                stats.panics, stats.respawns
+            );
+        }
+        total_ok += out.admitted;
+        total_err += out.errors;
+        total_tmo += out.timeouts;
         total_shed += out.shed;
         total_full += out.full;
+        total_panics += stats.panics;
+        total_respawns += stats.respawns;
         records.push(t.to_json_open_loop(
             &profile_label,
             "serving_open_loop",
@@ -727,10 +852,34 @@ fn serve_open_loop(args: &Args) -> Result<()> {
         );
         println!("\nassert-no-shed: ok");
     }
+    if args.flag("assert-served") {
+        // The chaos smoke: the per-point balances above already held
+        // (they are unconditional), so what's left to assert is that
+        // the pool actually kept serving through whatever --fault-spec
+        // threw at it, and that injected faults surfaced as error
+        // replies rather than hangs or lost requests.
+        anyhow::ensure!(
+            total_ok > 0,
+            "--assert-served: no request was served cleanly \
+             (ok 0, err {total_err}, tmo {total_tmo})"
+        );
+        if fault_spec.as_ref().is_some_and(|s| s.panic > 0.0 || s.fatal > 0.0) {
+            anyhow::ensure!(
+                total_panics > 0,
+                "--assert-served: panic faults were requested but none fired — \
+                 raise the rate or the load"
+            );
+        }
+        println!(
+            "\nassert-served: ok (ok {total_ok}, err {total_err}, tmo {total_tmo}, \
+             shed {total_shed}, full {total_full}; {total_panics} panic(s) caught, \
+             {total_respawns} respawn(s))"
+        );
+    }
 
     if let Some(path) = args
         .get("json")
-        .map(|v| if v == "true" { "BENCH_pr6.json".to_string() } else { v.to_string() })
+        .map(|v| if v == "true" { "BENCH_pr8.json".to_string() } else { v.to_string() })
     {
         // Replace earlier open-loop rows, preserve everything else
         // (the bench hot-path rows and historical baselines live in
@@ -796,6 +945,19 @@ fn serve_listen(args: &Args) -> Result<()> {
     if let Some(adm) = admission.clone() {
         scheduler = scheduler.with_admission(adm);
     }
+    let timeout_us = args.f64_or("request-timeout-us", 0.0)?;
+    if timeout_us > 0.0 {
+        scheduler = scheduler.with_request_timeout(Duration::from_secs_f64(timeout_us * 1e-6));
+    }
+    let fault_spec = fault_spec_from_args(args)?;
+    // Engine faults inject inside the pool; drop faults inject at the
+    // net front end (sever instead of reply).  The drop plan draws
+    // from its own stream so adding it never perturbs the engine-fault
+    // sequence.
+    let drop_plan = fault_spec
+        .as_ref()
+        .filter(|spec| spec.drop > 0.0)
+        .map(|spec| spec.plan(NET_DROP_FAULT_STREAM));
 
     let cfg = PoolConfig {
         shards,
@@ -803,10 +965,15 @@ fn serve_listen(args: &Args) -> Result<()> {
         policy,
         queue_cap,
         scheduler,
+        fault_spec: fault_spec.clone(),
         ..PoolConfig::default()
     };
     let pool = ServerPool::from_registry(&reg, &profiles, &cfg)?.spawn();
-    let server = NetServer::spawn(pool.client(), args.str_or("listen", "127.0.0.1:0").as_str())?;
+    let server = NetServer::spawn_with_faults(
+        pool.client(),
+        args.str_or("listen", "127.0.0.1:0").as_str(),
+        drop_plan,
+    )?;
     println!(
         "serving on {} — {shards} shard(s) x {instances} instance(s), profiles {profiles:?}, \
          {policy:?}, queue cap {queue_cap}",
@@ -822,6 +989,18 @@ fn serve_listen(args: &Args) -> Result<()> {
             adm.margin
         ),
         None => println!("admission: off — overload returns Full frames once the queue fills"),
+    }
+    if let Some(spec) = &fault_spec {
+        println!(
+            "faults: on (panic {}, fatal {}, error {}, delay {} x {} us, drop {}, seed {})",
+            spec.panic, spec.fatal, spec.error, spec.delay, spec.delay_us, spec.drop, spec.seed
+        );
+    }
+    if timeout_us > 0.0 {
+        println!(
+            "deadline: {timeout_us:.0} us per request (expired work gets a timeout reply; \
+             reply waits are bounded at deadline + slack)"
+        );
     }
     if let Some(path) = args.get("addr-file") {
         // Published only after the listener is live, so a launcher can
@@ -905,9 +1084,12 @@ fn client_cmd(args: &Args) -> Result<()> {
         let out = replay_open_loop(|p, s| net.try_submit(p, s, None), &trace, &profiles, &bursts)?;
         let shed_rate = out.shed as f64 / (out.offered.max(1)) as f64;
         println!(
-            "  admitted {:>6}  shed {:>6} ({:>5.1}%)  backoff {:>5}  full {:>5}  \
+            "  ok {:>6}  err {:>5}  shed {:>6} ({:>5.1}%)  backoff {:>5}  full {:>5}  \
              p50 {:>8.1} us  p99 {:>8.1} us  {:.2} Msym/s",
             out.admitted,
+            // The wire collapses pool timeouts into typed error frames,
+            // so a remote replay sees them here rather than in `tmo`.
+            out.errors + out.timeouts,
             out.shed,
             shed_rate * 100.0,
             out.backed_off,
@@ -1004,11 +1186,13 @@ fn client_cmd(args: &Args) -> Result<()> {
 /// load, with p50/p99 end-to-end latency) — reported as the unified
 /// `{profile, path, symbols/s, ns/symbol, GBd-equivalent}` records
 /// (`util::bench::Throughput`; the SLO rows add `p50_us`/`p99_us`, the
-/// open-loop rows add `offered_rps`/`shed_rate`).  `--json [PATH]`
-/// additionally writes the records as a JSON array (default
-/// `BENCH_pr6.json`) so the perf trajectory stays machine-readable
-/// across PRs.  The integer path is asserted bit-identical to the
-/// fake-quant reference before anything is timed.
+/// open-loop rows add `offered_rps`/`shed_rate`), plus the
+/// `serving_faulted` chaos row — the coalesced pool re-measured with
+/// 1% seeded engine errors, quantifying what fault isolation costs on
+/// the happy path.  `--json [PATH]` additionally writes the records as
+/// a JSON array (default `BENCH_pr8.json`) so the perf trajectory
+/// stays machine-readable across PRs.  The integer path is asserted
+/// bit-identical to the fake-quant reference before anything is timed.
 fn bench_cmd(args: &Args) -> Result<()> {
     use equalizer::equalizer::cnn::CnnScratch;
     use equalizer::util::bench::{header, Bencher, Throughput};
@@ -1019,7 +1203,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
     let b = if quick { Bencher::quick() } else { Bencher::default() };
     let json_path = args
         .get("json")
-        .map(|v| if v == "true" { "BENCH_pr6.json".to_string() } else { v.to_string() });
+        .map(|v| if v == "true" { "BENCH_pr8.json".to_string() } else { v.to_string() });
 
     let float_cnn = reg.exact("cnn_imdd_w1024")?.load_native_cnn()?;
     let q_cnn = reg.exact("cnn_imdd_quant_w1024")?.load_native_cnn()?;
@@ -1133,6 +1317,84 @@ fn bench_cmd(args: &Args) -> Result<()> {
         );
         pool_rates[1] / spb as f64
     };
+
+    header("serving faulted (coalesced pool, 1% seeded engine errors)");
+    {
+        use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
+        use equalizer::coordinator::sched::SchedulerConfig;
+        use equalizer::util::faultinject::FaultSpec;
+        use std::time::Duration;
+
+        // The chaos row: the same coalesced small-burst mix as the
+        // serving rows above, but every engine instance wears the
+        // fault-injection wrapper with a 1% error rate — so the row
+        // prices the isolation machinery (ReplyGuard, catch_unwind,
+        // error-reply bookkeeping) plus the lost batches themselves.
+        // Throughput counts cleanly served symbols only; faulted
+        // requests still resolve (as error replies), they just carry
+        // no symbols.
+        let clients = 64usize;
+        let spb = 128usize;
+        let burst: Vec<f32> = (0..2 * spb).map(|i| (i as f32 * 0.19).sin()).collect();
+        let spec: FaultSpec = "error=0.01,seed=8".parse()?;
+        let cfg = PoolConfig {
+            shards: 2,
+            instances_per_shard: 4,
+            policy: RoutePolicy::ShortestQueue,
+            queue_cap: clients,
+            scheduler: SchedulerConfig::default().with_coalescing(Duration::from_millis(1)),
+            fault_spec: Some(spec),
+            ..PoolConfig::default()
+        };
+        let pool = ServerPool::from_registry(&reg, &["cnn_imdd_quant"], &cfg)?.spawn();
+        let waves = if quick { 6 } else { 24 };
+        let warmup = 2;
+        let (mut symbols, mut errors, mut wall) = (0usize, 0u64, 0.0f64);
+        for wave in 0..(warmup + waves) {
+            let t0 = std::time::Instant::now();
+            let pending: Vec<_> = (0..clients)
+                .map(|_| pool.submit("cnn_imdd_quant", burst.clone(), None).unwrap())
+                .collect();
+            for rx in pending {
+                let resp = rx.recv().unwrap();
+                if resp.error.is_some() {
+                    errors += 1;
+                } else {
+                    symbols += resp.soft_symbols.len();
+                }
+            }
+            if wave >= warmup {
+                wall += t0.elapsed().as_secs_f64();
+            } else {
+                symbols = 0; // errors stay cumulative: the pool's counter is too
+            }
+        }
+        let stats = pool.shutdown();
+        let requests = ((warmup + waves) * clients) as u64;
+        anyhow::ensure!(
+            stats.total_requests() == requests && stats.total_errors() == errors,
+            "faulted-bench accounting broke: {} requests ({} expected), {} errors \
+             ({} drained)",
+            stats.total_requests(),
+            requests,
+            stats.total_errors(),
+            errors
+        );
+        let t = Throughput::from_rate(symbols as f64, wall);
+        let clean_rate = closed_loop_rps * spb as f64;
+        println!(
+            "{:44} {}  {errors} error replies ({:.2}% of all requests)",
+            "serving_faulted",
+            t.line(),
+            errors as f64 * 100.0 / requests as f64
+        );
+        println!(
+            "\nfault isolation at 1% injected errors keeps {:.1}% of the clean coalesced \
+             throughput",
+            t.symbols_per_s * 100.0 / clean_rate
+        );
+        records.push(t.to_json("cnn_imdd_quant", "serving_faulted"));
+    }
 
     header("serving SLO (64 clients x 128-symbol bursts: fixed window vs adaptive)");
     {

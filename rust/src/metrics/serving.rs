@@ -28,7 +28,18 @@
 //! requests count in `requests`/`errors` only — a fast failure must
 //! not deflate p99 or inflate the throughput the autoscaler's signals
 //! are computed from.  Admission-shed requests never reach a queue at
-//! all and count only in `shed`.
+//! all and count only in `shed`.  Deadline-expired requests
+//! ([`ShardCounters::timed_out_one`]) follow the error rule —
+//! `requests`/`timeouts` only — because a request that was *never
+//! serviced* must not contribute service-time or latency signals
+//! either.
+//!
+//! The latency reservoir's mutex recovers from poisoning
+//! (`unwrap_or_else(PoisonError::into_inner)`): it guards plain
+//! sample data with no cross-field invariant, so a panic between
+//! lock and unlock — e.g. an injected engine panic unwinding through
+//! a worker — must degrade to "one sample may be stale", never to a
+//! pool-wide accounting outage.
 
 use super::stats::LatencyStats;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -117,6 +128,7 @@ pub struct ShardCounters {
     requests: AtomicU64,
     errors: AtomicU64,
     shed: AtomicU64,
+    timeouts: AtomicU64,
     symbols: AtomicU64,
     busy_us: AtomicU64,
     /// EWMA of per-request busy share (f64 bits) — the amortized
@@ -205,7 +217,7 @@ impl ShardCounters {
         let prev = f64::from_bits(self.service_ewma_bits.load(Ordering::Relaxed));
         let next = if prev <= 0.0 { busy } else { prev + (busy - prev) / 16.0 };
         self.service_ewma_bits.store(next.to_bits(), Ordering::Relaxed);
-        self.latency.lock().expect("latency lock").record(latency_us);
+        self.latency.lock().unwrap_or_else(|e| e.into_inner()).record(latency_us);
     }
 
     /// Record one admission-shed request: visible in the shed count,
@@ -219,6 +231,21 @@ impl ShardCounters {
     /// Requests shed by admission control on this shard.
     pub fn shed(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Record one deadline-expired request: it completed (with a
+    /// timeout reply) so it counts in `requests`, and in `timeouts` —
+    /// but contributes no symbols, busy time, latency sample or
+    /// service-EWMA movement, because it was never serviced and must
+    /// not skew the signals the scheduler derives from served work.
+    pub fn timed_out_one(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests that expired in queue on this shard.
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts.load(Ordering::Relaxed)
     }
 
     /// EWMA of per-request busy share, microseconds (0.0 before the
@@ -261,18 +288,23 @@ impl ShardCounters {
     /// out, so without it a pre-burst violation would pin the signal
     /// forever (pass [`Duration::MAX`] for the unaged view).
     pub fn recent_p99_us(&self, last: usize, max_age: Duration) -> f64 {
-        self.latency.lock().expect("latency lock").recent(last, max_age).percentile_us(99.0)
+        self.latency
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .recent(last, max_age)
+            .percentile_us(99.0)
     }
 
     /// Immutable snapshot of this shard's counters (latency stats over
     /// the last [`LATENCY_RING_CAP`] requests).
     pub fn snapshot(&self, shard: usize) -> ShardStats {
-        let latency = self.latency.lock().expect("latency lock").stats();
+        let latency = self.latency.lock().unwrap_or_else(|e| e.into_inner()).stats();
         ShardStats {
             shard,
             requests: self.requests.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
             symbols: self.symbols.load(Ordering::Relaxed),
             busy_us: self.busy_us.load(Ordering::Relaxed),
             stolen: self.stolen.load(Ordering::Relaxed),
@@ -303,6 +335,12 @@ pub struct ShardStats {
     /// this shard.  Shed requests never reached the queue: they appear
     /// here and nowhere else.
     pub shed: u64,
+    /// Admitted requests whose deadline
+    /// ([`crate::coordinator::sched::SchedulerConfig::request_timeout`])
+    /// expired in queue: resolved with a timeout reply, never
+    /// serviced.  Counted in `requests` and here, nowhere else
+    /// ([`ShardCounters::timed_out_one`]).
+    pub timeouts: u64,
     /// Soft symbols produced (== bits for PAM-2).
     pub symbols: u64,
     /// Summed wall time the shard worker spent serving.  Coalesced
@@ -354,6 +392,12 @@ pub struct PoolStats {
     pub dop_ups: u64,
     /// Autoscaler DOP narrowings since spawn.
     pub dop_downs: u64,
+    /// Worker panics caught and converted to error replies since spawn
+    /// (the isolation path; the worker survived every one of these).
+    pub panics: u64,
+    /// Dead shard workers the supervisor respawned from resident
+    /// blueprints since spawn.
+    pub respawns: u64,
 }
 
 /// Pool-wide snapshot: one [`ShardStats`] per shard, plus the
@@ -414,6 +458,11 @@ impl ServerStats {
         self.shards.iter().map(|s| s.shed).sum()
     }
 
+    /// Requests that expired in queue pool-wide.
+    pub fn total_timeouts(&self) -> u64 {
+        self.shards.iter().map(|s| s.timeouts).sum()
+    }
+
     /// Soft symbols produced pool-wide.
     pub fn total_symbols(&self) -> u64 {
         self.shards.iter().map(|s| s.symbols).sum()
@@ -449,11 +498,13 @@ impl ServerStats {
         let mut out = String::new();
         let _ = writeln!(
             out,
-            "{:>5} {:>9} {:>7} {:>6} {:>12} {:>6} {:>6} {:>6} {:>6} {:>8} {:>10} {:>10} {:>10}",
+            "{:>5} {:>9} {:>7} {:>6} {:>5} {:>12} {:>6} {:>6} {:>6} {:>6} {:>8} {:>10} {:>10} \
+             {:>10}",
             "shard",
             "requests",
             "errors",
             "shed",
+            "tmo",
             "symbols",
             "queue",
             "peak",
@@ -467,12 +518,13 @@ impl ServerStats {
         for s in &self.shards {
             let _ = writeln!(
                 out,
-                "{:>5} {:>9} {:>7} {:>6} {:>12} {:>6} {:>6} {:>6} {:>6} {:>8.0} {:>10.1} \
+                "{:>5} {:>9} {:>7} {:>6} {:>5} {:>12} {:>6} {:>6} {:>6} {:>6} {:>8.0} {:>10.1} \
                  {:>10.1} {:>10.2}",
                 s.shard,
                 s.requests,
                 s.errors,
                 s.shed,
+                s.timeouts,
                 s.symbols,
                 s.queue_depth,
                 s.peak_queue_depth,
@@ -486,10 +538,11 @@ impl ServerStats {
         }
         let _ = writeln!(
             out,
-            "total {:>9} {:>7} {:>6} {:>12}  ({:.2} Msym/s per busy shard)",
+            "total {:>9} {:>7} {:>6} {:>5} {:>12}  ({:.2} Msym/s per busy shard)",
             self.total_requests(),
             self.total_errors(),
             self.total_shed(),
+            self.total_timeouts(),
             self.total_symbols(),
             self.busy_msym_per_s()
         );
@@ -502,10 +555,15 @@ impl ServerStats {
             } else {
                 String::new()
             };
+            let faults = if self.pool.panics > 0 || self.pool.respawns > 0 {
+                format!(", panics {}, respawns {}", self.pool.panics, self.pool.respawns)
+            } else {
+                String::new()
+            };
             let _ = writeln!(
                 out,
                 "pool: {}/{} shards live  (scale-ups {}, scale-downs {}, stolen {}, \
-                 coalesced {}{dop})",
+                 coalesced {}{dop}{faults})",
                 self.pool.active_shards,
                 self.shards.len(),
                 self.pool.scale_ups,
@@ -592,6 +650,62 @@ mod tests {
         let stats = ServerStats::snapshot([&c]);
         assert_eq!(stats.total_shed(), 2);
         assert!(stats.render().contains("shed"), "shed column renders");
+    }
+
+    #[test]
+    fn timeout_counts_follow_the_error_isolation_rule() {
+        // A deadline-expired request completed (with a timeout reply)
+        // but was never serviced: it must appear in requests/timeouts
+        // and leave every scheduler signal untouched.
+        let c = ShardCounters::default();
+        c.served(128, 2_000.0, false);
+        for _ in 0..10 {
+            c.timed_out_one();
+        }
+        assert_eq!(c.timeouts(), 10);
+        let s = c.snapshot(0);
+        assert_eq!(s.requests, 11);
+        assert_eq!(s.timeouts, 10);
+        assert_eq!(s.errors, 0, "a timeout is not an engine error");
+        assert_eq!(s.symbols, 128);
+        assert_eq!(s.busy_us, 2_000);
+        assert_eq!(s.p99_us, 2_000.0, "timeout latencies never enter the reservoir");
+        assert_eq!(c.service_ewma_us(), 2_000.0, "EWMA sees served work only");
+        let stats = ServerStats::snapshot([&c]);
+        assert_eq!(stats.total_timeouts(), 10);
+        assert!(stats.render().contains("tmo"), "timeout column renders");
+    }
+
+    #[test]
+    fn pool_fault_gauges_render_only_when_nonzero() {
+        let c = ShardCounters::default();
+        c.served(128, 100.0, false);
+        let base = PoolStats { active_shards: 1, ..PoolStats::default() };
+        let stats = ServerStats::snapshot([&c]).with_pool(base.clone());
+        assert_eq!(stats.render().lines().count(), 4);
+        assert!(!stats.render().contains("panics"), "clean pools stay quiet");
+        let stats = stats.with_pool(PoolStats { panics: 3, respawns: 1, ..base });
+        let table = stats.render();
+        assert_eq!(table.lines().count(), 4, "{table}");
+        assert!(table.contains("panics 3, respawns 1"), "{table}");
+    }
+
+    #[test]
+    fn poisoned_latency_lock_recovers() {
+        // A panic while holding the reservoir lock (an unwinding
+        // worker) must not take the accounting down with it.
+        let c = std::sync::Arc::new(ShardCounters::default());
+        c.served(64, 500.0, false);
+        let c2 = std::sync::Arc::clone(&c);
+        let _ = std::thread::spawn(move || {
+            let _guard = c2.latency.lock().unwrap();
+            panic!("poison the reservoir lock");
+        })
+        .join();
+        assert!(c.latency.lock().is_err(), "the lock really is poisoned");
+        c.served(64, 700.0, false);
+        assert_eq!(c.snapshot(0).max_us, 700.0, "recording still works");
+        assert_eq!(c.recent_p99_us(SLO_RECENT_WINDOW, NO_AGE), 700.0);
     }
 
     #[test]

@@ -1,0 +1,316 @@
+//! Deterministic fault injection for the serving pool.
+//!
+//! The fault-tolerance layer (panic isolation, reply guards, shard
+//! supervision — `coordinator::pool`) is only trustworthy if it can be
+//! exercised under *reproducible* faults.  This module provides the
+//! seeded fault source: a [`FaultSpec`] parsed from the CLI
+//! (`repro serve --fault-spec panic=0.02,error=0.01`), and a
+//! [`FaultPlan`] that draws per-request fault decisions from the same
+//! in-tree [`Mt19937`] the open-loop load generator uses — equal specs
+//! yield byte-identical fault sequences, so a chaos run that found a
+//! bug replays exactly.
+//!
+//! Fault kinds, drawn independently per engine pass:
+//!
+//! - **error** — the engine returns `Err` (an admitted request fails
+//!   cleanly; the pool converts it to an error reply).
+//! - **panic** — the engine panics mid-pass.  The pool's
+//!   `catch_unwind` isolation must convert this into error replies for
+//!   the whole batch and keep the worker alive.
+//! - **fatal** — the engine panics with the [`FatalFault`] marker
+//!   payload, which the pool deliberately re-raises *after* resolving
+//!   replies: the worker thread dies and shard supervision must
+//!   respawn it.  This is how worker death is made reproducible.
+//! - **delay** — the pass sleeps [`FaultSpec::delay_us`] first (a
+//!   latency spike; exercises deadlines and the SLO loop).
+//! - **drop** — net-level only: the server severs the connection
+//!   instead of replying (exercises reader-thread cleanup and client
+//!   retry bounds).  Drawn from a separate [`FaultPlan`] by the
+//!   `coordinator::net` front end, never by engines.
+//!
+//! The injection wrapper itself ([`FaultyInstance`]) lives in
+//! `coordinator::instance` next to the other `EqualizerInstance`
+//! flavors; this module is the spec + the deterministic draw.
+
+use crate::channel::mt19937::Mt19937;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Fault rates and the seed that makes them reproducible.  Parsed from
+/// a `key=value` comma list (see [`FaultSpec::from_str`]); all rates
+/// are per engine pass (or per frame, for `drop`) in `[0, 1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Probability an engine pass panics (caught by the pool).
+    pub panic: f64,
+    /// Probability an engine pass panics with [`FatalFault`] (kills
+    /// the worker thread; supervision must respawn it).
+    pub fatal: f64,
+    /// Probability an engine pass returns an error.
+    pub error: f64,
+    /// Probability an engine pass is delayed by [`Self::delay_us`].
+    pub delay: f64,
+    /// Latency-spike size for `delay` faults, microseconds.
+    pub delay_us: u64,
+    /// Probability the net front end drops a connection instead of
+    /// replying to a frame.
+    pub drop: f64,
+    /// Seed for the per-instance [`FaultPlan`]s; equal specs yield
+    /// identical fault sequences.
+    pub seed: u32,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self {
+            panic: 0.0,
+            fatal: 0.0,
+            error: 0.0,
+            delay: 0.0,
+            delay_us: 500,
+            drop: 0.0,
+            seed: 0xfa_17,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Check the spec is injectable: every rate in `[0, 1]`, and the
+    /// engine-fault rates must not sum past 1 (they partition one
+    /// uniform draw).
+    pub fn validate(&self) -> Result<()> {
+        for (name, rate) in [
+            ("panic", self.panic),
+            ("fatal", self.fatal),
+            ("error", self.error),
+            ("delay", self.delay),
+            ("drop", self.drop),
+        ] {
+            anyhow::ensure!(
+                rate.is_finite() && (0.0..=1.0).contains(&rate),
+                "fault rate {name} must be in [0, 1], got {rate}"
+            );
+        }
+        let sum = self.panic + self.fatal + self.error + self.delay;
+        anyhow::ensure!(
+            sum <= 1.0,
+            "engine fault rates sum to {sum}, but they partition one draw (must be <= 1)"
+        );
+        anyhow::ensure!(self.delay == 0.0 || self.delay_us > 0, "delay faults need delay-us > 0");
+        Ok(())
+    }
+
+    /// True if any engine-level fault can fire (the pool skips the
+    /// wrapper entirely otherwise).
+    pub fn any_engine_fault(&self) -> bool {
+        self.panic > 0.0 || self.fatal > 0.0 || self.error > 0.0 || self.delay > 0.0
+    }
+
+    /// A plan for one injection site.  `stream` decorrelates sites
+    /// (e.g. one per engine instance, one per net connection) while
+    /// keeping the whole run a pure function of the spec.
+    pub fn plan(&self, stream: u32) -> FaultPlan {
+        FaultPlan::new(self, self.seed.wrapping_add(stream.wrapping_mul(0x9e37_79b9)))
+    }
+}
+
+impl std::str::FromStr for FaultSpec {
+    type Err = anyhow::Error;
+
+    /// Parse `"panic=0.02,error=0.01,delay=0.05,delay-us=500,drop=0.01,seed=7"`.
+    /// Unset keys keep their [`FaultSpec::default`] values.
+    fn from_str(s: &str) -> Result<Self> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault spec part {part:?} is not key=value"))?;
+            let bad = |e| anyhow::anyhow!("fault spec {key}={value}: {e}");
+            match key {
+                "panic" => spec.panic = value.parse().map_err(bad)?,
+                "fatal" => spec.fatal = value.parse().map_err(bad)?,
+                "error" => spec.error = value.parse().map_err(bad)?,
+                "delay" => spec.delay = value.parse().map_err(bad)?,
+                "delay-us" | "delay_us" => spec.delay_us = value.parse().map_err(bad)?,
+                "drop" => spec.drop = value.parse().map_err(bad)?,
+                "seed" => spec.seed = value.parse().map_err(bad)?,
+                other => anyhow::bail!(
+                    "unknown fault spec key {other:?} \
+                     (panic|fatal|error|delay|delay-us|drop|seed)"
+                ),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// One fault decision for an engine pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Panic mid-pass (recoverable: the pool catches it).
+    Panic,
+    /// Panic with the [`FatalFault`] payload (kills the worker).
+    Fatal,
+    /// Return an engine error.
+    Error,
+    /// Sleep this long, then serve normally.
+    Delay(Duration),
+}
+
+/// Panic payload that marks a fault as *worker-fatal*: the pool's
+/// `catch_unwind` isolation resolves the batch's replies, then
+/// re-raises this payload so the worker thread actually dies and the
+/// supervisor's respawn path is exercised.  Nothing outside fault
+/// injection ever panics with this type.
+#[derive(Debug)]
+pub struct FatalFault;
+
+/// A seeded stream of fault decisions — the deterministic core.  One
+/// uniform draw per call; the engine fault rates partition `[0, 1)` in
+/// the fixed order panic | fatal | error | delay, so the sequence of
+/// decisions is byte-identical for equal `(spec, stream)` pairs.
+#[derive(Debug)]
+pub struct FaultPlan {
+    rng: Mt19937,
+    panic: f64,
+    fatal: f64,
+    error: f64,
+    delay: f64,
+    delay_us: u64,
+    drop: f64,
+}
+
+impl FaultPlan {
+    fn new(spec: &FaultSpec, seed: u32) -> Self {
+        Self {
+            rng: Mt19937::new(seed),
+            panic: spec.panic,
+            fatal: spec.fatal,
+            error: spec.error,
+            delay: spec.delay,
+            delay_us: spec.delay_us,
+            drop: spec.drop,
+        }
+    }
+
+    /// Draw the fault decision for the next engine pass.
+    pub fn draw(&mut self) -> Option<Fault> {
+        let u = self.rng.next_f64();
+        let mut edge = self.panic;
+        if u < edge {
+            return Some(Fault::Panic);
+        }
+        edge += self.fatal;
+        if u < edge {
+            return Some(Fault::Fatal);
+        }
+        edge += self.error;
+        if u < edge {
+            return Some(Fault::Error);
+        }
+        edge += self.delay;
+        if u < edge {
+            return Some(Fault::Delay(Duration::from_micros(self.delay_us)));
+        }
+        None
+    }
+
+    /// Draw the drop decision for the next net frame (independent of
+    /// the engine-fault partition; net plans use a different stream).
+    pub fn draw_drop(&mut self) -> bool {
+        self.drop > 0.0 && self.rng.next_f64() < self.drop
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_the_full_key_set_and_defaults_the_rest() {
+        let spec: FaultSpec =
+            "panic=0.02,error=0.01,delay=0.05,delay-us=250,drop=0.1,seed=7".parse().unwrap();
+        assert_eq!(spec.panic, 0.02);
+        assert_eq!(spec.error, 0.01);
+        assert_eq!(spec.delay, 0.05);
+        assert_eq!(spec.delay_us, 250);
+        assert_eq!(spec.drop, 0.1);
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.fatal, 0.0, "unset keys keep defaults");
+        let spec: FaultSpec = "fatal=0.005".parse().unwrap();
+        assert_eq!(spec.fatal, 0.005);
+        assert_eq!(spec.delay_us, FaultSpec::default().delay_us);
+        assert!(spec.any_engine_fault());
+        assert!(!FaultSpec::default().any_engine_fault());
+    }
+
+    #[test]
+    fn spec_rejects_malformed_and_out_of_range_input() {
+        assert!("panic".parse::<FaultSpec>().is_err(), "not key=value");
+        assert!("panic=1.5".parse::<FaultSpec>().is_err(), "rate above 1");
+        assert!("error=-0.1".parse::<FaultSpec>().is_err(), "negative rate");
+        assert!("jitter=0.1".parse::<FaultSpec>().is_err(), "unknown key");
+        assert!("panic=nope".parse::<FaultSpec>().is_err(), "unparsable value");
+        assert!(
+            "panic=0.6,error=0.6".parse::<FaultSpec>().is_err(),
+            "engine rates must partition one draw"
+        );
+        assert!("delay=0.1,delay-us=0".parse::<FaultSpec>().is_err(), "zero-length delay");
+        assert!("".parse::<FaultSpec>().is_ok(), "empty spec = no faults");
+    }
+
+    #[test]
+    fn plans_are_deterministic_per_spec_and_stream() {
+        let spec: FaultSpec = "panic=0.1,error=0.2,delay=0.1".parse().unwrap();
+        let draws = |spec: &FaultSpec, stream| {
+            let mut plan = spec.plan(stream);
+            (0..500).map(|_| plan.draw()).collect::<Vec<_>>()
+        };
+        assert_eq!(draws(&spec, 0), draws(&spec, 0), "equal (spec, stream) => equal draws");
+        assert_ne!(draws(&spec, 0), draws(&spec, 1), "streams decorrelate");
+        let mut reseeded = spec.clone();
+        reseeded.seed ^= 1;
+        assert_ne!(draws(&spec, 0), draws(&reseeded, 0), "the seed matters");
+    }
+
+    #[test]
+    fn draw_rates_approach_the_spec() {
+        let spec: FaultSpec = "panic=0.1,fatal=0.05,error=0.2,delay=0.1".parse().unwrap();
+        let mut plan = spec.plan(3);
+        let n = 20_000;
+        let (mut p, mut f, mut e, mut d, mut none) = (0, 0, 0, 0, 0);
+        for _ in 0..n {
+            match plan.draw() {
+                Some(Fault::Panic) => p += 1,
+                Some(Fault::Fatal) => f += 1,
+                Some(Fault::Error) => e += 1,
+                Some(Fault::Delay(dur)) => {
+                    assert_eq!(dur, Duration::from_micros(spec.delay_us));
+                    d += 1;
+                }
+                None => none += 1,
+            }
+        }
+        let frac = |k: i64| k as f64 / n as f64;
+        assert!((frac(p) - 0.10).abs() < 0.02, "panic rate {}", frac(p));
+        assert!((frac(f) - 0.05).abs() < 0.02, "fatal rate {}", frac(f));
+        assert!((frac(e) - 0.20).abs() < 0.02, "error rate {}", frac(e));
+        assert!((frac(d) - 0.10).abs() < 0.02, "delay rate {}", frac(d));
+        assert!((frac(none) - 0.55).abs() < 0.03, "clean rate {}", frac(none));
+    }
+
+    #[test]
+    fn drop_draws_are_independent_and_deterministic() {
+        let spec: FaultSpec = "drop=0.3".parse().unwrap();
+        let mut a = spec.plan(9);
+        let mut b = spec.plan(9);
+        let hits: Vec<bool> = (0..200).map(|_| a.draw_drop()).collect();
+        assert_eq!(hits, (0..200).map(|_| b.draw_drop()).collect::<Vec<_>>());
+        let rate = hits.iter().filter(|h| **h).count() as f64 / 200.0;
+        assert!((rate - 0.3).abs() < 0.12, "drop rate {rate}");
+        let mut none = FaultSpec::default().plan(0);
+        assert!((0..100).all(|_| !none.draw_drop()), "zero rate never drops");
+        assert!((0..100).all(|_| none.draw().is_none()), "empty spec never faults");
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod faultinject;
 pub mod json;
 pub mod loadgen;
 pub mod prop;

@@ -1,0 +1,172 @@
+//! Fault-tolerance acceptance: the serving pool under deterministic
+//! chaos (`util::faultinject`).  With seeded engine panics, worker
+//! deaths and errors injected at load, the pool must (1) answer every
+//! admitted request exactly once, (2) keep non-faulted replies
+//! bit-identical to the sequential clean reference, (3) keep its
+//! accounting balanced (`requests = ok + errors + timeouts`, sheds
+//! counted apart), and (4) recover dead workers through supervised
+//! respawn and keep serving afterwards.
+
+use equalizer::coordinator::pool::{PoolConfig, ServerPool};
+use equalizer::coordinator::sched::SchedulerConfig;
+use equalizer::runtime::ArtifactRegistry;
+use equalizer::util::faultinject::FaultSpec;
+use std::time::Duration;
+
+fn registry() -> ArtifactRegistry {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    ArtifactRegistry::discover(dir).expect("committed native artifacts")
+}
+
+/// The clean sequential reference reply for `burst` on `profile`: a
+/// 1-shard, 1-instance pool with no fault injection.
+fn reference_reply(reg: &ArtifactRegistry, profile: &str, burst: &[f32]) -> Vec<f32> {
+    let cfg = PoolConfig { shards: 1, instances_per_shard: 1, ..PoolConfig::default() };
+    let reference = ServerPool::from_registry(reg, &[profile], &cfg).unwrap().spawn();
+    let want = reference.call(profile, burst.to_vec(), None).unwrap();
+    reference.shutdown();
+    assert!(!want.soft_symbols.is_empty());
+    want.soft_symbols
+}
+
+#[test]
+fn chaos_pool_answers_every_request_exactly_once_and_recovers() {
+    // ~8% of engine passes fault (2% recoverable panic, 5% worker-
+    // fatal panic, 1% clean error) under a 300-request load with
+    // coalescing on — the acceptance chaos run.  The spec is seeded,
+    // so the injected fault sequence is reproducible run to run.
+    use equalizer::channel::{imdd::ImddChannel, Channel};
+
+    let reg = registry();
+    let profile = "cnn_imdd_quant";
+    let burst = ImddChannel::default().transmit(3000, 91).rx;
+    let want = reference_reply(&reg, profile, &burst);
+
+    let spec: FaultSpec = "panic=0.02,fatal=0.05,error=0.01,seed=20".parse().unwrap();
+    let cfg = PoolConfig {
+        shards: 2,
+        instances_per_shard: 2,
+        queue_cap: 64,
+        scheduler: SchedulerConfig::default().with_coalescing(Duration::from_millis(1)),
+        fault_spec: Some(spec),
+        ..PoolConfig::default()
+    };
+    let pool = ServerPool::from_registry(&reg, &[profile], &cfg).unwrap().spawn();
+
+    // Phase 1: the load.  Every submit is admitted (blocking submit,
+    // no admission control), so every one of these channels MUST
+    // resolve — a recv error is a reply-guarantee violation.
+    let requests = 300usize;
+    let pending: Vec<_> =
+        (0..requests).map(|_| pool.submit(profile, burst.clone(), None).unwrap()).collect();
+    let (mut ok, mut errors) = (0u64, 0u64);
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("request {i} never got its reply"));
+        assert!(!resp.timed_out, "no deadline configured, request {i} cannot time out");
+        if let Some(msg) = &resp.error {
+            // Injected faults surface as typed error replies (the text
+            // names the panic or carries the engine's error chain).
+            assert!(!msg.is_empty(), "error reply for request {i} must carry a message");
+            assert!(resp.soft_symbols.is_empty(), "a faulted request must not carry symbols");
+            errors += 1;
+        } else {
+            // The exactly-bit-identical clause: a non-faulted reply
+            // through the chaos pool equals the clean sequential
+            // reference, coalescing and respawns notwithstanding.
+            assert_eq!(resp.soft_symbols, want, "request {i} diverged from the reference");
+            ok += 1;
+        }
+    }
+    assert!(ok > 0, "the pool must keep serving under chaos (all {requests} faulted?)");
+    assert!(errors > 0, "an 8% fault rate over {requests} requests must fire at least once");
+
+    // Phase 2: recovery.  Worker-fatal faults killed shard workers
+    // above; the supervisor must have respawned them, and the pool
+    // must still serve fresh requests afterwards.
+    let tail: Vec<_> = (0..8).map(|_| pool.submit(profile, burst.clone(), None).unwrap()).collect();
+    let mut tail_ok = 0u64;
+    for (i, rx) in tail.into_iter().enumerate() {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("post-chaos request {i} lost its reply"));
+        if resp.error.is_none() {
+            assert_eq!(resp.soft_symbols, want);
+            tail_ok += 1;
+            ok += 1;
+        } else {
+            errors += 1;
+        }
+    }
+    assert!(tail_ok > 0, "a respawned pool must serve the post-chaos wave");
+
+    let stats = pool.shutdown();
+    assert_eq!(
+        stats.total_requests(),
+        ok + errors,
+        "accounting must balance: every admitted request is exactly one of ok|error"
+    );
+    assert_eq!(stats.total_requests(), requests as u64 + 8);
+    assert_eq!(stats.total_errors(), errors);
+    assert_eq!(stats.total_timeouts(), 0);
+    assert_eq!(stats.total_shed(), 0, "no admission control in this run");
+    assert!(stats.panics >= 1, "injected panics must be caught and counted");
+    assert!(
+        stats.respawns >= 1,
+        "a 5% worker-fatal rate over {requests}+ passes must kill and respawn a worker"
+    );
+}
+
+#[test]
+fn delay_faults_expire_queued_requests_at_the_deadline() {
+    // Latency-spike injection against a request deadline: a 1-shard,
+    // 1-instance pool where half the passes sleep 20 ms, with a 5 ms
+    // per-request deadline.  Requests stuck behind a spike expire in
+    // queue and resolve as *timeout* replies — never serviced, never
+    // counted as errors — while the requests that do get served stay
+    // bit-identical to the clean reference.
+    let reg = registry();
+    let profile = "fir_imdd";
+    let burst: Vec<f32> = (0..2048).map(|i| (i as f32 * 0.07).sin()).collect();
+    let want = reference_reply(&reg, profile, &burst);
+
+    let spec: FaultSpec = "delay=0.5,delay-us=20000,seed=4".parse().unwrap();
+    let cfg = PoolConfig {
+        shards: 1,
+        instances_per_shard: 1,
+        queue_cap: 64,
+        scheduler: SchedulerConfig::default()
+            .with_request_timeout(Duration::from_millis(5)),
+        fault_spec: Some(spec),
+        ..PoolConfig::default()
+    };
+    let pool = ServerPool::from_registry(&reg, &[profile], &cfg).unwrap().spawn();
+
+    let requests = 40usize;
+    let pending: Vec<_> =
+        (0..requests).map(|_| pool.submit(profile, burst.clone(), None).unwrap()).collect();
+    let (mut ok, mut timeouts) = (0u64, 0u64);
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("request {i} never got its reply"));
+        if resp.timed_out {
+            let msg = resp.error.as_deref().unwrap_or_default();
+            assert!(msg.contains("deadline"), "timeout reply must say so, got {msg:?}");
+            assert!(resp.soft_symbols.is_empty(), "expired work must never be serviced");
+            assert!(
+                resp.latency_us >= 5_000.0,
+                "request {i} timed out after only {} us",
+                resp.latency_us
+            );
+            timeouts += 1;
+        } else {
+            assert!(resp.error.is_none(), "delay faults alone must not error: {:?}", resp.error);
+            assert_eq!(resp.soft_symbols, want, "request {i} diverged from the reference");
+            ok += 1;
+        }
+    }
+    assert!(ok >= 1, "the head of the queue always serves");
+    assert!(timeouts >= 1, "20 ms spikes against a 5 ms deadline must expire queued work");
+
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), ok + timeouts, "requests = ok + timeouts here");
+    assert_eq!(stats.total_timeouts(), timeouts);
+    assert_eq!(stats.total_errors(), 0, "timeouts are not errors — isolated counters");
+    assert_eq!(stats.panics, 0);
+}

@@ -189,6 +189,132 @@ fn shed_verdicts_travel_with_a_positive_retry_after_hint() {
 }
 
 #[test]
+fn disconnecting_clients_mid_request_leaks_neither_readers_nor_service() {
+    // The PR-8 reader-leak regression: a client that writes a request
+    // frame and drops its socket leaves an admitted request in the
+    // pool and (pre-fix) a reader thread + socket clone pinned in the
+    // server's registry until teardown.  After many such hit-and-run
+    // connections the server must still serve fresh clients, and
+    // shutdown must join every reader and return promptly.
+    use equalizer::coordinator::net::wire::{self, Frame, Request};
+    use std::net::TcpStream;
+
+    let delay = Duration::from_millis(10);
+    let pool = ServerPool::new(vec![slow_shard(delay)], RoutePolicy::RoundRobin, 64)
+        .unwrap()
+        .spawn();
+    let server = NetServer::spawn(pool.client(), "127.0.0.1:0").unwrap();
+
+    let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+    let drops = 10u64;
+    for id in 0..drops {
+        let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+        let frame = Frame::Request(Request {
+            id,
+            profile: "slow".to_string(),
+            t_req: None,
+            samples: burst.clone(),
+        });
+        wire::write_frame(&mut conn, &frame).unwrap();
+        // Drop the socket with the request admitted (or about to be):
+        // the reply write will fail, and the reader must simply exit.
+        drop(conn);
+    }
+
+    // A fresh client is served normally — dead connections took no
+    // queue slots, worker threads, or accept capacity with them.
+    let client = NetClient::connect(server.local_addr()).unwrap();
+    let resp = client.call("slow", burst.clone(), None).unwrap();
+    assert_eq!(resp.soft_symbols.len(), 96);
+    drop(client);
+
+    // Teardown joins every reader, including the ten hit-and-run ones
+    // (their threads already exited; pre-fix this is where the leaked
+    // handles surfaced).  `shutdown` hanging here fails the test by
+    // timeout.
+    server.shutdown();
+    let stats = pool.shutdown();
+    // Every admitted request was served exactly once — the pool did
+    // the work even when nobody was left to read the answer.
+    assert_eq!(stats.total_requests(), drops + 1);
+    assert_eq!(stats.total_errors(), 0);
+}
+
+#[test]
+fn injected_connection_drops_sever_before_admission() {
+    // `NetServer::spawn_with_faults` with a certain-drop plan: every
+    // request frame is answered by severing the connection — the
+    // client sees a clean mid-request disconnect, and the pool never
+    // admits anything.  Control frames are exempt, so a shutdown still
+    // lands.
+    use equalizer::util::faultinject::FaultSpec;
+
+    let spec: FaultSpec = "drop=1.0".parse().unwrap();
+    let pool = ServerPool::new(vec![slow_shard(Duration::from_millis(1))], RoutePolicy::RoundRobin, 8)
+        .unwrap()
+        .spawn();
+    let server =
+        NetServer::spawn_with_faults(pool.client(), "127.0.0.1:0", Some(spec.plan(0))).unwrap();
+
+    let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+    for _ in 0..3 {
+        let client = NetClient::connect(server.local_addr()).unwrap();
+        let err = client.submit("slow", burst.clone(), None).unwrap_err();
+        assert!(
+            err.to_string().contains("closed the connection"),
+            "a dropped connection must surface as a typed client error, got: {err:#}"
+        );
+    }
+
+    let controller = NetClient::connect(server.local_addr()).unwrap();
+    controller.shutdown_server().expect("shutdown frames are never dropped");
+    server.wait();
+    let stats = pool.shutdown();
+    assert_eq!(stats.total_requests(), 0, "dropped requests never reach the pool");
+}
+
+#[test]
+fn wedged_shard_yields_a_typed_timeout_frame_not_a_hung_socket() {
+    // The net-layer deadline: with a pool request timeout configured,
+    // a reader bounds its blocking reply wait at deadline + slack.  An
+    // engine stuck far past that (400 ms against 5 ms + 250 ms slack)
+    // must produce a typed timeout error frame while the socket stays
+    // usable — the pre-PR-8 behavior was an indefinitely hung client.
+    let sched =
+        SchedulerConfig::default().with_request_timeout(Duration::from_millis(5));
+    let pool = ServerPool::with_scheduler(
+        vec![slow_shard(Duration::from_millis(400))],
+        RoutePolicy::RoundRobin,
+        8,
+        sched,
+    )
+    .unwrap()
+    .spawn();
+    let server = NetServer::spawn(pool.client(), "127.0.0.1:0").unwrap();
+
+    let client = NetClient::connect(server.local_addr()).unwrap();
+    // One chunk's worth of samples: the engine pass is exactly one
+    // 400 ms sleep, so the post-test drain stays bounded.
+    let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+    let t0 = std::time::Instant::now();
+    let err = client.call("slow", burst, None).unwrap_err();
+    assert!(
+        err.to_string().contains("timed out"),
+        "expected a typed timeout error, got: {err:#}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_millis(390),
+        "the timeout frame must beat the wedged engine, took {:?}",
+        t0.elapsed()
+    );
+
+    drop(client);
+    server.shutdown();
+    // The worker is still inside its 400 ms pass; shutdown drains it.
+    pool.shutdown();
+}
+
+#[test]
 fn server_shutdown_drains_admitted_requests_and_acks_the_control_frame() {
     // Drain guarantee: a request already admitted into the pool when
     // shutdown starts must complete and its response must reach the
