@@ -42,6 +42,17 @@ pub trait EqualizerInstance {
         );
         (0..n_chunks).map(|i| self.process(&chunks[i * w..(i + 1) * w])).collect()
     }
+
+    /// [`Self::process_batch`] as a *single fused kernel invocation*:
+    /// backends that can batch the compute itself (the native CNN's
+    /// group-fused im2col + GEMM, a batched PJRT executable) run all
+    /// `n_chunks` in one pass with tiles spanning chunk boundaries —
+    /// bit-identical to the per-chunk loop by construction.  The
+    /// default simply delegates to [`Self::process_batch`], so every
+    /// backend is safe to drive through the group-fused serving mode.
+    fn process_batch_fused(&mut self, chunks: &[f32], n_chunks: usize) -> Result<Vec<Vec<f32>>> {
+        self.process_batch(chunks, n_chunks)
+    }
 }
 
 impl<T: EqualizerInstance + ?Sized> EqualizerInstance for Box<T> {
@@ -55,6 +66,10 @@ impl<T: EqualizerInstance + ?Sized> EqualizerInstance for Box<T> {
 
     fn process_batch(&mut self, chunks: &[f32], n_chunks: usize) -> Result<Vec<Vec<f32>>> {
         (**self).process_batch(chunks, n_chunks)
+    }
+
+    fn process_batch_fused(&mut self, chunks: &[f32], n_chunks: usize) -> Result<Vec<Vec<f32>>> {
+        (**self).process_batch_fused(chunks, n_chunks)
     }
 }
 
@@ -94,6 +109,16 @@ impl EqualizerInstance for NativeInstance {
     fn process(&mut self, chunk: &[f32]) -> Result<Vec<f32>> {
         anyhow::ensure!(chunk.len() == self.width, "chunk width {} != {}", chunk.len(), self.width);
         Ok(self.cnn.forward_with(chunk, &mut self.scratch))
+    }
+
+    fn process_batch_fused(&mut self, chunks: &[f32], n_chunks: usize) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            chunks.len() == n_chunks * self.width,
+            "batch length {} != {n_chunks} chunks x width {}",
+            chunks.len(),
+            self.width
+        );
+        Ok(self.cnn.forward_batch_with(chunks, n_chunks, &mut self.scratch))
     }
 }
 
@@ -177,6 +202,17 @@ impl EqualizerInstance for AnyInstance {
             AnyInstance::Faulty(i) => i.process_batch(chunks, n_chunks),
             #[cfg(feature = "pjrt")]
             AnyInstance::Pjrt(i) => i.process_batch(chunks, n_chunks),
+        }
+    }
+
+    fn process_batch_fused(&mut self, chunks: &[f32], n_chunks: usize) -> Result<Vec<Vec<f32>>> {
+        match self {
+            AnyInstance::Native(i) => i.process_batch_fused(chunks, n_chunks),
+            AnyInstance::Fir(i) => i.process_batch_fused(chunks, n_chunks),
+            AnyInstance::Volterra(i) => i.process_batch_fused(chunks, n_chunks),
+            AnyInstance::Faulty(i) => i.process_batch_fused(chunks, n_chunks),
+            #[cfg(feature = "pjrt")]
+            AnyInstance::Pjrt(i) => i.process_batch_fused(chunks, n_chunks),
         }
     }
 }
@@ -350,6 +386,25 @@ impl<I: EqualizerInstance> EqualizerInstance for FaultyInstance<I> {
     // The default process_batch loops over process(), so batched
     // passes draw one fault decision per chunk — same per-request
     // rates on every scheduled path.
+
+    /// Group-fused passes draw the same one-decision-per-chunk
+    /// sequence as the looped default (identical per-request fault
+    /// rates and identical seeded draw order); the first aborting
+    /// decision resolves the pass exactly where the loop would have
+    /// stopped.  Clean draws delegate to the inner fused kernel.
+    fn process_batch_fused(&mut self, chunks: &[f32], n_chunks: usize) -> Result<Vec<Vec<f32>>> {
+        use crate::util::faultinject::{Fault, FatalFault};
+        for _ in 0..n_chunks {
+            match self.plan.draw() {
+                Some(Fault::Panic) => panic!("injected engine panic (faultinject)"),
+                Some(Fault::Fatal) => std::panic::panic_any(FatalFault),
+                Some(Fault::Error) => anyhow::bail!("injected engine error (faultinject)"),
+                Some(Fault::Delay(d)) => std::thread::sleep(d),
+                None => {}
+            }
+        }
+        self.inner.process_batch_fused(chunks, n_chunks)
+    }
 }
 
 /// Test instance: decimate by `n_os` (an "equalizer" with no memory).
@@ -459,5 +514,46 @@ mod tests {
         for (i, out) in batched.iter().enumerate() {
             assert_eq!(out, &b.process(&chunks[i * 256..(i + 1) * 256]).unwrap());
         }
+    }
+
+    #[test]
+    fn fused_batch_matches_looped_batch_everywhere() {
+        use crate::equalizer::cnn::delta_cnn;
+        use crate::equalizer::weights::CnnTopologyCfg;
+        let cnn = FixedPointCnn::new(delta_cnn(CnnTopologyCfg::SELECTED), None);
+        let chunks: Vec<f32> = (0..1280).map(|i| (i as f32 * 0.29).cos()).collect();
+        // Native: the real fused kernel.
+        let mut n = NativeInstance::new(cnn, 256);
+        assert_eq!(
+            n.process_batch_fused(&chunks, 5).unwrap(),
+            n.process_batch(&chunks, 5).unwrap()
+        );
+        assert!(n.process_batch_fused(&chunks[..1000], 5).is_err(), "ragged batch rejected");
+        assert!(n.process_batch_fused(&[], 0).unwrap().is_empty());
+        // Default-impl backend: fused must transparently delegate.
+        let mut d = DecimatorInstance { width: 256, n_os: 2 };
+        assert_eq!(
+            d.process_batch_fused(&chunks, 5).unwrap(),
+            d.process_batch(&chunks, 5).unwrap()
+        );
+    }
+
+    #[test]
+    fn faulty_fused_draws_one_decision_per_chunk() {
+        use crate::util::faultinject::FaultSpec;
+        // The fused override must consume the identical seeded draw
+        // sequence as the looped default: running the same plan through
+        // k fused passes of n chunks or k*n single passes yields the
+        // same per-chunk fault pattern.
+        let spec: FaultSpec = "error=0.25,seed=5".parse().unwrap();
+        let chunks: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let mut fused = FaultyInstance::new(DecimatorInstance { width: 8, n_os: 2 }, spec.plan(3));
+        let fused_oks: Vec<bool> =
+            (0..24).map(|_| fused.process_batch_fused(&chunks, 4).is_ok()).collect();
+        let mut looped = FaultyInstance::new(DecimatorInstance { width: 8, n_os: 2 }, spec.plan(3));
+        let looped_oks: Vec<bool> =
+            (0..24).map(|_| looped.process_batch(&chunks, 4).is_ok()).collect();
+        assert_eq!(fused_oks, looped_oks);
+        assert!(fused_oks.iter().any(|ok| !ok), "25% error rate must fire in 96 draws");
     }
 }

@@ -2,7 +2,7 @@
 //! OGM -> SSM tree -> N_i instances -> MSM tree -> ORM.
 //!
 //! Functionally faithful to the FPGA dataflow (Sec. 5.3): identical
-//! chunking, routing, overlap bookkeeping and ordering.  Three
+//! chunking, routing, overlap bookkeeping and ordering.  Four
 //! execution modes over the same bookkeeping:
 //!
 //! * [`EqualizerPipeline::equalize`] — sequential (deterministic
@@ -14,14 +14,21 @@
 //!   instance, each worker receiving its whole chunk queue as one
 //!   contiguous batch ([`EqualizerInstance::process_batch`]), mirroring
 //!   the continuous stream an FPGA engine consumes.  This is the
-//!   serving configuration for the native backend.
+//!   serving configuration for the native backend;
+//! * [`EqualizerPipeline::equalize_group_fused`] — the cross-request
+//!   variant of batch mode: a whole coalesced group flows through
+//!   **one** fused im2col + GEMM kernel invocation per instance
+//!   ([`EqualizerInstance::process_batch_fused`]) instead of one per
+//!   chunk.
 //!
-//! All three produce bit-identical outputs for the same instances —
-//! asserted by the tests here and in `tests/native_e2e.rs`.
+//! All modes produce bit-identical outputs for the same instances —
+//! asserted by the tests here, in `tests/native_e2e.rs`, and across
+//! the full serving stack in `tests/differential_paths.rs`.
 
 use super::instance::EqualizerInstance;
 use super::{msm, ogm, orm, ssm};
 use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Given a desired `l_inst` and the artifact width buckets, pick the
 /// smallest bucket that fits `l_inst + 2*o_act` and return
@@ -57,6 +64,16 @@ pub struct EqualizerPipeline<I: EqualizerInstance = Box<dyn EqualizerInstance>> 
     l_inst: usize,
     o_act: usize,
     n_os: usize,
+    /// Per-instance gather scratch for the batched execution paths.
+    /// Grow-only and reused across calls, so a steady stream of
+    /// same-shape groups performs zero allocations in the gather step
+    /// (asserted in `gather_buffers_reused_across_same_shape_groups`).
+    gather: Vec<Vec<f32>>,
+    /// Kernel invocations dispatched by the batched execution paths:
+    /// one per chunk on the looped
+    /// [`EqualizerInstance::process_batch`] path, exactly one per
+    /// non-empty instance queue on the group-fused path.
+    kernel_calls: AtomicU64,
 }
 
 impl<I: EqualizerInstance> EqualizerPipeline<I> {
@@ -77,7 +94,22 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
             );
         }
         let active = instances.len();
-        Ok(Self { instances, active, l_inst, o_act, n_os })
+        let gather = (0..instances.len()).map(|_| Vec::new()).collect();
+        let kernel_calls = AtomicU64::new(0);
+        Ok(Self { instances, active, l_inst, o_act, n_os, gather, kernel_calls })
+    }
+
+    /// Total kernel invocations dispatched by the batched execution
+    /// paths over this pipeline's lifetime: the looped
+    /// [`EqualizerInstance::process_batch`] path performs one
+    /// im2col + GEMM pass per chunk, the group-fused path exactly one
+    /// per non-empty instance queue
+    /// ([`Self::equalize_group_fused`]).  The serving pool diffs this
+    /// across a drain to assert the fusion invariant — exactly one
+    /// invocation per (group, instance) — in
+    /// `tests/differential_paths.rs`.
+    pub fn kernel_invocations(&self) -> u64 {
+        self.kernel_calls.load(Ordering::Relaxed)
     }
 
     /// Instances this pipeline was constructed with (the DOP ceiling).
@@ -261,6 +293,52 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
     where
         I: Send,
     {
+        self.equalize_multi(bursts, l_inst, false)
+    }
+
+    /// [`Self::equalize_coalesced`] executed in **group-fused** mode:
+    /// each instance consumes its entire chunk queue — spanning every
+    /// burst in the group — through a single
+    /// [`EqualizerInstance::process_batch_fused`] call, i.e. exactly
+    /// one im2col + GEMM kernel invocation per (group, instance)
+    /// instead of one per chunk.  This is what lets coalesced serving
+    /// converge on the raw batched-kernel rate: the kernel's tile loop
+    /// runs once over the whole group's output positions rather than
+    /// restarting per chunk.
+    ///
+    /// **Bit-exactness invariant:** identical output to
+    /// [`Self::equalize_coalesced`] — and therefore to per-request
+    /// sequential serving — by construction: the fused kernel
+    /// evaluates the same ordered accumulator chain for every output
+    /// position as the per-chunk pass (see `equalizer::cnn`, §Batched
+    /// (group-fused) execution), and the chunk geometry, routing and
+    /// re-assembly are shared with the unfused path.  Asserted here,
+    /// in `equalizer::cnn` tests, and across the full serving stack in
+    /// `tests/differential_paths.rs`.
+    pub fn equalize_group_fused(
+        &mut self,
+        bursts: &[&[f32]],
+        l_inst: usize,
+    ) -> Result<Vec<Vec<f32>>>
+    where
+        I: Send,
+    {
+        self.equalize_multi(bursts, l_inst, true)
+    }
+
+    /// Shared implementation of [`Self::equalize_coalesced`] and
+    /// [`Self::equalize_group_fused`]: identical chunking, routing and
+    /// per-burst ORM re-assembly; `fused` only selects the per-queue
+    /// kernel dispatch.
+    fn equalize_multi(
+        &mut self,
+        bursts: &[&[f32]],
+        l_inst: usize,
+        fused: bool,
+    ) -> Result<Vec<Vec<f32>>>
+    where
+        I: Send,
+    {
         anyhow::ensure!(
             l_inst > 0 && l_inst <= self.l_inst,
             "l_inst {l_inst} outside (0, {}]",
@@ -279,7 +357,7 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
             all.append(&mut chunks);
             spans.push((start, all.len()));
         }
-        let ordered = self.process_ordered(&all)?;
+        let ordered = self.process_ordered(&all, fused)?;
         let o_sym = self.o_act / self.n_os;
         Ok(spans
             .into_iter()
@@ -298,32 +376,48 @@ impl<I: EqualizerInstance> EqualizerPipeline<I> {
     where
         I: Send,
     {
-        let ordered = self.process_ordered(chunks)?;
+        let ordered = self.process_ordered(chunks, false)?;
         let valid: Vec<usize> = chunks.iter().map(|c| c.valid / self.n_os).collect();
         Ok(orm::merge_outputs(&ordered, self.o_act / self.n_os, &valid))
     }
 
     /// SSM-distribute `chunks` over the instances, process each queue
-    /// as one contiguous [`EqualizerInstance::process_batch`] call on
-    /// its own thread, and MSM-collect the outputs back into chunk
+    /// as one contiguous [`EqualizerInstance::process_batch`] (or,
+    /// with `fused`, [`EqualizerInstance::process_batch_fused`]) call
+    /// on its own thread, and MSM-collect the outputs back into chunk
     /// order (no ORM — callers strip overlap per logical stream).
-    fn process_ordered(&mut self, chunks: &[ogm::Chunk]) -> Result<Vec<Vec<f32>>>
+    ///
+    /// The gather step writes into the per-instance grow-only scratch
+    /// in `self.gather` — no allocation once the buffers have reached
+    /// the steady-state group size.
+    fn process_ordered(&mut self, chunks: &[ogm::Chunk], fused: bool) -> Result<Vec<Vec<f32>>>
     where
         I: Send,
     {
         let queues = ssm::distribute(chunks, self.active);
         let l_ol = self.l_ol();
+        let calls = &self.kernel_calls;
 
         let mut per_instance: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.active];
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
-            for (inst, queue) in self.instances[..self.active].iter_mut().zip(&queues) {
+            let workers = self.instances[..self.active].iter_mut().zip(&mut self.gather);
+            for ((inst, batch), queue) in workers.zip(&queues) {
                 handles.push(scope.spawn(move || -> Result<Vec<Vec<f32>>> {
-                    let mut batch = Vec::with_capacity(queue.len() * l_ol);
+                    batch.clear();
+                    batch.reserve(queue.len() * l_ol);
                     for &ci in queue {
                         batch.extend_from_slice(&chunks[ci].data);
                     }
-                    inst.process_batch(&batch, queue.len())
+                    if !queue.is_empty() {
+                        let n = if fused { 1 } else { queue.len() as u64 };
+                        calls.fetch_add(n, Ordering::Relaxed);
+                    }
+                    if fused {
+                        inst.process_batch_fused(batch, queue.len())
+                    } else {
+                        inst.process_batch(batch, queue.len())
+                    }
                 }));
             }
             for (i, h) in handles.into_iter().enumerate() {
@@ -435,6 +529,87 @@ mod tests {
         assert!(pool.equalize_coalesced(&[x.as_slice()], 511).is_err());
         assert!(pool.equalize_coalesced(&[x.as_slice()], 0).is_err());
         assert!(pool.equalize_coalesced(&[x.as_slice()], 514).is_err());
+    }
+
+    #[test]
+    fn group_fused_matches_coalesced_and_per_burst() {
+        // The tentpole invariant at the pipeline layer: a group-fused
+        // pass must be bit-identical to the unfused coalesced pass and
+        // to serving each burst alone, for mixed burst sizes.
+        let lens = [5000usize, 1000, 256, 10, 0, 4097];
+        let bursts: Vec<Vec<f32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(b, &n)| (0..n).map(|i| ((i + 17 * b) as f32 * 0.13).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = bursts.iter().map(Vec::as_slice).collect();
+        for l_inst in [256usize, 512] {
+            let mut fused = decimator_pipeline(4, 512, 32);
+            let got = fused.equalize_group_fused(&refs, l_inst).unwrap();
+            let mut coal = decimator_pipeline(4, 512, 32);
+            assert_eq!(got, coal.equalize_coalesced(&refs, l_inst).unwrap(), "l_inst {l_inst}");
+            let mut solo = decimator_pipeline(4, 512, 32);
+            for (x, y) in bursts.iter().zip(&got) {
+                if x.is_empty() {
+                    assert!(y.is_empty(), "empty burst stays empty");
+                    continue;
+                }
+                assert_eq!(y, &solo.equalize_resized(x, l_inst).unwrap(), "l_inst {l_inst}");
+            }
+        }
+        // Same rejection surface as the unfused primitive.
+        let mut p = decimator_pipeline(2, 512, 32);
+        let x = vec![0.0f32; 64];
+        assert!(p.equalize_group_fused(&[x.as_slice()], 511).is_err());
+        assert!(p.equalize_group_fused(&[x.as_slice()], 514).is_err());
+        assert!(p.equalize_group_fused(&[x.as_slice()], 0).is_err());
+    }
+
+    #[test]
+    fn kernel_invocation_counter_models_fusion() {
+        // 8192 samples at l_inst 512 -> 16 chunks over 4 instances:
+        // the fused pass dispatches one kernel invocation per instance
+        // queue, the looped pass one per chunk.
+        let x: Vec<f32> = (0..8192).map(|i| (i as f32 * 0.31).cos()).collect();
+        let mut p = decimator_pipeline(4, 512, 64);
+        assert_eq!(p.kernel_invocations(), 0);
+        p.equalize_group_fused(&[&x[..]], 512).unwrap();
+        let fused = p.kernel_invocations();
+        assert_eq!(fused, 4, "one fused dispatch per non-empty instance queue");
+        p.equalize_coalesced(&[&x[..]], 512).unwrap();
+        assert_eq!(p.kernel_invocations() - fused, 16, "looped path counts per chunk");
+        // The sequential per-chunk path never touches the batched
+        // kernels, so it leaves the counter alone.
+        p.equalize(&x).unwrap();
+        assert_eq!(p.kernel_invocations(), fused + 16);
+    }
+
+    #[test]
+    fn gather_buffers_reused_across_same_shape_groups() {
+        // Satellite: repeated groups of the same shape must perform
+        // zero new allocations of the gather plane — capacity AND base
+        // pointer of every per-instance buffer stay fixed.
+        let lens = [4000usize, 1200, 256];
+        let bursts: Vec<Vec<f32>> =
+            lens.iter().map(|&n| (0..n).map(|i| i as f32 * 0.01).collect()).collect();
+        let refs: Vec<&[f32]> = bursts.iter().map(Vec::as_slice).collect();
+        let mut p = decimator_pipeline(4, 512, 32);
+        let first = p.equalize_group_fused(&refs, 256).unwrap();
+        let state = |p: &EqualizerPipeline<DecimatorInstance>| -> Vec<(usize, *const f32)> {
+            p.gather.iter().map(|b| (b.capacity(), b.as_ptr())).collect()
+        };
+        let steady = state(&p);
+        for round in 0..3 {
+            assert_eq!(p.equalize_group_fused(&refs, 256).unwrap(), first, "round {round}");
+            assert_eq!(state(&p), steady, "same-shape group reallocated (round {round})");
+        }
+        // A larger group may grow the buffers (grow-only); afterwards
+        // the original shape is again allocation-free at the new size.
+        let big: Vec<f32> = (0..20000).map(|i| i as f32).collect();
+        p.equalize_group_fused(&[&big[..]], 256).unwrap();
+        let grown = state(&p);
+        assert_eq!(p.equalize_group_fused(&refs, 256).unwrap(), first);
+        assert_eq!(state(&p), grown, "smaller group must reuse the grown buffers");
     }
 
     #[test]

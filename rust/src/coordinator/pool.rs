@@ -1177,11 +1177,20 @@ fn execute_batch<I: EqualizerInstance + Send + 'static>(
         let t0 = Instant::now();
         if let Some(engine) = shard.profiles.get_mut(&guard.pending[0].profile) {
             let l_inst = engine.pick_l_inst(guard.pending[0].t_req);
+            let k0 = engine.kernel_invocations();
             let outs = {
                 let bursts: Vec<&[f32]> =
                     guard.pending.iter().map(|r| r.samples.as_slice()).collect();
-                engine.serve_coalesced(&bursts, l_inst)
+                // Group-fused mode serves the whole batch through one
+                // im2col + GEMM invocation per instance; bit-identical
+                // to the per-chunk pass (`tests/differential_paths.rs`).
+                if core.sched.group_fused {
+                    engine.serve_group_fused(&bursts, l_inst)
+                } else {
+                    engine.serve_coalesced(&bursts, l_inst)
+                }
             };
+            counters.kernel_invoked(engine.kernel_invocations() - k0);
             if let Ok(outs) = outs {
                 let n = guard.pending.len();
                 let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
@@ -1244,7 +1253,9 @@ fn serve_single<I: EqualizerInstance + Send + 'static>(
         match shard.profiles.get_mut(&req.profile) {
             None => (Vec::new(), 0, Some(format!("unknown profile {:?}", req.profile))),
             Some(engine) => {
+                let k0 = engine.kernel_invocations();
                 let (result, l_inst) = engine.serve_one(&req.samples, req.t_req);
+                counters.kernel_invoked(engine.kernel_invocations() - k0);
                 match result {
                     Ok(soft) => (soft, l_inst, None),
                     Err(e) => (Vec::new(), l_inst, Some(e.to_string())),
@@ -2405,6 +2416,54 @@ mod tests {
         assert!(max_batch >= 2, "queued bursts must coalesce (max batch {max_batch})");
         assert!(stats.total_coalesced_requests() >= 2);
         assert!(stats.shards[0].coalesced_batches >= 1);
+    }
+
+    #[test]
+    fn group_fused_pool_serves_bit_exact_and_counts_kernels() {
+        // The same coalescing setup, group-fused: replies stay the
+        // exact decimation, and the kernel-invocation counter records
+        // the fused dispatches (one per non-empty instance queue per
+        // group, so invocations <= batches on a 1-instance engine plus
+        // any single-burst passes).
+        let slow = EqualizerServer::new(
+            vec![SlowInstance { width: 256, delay: Duration::from_millis(20) }],
+            32,
+            2,
+            &optimizer(),
+            &lut_targets(),
+        )
+        .unwrap();
+        let sched = SchedulerConfig::default()
+            .with_coalescing(Duration::from_millis(5))
+            .with_group_fusion();
+        let pool = ServerPool::with_scheduler(
+            vec![Shard::single("slow", slow)],
+            RoutePolicy::RoundRobin,
+            16,
+            sched,
+        )
+        .unwrap()
+        .spawn();
+        let burst: Vec<f32> = (0..192).map(|i| i as f32).collect();
+        let expect: Vec<f32> = burst.iter().step_by(2).copied().collect();
+        let pending: Vec<_> =
+            (0..6).map(|_| pool.submit("slow", burst.clone(), None).unwrap()).collect();
+        let mut max_batch = 0usize;
+        for rx in pending {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.soft_symbols, expect, "fused reply must stay bit-exact");
+            max_batch = max_batch.max(resp.batched);
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_requests(), 6);
+        assert_eq!(stats.total_errors(), 0);
+        assert!(max_batch >= 2, "queued bursts must coalesce (max batch {max_batch})");
+        let kernels = stats.total_kernel_invocations();
+        assert!(kernels >= 1, "fused dispatches must be accounted");
+        assert!(
+            kernels <= stats.total_requests(),
+            "fusion can never dispatch more kernels than requests ({kernels})"
+        );
     }
 
     #[test]

@@ -92,6 +92,17 @@ pub struct SchedulerConfig {
     /// routed shard and shed the burst when its profile's budget is
     /// provably blown (see [`AdmissionConfig`]).
     pub admission: Option<AdmissionConfig>,
+    /// Execute coalesced groups in **group-fused** mode: the shard
+    /// engine serves a collected batch through
+    /// [`crate::coordinator::server::EqualizerServer::serve_group_fused`]
+    /// — exactly one im2col + GEMM kernel invocation per (group,
+    /// instance) instead of one per burst chunk.  Bit-identical to the
+    /// unfused path by construction (asserted in
+    /// `tests/differential_paths.rs`); off by default so existing
+    /// pools keep the per-chunk dispatch they were tuned on.  Only
+    /// meaningful together with coalescing — single-burst batches are
+    /// served through the ordinary per-request path either way.
+    pub group_fused: bool,
     /// Optional per-request deadline, measured from enqueue.  `None`
     /// (the default) lets a request wait in queue indefinitely.  With a
     /// deadline set, a worker that dequeues an already-expired request
@@ -125,6 +136,13 @@ impl SchedulerConfig {
     /// Builder: enable cross-shard work stealing.
     pub fn with_stealing(mut self) -> Self {
         self.steal = true;
+        self
+    }
+
+    /// Builder: execute coalesced groups group-fused (one kernel
+    /// invocation per (group, instance); see [`Self::group_fused`]).
+    pub fn with_group_fusion(mut self) -> Self {
+        self.group_fused = true;
         self
     }
 

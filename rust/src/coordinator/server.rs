@@ -209,6 +209,24 @@ impl<I: EqualizerInstance + Send + 'static> EqualizerServer<I> {
         self.pipe.equalize_coalesced(bursts, l_inst)
     }
 
+    /// [`Self::serve_coalesced`] in group-fused mode: the whole group
+    /// flows through **one** im2col + GEMM kernel invocation per
+    /// instance instead of one per chunk (see
+    /// [`EqualizerPipeline::equalize_group_fused`] for the
+    /// bit-exactness argument).  Selected by the pool when
+    /// [`super::sched::SchedulerConfig::group_fused`] is set.
+    pub fn serve_group_fused(&mut self, bursts: &[&[f32]], l_inst: usize) -> Result<Vec<Vec<f32>>> {
+        self.pipe.equalize_group_fused(bursts, l_inst)
+    }
+
+    /// Lifetime count of batched kernel invocations this engine's
+    /// pipeline has dispatched (see
+    /// [`EqualizerPipeline::kernel_invocations`]).  The pool diffs
+    /// this across a batch to account fusion in its serving counters.
+    pub fn kernel_invocations(&self) -> u64 {
+        self.pipe.kernel_invocations()
+    }
+
     /// Spawn the request loop: a one-shard [`ServerPool`] serving this
     /// engine under [`DEFAULT_PROFILE`], plus a forwarding thread that
     /// adapts the legacy [`EqualizeRequest`] channel onto it.
@@ -312,6 +330,24 @@ mod tests {
             assert_eq!(l_one, l);
             assert_eq!(got, &want.unwrap());
         }
+    }
+
+    #[test]
+    fn serve_group_fused_matches_serve_coalesced() {
+        // The fused engine path: identical output to the unfused
+        // coalesced pass, with exactly one kernel invocation per
+        // non-empty instance queue accounted by the pipeline counter.
+        let mut engine = server(2, 512, 64);
+        let l = engine.pick_l_inst(None);
+        let bursts: Vec<Vec<f32>> = (0..3)
+            .map(|b| (0..(700 + 400 * b)).map(|i| (i + b) as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = bursts.iter().map(Vec::as_slice).collect();
+        let want = engine.serve_coalesced(&refs, l).unwrap();
+        let before = engine.kernel_invocations();
+        assert_eq!(engine.serve_group_fused(&refs, l).unwrap(), want);
+        let delta = engine.kernel_invocations() - before;
+        assert!((1..=2).contains(&delta), "one dispatch per non-empty queue, got {delta}");
     }
 
     #[test]

@@ -44,21 +44,48 @@
 //!   `Quantizer::apply` of the reference on every accumulator the
 //!   provability gate admits (below).
 //!
-//! The integer path is only taken when it is *provably* bit-identical
-//! to the fake-quant f32 reference: all formats must fit i16, and per
-//! output channel the worst-case accumulator magnitude
-//! `|b| + sum|w_code| * max|x_code|` must stay within the 2^24 window
-//! where every f32 partial sum of the reference is exact (a float on
-//! the `2^-(n_act+n_w)` grid is exactly representable iff its code
-//! fits the 24-bit significand).  Inside that window the reference
-//! accumulates without rounding, so the exact integer sum equals the
-//! f32 sum and both paths round identically.  The paper's Sec. 4
-//! operating point (Q3.10 weights / Q4.6 activations) sits at ~2.4x
-//! headroom on the committed weights; specs that fail the gate fall
-//! back to the reference datapath transparently.  The identity holds
-//! for every *finite* input sample — a NaN sample quantizes to code 0
-//! in the integer domain where the reference propagates the NaN (there
-//! is no NaN in fixed point, exactly as on the FPGA).
+//! The integer path is taken whenever every tensor format fits i16 (the
+//! storage width of the datapath); the per-layer *accumulator* width is
+//! then chosen by a provability gate on the worst-case magnitude
+//! `|b| + sum|w_code| * max|x_code|`:
+//!
+//! * **Narrow** (`<= 2^24`): plain i32 accumulation.  Within that
+//!   window every f32 partial sum of the fake-quant reference is exact
+//!   (a float on the `2^-(n_act+n_w)` grid is exactly representable iff
+//!   its code fits the 24-bit significand), so the layer is
+//!   bit-identical to the f32 reference.  The paper's Sec. 4 operating
+//!   point (Q3.10 weights / Q4.6 activations) sits at ~2.4x headroom on
+//!   the committed weights.
+//! * **Wide** (`> 2^24`): i64 accumulation via *split sums* — segments
+//!   of provably-overflow-free length sum in i32 (the vectorizable
+//!   inner loop survives) and fold into an i64 total.  Integer addition
+//!   is exact and associative, so the layer is bit-identical to the
+//!   naive exact-i64 oracle ([`QuantizedCnn::forward_exact_i64`]) by
+//!   construction.  QAT formats beyond the f32-exact window therefore
+//!   keep the integer datapath (reported as `"int16_i64"` by
+//!   [`FixedPointCnn::exec_path`]) instead of silently degrading to the
+//!   rounding fake-quant f32 fallback.  With i16 formats the worst case
+//!   is bounded by `2^30 + C_in*K * 2^30 < 2^36` — far inside i64.
+//!
+//! Only formats wider than i16 (or a spec with missing tensors) fall
+//! back to the fake-quant f32 reference datapath.  The narrow-path
+//! identity holds for every *finite* input sample — a NaN sample
+//! quantizes to code 0 in the integer domain where the reference
+//! propagates the NaN (there is no NaN in fixed point, exactly as on
+//! the FPGA).
+//!
+//! §Batched (group-fused) execution: [`FixedPointCnn::forward_batch_with`]
+//! runs `n` equal-width chunks through the layer stack as *one* kernel
+//! invocation per layer.  Feature maps take a `(channel, chunk, width)`
+//! layout — per channel the chunks lie contiguously — so each layer is
+//! the same blocked im2col + GEMM over `n * w_out` output positions,
+//! with tiles spanning chunk boundaries (the partial tiles per-chunk
+//! dispatch pays at every chunk tail disappear).  The im2col gather is
+//! chunk-aware: every output position reads its *own* chunk with its
+//! own zero padding, so each output's accumulator chain is the
+//! identical additions in the identical order as the per-chunk pass —
+//! batching is bit-exact by construction, for the f32, fake-quant and
+//! both integer kernels alike.
 
 use super::weights::{CnnTopologyCfg, CnnWeights};
 #[cfg(test)]
@@ -103,13 +130,24 @@ struct PackedLayer {
 #[derive(Debug, Clone)]
 struct PackedQuantLayer {
     w: Vec<i16>,
-    b: Vec<i32>,
+    /// Bias codes on the accumulator grid.  Stored i64 because wide
+    /// layers accumulate in i64; narrow layers' biases provably fit i32
+    /// and are narrowed at the kernel boundary.
+    b: Vec<i64>,
     c_in: usize,
     c_out: usize,
     k: usize,
     stride: usize,
     relu: bool,
     requant: Requantizer,
+    /// Worst-case |accumulator| exceeds the f32-exact window: run the
+    /// i64 split-sum kernel (bit-identical to the exact i64 oracle)
+    /// instead of the plain i32 kernel (bit-identical to the fake-quant
+    /// f32 reference).
+    wide: bool,
+    /// Split-sum segment length of the wide kernel: the largest tap
+    /// count whose partial products provably sum within i32.
+    seg: usize,
 }
 
 /// Reusable buffers for [`FixedPointCnn::forward_with`].  One scratch
@@ -181,17 +219,28 @@ impl FixedPointCnn {
         self.quant.as_ref()
     }
 
-    /// True when this instance executes the integer (i16 storage / i32
-    /// accumulate) datapath — a quantized profile whose formats passed
-    /// the provability gate.  False: float profile, or fake-quant f32
-    /// fallback.
+    /// True when this instance executes the integer (i16 storage,
+    /// i32/i64 accumulate) datapath — a quantized profile whose formats
+    /// all fit i16.  False: float profile, or fake-quant f32 fallback.
     pub fn uses_integer_path(&self) -> bool {
         self.int_path.is_some()
     }
 
-    /// Short name of the active execution path (for logs and benches).
+    /// True when at least one layer of the integer datapath runs the
+    /// widened i64 split-sum accumulator (worst-case |acc| beyond the
+    /// 2^24 f32-exact window) — the regime where the integer path is
+    /// pinned to the exact i64 oracle rather than the f32 reference.
+    pub fn uses_widened_accumulator(&self) -> bool {
+        self.int_path.as_ref().is_some_and(|q| q.wide)
+    }
+
+    /// Short name of the active execution path (for logs and benches):
+    /// `"int16"` (integer, all-narrow i32 accumulators), `"int16_i64"`
+    /// (integer with widened i64 split-sum accumulators),
+    /// `"fakequant_f32"` (quantized fallback), `"f32"` (float profile).
     pub fn exec_path(&self) -> &'static str {
         match (&self.int_path, &self.quant) {
+            (Some(q), _) if q.wide => "int16_i64",
             (Some(_), _) => "int16",
             (None, Some(_)) => "fakequant_f32",
             (None, None) => "f32",
@@ -243,7 +292,7 @@ impl FixedPointCnn {
         for layer in &self.packed {
             debug_assert_eq!(channels, layer.c_in);
             let w_out = conv_out_width(width, pad, layer.k, layer.stride);
-            conv1d_packed(&s.feat, width, layer, pad, w_out, &mut s.next, &mut s.patches);
+            conv1d_packed(&s.feat, width, 1, layer, pad, w_out, &mut s.next, &mut s.patches);
             std::mem::swap(&mut s.feat, &mut s.next);
             width = w_out;
             channels = layer.c_out;
@@ -257,6 +306,85 @@ impl FixedPointCnn {
             }
         }
         out
+    }
+
+    /// Group-fused forward: run `n_chunks` contiguous equal-width
+    /// chunks (`x.len() == n_chunks * width`) through the layer stack
+    /// as one batched im2col + GEMM invocation per layer, returning one
+    /// soft-symbol vector per chunk.  Bit-identical to calling
+    /// [`Self::forward_with`] per chunk (see the module docs' §Batched
+    /// section for the construction), on every datapath.
+    pub fn forward_batch_with(
+        &self,
+        x: &[f32],
+        n_chunks: usize,
+        s: &mut CnnScratch,
+    ) -> Vec<Vec<f32>> {
+        if n_chunks == 0 {
+            return Vec::new();
+        }
+        assert_eq!(x.len() % n_chunks, 0, "ragged batch: {} % {n_chunks} != 0", x.len());
+        match &self.int_path {
+            Some(q) => q.forward_batch_with(x, n_chunks, s),
+            None => self.forward_batch_reference_with(x, n_chunks, s),
+        }
+    }
+
+    /// [`Self::forward_batch_with`] with fresh scratch (tests/benches).
+    pub fn forward_batch(&self, x: &[f32], n_chunks: usize) -> Vec<Vec<f32>> {
+        let mut scratch = CnnScratch::default();
+        self.forward_batch_with(x, n_chunks, &mut scratch)
+    }
+
+    /// The batched fake-quant / f32 layer walk: `(channel, chunk,
+    /// width)` feature maps, tiles spanning chunk boundaries.
+    fn forward_batch_reference_with(
+        &self,
+        x: &[f32],
+        n: usize,
+        s: &mut CnnScratch,
+    ) -> Vec<Vec<f32>> {
+        let pad = self.cfg.padding();
+
+        s.feat.clear();
+        s.feat.extend_from_slice(x);
+        if let Some(q) = self.input_q {
+            for v in s.feat.iter_mut() {
+                *v = q.apply(*v);
+            }
+        }
+
+        let mut width = x.len() / n;
+        let mut channels = 1usize;
+        for layer in &self.packed {
+            debug_assert_eq!(channels, layer.c_in);
+            let w_out = conv_out_width(width, pad, layer.k, layer.stride);
+            conv1d_packed(&s.feat, width, n, layer, pad, w_out, &mut s.next, &mut s.patches);
+            std::mem::swap(&mut s.feat, &mut s.next);
+            width = w_out;
+            channels = layer.c_out;
+        }
+
+        // Per-chunk channel interleave (the same column-major flatten
+        // as the single-chunk pass, scattered out of the batched map).
+        (0..n)
+            .map(|b| {
+                let mut out = Vec::with_capacity(width * channels);
+                for j in 0..width {
+                    for c in 0..channels {
+                        out.push(s.feat[(c * n + b) * width + j]);
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Naive exact-i64 integer oracle (see
+    /// [`QuantizedCnn::forward_exact_i64`]); `None` when this profile
+    /// does not run the integer datapath.
+    pub fn forward_exact_i64(&self, x: &[f32]) -> Option<Vec<f32>> {
+        self.int_path.as_ref().map(|q| q.forward_exact_i64(x))
     }
 
     /// Total MAC operations for an input of `in_samples` samples
@@ -289,13 +417,19 @@ pub struct QuantizedCnn {
     input_q: CodeQuantizer,
     /// Final decode: last activation code -> f32 (`2^-frac`, exact).
     out_step: f32,
+    /// At least one layer runs the widened i64 split-sum accumulator.
+    wide: bool,
 }
 
 impl QuantizedCnn {
     /// Pack the (already weight-quantized) f32 planes into integer
-    /// form, or `None` when bit-identity with the fake-quant reference
-    /// cannot be proven: a tensor format is missing or wider than i16,
-    /// or a layer's worst-case accumulator leaves the f32-exact window.
+    /// form, or `None` when the integer datapath cannot carry the spec:
+    /// a tensor format is missing or wider than i16 (the storage
+    /// width).  Each layer's accumulator is classified by the
+    /// provability gate: worst-case |acc| inside the f32-exact window
+    /// runs the plain i32 kernel (bit-identical to the fake-quant f32
+    /// reference), beyond it the widened i64 split-sum kernel
+    /// (bit-identical to [`Self::forward_exact_i64`]).
     fn try_build(cfg: &CnnTopologyCfg, packed: &[PackedLayer], spec: &QuantSpec) -> Option<Self> {
         let input_fmt = spec.get("a_in")?;
         if !input_fmt.fits_i16() {
@@ -303,6 +437,7 @@ impl QuantizedCnn {
         }
         let mut in_fmt = input_fmt;
         let mut layers = Vec::with_capacity(packed.len());
+        let mut any_wide = false;
         for (l, layer) in packed.iter().enumerate() {
             let w_fmt = spec.get(&format!("w{l}"))?;
             let out_fmt = spec.get(&format!("a{l}"))?;
@@ -315,31 +450,41 @@ impl QuantizedCnn {
             let wscale = (2.0_f64).powi(w_fmt.frac_bits as i32);
             let w: Vec<i16> = layer.w.iter().map(|&v| (v as f64 * wscale).round() as i16).collect();
             // Bias codes pre-shifted onto the accumulator grid
-            // 2^-(in_frac + w_frac); <= 2^30, so i64 -> i32 is safe.
-            let b64: Vec<i64> = layer
+            // 2^-(in_frac + w_frac); |code| <= 2^15 shifted by <= 15
+            // bits, so <= 2^30.
+            let b: Vec<i64> = layer
                 .b
                 .iter()
                 .map(|&v| ((v as f64 * wscale).round() as i64) << in_fmt.frac_bits)
                 .collect();
-            // Provability gate: worst-case |accumulator| per output
-            // channel must stay inside the f32-exact window.
+            // Accumulator-width gate: worst-case |accumulator| per
+            // output channel inside the f32-exact window -> narrow i32
+            // kernel; beyond it -> widened i64 split-sum kernel.  With
+            // i16 formats the worst case is < 2^36, so i64 always fits.
             let max_in = 1i64 << (in_fmt.width() - 1);
+            let mut worst = 0i64;
             for o in 0..layer.c_out {
                 let wsum: i64 = w[o * kk..(o + 1) * kk].iter().map(|&c| (c as i64).abs()).sum();
-                if b64[o].abs() + wsum * max_in > F32_EXACT_WINDOW {
-                    return None;
-                }
+                worst = worst.max(b[o].abs() + wsum * max_in);
             }
+            let wide = worst > F32_EXACT_WINDOW;
+            any_wide |= wide;
+            // Largest tap count whose products provably sum within i32
+            // (|x * w| <= max_in * wmax per tap).
+            let wmax = w.iter().map(|&c| (c as i64).abs()).max().unwrap_or(0).max(1);
+            let seg = ((i32::MAX as i64 / (wmax * max_in)) as usize).max(1);
             let acc_frac = in_fmt.frac_bits as u32 + w_fmt.frac_bits as u32;
             layers.push(PackedQuantLayer {
                 w,
-                b: b64.into_iter().map(|v| v as i32).collect(),
+                b,
                 c_in: layer.c_in,
                 c_out: layer.c_out,
                 k: layer.k,
                 stride: layer.stride,
                 relu: layer.relu,
                 requant: Requantizer::new(acc_frac, out_fmt),
+                wide,
+                seg,
             });
             in_fmt = out_fmt;
         }
@@ -348,6 +493,7 @@ impl QuantizedCnn {
             pad: cfg.padding(),
             input_q: input_fmt.code_quantizer(),
             out_step: in_fmt.step() as f32,
+            wide: any_wide,
         })
     }
 
@@ -365,6 +511,7 @@ impl QuantizedCnn {
             conv1d_packed_int(
                 &s.feat_q,
                 width,
+                1,
                 layer,
                 self.pad,
                 w_out,
@@ -382,6 +529,90 @@ impl QuantizedCnn {
         for j in 0..width {
             for c in 0..channels {
                 out.push(s.feat_q[c * width + j] as f32 * self.out_step);
+            }
+        }
+        out
+    }
+
+    /// Group-fused integer forward: same `(channel, chunk, width)`
+    /// batched layout as the f32 twin, one
+    /// [`conv1d_packed_int`] invocation per layer over all chunks.
+    fn forward_batch_with(&self, x: &[f32], n: usize, s: &mut CnnScratch) -> Vec<Vec<f32>> {
+        s.feat_q.clear();
+        s.feat_q.extend(x.iter().map(|&v| self.input_q.apply(v)));
+
+        let mut width = x.len() / n;
+        let mut channels = 1usize;
+        for layer in &self.layers {
+            debug_assert_eq!(channels, layer.c_in);
+            let w_out = conv_out_width(width, self.pad, layer.k, layer.stride);
+            conv1d_packed_int(
+                &s.feat_q,
+                width,
+                n,
+                layer,
+                self.pad,
+                w_out,
+                &mut s.next_q,
+                &mut s.patches_q,
+            );
+            std::mem::swap(&mut s.feat_q, &mut s.next_q);
+            width = w_out;
+            channels = layer.c_out;
+        }
+
+        (0..n)
+            .map(|b| {
+                let mut out = Vec::with_capacity(width * channels);
+                for j in 0..width {
+                    for c in 0..channels {
+                        out.push(s.feat_q[(c * n + b) * width + j] as f32 * self.out_step);
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// The exact-i64 reference oracle: a deliberately naive scalar walk
+    /// that accumulates every MAC in i64 with no blocking, no tiling
+    /// and no split sums.  Integer arithmetic is exact, so this is
+    /// *the* ground truth of the integer datapath — the widened
+    /// split-sum kernel must match it bit-for-bit (and the narrow i32
+    /// kernel trivially does, its sums being exact subranges of i64).
+    /// Test/verification use only; allocates per layer.
+    pub fn forward_exact_i64(&self, x: &[f32]) -> Vec<f32> {
+        let mut feat: Vec<i16> = x.iter().map(|&v| self.input_q.apply(v)).collect();
+        let mut width = x.len();
+        let mut channels = 1usize;
+        for layer in &self.layers {
+            let w_out = conv_out_width(width, self.pad, layer.k, layer.stride);
+            let mut next = vec![0i16; layer.c_out * w_out];
+            for o in 0..layer.c_out {
+                for j in 0..w_out {
+                    let mut acc: i64 = layer.b[o];
+                    for c in 0..layer.c_in {
+                        for kk_i in 0..layer.k {
+                            let idx = (j * layer.stride + kk_i) as isize - self.pad as isize;
+                            if idx >= 0 && (idx as usize) < width {
+                                let xv = feat[c * width + idx as usize] as i64;
+                                let wv = layer.w[(o * layer.c_in + c) * layer.k + kk_i] as i64;
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    let acc = if layer.relu { acc.max(0) } else { acc };
+                    next[o * w_out + j] = layer.requant.apply(acc);
+                }
+            }
+            feat = next;
+            width = w_out;
+            channels = layer.c_out;
+        }
+        let mut out = Vec::with_capacity(width * channels);
+        for j in 0..width {
+            for c in 0..channels {
+                out.push(feat[c * width + j] as f32 * self.out_step);
             }
         }
         out
@@ -419,18 +650,38 @@ struct Im2col {
     pad: usize,
 }
 
-/// Gather the receptive fields of tile columns `j0..j0+tn` into the
-/// k-major patch matrix: row `c*k + kk_i` holds tap `kk_i` of channel
-/// `c` for every tile column, so the GEMM reads are unit-stride.  Rows
-/// are `TILE`-strided; out-of-range taps are literal zeros (adding
-/// `0 * w` leaves IEEE and integer accumulations unchanged alike).
-fn im2col_tile<T: Copy + Default>(g: Im2col, x: &[T], j0: usize, tn: usize, patches: &mut [T]) {
+/// Gather the receptive fields of global output positions
+/// `p0..p0+tn` of a batched `(channel, chunk, width)` feature map into
+/// the k-major patch matrix: row `c*k + kk_i` holds tap `kk_i` of
+/// channel `c` for every tile column, so the GEMM reads are
+/// unit-stride.  Rows are `TILE`-strided.  Global position `p = b *
+/// w_out + j` reads chunk `b` at local position `j` — each chunk keeps
+/// its own zero padding (out-of-range taps are literal zeros; adding
+/// `0 * w` leaves IEEE and integer accumulations unchanged alike), so
+/// a tile spanning a chunk boundary gathers exactly the values the
+/// per-chunk pass would.
+fn im2col_tile<T: Copy + Default>(
+    g: Im2col,
+    x: &[T],
+    n: usize,
+    w_out: usize,
+    p0: usize,
+    tn: usize,
+    patches: &mut [T],
+) {
     for c in 0..g.c_in {
-        let xc = &x[c * g.width..(c + 1) * g.width];
         for kk_i in 0..g.k {
             let row = &mut patches[(c * g.k + kk_i) * TILE..(c * g.k + kk_i) * TILE + tn];
-            let base = (j0 * g.stride + kk_i) as isize - g.pad as isize;
-            fill_row(xc, g.width, g.stride, base, row);
+            let mut t = 0usize;
+            while t < tn {
+                // The run of tile columns inside one chunk.
+                let (b, j) = ((p0 + t) / w_out, (p0 + t) % w_out);
+                let run = (w_out - j).min(tn - t);
+                let xc = &x[(c * n + b) * g.width..(c * n + b + 1) * g.width];
+                let base = (j * g.stride + kk_i) as isize - g.pad as isize;
+                fill_row(xc, g.width, g.stride, base, &mut row[t..t + run]);
+                t += run;
+            }
         }
     }
 }
@@ -464,13 +715,17 @@ fn fill_row<T: Copy + Default>(xc: &[T], width: usize, stride: usize, base: isiz
     }
 }
 
-/// Blocked im2col + GEMM 1-D convolution over a channel-major feature
-/// map (`x` holds `layer.c_in` rows of `width` samples), with fused
-/// ReLU and fixed-point re-quantization — the fake-quant f32 reference
-/// kernel.
+/// Blocked im2col + GEMM 1-D convolution over a batched channel-major
+/// feature map (`x` holds `layer.c_in * n` rows of `width` samples,
+/// chunk-major within each channel), with fused ReLU and fixed-point
+/// re-quantization — the fake-quant f32 reference kernel.  `n == 1` is
+/// the plain single-chunk pass; `n > 1` is the group-fused pass, where
+/// one tile loop covers all `n * w_out` output positions and tiles
+/// fill across chunk boundaries.
 fn conv1d_packed(
     x: &[f32],
     width: usize,
+    n: usize,
     layer: &PackedLayer,
     pad: usize,
     w_out: usize,
@@ -478,25 +733,26 @@ fn conv1d_packed(
     patches: &mut Vec<f32>,
 ) {
     let kk = layer.c_in * layer.k;
-    grow(out, layer.c_out * w_out);
+    let total = n * w_out;
+    grow(out, layer.c_out * total);
     grow(patches, kk * TILE);
     let g = Im2col { width, c_in: layer.c_in, k: layer.k, stride: layer.stride, pad };
 
-    let mut j0 = 0usize;
-    while j0 < w_out {
-        let jn = (j0 + TILE).min(w_out);
-        let tn = jn - j0;
-        im2col_tile(g, x, j0, tn, patches);
-        gemm_f32_tile(layer, kk, tn, patches, j0, w_out, out);
+    let mut p0 = 0usize;
+    while p0 < total {
+        let pn = (p0 + TILE).min(total);
+        let tn = pn - p0;
+        im2col_tile(g, x, n, w_out, p0, tn, patches);
+        gemm_f32_tile(layer, kk, tn, patches, p0, total, out);
         // Activation re-quantization over the cache-resident tile.
         if let Some(q) = layer.act {
             for o in 0..layer.c_out {
-                for v in &mut out[o * w_out + j0..o * w_out + jn] {
+                for v in &mut out[o * total + p0..o * total + pn] {
                     *v = q.apply(*v);
                 }
             }
         }
-        j0 = jn;
+        p0 = pn;
     }
 }
 
@@ -565,9 +821,12 @@ fn dot_cols(wrow: &[f32], bias: f32, relu: bool, patches: &[f32], t0: usize, dst
     }
 }
 
-/// Integer twin of [`conv1d_packed`]: i16 feature/patch codes, i32
-/// MACs, fused ReLU + shift-RNE requantization (no separate activation
-/// pass — the requantizer *is* the activation quantization).
+/// Integer twin of [`conv1d_packed`]: i16 feature/patch codes over a
+/// batched `(channel, chunk, width)` map, integer MACs, fused ReLU +
+/// shift-RNE requantization (no separate activation pass — the
+/// requantizer *is* the activation quantization).  `n == 1` is the
+/// single-chunk pass; `n > 1` fuses all chunks into one tile loop over
+/// `n * w_out` global positions.
 ///
 /// Layout note: unlike the f32 kernel this uses *row-major* patches
 /// (one contiguous receptive field per output position) and a plain
@@ -577,9 +836,15 @@ fn dot_cols(wrow: &[f32], bias: f32, relu: bool, patches: &[f32], t0: usize, dst
 /// manually register-blocked integer loop, which only defeats the
 /// vectorizer.  The f32 kernel cannot take this shape because IEEE
 /// reduction order must be preserved there.
+///
+/// Accumulator dispatch: narrow layers run the plain i32 reduction;
+/// wide layers run [`dot_i64_split`] — i32 partial sums of
+/// provably-safe segment length folded into an i64 total, which equals
+/// the naive i64 sum bit-for-bit because integer addition is exact.
 fn conv1d_packed_int(
     x: &[i16],
     width: usize,
+    n: usize,
     layer: &PackedQuantLayer,
     pad: usize,
     w_out: usize,
@@ -588,30 +853,35 @@ fn conv1d_packed_int(
 ) {
     let k = layer.k;
     let kk = layer.c_in * k;
-    grow(out, layer.c_out * w_out);
+    let total = n * w_out;
+    grow(out, layer.c_out * total);
     grow(patches, TILE * kk);
     let rq = layer.requant;
 
-    let mut j0 = 0usize;
-    while j0 < w_out {
-        let jn = (j0 + TILE).min(w_out);
+    let mut p0 = 0usize;
+    while p0 < total {
+        let pn = (p0 + TILE).min(total);
 
         // im2col: interior positions are straight copies, only the
         // pad-wide borders pay per-tap bounds checks (zero taps add 0).
-        for (t, j) in (j0..jn).enumerate() {
+        // Each global position p = b*w_out + j reads chunk b with its
+        // own zero padding.
+        for (t, p) in (p0..pn).enumerate() {
+            let (b, j) = (p / w_out, p % w_out);
             let start = (j * layer.stride) as isize - pad as isize;
             let row = &mut patches[t * kk..t * kk + kk];
             if start >= 0 && start as usize + k <= width {
                 let s0 = start as usize;
                 for (c, dst) in row.chunks_exact_mut(k).enumerate() {
-                    dst.copy_from_slice(&x[c * width + s0..c * width + s0 + k]);
+                    let x0 = (c * n + b) * width + s0;
+                    dst.copy_from_slice(&x[x0..x0 + k]);
                 }
             } else {
                 for (c, dst) in row.chunks_exact_mut(k).enumerate() {
                     for (kk_i, slot) in dst.iter_mut().enumerate() {
                         let idx = start + kk_i as isize;
                         *slot = if idx >= 0 && (idx as usize) < width {
-                            x[c * width + idx as usize]
+                            x[(c * n + b) * width + idx as usize]
                         } else {
                             0
                         };
@@ -624,20 +894,53 @@ fn conv1d_packed_int(
         for o in 0..layer.c_out {
             let wrow = &layer.w[o * kk..(o + 1) * kk];
             let bias = layer.b[o];
-            let dst = &mut out[o * w_out + j0..o * w_out + jn];
-            for (t, slot) in dst.iter_mut().enumerate() {
-                let prow = &patches[t * kk..(t + 1) * kk];
-                let mut acc = bias;
-                for (&xv, &wv) in prow.iter().zip(wrow) {
-                    acc += xv as i32 * wv as i32;
+            let dst = &mut out[o * total + p0..o * total + pn];
+            if layer.wide {
+                for (t, slot) in dst.iter_mut().enumerate() {
+                    let prow = &patches[t * kk..(t + 1) * kk];
+                    let acc = dot_i64_split(prow, wrow, bias, layer.seg);
+                    let acc = if layer.relu { acc.max(0) } else { acc };
+                    *slot = rq.apply(acc);
                 }
-                let acc = if layer.relu { acc.max(0) } else { acc };
-                *slot = rq.apply(acc as i64);
+            } else {
+                // Narrow: the gate proved |acc| <= 2^24, so bias and
+                // every partial sum fit i32.
+                let bias = bias as i32;
+                for (t, slot) in dst.iter_mut().enumerate() {
+                    let prow = &patches[t * kk..(t + 1) * kk];
+                    let mut acc = bias;
+                    for (&xv, &wv) in prow.iter().zip(wrow) {
+                        acc += xv as i32 * wv as i32;
+                    }
+                    let acc = if layer.relu { acc.max(0) } else { acc };
+                    *slot = rq.apply(acc as i64);
+                }
             }
         }
 
-        j0 = jn;
+        p0 = pn;
     }
+}
+
+/// Exact i64 dot product via i32 split sums: segments of at most `seg`
+/// taps accumulate in i32 (`seg` is sized so `seg * max|x| * max|w|`
+/// provably fits i32) and fold into the i64 running total, which
+/// starts at the bias code.  Exact integer addition is associative, so
+/// the result equals the naive all-i64 reduction bit-for-bit while the
+/// inner segment loop stays a vectorizable i32 reduction.
+fn dot_i64_split(prow: &[i16], wrow: &[i16], bias: i64, seg: usize) -> i64 {
+    let mut acc = bias;
+    let mut i = 0usize;
+    while i < prow.len() {
+        let end = (i + seg).min(prow.len());
+        let mut part = 0i32;
+        for (&xv, &wv) in prow[i..end].iter().zip(&wrow[i..end]) {
+            part += xv as i32 * wv as i32;
+        }
+        acc += part as i64;
+        i = end;
+    }
+    acc
 }
 
 /// Build an identity-topology CNN for tests: center-tap delta kernels.
@@ -822,6 +1125,171 @@ mod tests {
         let x: Vec<f32> = (0..256).map(|i| (i as f32 * 0.13).sin()).collect();
         for (a, b) in q.forward(&x).iter().zip(f.forward(&x)) {
             assert!((a - b).abs() < 1e-2);
+        }
+    }
+
+    /// Weights/biases with non-trivial values on every tap, used by
+    /// the batched/widened tests below.
+    fn dense_weights(cfg: CnnTopologyCfg, amp: f32) -> CnnWeights {
+        let mut weights = delta_cnn(cfg);
+        for l in &mut weights.layers {
+            for (i, v) in l.w.iter_mut().enumerate() {
+                *v = ((i as f32 * 0.71).sin()) * amp;
+            }
+            for (i, v) in l.b.iter_mut().enumerate() {
+                *v = ((i as f32 * 1.3).cos()) * 0.2;
+            }
+        }
+        weights
+    }
+
+    /// A quant spec that fits i16 everywhere but whose worst-case
+    /// accumulators leave the 2^24 f32-exact window on `dense_weights`
+    /// (Q1.14 weights: codes up to ~2^14, so `sum|w| * max|x|` is far
+    /// beyond 2^24 on every layer).
+    fn wide_acc_spec(layers: usize) -> QuantSpec {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("a_in".into(), QFormat::new(4, 6));
+        for l in 0..layers {
+            m.insert(format!("w{l}"), QFormat::new(1, 14));
+            m.insert(format!("a{l}"), QFormat::new(4, 6));
+        }
+        QuantSpec(m)
+    }
+
+    #[test]
+    fn widened_gate_takes_integer_path_beyond_the_f32_window() {
+        // Formats that previously fell back to fake-quant f32 (worst
+        // case |acc| > 2^24) now run the integer datapath with i64
+        // split-sum accumulators, bit-identical to the exact i64
+        // oracle.
+        let cfg = CnnTopologyCfg::SELECTED;
+        let q = FixedPointCnn::new(dense_weights(cfg, 0.9), Some(wide_acc_spec(cfg.layers)));
+        assert!(q.uses_integer_path(), "wide-but-i16 formats must stay integer");
+        assert!(q.uses_widened_accumulator());
+        assert_eq!(q.exec_path(), "int16_i64");
+        let mut scratch = CnnScratch::default();
+        for (len, seed) in [(16usize, 0.9f32), (272, 0.37), (1024, 0.11)] {
+            let x: Vec<f32> = (0..len).map(|i| (i as f32 * seed).sin() * 2.0).collect();
+            let fast = q.forward_with(&x, &mut scratch);
+            let oracle = q.forward_exact_i64(&x).expect("integer path is active");
+            assert_eq!(fast, oracle, "len {len}");
+            assert_eq!(fast.len(), cfg.out_symbols(len));
+        }
+    }
+
+    #[test]
+    fn narrow_path_matches_exact_oracle_too() {
+        // The i32 kernel's sums are exact subranges of i64, so the
+        // paper operating point must agree with the oracle as well as
+        // with the f32 reference.
+        let cfg = CnnTopologyCfg::SELECTED;
+        let spec = QuantSpec::paper_default(cfg.layers);
+        let q = FixedPointCnn::new(dense_weights(cfg, 0.3), Some(spec));
+        assert_eq!(q.exec_path(), "int16");
+        assert!(!q.uses_widened_accumulator());
+        let x: Vec<f32> = (0..512).map(|i| (i as f32 * 0.23).sin() * 2.0).collect();
+        let y = q.forward(&x);
+        assert_eq!(y, q.forward_exact_i64(&x).unwrap());
+        assert_eq!(y, q.forward_reference(&x));
+    }
+
+    #[test]
+    fn batched_forward_bit_identical_to_per_chunk() {
+        // One fused invocation over n chunks == n single-chunk passes,
+        // byte for byte, on every datapath (f32, fake-quant fallback,
+        // narrow int16, widened int16_i64) — including chunk counts
+        // that put tile boundaries mid-chunk and chunks smaller than a
+        // tile.
+        let cfg = CnnTopologyCfg::SELECTED;
+        let wide_fmt = {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("a_in".into(), QFormat::new(8, 14));
+            for l in 0..cfg.layers {
+                m.insert(format!("w{l}"), QFormat::new(8, 14));
+                m.insert(format!("a{l}"), QFormat::new(8, 14));
+            }
+            QuantSpec(m)
+        };
+        let paper = QuantSpec::paper_default(cfg.layers);
+        let paths = [
+            ("f32", FixedPointCnn::new(dense_weights(cfg, 0.3), None)),
+            ("fakequant_f32", FixedPointCnn::new(dense_weights(cfg, 0.3), Some(wide_fmt))),
+            ("int16", FixedPointCnn::new(dense_weights(cfg, 0.3), Some(paper))),
+            (
+                "int16_i64",
+                FixedPointCnn::new(dense_weights(cfg, 0.9), Some(wide_acc_spec(cfg.layers))),
+            ),
+        ];
+        for (name, cnn) in &paths {
+            assert_eq!(cnn.exec_path(), *name);
+            let mut scratch = CnnScratch::default();
+            for (n, w) in [(1usize, 256usize), (3, 256), (5, 48), (2, 1040), (7, 16)] {
+                let x: Vec<f32> = (0..n * w).map(|i| (i as f32 * 0.37).sin() * 1.5).collect();
+                let fused = cnn.forward_batch_with(&x, n, &mut scratch);
+                assert_eq!(fused.len(), n, "{name} n={n} w={w}");
+                for (b, out) in fused.iter().enumerate() {
+                    assert_eq!(
+                        out,
+                        &cnn.forward(&x[b * w..(b + 1) * w]),
+                        "{name} n={n} w={w} chunk {b}"
+                    );
+                }
+            }
+            assert!(cnn.forward_batch(&[], 0).is_empty());
+        }
+    }
+
+    #[test]
+    fn patch_plane_allocates_once_across_same_shape_batches() {
+        // Grow-only scratch: after the first fused pass of a shape, a
+        // repeat of the same shape performs zero new allocations of the
+        // patch plane (or any other scratch buffer).
+        let cfg = CnnTopologyCfg::SELECTED;
+        for quant in [None, Some(QuantSpec::paper_default(cfg.layers))] {
+            let cnn = FixedPointCnn::new(dense_weights(cfg, 0.3), quant);
+            let mut s = CnnScratch::default();
+            let x: Vec<f32> = (0..4 * 512).map(|i| (i as f32 * 0.17).sin()).collect();
+            // Two warm-up passes: the feat/next ping-pong pair settles
+            // at the max layer size only after each buffer has been in
+            // the input role once (the swaps exchange their roles every
+            // layer).  The patch plane is at full size after one.
+            cnn.forward_batch_with(&x, 4, &mut s);
+            cnn.forward_batch_with(&x, 4, &mut s);
+            let patch_state = (
+                s.patches.capacity(),
+                s.patches.as_ptr(),
+                s.patches_q.capacity(),
+                s.patches_q.as_ptr(),
+            );
+            // The ping-pong pairs as unordered sets (swaps permute them).
+            let pair = |a: &Vec<f32>, b: &Vec<f32>| {
+                let mut v = [(a.capacity(), a.as_ptr()), (b.capacity(), b.as_ptr())];
+                v.sort();
+                v
+            };
+            let pair_q = |a: &Vec<i16>, b: &Vec<i16>| {
+                let mut v = [(a.capacity(), a.as_ptr()), (b.capacity(), b.as_ptr())];
+                v.sort();
+                v
+            };
+            let feat_pair = pair(&s.feat, &s.next);
+            let feat_pair_q = pair_q(&s.feat_q, &s.next_q);
+            for _ in 0..3 {
+                cnn.forward_batch_with(&x, 4, &mut s);
+                assert_eq!(
+                    patch_state,
+                    (
+                        s.patches.capacity(),
+                        s.patches.as_ptr(),
+                        s.patches_q.capacity(),
+                        s.patches_q.as_ptr(),
+                    ),
+                    "repeated same-shape batches must not reallocate the patch plane"
+                );
+                assert_eq!(feat_pair, pair(&s.feat, &s.next));
+                assert_eq!(feat_pair_q, pair_q(&s.feat_q, &s.next_q));
+            }
         }
     }
 

@@ -62,7 +62,7 @@ COMMANDS:
              enables SLO-aware admission control, --slo-profile maps
              per-profile budgets, and each sweep point reports
              p50/p99/shed-rate vs offered load — rows land in
-             BENCH_pr8.json with --json; --assert-shed/--assert-no-shed
+             BENCH_pr9.json with --json; --assert-shed/--assert-no-shed
              make the run a CI smoke.  Shed replies carry a
              retry_after_us hint the replay honors as informed backoff.
              --request-timeout-us puts a deadline on queued requests
@@ -112,7 +112,7 @@ COMMANDS:
                                                        serving_slo p50/p99 rows +
                                                        open-loop shed-rate rows +
                                                        serving_faulted chaos row);
-                                                       --json writes BENCH_pr8.json
+                                                       --json writes BENCH_pr9.json
   config    [--profile high-throughput|low-power]      print JSON config
 ";
 
@@ -641,7 +641,7 @@ fn fault_spec_from_args(args: &Args) -> Result<Option<equalizer::util::faultinje
 /// a CI smoke; with `--fault-spec` + `--assert-served` it becomes the
 /// *chaos* smoke (seeded engine faults, every arrival must resolve
 /// exactly once, the pool must keep serving).  `--json` appends the
-/// rows to `BENCH_pr8.json` (replacing earlier `serving_open_loop`
+/// rows to `BENCH_pr9.json` (replacing earlier `serving_open_loop`
 /// rows, preserving the rest).
 fn serve_open_loop(args: &Args) -> Result<()> {
     use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
@@ -813,10 +813,10 @@ fn serve_open_loop(args: &Args) -> Result<()> {
             out.p99_us,
             t.line()
         );
-        if stats.panics > 0 || stats.respawns > 0 {
+        if stats.pool.panics > 0 || stats.pool.respawns > 0 {
             println!(
                 "    faults: {} worker panic(s) caught, {} shard respawn(s)",
-                stats.panics, stats.respawns
+                stats.pool.panics, stats.pool.respawns
             );
         }
         total_ok += out.admitted;
@@ -824,8 +824,8 @@ fn serve_open_loop(args: &Args) -> Result<()> {
         total_tmo += out.timeouts;
         total_shed += out.shed;
         total_full += out.full;
-        total_panics += stats.panics;
-        total_respawns += stats.respawns;
+        total_panics += stats.pool.panics;
+        total_respawns += stats.pool.respawns;
         records.push(t.to_json_open_loop(
             &profile_label,
             "serving_open_loop",
@@ -879,7 +879,7 @@ fn serve_open_loop(args: &Args) -> Result<()> {
 
     if let Some(path) = args
         .get("json")
-        .map(|v| if v == "true" { "BENCH_pr8.json".to_string() } else { v.to_string() })
+        .map(|v| if v == "true" { "BENCH_pr9.json".to_string() } else { v.to_string() })
     {
         // Replace earlier open-loop rows, preserve everything else
         // (the bench hot-path rows and historical baselines live in
@@ -1190,7 +1190,7 @@ fn client_cmd(args: &Args) -> Result<()> {
 /// `serving_faulted` chaos row — the coalesced pool re-measured with
 /// 1% seeded engine errors, quantifying what fault isolation costs on
 /// the happy path.  `--json [PATH]` additionally writes the records as
-/// a JSON array (default `BENCH_pr8.json`) so the perf trajectory
+/// a JSON array (default `BENCH_pr9.json`) so the perf trajectory
 /// stays machine-readable across PRs.  The integer path is asserted
 /// bit-identical to the fake-quant reference before anything is timed.
 fn bench_cmd(args: &Args) -> Result<()> {
@@ -1203,7 +1203,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
     let b = if quick { Bencher::quick() } else { Bencher::default() };
     let json_path = args
         .get("json")
-        .map(|v| if v == "true" { "BENCH_pr8.json".to_string() } else { v.to_string() });
+        .map(|v| if v == "true" { "BENCH_pr9.json".to_string() } else { v.to_string() });
 
     let float_cnn = reg.exact("cnn_imdd_w1024")?.load_native_cnn()?;
     let q_cnn = reg.exact("cnn_imdd_quant_w1024")?.load_native_cnn()?;
@@ -1283,9 +1283,13 @@ fn bench_cmd(args: &Args) -> Result<()> {
         let mut pool_rates = Vec::new();
         let coalesced =
             SchedulerConfig::default().with_coalescing(std::time::Duration::from_millis(1));
+        // Keep per_request at [0] and coalesced at [1]: the ratio
+        // print and the open-loop capacity estimate below index into
+        // `pool_rates` by position.
         let modes = [
             ("serving_per_request", SchedulerConfig::default()),
-            ("serving_coalesced", coalesced),
+            ("serving_coalesced", coalesced.clone()),
+            ("serving_group_fused", coalesced.with_group_fusion()),
         ];
         for (path, scheduler) in modes {
             let cfg = PoolConfig {
@@ -1314,6 +1318,12 @@ fn bench_cmd(args: &Args) -> Result<()> {
         println!(
             "\ncoalescing is {:.2}x per-request pool execution on the small-burst mix",
             pool_rates[1] / pool_rates[0]
+        );
+        println!(
+            "group fusion is {:.2}x coalesced ({:.2}x per-request): one im2col+GEMM \
+             invocation per instance per drained group",
+            pool_rates[2] / pool_rates[1],
+            pool_rates[2] / pool_rates[0]
         );
         pool_rates[1] / spb as f64
     };

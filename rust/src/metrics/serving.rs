@@ -138,6 +138,12 @@ pub struct ShardCounters {
     stolen: AtomicU64,
     coalesced_batches: AtomicU64,
     coalesced_requests: AtomicU64,
+    /// Batched im2col + GEMM kernel invocations the shard's engine
+    /// dispatched (diffed from
+    /// [`crate::coordinator::pipeline::EqualizerPipeline::kernel_invocations`]
+    /// around each batch): one per chunk on the looped path, one per
+    /// (group, instance) in group-fused mode.
+    kernel_invocations: AtomicU64,
     /// Effective coalescing window, nanoseconds — written by the SLO
     /// control loop, read by the shard worker on every collection pass
     /// and surfaced in snapshots.
@@ -268,6 +274,20 @@ impl ShardCounters {
         self.coalesced_requests.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record `n` batched kernel invocations dispatched by this
+    /// shard's engine (the worker diffs the engine's pipeline counter
+    /// around each batch).  The fusion invariant — exactly one
+    /// invocation per (group, instance) on the group-fused path — is
+    /// asserted against this in `tests/differential_paths.rs`.
+    pub fn kernel_invoked(&self, n: u64) {
+        self.kernel_invocations.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Batched kernel invocations recorded on this shard.
+    pub fn kernel_invocations(&self) -> u64 {
+        self.kernel_invocations.load(Ordering::Relaxed)
+    }
+
     /// Publish the effective coalescing window for this shard (the SLO
     /// loop's actuator; also set once at spawn to the configured base).
     pub fn set_window(&self, window: Duration) {
@@ -310,6 +330,7 @@ impl ShardCounters {
             stolen: self.stolen.load(Ordering::Relaxed),
             coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
             coalesced_requests: self.coalesced_requests.load(Ordering::Relaxed),
+            kernel_invocations: self.kernel_invocations.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::SeqCst),
             peak_queue_depth: self.peak_queue_depth.load(Ordering::SeqCst),
             window_us: self.coalesce_window_ns.load(Ordering::Relaxed) as f64 / 1e3,
@@ -354,6 +375,11 @@ pub struct ShardStats {
     pub coalesced_batches: u64,
     /// Requests served inside coalesced batches.
     pub coalesced_requests: u64,
+    /// Batched im2col + GEMM kernel invocations the shard's engine
+    /// dispatched: one per chunk on the looped batch path, exactly one
+    /// per (group, instance) in group-fused mode
+    /// ([`crate::coordinator::sched::SchedulerConfig::group_fused`]).
+    pub kernel_invocations: u64,
     /// Outstanding requests (queued + in service) at snapshot time.
     pub queue_depth: usize,
     /// Highest outstanding depth ever latched on this shard.
@@ -489,6 +515,11 @@ impl ServerStats {
         self.shards.iter().map(|s| s.stolen).sum()
     }
 
+    /// Batched kernel invocations dispatched pool-wide.
+    pub fn total_kernel_invocations(&self) -> u64 {
+        self.shards.iter().map(|s| s.kernel_invocations).sum()
+    }
+
     /// Human-readable per-shard table (ends with a newline).  A pool
     /// line with the live shard set and scale events is appended when
     /// the snapshot came from a pool ([`PoolStats::active_shards`]
@@ -560,10 +591,15 @@ impl ServerStats {
             } else {
                 String::new()
             };
+            let kernels = if self.total_kernel_invocations() > 0 {
+                format!(", kernel invocations {}", self.total_kernel_invocations())
+            } else {
+                String::new()
+            };
             let _ = writeln!(
                 out,
                 "pool: {}/{} shards live  (scale-ups {}, scale-downs {}, stolen {}, \
-                 coalesced {}{dop}{faults})",
+                 coalesced {}{kernels}{dop}{faults})",
                 self.pool.active_shards,
                 self.shards.len(),
                 self.pool.scale_ups,
@@ -797,6 +833,24 @@ mod tests {
         });
         let table = stats.render();
         assert!(table.contains("dop 4 (+3/-1)"), "{table}");
+    }
+
+    #[test]
+    fn kernel_invocation_counter_accumulates_and_renders() {
+        let c = ShardCounters::default();
+        assert_eq!(c.kernel_invocations(), 0);
+        c.kernel_invoked(4);
+        c.kernel_invoked(1);
+        assert_eq!(c.kernel_invocations(), 5);
+        assert_eq!(c.snapshot(0).kernel_invocations, 5);
+        let stats = ServerStats::snapshot([&c])
+            .with_pool(PoolStats { active_shards: 1, ..PoolStats::default() });
+        assert_eq!(stats.total_kernel_invocations(), 5);
+        assert!(stats.render().contains("kernel invocations 5"), "{}", stats.render());
+        // A pool that never dispatched a batched kernel stays quiet.
+        let quiet = ServerStats::snapshot([&ShardCounters::default()])
+            .with_pool(PoolStats { active_shards: 1, ..PoolStats::default() });
+        assert!(!quiet.render().contains("kernel"), "{}", quiet.render());
     }
 
     #[test]

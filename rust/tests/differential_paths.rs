@@ -1,0 +1,196 @@
+//! Cross-layer differential conformance: every execution path the
+//! serving stack offers must produce **byte-identical** soft symbols
+//! for the same bursts, with exactly-once accounting wherever a pool
+//! is involved.  One seeded burst set per committed profile is
+//! replayed through
+//!
+//!   1. the sequential reference (`EqualizerPipeline::equalize`),
+//!   2. the threaded batch path (`equalize_batch`),
+//!   3. engine-level coalescing and group fusion
+//!      (`equalize_coalesced` / `equalize_group_fused`) with the
+//!      kernel-invocation counter pinned — one invocation per fused
+//!      group, one per chunk when looped,
+//!   4. a per-request serving pool,
+//!   5. a coalescing pool,
+//!   6. a group-fused pool (`SchedulerConfig::with_group_fusion`),
+//!   7. the TCP loopback front end (`coordinator::net`).
+//!
+//! The suite is the acceptance gate for the group-fused serving path:
+//! fusion may only change *how many* kernel invocations run, never a
+//! single output bit or a request count.
+
+use equalizer::coordinator::instance::AnyInstance;
+use equalizer::coordinator::net::{NetClient, NetServer};
+use equalizer::coordinator::pipeline::EqualizerPipeline;
+use equalizer::coordinator::pool::{PoolConfig, ServerPool};
+use equalizer::coordinator::sched::SchedulerConfig;
+use equalizer::runtime::ArtifactRegistry;
+use std::time::Duration;
+
+/// Every committed native profile family (the PJRT profile needs
+/// `--features pjrt` and is covered by `tests/pjrt_parity.rs`).
+const PROFILES: [&str; 4] = ["cnn_imdd", "cnn_imdd_quant", "fir_imdd", "volterra_imdd"];
+
+fn registry() -> ArtifactRegistry {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    ArtifactRegistry::discover(dir).expect("committed native artifacts")
+}
+
+/// Seeded bursts of mixed lengths — long enough that every burst
+/// spans several chunks at the committed artifact width (1024), so
+/// the OGM/ORM overlap machinery and the batched gather both engage.
+fn seeded_bursts() -> Vec<Vec<f32>> {
+    [3000usize, 2600, 2200, 1800]
+        .iter()
+        .enumerate()
+        .map(|(b, &n)| (0..n).map(|i| ((i + 131 * b) as f32 * 0.17).sin()).collect())
+        .collect()
+}
+
+/// A one-instance pipeline loaded from the same artifact entry the
+/// pool stamps its shard engines from — the sequential oracle.
+fn reference_pipeline(reg: &ArtifactRegistry, profile: &str) -> EqualizerPipeline<AnyInstance> {
+    let bp = reg.profile_blueprint(profile).expect("committed profile");
+    let inst = AnyInstance::load(reg.profile_entry(profile).unwrap()).unwrap();
+    EqualizerPipeline::new(vec![inst], bp.width, bp.o_act, bp.n_os).unwrap()
+}
+
+fn one_shard_pool(sched: SchedulerConfig) -> PoolConfig {
+    PoolConfig { shards: 1, instances_per_shard: 1, scheduler: sched, ..PoolConfig::default() }
+}
+
+#[test]
+fn every_execution_path_is_bit_identical_with_exactly_once_accounting() {
+    let reg = registry();
+    for profile in PROFILES {
+        let bursts = seeded_bursts();
+        let n = bursts.len();
+        let width = reg.profile_blueprint(profile).unwrap().width;
+
+        // --- 1. Sequential reference: the oracle every other path
+        // must reproduce byte for byte.
+        let mut pipe = reference_pipeline(&reg, profile);
+        let want: Vec<Vec<f32>> =
+            bursts.iter().map(|x| pipe.equalize(x).expect("reference pass")).collect();
+        for w in &want {
+            assert!(!w.is_empty(), "{profile}: reference produced no symbols");
+        }
+
+        // --- 2. Threaded batch path on the same pipeline.
+        for (x, w) in bursts.iter().zip(&want) {
+            assert_eq!(
+                &pipe.equalize_batch(x).unwrap(),
+                w,
+                "{profile}: equalize_batch diverged from the sequential reference"
+            );
+        }
+
+        // --- 3. Engine-level coalescing vs group fusion, with the
+        // kernel-invocation counter pinned.  Looped dispatch costs one
+        // kernel invocation per chunk; the fused group costs exactly
+        // one per (profile, l_inst, instance) — here one instance, so
+        // exactly one total.
+        let refs: Vec<&[f32]> = bursts.iter().map(|x| x.as_slice()).collect();
+        let k0 = pipe.kernel_invocations();
+        let coalesced = pipe.equalize_coalesced(&refs, width).unwrap();
+        let coalesced_kernels = pipe.kernel_invocations() - k0;
+        assert_eq!(coalesced, want, "{profile}: coalesced pass diverged");
+        assert!(
+            coalesced_kernels >= n as u64,
+            "{profile}: looped dispatch must invoke per chunk (saw {coalesced_kernels})"
+        );
+        let k0 = pipe.kernel_invocations();
+        let fused = pipe.equalize_group_fused(&refs, width).unwrap();
+        let fused_kernels = pipe.kernel_invocations() - k0;
+        assert_eq!(fused, want, "{profile}: group-fused pass diverged");
+        assert_eq!(
+            fused_kernels, 1,
+            "{profile}: a fused group on one instance is exactly one kernel invocation"
+        );
+
+        // --- 4. Per-request pool: one shard, one instance, so every
+        // reply is the sequential engine's own output.
+        let cfg = one_shard_pool(SchedulerConfig::default());
+        let pool = ServerPool::from_registry(&reg, &[profile], &cfg).unwrap().spawn();
+        for (x, w) in bursts.iter().zip(&want) {
+            let resp = pool.call(profile, x.clone(), None).expect("per-request serve");
+            assert_eq!(&resp.soft_symbols, w, "{profile}: per-request pool diverged");
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_requests(), n, "{profile}: per-request pool lost a request");
+        assert_eq!(stats.total_errors(), 0);
+        assert_eq!(stats.total_shed(), 0);
+        let per_request_kernels = stats.total_kernel_invocations();
+        assert!(
+            per_request_kernels >= n as u64,
+            "{profile}: per-request serving invokes at least once per burst"
+        );
+
+        // --- 5. Coalescing pool: queue the whole burst set before the
+        // worker can drain, so the group forms inside the window.
+        let sched = SchedulerConfig::default().with_coalescing(Duration::from_millis(25));
+        let cfg = one_shard_pool(sched);
+        let pool = ServerPool::from_registry(&reg, &[profile], &cfg).unwrap().spawn();
+        let pending: Vec<_> =
+            bursts.iter().map(|x| pool.submit(profile, x.clone(), None).unwrap()).collect();
+        for (rx, w) in pending.into_iter().zip(&want) {
+            let resp = rx.recv().expect("coalesced reply");
+            assert!(resp.error.is_none(), "{profile}: coalesced serve failed: {:?}", resp.error);
+            assert_eq!(&resp.soft_symbols, w, "{profile}: coalesced pool diverged");
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_requests(), n, "{profile}: coalesced pool lost a request");
+        assert_eq!(stats.total_errors(), 0);
+
+        // --- 6. Group-fused pool: same queueing, fused dispatch.
+        // Fusion can only ever *reduce* kernel invocations, and a
+        // whole-set drain must cost exactly one.
+        let sched = SchedulerConfig::default()
+            .with_coalescing(Duration::from_millis(25))
+            .with_group_fusion();
+        let cfg = one_shard_pool(sched);
+        let pool = ServerPool::from_registry(&reg, &[profile], &cfg).unwrap().spawn();
+        let pending: Vec<_> =
+            bursts.iter().map(|x| pool.submit(profile, x.clone(), None).unwrap()).collect();
+        let mut batched = Vec::with_capacity(n);
+        for (rx, w) in pending.into_iter().zip(&want) {
+            let resp = rx.recv().expect("fused reply");
+            assert!(resp.error.is_none(), "{profile}: fused serve failed: {:?}", resp.error);
+            assert_eq!(&resp.soft_symbols, w, "{profile}: group-fused pool diverged");
+            batched.push(resp.batched);
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_requests(), n, "{profile}: fused pool lost a request");
+        assert_eq!(stats.total_errors(), 0);
+        let fused_pool_kernels = stats.total_kernel_invocations();
+        assert!(fused_pool_kernels >= 1, "{profile}: fused pool never reached the engine");
+        assert!(
+            fused_pool_kernels <= per_request_kernels,
+            "{profile}: fusion must not add kernel invocations \
+             ({fused_pool_kernels} > {per_request_kernels})"
+        );
+        if batched.iter().all(|&b| b == n) {
+            assert_eq!(
+                fused_pool_kernels, 1,
+                "{profile}: one drain of the whole group must cost one kernel invocation"
+            );
+        }
+
+        // --- 7. TCP loopback: the wire adds transport, never
+        // arithmetic — remote replies are the reference bytes.
+        let cfg = one_shard_pool(SchedulerConfig::default());
+        let pool = ServerPool::from_registry(&reg, &[profile], &cfg).unwrap().spawn();
+        let server = NetServer::spawn(pool.client(), "127.0.0.1:0").unwrap();
+        let client = NetClient::connect(server.local_addr()).expect("loopback connect");
+        for (x, w) in bursts.iter().zip(&want) {
+            let resp = client.call(profile, x.clone(), None).expect("loopback serve");
+            assert_eq!(&resp.soft_symbols, w, "{profile}: TCP loopback diverged");
+        }
+        drop(client);
+        server.shutdown();
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_requests(), n, "{profile}: loopback pool lost a request");
+        assert_eq!(stats.total_errors(), 0);
+        assert_eq!(stats.total_shed(), 0);
+    }
+}

@@ -1,9 +1,11 @@
-//! Integer-datapath acceptance: the i16/i32 fast path of the quantized
-//! CNN must be **bit-identical** to the fake-quant f32 reference —
-//! on random weight sets across widths and QAT format shapes (property
-//! tests), and on the committed artifacts (the serving contract).
-//! Specs that cannot be proven identical must fall back to the
-//! reference transparently.
+//! Integer-datapath acceptance: the i16 fast path of the quantized
+//! CNN must be **provably bit-identical** to an exact oracle — the
+//! fake-quant f32 reference when every accumulator fits the 2^24
+//! f32-exact window (narrow i32 kernel), the exact-i64 oracle when it
+//! does not (widened split-sum kernel) — on random weight sets across
+//! widths and QAT format shapes (property tests), and on the
+//! committed artifacts (the serving contract).  Only formats wider
+//! than i16 fall back to the fake-quant f32 reference.
 
 use equalizer::equalizer::cnn::FixedPointCnn;
 use equalizer::equalizer::weights::{CnnTopologyCfg, CnnWeights, ConvLayer};
@@ -93,35 +95,157 @@ fn integer_path_bit_identical_on_committed_artifacts() {
     assert!(checked > 0, "committed artifacts missing — nothing verified");
 }
 
-#[test]
-fn unprovable_specs_fall_back_to_reference() {
-    let cfg = CnnTopologyCfg::SELECTED;
-    // Constant 0.3 weights: sum |w_code| is far beyond the f32-exact
-    // window for wide Q8.8 activations, so the bound (not the i16
-    // width) refuses the integer path.
+/// Constant-amplitude weights whose worst-case accumulator magnitude
+/// is decisively beyond the 2^24 f32-exact window under wide Q8.8
+/// activations (sum |w_code| * 2^15 per output channel).
+fn wide_acc_weights(cfg: CnnTopologyCfg, amp: f32) -> CnnWeights {
     let layers = cfg
         .layer_channels()
         .iter()
         .map(|&(cin, cout)| ConvLayer {
-            w: vec![0.3; cout * cin * cfg.kernel],
+            w: vec![amp; cout * cin * cfg.kernel],
             b: vec![0.1; cout],
             c_in: cin,
             c_out: cout,
             k: cfg.kernel,
         })
         .collect();
-    let weights = CnnWeights { cfg, layers, train_ber: 0.0 };
+    CnnWeights { cfg, layers, train_ber: 0.0 }
+}
+
+fn uniform_spec(w: QFormat, a: QFormat) -> QuantSpec {
     let mut m = std::collections::BTreeMap::new();
-    m.insert("a_in".into(), QFormat::new(8, 8));
+    m.insert("a_in".into(), a);
     for l in 0..3 {
-        m.insert(format!("w{l}"), QFormat::new(8, 8));
-        m.insert(format!("a{l}"), QFormat::new(8, 8));
+        m.insert(format!("w{l}"), w);
+        m.insert(format!("a{l}"), a);
     }
-    let q = FixedPointCnn::new(weights, Some(QuantSpec(m)));
-    assert!(!q.uses_integer_path(), "out-of-window spec must fall back");
+    QuantSpec(m)
+}
+
+#[test]
+fn widened_gate_admits_specs_beyond_the_f32_window() {
+    // Before the i64 split-sum kernel this exact spec fell back to
+    // fake-quant f32 (the narrow-only gate refused it); now it runs
+    // integer arithmetic pinned to the exact-i64 oracle instead.
+    let weights = wide_acc_weights(CnnTopologyCfg::SELECTED, 0.3);
+    let q = FixedPointCnn::new(weights, Some(uniform_spec(QFormat::new(8, 8), QFormat::new(8, 8))));
+    assert!(q.uses_integer_path(), "widened gate must admit an in-i16 out-of-window spec");
+    assert!(q.uses_widened_accumulator(), "this spec's accumulators exceed 2^24");
+    assert_eq!(q.exec_path(), "int16_i64");
+    let x: Vec<f32> = (0..512).map(|i| (i as f32 * 0.21).cos()).collect();
+    assert_eq!(
+        q.forward(&x),
+        q.forward_exact_i64(&x).expect("integer path active"),
+        "widened kernel must be bit-identical to the exact-i64 oracle"
+    );
+}
+
+#[test]
+fn formats_wider_than_i16_still_fall_back() {
+    // The only remaining fallback cause: a format that does not fit
+    // i16 storage.  Q12.8 is 20 bits wide, so the datapath cannot
+    // hold the codes and must serve the fake-quant f32 reference.
+    let weights = wide_acc_weights(CnnTopologyCfg::SELECTED, 0.3);
+    let q =
+        FixedPointCnn::new(weights, Some(uniform_spec(QFormat::new(12, 8), QFormat::new(12, 8))));
+    assert!(!q.uses_integer_path(), "a >i16 format is genuinely unprovable");
+    assert!(!q.uses_widened_accumulator());
     assert_eq!(q.exec_path(), "fakequant_f32");
     let x: Vec<f32> = (0..512).map(|i| (i as f32 * 0.21).cos()).collect();
     assert_eq!(q.forward(&x), q.forward_reference(&x), "fallback is the reference itself");
+}
+
+#[test]
+fn gate_classification_straddles_the_window_on_random_weights() {
+    // Property: random weight sets under format pairs engineered to
+    // sit decisively on each side of the 2^24 window.  The narrow
+    // side must run the i32 kernel (bit-identical to *both* oracles);
+    // the wide side must select the i64 split-sum kernel — never the
+    // fake-quant fallback — and match the exact-i64 oracle.
+    let cfg = CnnTopologyCfg::SELECTED;
+    // Narrow: 8-bit codes, worst |acc| <= 45*45*2^7 + |b| << 2^24.
+    let narrow = uniform_spec(QFormat::new(1, 7), QFormat::new(2, 6));
+    // Wide: 15/16-bit codes, layer-1 worst |acc| already
+    // ~sum|w_code| * 2^15 >= 0.2*2^12*45*2^15 >> 2^24.
+    let wide = uniform_spec(QFormat::new(3, 12), QFormat::new(8, 8));
+    prop::check(12, |g| {
+        let weights = random_weights(g, cfg);
+        let width = *g.choose(&[48usize, 272, 1024]);
+        let x = g.vec_f32(width, -4.0, 4.0);
+
+        let q = FixedPointCnn::new(weights.clone(), Some(narrow.clone()));
+        assert!(q.uses_integer_path(), "narrow spec refused (seed {:#x})", g.seed);
+        assert!(!q.uses_widened_accumulator(), "narrow spec widened (seed {:#x})", g.seed);
+        assert_eq!(q.exec_path(), "int16");
+        let oracle = q.forward_exact_i64(&x).unwrap();
+        assert_eq!(q.forward(&x), oracle, "narrow != i64 oracle (seed {:#x})", g.seed);
+        assert_eq!(q.forward(&x), q.forward_reference(&x), "narrow != f32 (seed {:#x})", g.seed);
+
+        let mut wide_w = weights;
+        for l in &mut wide_w.layers {
+            // Push magnitudes up so every draw clears the window with
+            // a wide margin (|w| in [0.55, 0.9]).
+            for v in &mut l.w {
+                *v = v.signum() * (0.55 + v.abs());
+            }
+        }
+        let q = FixedPointCnn::new(wide_w, Some(wide.clone()));
+        assert!(q.uses_integer_path(), "wide spec fell back (seed {:#x})", g.seed);
+        assert!(q.uses_widened_accumulator(), "wide spec stayed narrow (seed {:#x})", g.seed);
+        assert_eq!(q.exec_path(), "int16_i64");
+        let oracle = q.forward_exact_i64(&x).unwrap();
+        assert_eq!(q.forward(&x), oracle, "widened != i64 oracle (seed {:#x})", g.seed);
+    });
+}
+
+#[test]
+fn exec_path_names_are_pinned() {
+    // The four observable execution paths, by exact string — serving
+    // logs, benches and the CLI all key off these.
+    let cfg = CnnTopologyCfg::SELECTED;
+    let float = FixedPointCnn::new(wide_acc_weights(cfg, 0.1), None);
+    assert_eq!(float.exec_path(), "f32");
+    let narrow = FixedPointCnn::new(
+        wide_acc_weights(cfg, 0.1),
+        Some(uniform_spec(QFormat::new(1, 7), QFormat::new(2, 6))),
+    );
+    assert_eq!(narrow.exec_path(), "int16");
+    let widened = FixedPointCnn::new(
+        wide_acc_weights(cfg, 0.3),
+        Some(uniform_spec(QFormat::new(8, 8), QFormat::new(8, 8))),
+    );
+    assert_eq!(widened.exec_path(), "int16_i64");
+    let fallback = FixedPointCnn::new(
+        wide_acc_weights(cfg, 0.3),
+        Some(uniform_spec(QFormat::new(12, 8), QFormat::new(12, 8))),
+    );
+    assert_eq!(fallback.exec_path(), "fakequant_f32");
+}
+
+#[test]
+fn committed_wide_qat_format_takes_the_widened_path() {
+    // The committed QAT-export-shaped format in
+    // `artifacts/qat_wide_acc.json` is exactly the regime the old
+    // narrow-only gate silently degraded to fake-quant f32: every
+    // format fits i16, but trained imdd weights push layer worst-case
+    // accumulators beyond 2^24.  The widened gate must serve it on
+    // the integer path, pinned to the exact-i64 oracle.
+    let path = format!("{}/qat_wide_acc.json", artifacts_dir());
+    let spec = QuantSpec::from_json(&json::parse_file(&path).unwrap()).unwrap();
+    let weights = CnnWeights::load(&format!("{}/weights_cnn_imdd.json", artifacts_dir())).unwrap();
+    let q = FixedPointCnn::new(weights, Some(spec));
+    assert!(q.uses_integer_path(), "committed wide QAT format must pass the widened gate");
+    assert!(q.uses_widened_accumulator(), "committed format must exceed the f32 window");
+    assert_eq!(q.exec_path(), "int16_i64");
+    for width in [256usize, 1024] {
+        let x: Vec<f32> = (0..width).map(|i| (i as f32 * 0.173).sin() * 1.7).collect();
+        assert_eq!(
+            q.forward(&x),
+            q.forward_exact_i64(&x).unwrap(),
+            "widened path diverged from the exact-i64 oracle at width {width}"
+        );
+    }
 }
 
 #[test]
