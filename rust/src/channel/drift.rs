@@ -1,0 +1,208 @@
+//! Slowly drifting ISI channel — the adaptation-loop test substrate.
+//!
+//! The paper's channels are stationary: weights trained offline stay
+//! valid forever.  Real links drift (temperature, polarization, aging),
+//! which is what the companion trainable-equalizer work (arXiv
+//! 2304.06987, PAPERS.md) adapts to online.  This channel makes that
+//! failure mode reproducible in-tree: a pulse-shaped PAM-2 stream with
+//! two post-cursor ISI taps whose energy *rotates* between a one-symbol
+//! and a two-symbol lag as
+//!
+//! ```text
+//! a1(k) = A * cos(phase0 + rate * k)     at lag N_OS samples
+//! a2(k) = A * sin(phase0 + rate * k)     at lag 2 * N_OS samples
+//! ```
+//!
+//! with `k` the absolute symbol index.  A static equalizer trained at
+//! `k = 0` equalizes `a1 = A, a2 = 0`; thousands of symbols later the
+//! channel it was trained for no longer exists and its BER climbs.  The
+//! decision-directed LMS loop ([`crate::runtime::adapt`]) re-publishes
+//! adapted taps through the registry and tracks the rotation —
+//! `repro adapt` plots both trajectories.
+//!
+//! [`DriftChannel::transmit_from`] takes the absolute starting symbol
+//! index so consecutive blocks continue the same drift trajectory; the
+//! [`Channel`] impl starts at zero like every stationary channel.
+
+use super::awgn::add_awgn;
+use super::filter::{convolve_same, rrc_taps};
+use super::{normalize, prbs, upsample, Channel, ChannelData, N_OS};
+
+/// Drifting two-tap post-cursor ISI channel parameters.
+#[derive(Debug, Clone)]
+pub struct DriftChannel {
+    /// Receiver SNR in dB on the impaired signal.
+    pub snr_db: f64,
+    /// RRC roll-off for the transmit pulse shaping.
+    pub rrc_beta: f64,
+    /// RRC span in symbols.
+    pub rrc_span: usize,
+    /// Peak post-cursor amplitude `A` (split between the two lags by
+    /// the rotation phase).
+    pub isi_amplitude: f64,
+    /// Rotation phase at symbol index 0, in radians.
+    pub phase0: f64,
+    /// Rotation rate in radians per symbol.  The default sweeps ~0.2
+    /// rad across a 4000-symbol block — slow against an LMS time
+    /// constant, fatal to a static equalizer over a long run.
+    pub drift_rate: f64,
+}
+
+impl Default for DriftChannel {
+    fn default() -> Self {
+        Self {
+            snr_db: 22.0,
+            rrc_beta: 0.2,
+            rrc_span: 16,
+            isi_amplitude: 0.6,
+            phase0: 0.0,
+            drift_rate: 5e-5,
+        }
+    }
+}
+
+impl DriftChannel {
+    /// Rotation phase at absolute symbol index `k`.
+    fn phase(&self, k: f64) -> f64 {
+        self.phase0 + self.drift_rate * k
+    }
+
+    /// Simulate `n_sym` symbols starting at absolute symbol index
+    /// `start_sym` of the drift trajectory — block `b` of a streaming
+    /// run passes `start_sym = b * block_len` so the rotation continues
+    /// across block boundaries instead of restarting.
+    pub fn transmit_from(&self, n_sym: usize, seed: u32, start_sym: u64) -> ChannelData {
+        let symbols = prbs(n_sym, seed);
+
+        // TX: upsample -> RRC pulse shaping (same front end as imdd).
+        let up = upsample(&symbols, N_OS);
+        let up_f64: Vec<f64> = up.iter().map(|&v| v as f64).collect();
+        let taps = rrc_taps(self.rrc_beta, self.rrc_span, N_OS);
+        let shaped = convolve_same(&up_f64, &taps);
+
+        // Drifting post-cursor ISI on the shaped signal.  The phase is
+        // a function of the absolute symbol index, so the two cursor
+        // amplitudes trade energy as the stream progresses.
+        let n = shaped.len();
+        let mut rx: Vec<f64> = Vec::with_capacity(n);
+        for k in 0..n {
+            let phi = self.phase(start_sym as f64 + (k / N_OS) as f64);
+            let mut v = shaped[k];
+            if k >= N_OS {
+                v += self.isi_amplitude * phi.cos() * shaped[k - N_OS];
+            }
+            if k >= 2 * N_OS {
+                v += self.isi_amplitude * phi.sin() * shaped[k - 2 * N_OS];
+            }
+            rx.push(v);
+        }
+
+        // Unit-variance before noise injection so snr_db means the
+        // same thing at every drift phase.
+        let mean = rx.iter().sum::<f64>() / rx.len() as f64;
+        let var = rx.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / rx.len() as f64;
+        let std = var.sqrt().max(1e-12);
+        for v in rx.iter_mut() {
+            *v = (*v - mean) / std;
+        }
+
+        add_awgn(&mut rx, self.snr_db, seed.wrapping_add(1));
+        let mut rx32: Vec<f32> = rx.iter().map(|&v| v as f32).collect();
+        normalize(&mut rx32);
+
+        ChannelData { rx: rx32, symbols }
+    }
+}
+
+impl Channel for DriftChannel {
+    fn transmit(&self, n_sym: usize, seed: u32) -> ChannelData {
+        self.transmit_from(n_sym, seed, 0)
+    }
+
+    fn name(&self) -> &'static str {
+        "drift"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::FRAC_PI_2;
+
+    #[test]
+    fn shapes_and_rate() {
+        let d = DriftChannel::default().transmit(4000, 0);
+        assert_eq!(d.rx.len(), 4000 * N_OS);
+        assert_eq!(d.symbols.len(), 4000);
+    }
+
+    #[test]
+    fn deterministic_and_phase_continuous() {
+        let ch = DriftChannel::default();
+        let a = ch.transmit_from(1000, 3, 5000);
+        let b = ch.transmit_from(1000, 3, 5000);
+        assert_eq!(a.rx, b.rx);
+        assert_eq!(a.symbols, b.symbols);
+        // Same seed at a different trajectory point: same symbols,
+        // different impairment.
+        let c = ch.transmit_from(1000, 3, 50_000);
+        assert_eq!(a.symbols, c.symbols);
+        assert_ne!(a.rx, c.rx);
+    }
+
+    #[test]
+    fn normalized_output() {
+        let d = DriftChannel::default().transmit(20_000, 0);
+        let n = d.rx.len() as f64;
+        let mean = d.rx.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = d.rx.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn symbol_correlation_present() {
+        let d = DriftChannel::default().transmit(20_000, 0);
+        let xs: Vec<f64> = d.rx.iter().step_by(N_OS).map(|&v| v as f64).collect();
+        let ys: Vec<f64> = d.symbols.iter().map(|&v| v as f64).collect();
+        let c = corr(&xs, &ys);
+        assert!(c.abs() > 0.3, "decorrelated: {c}");
+    }
+
+    #[test]
+    fn drift_rotates_cursor_energy() {
+        // Freeze the drift within a block (tiny rate) and compare two
+        // trajectory points a quarter-rotation apart: at phase 0 the
+        // ISI sits on the one-symbol lag, at pi/2 on the two-symbol
+        // lag.
+        let ch = DriftChannel { snr_db: 40.0, drift_rate: 1e-9, ..Default::default() };
+        let quarter = (FRAC_PI_2 / ch.drift_rate) as u64;
+        let at0 = ch.transmit_from(20_000, 0, 0);
+        let at90 = ch.transmit_from(20_000, 0, quarter);
+        // The even-length RRC (span * N_OS taps) has a half-sample group
+        // delay through convolve_same, so symbol peaks land on odd rx
+        // indices; sample that phase or the direct-path midpoint energy
+        // swamps both cursors.
+        let lag = |d: &ChannelData, by: usize| {
+            let xs: Vec<f64> =
+                d.rx.iter().skip(1 + by * N_OS).step_by(N_OS).map(|&v| v as f64).collect();
+            let ys: Vec<f64> =
+                d.symbols.iter().take(xs.len()).map(|&v| v as f64).collect();
+            corr(&xs, &ys)
+        };
+        // rx sample at symbol i+1 carries symbol i through cursor a1…
+        assert!(lag(&at0, 1).abs() > 2.0 * lag(&at90, 1).abs(), "lag-1 cursor did not fade");
+        // …and at symbol i+2 through cursor a2, a quarter turn later.
+        assert!(lag(&at90, 2).abs() > 2.0 * lag(&at0, 2).abs(), "lag-2 cursor did not appear");
+    }
+
+    fn corr(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len()) as f64;
+        let ma = a.iter().sum::<f64>() / n;
+        let mb = b.iter().sum::<f64>() / n;
+        let cov: f64 = a.iter().zip(b).map(|(x, y)| (x - ma) * (y - mb)).sum::<f64>() / n;
+        let sa = (a.iter().map(|x| (x - ma).powi(2)).sum::<f64>() / n).sqrt();
+        let sb = (b.iter().map(|y| (y - mb).powi(2)).sum::<f64>() / n).sqrt();
+        cov / (sa * sb)
+    }
+}

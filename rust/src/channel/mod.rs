@@ -9,6 +9,7 @@
 //! oversampling, Mersenne-Twister PRBS per the paper's reference [18]).
 
 pub mod awgn;
+pub mod drift;
 pub mod fft;
 pub mod filter;
 pub mod imdd;

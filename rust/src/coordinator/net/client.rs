@@ -258,6 +258,7 @@ fn pool_response_from(profile: &str, resp: Response) -> PoolResponse {
         elapsed_us: resp.elapsed_us,
         latency_us: resp.latency_us,
         batched: resp.batched as usize,
+        generation: resp.generation,
         error: (resp.status == Status::Error).then(|| resp.detail.clone()),
         // The v1 wire collapses pool-side timeouts into typed Error
         // frames (the detail carries the deadline message), so a

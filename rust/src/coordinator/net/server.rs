@@ -298,7 +298,13 @@ fn serve_request(client: &PoolClient, req: Request) -> Response {
 
 fn response_from_pool(id: u64, resp: PoolResponse) -> Response {
     if let Some(e) = &resp.error {
-        return Response::error(id, format!("profile {:?}: {e}", resp.profile));
+        // Error replies keep their generation stamp: a client
+        // correlating failures with a rollout needs to know which
+        // generation was in charge when the engine failed.
+        return Response {
+            generation: resp.generation,
+            ..Response::error(id, format!("profile {:?}: {e}", resp.profile))
+        };
     }
     if let Some(shed) = &resp.shed {
         // submit_to-style sheds arrive through the reply channel; fold
@@ -311,6 +317,7 @@ fn response_from_pool(id: u64, resp: PoolResponse) -> Response {
         shard: resp.shard as u32,
         l_inst: resp.l_inst as u32,
         batched: resp.batched as u32,
+        generation: resp.generation,
         elapsed_us: resp.elapsed_us,
         latency_us: resp.latency_us,
         predicted_us: 0.0,

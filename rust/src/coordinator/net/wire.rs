@@ -26,7 +26,9 @@ use std::io::{Read, Write};
 pub const MAGIC: [u8; 4] = *b"EQLZ";
 
 /// Protocol version this build speaks (and the only one it accepts).
-pub const VERSION: u16 = 1;
+/// Version 2 added the response `generation` field (the weight
+/// generation that served the burst — docs/PROTOCOL.md).
+pub const VERSION: u16 = 2;
 
 /// Hard cap on a frame body (64 MiB ≈ 16M f32 samples).  Checked
 /// against the length prefix before any allocation, and at encode time
@@ -109,6 +111,10 @@ pub struct Response {
     pub l_inst: u32,
     /// Requests that shared the burst's batched pipeline pass.
     pub batched: u32,
+    /// Weight generation of the engine that served the burst (1 after
+    /// a registry load, incremented per published hot-swap; 0 for
+    /// unversioned engines and replies no engine served).
+    pub generation: u64,
     /// Wall-clock time on the shard worker, microseconds.
     pub elapsed_us: f64,
     /// End-to-end latency (enqueue → reply) on the server, in
@@ -135,6 +141,7 @@ impl Response {
             shard: 0,
             l_inst: 0,
             batched: 0,
+            generation: 0,
             elapsed_us: 0.0,
             latency_us: 0.0,
             predicted_us: 0.0,
@@ -232,6 +239,7 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             out.extend_from_slice(&r.shard.to_le_bytes());
             out.extend_from_slice(&r.l_inst.to_le_bytes());
             out.extend_from_slice(&r.batched.to_le_bytes());
+            out.extend_from_slice(&r.generation.to_le_bytes());
             out.extend_from_slice(&r.elapsed_us.to_le_bytes());
             out.extend_from_slice(&r.latency_us.to_le_bytes());
             out.extend_from_slice(&r.predicted_us.to_le_bytes());
@@ -351,6 +359,7 @@ pub fn decode(body: &[u8]) -> Result<Frame> {
             shard: c.u32()?,
             l_inst: c.u32()?,
             batched: c.u32()?,
+            generation: c.u64()?,
             elapsed_us: c.f64()?,
             latency_us: c.f64()?,
             predicted_us: c.f64()?,
@@ -452,6 +461,7 @@ mod tests {
             shard: g.usize_in(0, 64) as u32,
             l_inst: g.usize_in(0, 1 << 16) as u32,
             batched: g.usize_in(0, 64) as u32,
+            generation: g.usize_in(0, 1 << 32) as u64,
             elapsed_us: g.f32_in(0.0, 1e6) as f64,
             latency_us: g.f32_in(0.0, 1e6) as f64,
             predicted_us: g.f32_in(0.0, 1e6) as f64,
@@ -502,7 +512,7 @@ mod tests {
         let mut bad = body.clone();
         bad[4] = 0x63; // version 99
         let msg = decode(&bad).unwrap_err().to_string();
-        assert!(msg.contains("version 99") && msg.contains("speaks 1"), "{msg}");
+        assert!(msg.contains("version 99") && msg.contains("speaks 2"), "{msg}");
         let mut bad = body.clone();
         bad[6] = 9; // kind
         assert!(decode(&bad).unwrap_err().to_string().contains("kind"));

@@ -127,7 +127,7 @@ use super::server::{EqualizerServer, LutPicker};
 use super::timing::TimingModel;
 use crate::equalizer::weights::CnnTopologyCfg;
 use crate::metrics::serving::{PoolStats, ServerStats, ShardCounters, SLO_RECENT_WINDOW};
-use crate::runtime::artifact::{ProfileBlueprint, ProfileDatapath};
+use crate::runtime::artifact::{ProfileBlueprint, ProfileDatapath, ProfileTable};
 use crate::runtime::ArtifactRegistry;
 use crate::util::faultinject::{FatalFault, FaultSpec};
 use anyhow::Result;
@@ -227,6 +227,13 @@ pub struct PoolResponse {
     /// Requests that shared this burst's batched pipeline pass
     /// (1 = served alone, 0 = shed at admission — never dispatched).
     pub batched: usize,
+    /// Weight generation of the engine that served this burst (see
+    /// [`ProfileBlueprint::generation`]): registry-loaded engines start
+    /// at 1 and every [`ArtifactRegistry::publish_profile`] swap
+    /// increments it.  0 means unversioned — hand-built engines that
+    /// never went through a blueprint, and replies that no engine ever
+    /// served (sheds, queue timeouts, failed queues).
+    pub generation: u64,
     /// Processing failure, if any.
     pub error: Option<String>,
     /// The request's [`SchedulerConfig::request_timeout`] deadline
@@ -366,6 +373,25 @@ impl Default for PoolConfig {
 /// replies instead (the reply guarantee holds either way).
 pub type RespawnFactory<I> = Box<dyn FnMut(usize) -> Option<Shard<I>> + Send>;
 
+/// Builds the replacement serving engine for `(shard, profile,
+/// blueprint)` when a worker converges onto a newly published weight
+/// generation (see [`ServerPool::with_swap`]).  Returning `None`
+/// declines the restamp: the old generation keeps serving.
+pub type SwapStamp<I> =
+    Box<dyn Fn(usize, &str, &ProfileBlueprint) -> Option<EqualizerServer<I>> + Send + Sync>;
+
+/// Live hot-swap wiring for a spawned pool ([`ServerPool::with_swap`]):
+/// the published-profile table the workers watch, plus the restamp
+/// function that turns a published [`ProfileBlueprint`] snapshot into a
+/// replacement serving engine.  Shared by every worker (including
+/// supervised respawns), so a single publish converges the whole pool.
+pub struct SwapHub<I: EqualizerInstance + Send + 'static> {
+    /// Published generations ([`ArtifactRegistry::publish_profile`]).
+    table: Arc<ProfileTable>,
+    /// Restamp function, called at drain boundaries only.
+    stamp: SwapStamp<I>,
+}
+
 /// A sharded, multi-profile serving pool (spawn with
 /// [`ServerPool::spawn`]).
 pub struct ServerPool<I: EqualizerInstance + Send + 'static> {
@@ -376,6 +402,7 @@ pub struct ServerPool<I: EqualizerInstance + Send + 'static> {
     /// (floor, ceiling) of the autoscaler's DOP axis; (0, 0) = off.
     dop_range: (usize, usize),
     respawn: Option<RespawnFactory<I>>,
+    swap: Option<Arc<SwapHub<I>>>,
 }
 
 impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
@@ -448,7 +475,15 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
                  and/or autoscaling (DOP / shard axis)"
             );
         }
-        Ok(Self { shards, policy, queue_cap, scheduler, dop_range: (0, 0), respawn: None })
+        Ok(Self {
+            shards,
+            policy,
+            queue_cap,
+            scheduler,
+            dop_range: (0, 0),
+            respawn: None,
+            swap: None,
+        })
     }
 
     /// Register a supervised-respawn factory: when the monitor thread
@@ -467,6 +502,29 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
         factory: impl FnMut(usize) -> Option<Shard<I>> + Send + 'static,
     ) -> Self {
         self.respawn = Some(Box::new(factory));
+        self
+    }
+
+    /// Enable live weight hot-swap: every worker watches `table`'s
+    /// version counter (one relaxed atomic read per drained batch) and,
+    /// when a publish happened, restamps exactly the engines whose
+    /// resident generation trails the published one — via `stamp`, at
+    /// the drain boundary *before* the next batch is dispatched.  A
+    /// burst is therefore never split across generations, unrelated
+    /// profiles are never reloaded, and queued work survives the swap
+    /// untouched.  Each actual restamp is counted in
+    /// [`PoolStats::swaps`].  Registry-backed pools get this wired
+    /// automatically by [`ServerPool::from_registry`]; hand-built pools
+    /// call it with their own table and stamp function.
+    pub fn with_swap(
+        mut self,
+        table: Arc<ProfileTable>,
+        stamp: impl Fn(usize, &str, &ProfileBlueprint) -> Option<EqualizerServer<I>>
+            + Send
+            + Sync
+            + 'static,
+    ) -> Self {
+        self.swap = Some(Arc::new(SwapHub { table, stamp: Box::new(stamp) }));
         self
     }
 
@@ -516,7 +574,7 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
     /// control plane: liveness supervision always; window adaptation /
     /// autoscaling when configured) and return the dispatch handle.
     pub fn spawn(self) -> PoolHandle {
-        let Self { shards, policy, queue_cap, scheduler, dop_range, respawn } = self;
+        let Self { shards, policy, queue_cap, scheduler, dop_range, respawn, swap } = self;
         let n = shards.len();
         let profiles: Arc<[String]> = shards[0].profile_names().into();
         let pickers: BTreeMap<String, LutPicker> =
@@ -541,6 +599,7 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
             panics: AtomicU64::new(0),
             respawns: AtomicU64::new(0),
             respawned: Mutex::new(Vec::new()),
+            swaps: AtomicU64::new(0),
         });
         for c in &core.counters {
             c.set_window(core.sched.coalesce_window);
@@ -552,10 +611,11 @@ impl<I: EqualizerInstance + Send + 'static> ServerPool<I> {
             // spurious "dead worker" verdict.
             core.slots[id].alive.store(true, Ordering::SeqCst);
             let worker_core = Arc::clone(&core);
-            joins.push(std::thread::spawn(move || worker_loop(shard, id, worker_core)));
+            let worker_hub = swap.clone();
+            joins.push(std::thread::spawn(move || worker_loop(shard, id, worker_core, worker_hub)));
         }
         let monitor_core = Arc::clone(&core);
-        joins.push(std::thread::spawn(move || monitor_loop(monitor_core, respawn)));
+        joins.push(std::thread::spawn(move || monitor_loop(monitor_core, respawn, swap)));
         let clients_guard = Arc::new(ClientsGuard { core: Arc::clone(&core) });
         PoolHandle {
             client: PoolClient {
@@ -651,6 +711,10 @@ struct SchedCore {
     /// Join handles of supervised-respawn workers; drained by
     /// [`PoolHandle::shutdown`] after the original joins.
     respawned: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Engine restamps performed at drain boundaries — one per
+    /// (shard, profile) that actually converged onto a newly published
+    /// weight generation ([`ServerPool::with_swap`]).
+    swaps: AtomicU64,
 }
 
 impl SchedCore {
@@ -664,6 +728,7 @@ impl SchedCore {
             dop_downs: self.dop_downs.load(Ordering::Relaxed),
             panics: self.panics.load(Ordering::Relaxed),
             respawns: self.respawns.load(Ordering::Relaxed),
+            swaps: self.swaps.load(Ordering::Relaxed),
         }
     }
 
@@ -797,6 +862,11 @@ struct ReplyGuard<'a> {
     /// Error text used for replies resolved by `drop` (overwritten by
     /// the panic handler with the panic's own message).
     message: String,
+    /// Weight generation of the engine serving this batch, stamped by
+    /// `execute_batch` / `serve_single` *before* the pass runs — so
+    /// even a panic-resolved error reply records which generation was
+    /// in charge.  0 until a dispatch attempt resolves an engine.
+    generation: u64,
 }
 
 impl<'a> ReplyGuard<'a> {
@@ -806,6 +876,7 @@ impl<'a> ReplyGuard<'a> {
             shard,
             counters,
             message: "shard worker dropped the request".to_string(),
+            generation: 0,
         }
     }
 }
@@ -824,6 +895,7 @@ impl Drop for ReplyGuard<'_> {
                 elapsed_us: 0.0,
                 latency_us,
                 batched: 0,
+                generation: self.generation,
                 error: Some(self.message.clone()),
                 timed_out: false,
                 shed: None,
@@ -866,9 +938,18 @@ fn worker_loop<I: EqualizerInstance + Send + 'static>(
     mut shard: Shard<I>,
     id: usize,
     core: Arc<SchedCore>,
+    hub: Option<Arc<SwapHub<I>>>,
 ) {
     let _beacon = Beacon { slot: &core.slots[id] };
+    // Sentinel "never checked": the first drained batch scans the
+    // published table even if no publish races the spawn — the scan is
+    // a no-op when every resident generation already matches, and it
+    // closes the window between engine stamping and worker start.
+    let mut seen_version = u64::MAX;
+    core.counters[id]
+        .set_generation(shard.profiles.values().map(|e| e.generation()).max().unwrap_or(0));
     while let Some(batch) = next_batch(&core, id, &shard) {
+        apply_swap(&mut shard, id, &core, hub.as_deref(), &mut seen_version);
         apply_dop(&mut shard, &core);
         let mut guard = ReplyGuard::new(batch, id, &core.counters[id]);
         let pass = catch_unwind(AssertUnwindSafe(|| {
@@ -902,6 +983,41 @@ fn apply_dop<I: EqualizerInstance + Send + 'static>(shard: &mut Shard<I>, core: 
             let _ = engine.set_active_instances(want);
         }
     }
+}
+
+/// Converge this shard's engines onto the latest published weight
+/// generations ([`ServerPool::with_swap`]).  Runs at the drain
+/// boundary — called with the next batch already collected but not yet
+/// dispatched — so a burst is never split across generations.  The hot
+/// path pays one atomic version read per batch; the table lock is
+/// touched only after a publish actually happened, and only engines
+/// whose resident generation trails the published one are restamped
+/// (unrelated profiles keep their engines, scratch and fault streams).
+fn apply_swap<I: EqualizerInstance + Send + 'static>(
+    shard: &mut Shard<I>,
+    id: usize,
+    core: &SchedCore,
+    hub: Option<&SwapHub<I>>,
+    seen_version: &mut u64,
+) {
+    let Some(hub) = hub else { return };
+    let version = hub.table.version();
+    if version == *seen_version {
+        return;
+    }
+    *seen_version = version;
+    for (name, engine) in shard.profiles.iter_mut() {
+        let Some(blueprint) = hub.table.snapshot(name) else { continue };
+        if blueprint.generation == engine.generation() {
+            continue;
+        }
+        if let Some(next) = (hub.stamp)(id, name, &blueprint) {
+            *engine = next;
+            core.swaps.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    core.counters[id]
+        .set_generation(shard.profiles.values().map(|e| e.generation()).max().unwrap_or(0));
 }
 
 /// Block until a batch is available: pop the own queue (coalescing up
@@ -1149,6 +1265,7 @@ fn expire_deadlined(guard: &mut ReplyGuard<'_>, core: &SchedCore, id: usize) {
             elapsed_us: 0.0,
             latency_us,
             batched: 0,
+            generation: 0,
             error: Some(format!(
                 "request deadline exceeded: waited {:.0} us, timeout {:.0} us",
                 latency_us,
@@ -1177,6 +1294,8 @@ fn execute_batch<I: EqualizerInstance + Send + 'static>(
         let t0 = Instant::now();
         if let Some(engine) = shard.profiles.get_mut(&guard.pending[0].profile) {
             let l_inst = engine.pick_l_inst(guard.pending[0].t_req);
+            let generation = engine.generation();
+            guard.generation = generation;
             let k0 = engine.kernel_invocations();
             let outs = {
                 let bursts: Vec<&[f32]> =
@@ -1217,6 +1336,7 @@ fn execute_batch<I: EqualizerInstance + Send + 'static>(
                         elapsed_us,
                         latency_us,
                         batched: n,
+                        generation,
                         error: None,
                         timed_out: false,
                         shed: None,
@@ -1248,6 +1368,12 @@ fn serve_single<I: EqualizerInstance + Send + 'static>(
     guard: &mut ReplyGuard<'_>,
 ) {
     let t0 = Instant::now();
+    // Stamp the serving generation before the pass: a panic inside
+    // `serve_one` then still error-replies with the generation that
+    // was in charge (via the guard's drop).
+    guard.generation =
+        shard.profiles.get(&guard.pending[0].profile).map_or(0, |e| e.generation());
+    let generation = guard.generation;
     let (soft_symbols, l_inst, error) = {
         let req = &guard.pending[0];
         match shard.profiles.get_mut(&req.profile) {
@@ -1276,6 +1402,7 @@ fn serve_single<I: EqualizerInstance + Send + 'static>(
         elapsed_us,
         latency_us,
         batched: 1,
+        generation,
         error,
         timed_out: false,
         shed: None,
@@ -1290,6 +1417,7 @@ fn serve_single<I: EqualizerInstance + Send + 'static>(
 fn supervise_shards<I: EqualizerInstance + Send + 'static>(
     core: &Arc<SchedCore>,
     respawn: &mut Option<RespawnFactory<I>>,
+    hub: &Option<Arc<SwapHub<I>>>,
 ) {
     for id in 0..core.slots.len() {
         let slot = &core.slots[id];
@@ -1302,7 +1430,9 @@ fn supervise_shards<I: EqualizerInstance + Send + 'static>(
             // as `spawn`.
             slot.alive.store(true, Ordering::SeqCst);
             let worker_core = Arc::clone(core);
-            let join = std::thread::spawn(move || worker_loop(shard, id, worker_core));
+            let worker_hub = hub.clone();
+            let join =
+                std::thread::spawn(move || worker_loop(shard, id, worker_core, worker_hub));
             core.respawned.lock().unwrap_or_else(|e| e.into_inner()).push(join);
         } else {
             fail_queue(core, id, "shard worker died and no respawn factory is configured");
@@ -1333,6 +1463,7 @@ fn fail_queue(core: &SchedCore, id: usize, msg: &str) {
             elapsed_us: 0.0,
             latency_us,
             batched: 0,
+            generation: 0,
             error: Some(msg.to_string()),
             timed_out: false,
             shed: None,
@@ -1360,6 +1491,7 @@ fn fail_queue(core: &SchedCore, id: usize, msg: &str) {
 fn monitor_loop<I: EqualizerInstance + Send + 'static>(
     core: Arc<SchedCore>,
     mut respawn: Option<RespawnFactory<I>>,
+    hub: Option<Arc<SwapHub<I>>>,
 ) {
     let slo = core.sched.slo.clone();
     let auto = core.sched.autoscale.clone();
@@ -1389,7 +1521,7 @@ fn monitor_loop<I: EqualizerInstance + Send + 'static>(
     let mut since_scale = Duration::ZERO;
     while core.open.load(Ordering::SeqCst) {
         std::thread::sleep(tick);
-        supervise_shards(&core, &mut respawn);
+        supervise_shards(&core, &mut respawn, &hub);
         since_window += tick;
         since_scale += tick;
         let window_due = window_tick.is_some_and(|t| since_window >= t);
@@ -1622,6 +1754,7 @@ impl PoolClient {
                 elapsed_us: 0.0,
                 latency_us: 0.0,
                 batched: 0,
+                generation: 0,
                 error: None,
                 timed_out: false,
                 shed: Some(Shed { samples, predicted_us, budget_us, retry_after_us }),
@@ -1881,7 +2014,8 @@ fn stamp_engine(
             })
         })
         .collect::<Result<_>>()?;
-    EqualizerServer::new(workers, blueprint.o_act, blueprint.n_os, optimizer, lut_targets)
+    Ok(EqualizerServer::new(workers, blueprint.o_act, blueprint.n_os, optimizer, lut_targets)?
+        .with_generation(blueprint.generation))
 }
 
 impl ServerPool<AnyInstance> {
@@ -1889,9 +2023,15 @@ impl ServerPool<AnyInstance> {
     /// `profiles`, resolved through `reg` (see
     /// [`ArtifactRegistry::profile_entry`] for the naming scheme).
     /// Each profile's weights are parsed once
-    /// ([`ArtifactRegistry::profile_blueprint`]); every shard —
-    /// including ones the autoscaler parks at spawn — clones from the
-    /// loaded datapath, so growing the live set never reloads weights.
+    /// ([`ArtifactRegistry::profile_snapshot`], seeding the published
+    /// table at generation 1); every shard — including ones the
+    /// autoscaler parks at spawn — clones from the loaded datapath, so
+    /// growing the live set never reloads weights.  All-native pools
+    /// are additionally wired for live hot-swap
+    /// ([`ServerPool::with_swap`]): a later
+    /// [`ArtifactRegistry::publish_profile`] on the same registry
+    /// converges every worker onto the new generation at its next
+    /// drain boundary.
     pub fn from_registry<S: AsRef<str>>(
         reg: &ArtifactRegistry,
         profiles: &[S],
@@ -1923,10 +2063,15 @@ impl ServerPool<AnyInstance> {
             TimingModel::new(cfg.lut_instances, topo.vp, topo.layers, topo.kernel, cfg.f_clk);
         let optimizer = SeqLenOptimizer::new(timing);
         let lut_targets: Vec<f64> = (1..=100).map(|i| i as f64 * 1e9).collect();
-        let blueprints: Vec<(String, ProfileBlueprint)> = profiles
+        // Snapshots come through the registry's *published* table
+        // ([`ArtifactRegistry::profile_snapshot`]): first use seeds each
+        // profile at generation 1, and later
+        // [`ArtifactRegistry::publish_profile`] calls hot-swap the live
+        // workers wired below.
+        let blueprints: Vec<(String, Arc<ProfileBlueprint>)> = profiles
             .iter()
-            .map(|p| -> Result<(String, ProfileBlueprint)> {
-                Ok((p.as_ref().to_string(), reg.profile_blueprint(p.as_ref())?))
+            .map(|p| -> Result<(String, Arc<ProfileBlueprint>)> {
+                Ok((p.as_ref().to_string(), reg.profile_snapshot(p.as_ref())?))
             })
             .collect::<Result<_>>()?;
         // Fault streams decorrelate per (shard, profile, instance):
@@ -1960,25 +2105,51 @@ impl ServerPool<AnyInstance> {
         if max_dop > cfg.instances_per_shard {
             pool = pool.with_dop_range(cfg.instances_per_shard, max_dop)?;
         }
-        // Supervised respawn: a dead shard's engines restamp from the
-        // *resident* blueprints — no weight reload, same geometry, so
-        // bit-exactness and steal compatibility survive the respawn.
-        // PJRT (`Hlo`) profiles load executables per instance and
-        // cannot be captured in a 'static factory; those pools fall
-        // back to failing a dead shard's queue with error replies.
+        // Hot-swap + supervised respawn: both restamp engines from the
+        // registry's *published* table — no weight reload from disk,
+        // geometry pinned by `publish_profile`, so bit-exactness and
+        // steal compatibility survive either path.  PJRT (`Hlo`)
+        // profiles load executables per instance and cannot be captured
+        // in a 'static factory; those pools serve their spawn-time
+        // generation and fall back to failing a dead shard's queue.
         let all_resident =
             blueprints.iter().all(|(_, b)| !matches!(b.datapath, ProfileDatapath::Hlo));
         if all_resident {
+            let names: Vec<String> = blueprints.iter().map(|(n, _)| n.clone()).collect();
+            let table = Arc::clone(&reg.published);
+            {
+                // A swapped engine reuses its original (shard, profile)
+                // epoch-0 fault streams: a publish restarts — never
+                // decorrelates — the injected fault sequence.
+                let optimizer = optimizer.clone();
+                let lut_targets = lut_targets.clone();
+                let fault_spec = fault_spec.clone();
+                let names = names.clone();
+                pool = pool.with_swap(Arc::clone(&table), move |shard_id, name, blueprint| {
+                    let p = names.iter().position(|n| n == name)?;
+                    let faults = fault_spec
+                        .as_ref()
+                        .map(|spec| (spec, ((shard_id * names.len() + p) * max_dop) as u32));
+                    stamp_engine(blueprint, None, max_dop, &optimizer, &lut_targets, faults).ok()
+                });
+            }
             let mut epoch = 0u32;
             pool = pool.with_respawn(move |shard_id| {
                 epoch += 1;
                 let mut shard = Shard::new();
-                for (p, (name, blueprint)) in blueprints.iter().enumerate() {
+                for (p, name) in names.iter().enumerate() {
+                    // The blueprint is re-read from the published table
+                    // at respawn time, holding the snapshot `Arc` for
+                    // the whole stamp: a respawn racing
+                    // `publish_profile` comes back on the latest
+                    // generation instead of resurrecting the weights
+                    // its dead predecessor was spawned with.
+                    let blueprint = table.snapshot(name)?;
                     let base = epoch * streams_per_epoch
                         + ((shard_id * n_profiles + p) * max_dop) as u32;
                     let faults = fault_spec.as_ref().map(|spec| (spec, base));
                     let engine =
-                        stamp_engine(blueprint, None, max_dop, &optimizer, &lut_targets, faults)
+                        stamp_engine(&blueprint, None, max_dop, &optimizer, &lut_targets, faults)
                             .ok()?;
                     shard = shard.with_profile(name.clone(), engine);
                 }

@@ -91,6 +91,7 @@ pub struct EqualizerServer<
 > {
     pipe: EqualizerPipeline<I>,
     lut: Vec<LutRow>,
+    generation: u64,
 }
 
 /// Handle to a running single-stream server (a one-shard pool behind a
@@ -132,7 +133,23 @@ impl<I: EqualizerInstance + Send + 'static> EqualizerServer<I> {
         let l_ol = instances[0].width();
         anyhow::ensure!(l_ol > 2 * o_act, "l_ol must exceed the overlap");
         let pipe = EqualizerPipeline::new(instances, l_ol - 2 * o_act, o_act, n_os)?;
-        Ok(Self { pipe, lut: optimizer.build_lut(lut_targets) })
+        Ok(Self { pipe, lut: optimizer.build_lut(lut_targets), generation: 0 })
+    }
+
+    /// Tag this engine with the weight generation its instances were
+    /// stamped from ([`crate::runtime::ProfileBlueprint::generation`]).
+    /// Hand-built engines that skip the builder stay at 0 (unversioned).
+    pub fn with_generation(mut self, generation: u64) -> Self {
+        self.generation = generation;
+        self
+    }
+
+    /// The weight generation serving on this engine (0 = unversioned).
+    /// Stamped into every [`PoolResponse`] the engine produces, so a
+    /// caller can always tell which published snapshot equalized its
+    /// burst.
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// The fixed artifact width every instance accepts.

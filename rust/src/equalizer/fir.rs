@@ -23,6 +23,17 @@ impl FirEqualizer {
         self.taps.len()
     }
 
+    /// The tap vector, centered at `(len - 1) / 2` — what the LMS
+    /// adaptation loop ([`crate::runtime::adapt`]) reads and updates.
+    pub fn taps(&self) -> &[f32] {
+        &self.taps
+    }
+
+    /// Oversampling factor (output symbols = input samples / `n_os`).
+    pub fn n_os(&self) -> usize {
+        self.n_os
+    }
+
     /// Eq. (1): y_i = sum_m x_{i+m} w(m + M*), then every `n_os`-th
     /// output sample is a symbol estimate.
     pub fn equalize(&self, x: &[f32]) -> Vec<f32> {

@@ -62,7 +62,7 @@ COMMANDS:
              enables SLO-aware admission control, --slo-profile maps
              per-profile budgets, and each sweep point reports
              p50/p99/shed-rate vs offered load — rows land in
-             BENCH_pr9.json with --json; --assert-shed/--assert-no-shed
+             BENCH_pr10.json with --json; --assert-shed/--assert-no-shed
              make the run a CI smoke.  Shed replies carry a
              retry_after_us hint the replay honors as informed backoff.
              --request-timeout-us puts a deadline on queued requests
@@ -105,14 +105,28 @@ COMMANDS:
              Shed reply's retry_after_us suppresses arrivals for the
              hinted window.  --shutdown asks the server to drain and
              exit afterwards)
+  adapt     [--artifacts DIR] [--blocks N] [--spb SYMBOLS]
+            [--taps M] [--snr DB] [--warm-mu MU] [--track-mu MU]
+            [--assert-recovered]                       adaptation + hot-swap loop
+            (closes the decision-directed LMS loop over a live pool on
+             a slowly drifting ISI channel: every block the adapted
+             taps are re-published as the next weight generation and
+             the pool hot-swaps at a drain boundary, while a frozen
+             copy of the same warm-up taps degrades with the drift.
+             Replies are generation-stamped; a second, never-
+             republished profile proves publishes leave unrelated
+             profiles untouched.  --assert-recovered makes it a CI
+             smoke: final-third adaptive BER must undercut the static
+             baseline 2x.  See docs/ADAPTATION.md)
   bench     [--artifacts DIR] [--json [PATH]] [--quick]
                                                        hot-path + serving throughput
                                                        (f32 / fake-quant / int16 +
                                                        pipeline + pool coalescing +
                                                        serving_slo p50/p99 rows +
                                                        open-loop shed-rate rows +
-                                                       serving_faulted chaos row);
-                                                       --json writes BENCH_pr9.json
+                                                       serving_faulted chaos row +
+                                                       serving_hot_swap row);
+                                                       --json writes BENCH_pr10.json
   config    [--profile high-throughput|low-power]      print JSON config
 ";
 
@@ -139,6 +153,7 @@ fn main() -> Result<()> {
         "serve" => serve(&args),
         "client" => client_cmd(&args),
         "bench" => bench_cmd(&args),
+        "adapt" => adapt(&args),
         "figures" => {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
             figures::run(which, &artifacts_dir(&args))
@@ -641,7 +656,7 @@ fn fault_spec_from_args(args: &Args) -> Result<Option<equalizer::util::faultinje
 /// a CI smoke; with `--fault-spec` + `--assert-served` it becomes the
 /// *chaos* smoke (seeded engine faults, every arrival must resolve
 /// exactly once, the pool must keep serving).  `--json` appends the
-/// rows to `BENCH_pr9.json` (replacing earlier `serving_open_loop`
+/// rows to `BENCH_pr10.json` (replacing earlier `serving_open_loop`
 /// rows, preserving the rest).
 fn serve_open_loop(args: &Args) -> Result<()> {
     use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
@@ -879,7 +894,7 @@ fn serve_open_loop(args: &Args) -> Result<()> {
 
     if let Some(path) = args
         .get("json")
-        .map(|v| if v == "true" { "BENCH_pr9.json".to_string() } else { v.to_string() })
+        .map(|v| if v == "true" { "BENCH_pr10.json".to_string() } else { v.to_string() })
     {
         // Replace earlier open-loop rows, preserve everything else
         // (the bench hot-path rows and historical baselines live in
@@ -1178,6 +1193,145 @@ fn client_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro adapt` — the decision-directed adaptation loop closed over a
+/// live serving pool (docs/ADAPTATION.md).  The drifting-ISI channel
+/// ([`DriftChannel`]) slowly rotates its post-cursor energy; each block
+/// is equalized by the pool under the *currently published* weights,
+/// tracked by a decision-directed LMS filter, and the adapted taps are
+/// re-published through [`ArtifactRegistry::publish_profile`] as the
+/// next generation — live workers hot-swap at their next drain
+/// boundary.  A frozen copy of the same warm-up taps equalizes every
+/// block as the static baseline: its BER climbs with the drift while
+/// the adaptive trajectory stays flat.  A second, never-republished
+/// profile (`fir_imdd`) rides in the same pool to prove publishes
+/// leave unrelated profiles untouched.
+fn adapt(args: &Args) -> Result<()> {
+    use equalizer::channel::drift::DriftChannel;
+    use equalizer::channel::N_OS;
+    use equalizer::coordinator::pool::{PoolConfig, ServerPool};
+    use equalizer::equalizer::fir::FirEqualizer;
+    use equalizer::runtime::adapt::{ber, LmsFir};
+    use equalizer::runtime::{ProfileBlueprint, ProfileDatapath};
+
+    let reg = ArtifactRegistry::discover(artifacts_dir(args))?;
+    let blocks = args.usize_or("blocks", 60)?.max(6);
+    let spb = args.usize_or("spb", 4000)?.max(512);
+    let n_taps = args.usize_or("taps", 21)?.max(5) | 1;
+    let snr_db = args.f64_or("snr", 22.0)?;
+    let warm_mu = args.f64_or("warm-mu", 0.01)? as f32;
+    let track_mu = args.f64_or("track-mu", 0.002)? as f32;
+
+    let channel = DriftChannel { snr_db, ..Default::default() };
+    println!(
+        "drifting channel: ISI amplitude {:.2}, {:.1e} rad/symbol, {snr_db:.0} dB SNR",
+        channel.isi_amplitude, channel.drift_rate
+    );
+
+    // Data-aided warm-up on block 0: converge an LMS filter from a
+    // center spike against known symbols, then freeze one copy as the
+    // static baseline and publish the other as `fir_drift` gen 1.
+    let warm = channel.transmit_from(spb, 100, 0);
+    let mut taps = vec![0.0f32; n_taps];
+    taps[(n_taps - 1) / 2] = 1.0;
+    let mut lms = LmsFir::new(taps, N_OS, warm_mu)?;
+    for _ in 0..4 {
+        lms.adapt_block(&warm.rx, Some(&warm.symbols));
+    }
+    lms.set_mu(track_mu)?;
+    let static_eq = lms.to_fir();
+
+    let o_act = (n_taps / 2).next_multiple_of(N_OS);
+    let blueprint = move |fir: FirEqualizer| ProfileBlueprint {
+        width: 4096,
+        o_act,
+        n_os: N_OS,
+        // publish_profile assigns the real generation; 0 marks the
+        // carried value as unversioned input.
+        generation: 0,
+        datapath: ProfileDatapath::Fir(fir),
+    };
+    let mut generation = reg.publish_profile("fir_drift", blueprint(lms.to_fir()))?;
+
+    // `fir_drift` resolves from the published table (no committed
+    // artifacts behind it); `fir_imdd` is the unrelated resident
+    // profile that must stay on generation 1 throughout.
+    let cfg = PoolConfig { shards: 1, instances_per_shard: 1, queue_cap: 8, ..PoolConfig::default() };
+    let pool = ServerPool::from_registry(&reg, &["fir_drift", "fir_imdd"], &cfg)?.spawn();
+    let client = pool.client();
+
+    println!(
+        "adaptation loop: {blocks} blocks x {spb} symbols, {n_taps} taps, \
+         warm mu {warm_mu}, tracking mu {track_mu}\n"
+    );
+    println!("  block  gen   adaptive BER   static BER");
+    let mut rows: Vec<(f64, f64)> = Vec::new();
+    for b in 1..blocks {
+        let data = channel.transmit_from(spb, 100 + b as u32, (b * spb) as u64);
+        let resp = client.call("fir_drift", data.rx.clone(), None)?;
+        let adaptive = ber(&resp.soft_symbols, &data.symbols);
+        let frozen = ber(&static_eq.equalize(&data.rx), &data.symbols);
+        rows.push((adaptive, frozen));
+        if b == 1 || b % 5 == 0 || b + 1 == blocks {
+            println!("  {b:>5}  {:>3}      {adaptive:.3e}    {frozen:.3e}", resp.generation);
+        }
+        // Track this block's drift on the local filter, then publish
+        // the adapted taps: the pool converges at its next drain
+        // boundary, so block b+1 is served by generation b+1.
+        lms.adapt_block(&data.rx, None);
+        generation = reg.publish_profile("fir_drift", blueprint(lms.to_fir()))?;
+    }
+
+    // Post-drain probes: the swapped profile serves the latest
+    // generation, the never-republished one still serves generation 1.
+    let last = channel.transmit_from(spb, 999, (blocks * spb) as u64);
+    let final_resp = client.call("fir_drift", last.rx, None)?;
+    anyhow::ensure!(
+        final_resp.generation == generation,
+        "post-drain probe served generation {} instead of the latest {generation}",
+        final_resp.generation
+    );
+    let probe = ImddChannel::default().transmit(2048, 1);
+    let untouched = client.call("fir_imdd", probe.rx, None)?;
+    anyhow::ensure!(
+        untouched.generation == 1,
+        "publishing fir_drift must not touch fir_imdd, which now serves generation {}",
+        untouched.generation
+    );
+
+    let stats = pool.shutdown();
+    println!();
+    print!("{}", stats.render());
+    let third = (rows.len() / 3).max(1);
+    let avg = |xs: &[(f64, f64)]| {
+        let n = xs.len() as f64;
+        (xs.iter().map(|r| r.0).sum::<f64>() / n, xs.iter().map(|r| r.1).sum::<f64>() / n)
+    };
+    let (a_head, s_head) = avg(&rows[..third]);
+    let (a_tail, s_tail) = avg(&rows[rows.len() - third..]);
+    println!("early third: adaptive BER {a_head:.3e}  static BER {s_head:.3e}");
+    println!(
+        "final third: adaptive BER {a_tail:.3e}  static BER {s_tail:.3e}  \
+         ({} weight swaps, final generation {generation})",
+        stats.pool.swaps
+    );
+    if args.flag("assert-recovered") {
+        anyhow::ensure!(
+            s_tail > 2.0 * a_tail.max(1e-4),
+            "static baseline did not degrade past the adaptive loop: \
+             static {s_tail:.3e} vs adaptive {a_tail:.3e}"
+        );
+        anyhow::ensure!(
+            a_tail < 0.05,
+            "adaptive loop failed to track the drift: final-third BER {a_tail:.3e}"
+        );
+        println!(
+            "assert-recovered: ok (adaptive {a_tail:.3e} vs static {s_tail:.3e} \
+             over the final third)"
+        );
+    }
+    Ok(())
+}
+
 /// Machine-readable hot-path benchmark: the native CNN datapath on all
 /// three execution paths (f32 / fake-quant f32 / int16), the batched
 /// pipeline on the float + quantized profiles, the serving pool on a
@@ -1189,8 +1343,10 @@ fn client_cmd(args: &Args) -> Result<()> {
 /// open-loop rows add `offered_rps`/`shed_rate`), plus the
 /// `serving_faulted` chaos row — the coalesced pool re-measured with
 /// 1% seeded engine errors, quantifying what fault isolation costs on
-/// the happy path.  `--json [PATH]` additionally writes the records as
-/// a JSON array (default `BENCH_pr9.json`) so the perf trajectory
+/// the happy path — and the `serving_hot_swap` row, the same pool
+/// re-measured under a continuous 5 ms weight-publish loop (what a
+/// live adaptation loop costs, docs/ADAPTATION.md).  `--json [PATH]` additionally writes the records as
+/// a JSON array (default `BENCH_pr10.json`) so the perf trajectory
 /// stays machine-readable across PRs.  The integer path is asserted
 /// bit-identical to the fake-quant reference before anything is timed.
 fn bench_cmd(args: &Args) -> Result<()> {
@@ -1203,7 +1359,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
     let b = if quick { Bencher::quick() } else { Bencher::default() };
     let json_path = args
         .get("json")
-        .map(|v| if v == "true" { "BENCH_pr9.json".to_string() } else { v.to_string() });
+        .map(|v| if v == "true" { "BENCH_pr10.json".to_string() } else { v.to_string() });
 
     let float_cnn = reg.exact("cnn_imdd_w1024")?.load_native_cnn()?;
     let q_cnn = reg.exact("cnn_imdd_quant_w1024")?.load_native_cnn()?;
@@ -1404,6 +1560,100 @@ fn bench_cmd(args: &Args) -> Result<()> {
             t.symbols_per_s * 100.0 / clean_rate
         );
         records.push(t.to_json("cnn_imdd_quant", "serving_faulted"));
+    }
+
+    header("serving hot-swap (coalesced pool under a 5 ms publish loop)");
+    {
+        use equalizer::coordinator::pool::{PoolConfig, RoutePolicy, ServerPool};
+        use equalizer::coordinator::sched::SchedulerConfig;
+        use equalizer::runtime::{ProfileBlueprint, ProfileDatapath};
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::time::Duration;
+
+        // Prices generation convergence on the hot path: the same
+        // coalesced small-burst mix, while a background publisher
+        // keeps re-installing fir_imdd's weights — every worker
+        // re-stamps its engines at drain boundaries throughout the
+        // measurement window.  The row is the throughput that
+        // survives; a continuous adaptation loop (repro adapt) costs
+        // exactly this overhead.
+        let clients = 64usize;
+        let spb = 128usize;
+        let burst: Vec<f32> = (0..2 * spb).map(|i| (i as f32 * 0.19).sin()).collect();
+        let base = reg.profile_snapshot("fir_imdd")?;
+        let ProfileDatapath::Fir(fir) = &base.datapath else {
+            anyhow::bail!("fir_imdd did not load a FIR datapath");
+        };
+        let cfg = PoolConfig {
+            shards: 2,
+            instances_per_shard: 4,
+            policy: RoutePolicy::ShortestQueue,
+            queue_cap: clients,
+            scheduler: SchedulerConfig::default().with_coalescing(Duration::from_millis(1)),
+            ..PoolConfig::default()
+        };
+        let pool = ServerPool::from_registry(&reg, &["fir_imdd"], &cfg)?.spawn();
+        let waves = if quick { 6 } else { 24 };
+        let warmup = 2;
+        let stop = AtomicBool::new(false);
+        let (mut symbols, mut wall, mut min_gen) = (0usize, 0.0f64, u64::MAX);
+        let published = std::thread::scope(|s| -> Result<u64> {
+            let publisher = s.spawn(|| -> Result<u64> {
+                let mut published = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    reg.publish_profile(
+                        "fir_imdd",
+                        ProfileBlueprint {
+                            width: base.width,
+                            o_act: base.o_act,
+                            n_os: base.n_os,
+                            generation: 0, // publish_profile assigns the real one
+                            datapath: ProfileDatapath::Fir(fir.clone()),
+                        },
+                    )?;
+                    published += 1;
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Ok(published)
+            });
+            for wave in 0..(warmup + waves) {
+                let t0 = std::time::Instant::now();
+                let pending: Vec<_> = (0..clients)
+                    .map(|_| pool.submit("fir_imdd", burst.clone(), None).unwrap())
+                    .collect();
+                for rx in pending {
+                    let resp = rx.recv().unwrap();
+                    anyhow::ensure!(
+                        resp.error.is_none(),
+                        "hot-swap bench reply failed: {:?}",
+                        resp.error
+                    );
+                    min_gen = min_gen.min(resp.generation);
+                    symbols += resp.soft_symbols.len();
+                }
+                if wave >= warmup {
+                    wall += t0.elapsed().as_secs_f64();
+                } else {
+                    symbols = 0;
+                }
+            }
+            stop.store(true, Ordering::Relaxed);
+            publisher.join().expect("publisher thread panicked")
+        })?;
+        let stats = pool.shutdown();
+        anyhow::ensure!(
+            stats.pool.swaps > 0 && min_gen >= 1,
+            "publish loop never reached the workers: {} swaps, min generation {min_gen}",
+            stats.pool.swaps
+        );
+        let t = Throughput::from_rate(symbols as f64, wall);
+        println!(
+            "{:44} {}  {published} publishes, {} swaps applied",
+            "serving_hot_swap",
+            t.line(),
+            stats.pool.swaps
+        );
+        records.push(t.to_json("fir_imdd", "serving_hot_swap"));
     }
 
     header("serving SLO (64 clients x 128-symbol bursts: fixed window vs adaptive)");

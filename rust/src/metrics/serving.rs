@@ -148,6 +148,12 @@ pub struct ShardCounters {
     /// control loop, read by the shard worker on every collection pass
     /// and surfaced in snapshots.
     coalesce_window_ns: AtomicU64,
+    /// Newest weight generation resident on this shard's engines —
+    /// written by the shard worker at spawn and at every hot-swap
+    /// drain boundary
+    /// ([`crate::coordinator::pool::ServerPool::with_swap`]); 0 for
+    /// unversioned (hand-built) engines.
+    generation: AtomicU64,
     latency: Mutex<LatencyRing>,
 }
 
@@ -300,6 +306,18 @@ impl ShardCounters {
         Duration::from_nanos(self.coalesce_window_ns.load(Ordering::Relaxed))
     }
 
+    /// Publish the newest weight generation resident on this shard
+    /// (written by the shard worker at spawn and after every hot-swap).
+    pub fn set_generation(&self, generation: u64) {
+        self.generation.store(generation, Ordering::Relaxed);
+    }
+
+    /// Newest weight generation resident on this shard (0 for
+    /// unversioned engines).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
     /// p99 end-to-end latency over the most recent `last` completions
     /// no older than `max_age` (0.0 while no live sample exists) — the
     /// SLO control signal.  Bounded by the reservoir, so a long-lived
@@ -334,6 +352,7 @@ impl ShardCounters {
             queue_depth: self.queue_depth.load(Ordering::SeqCst),
             peak_queue_depth: self.peak_queue_depth.load(Ordering::SeqCst),
             window_us: self.coalesce_window_ns.load(Ordering::Relaxed) as f64 / 1e3,
+            generation: self.generation.load(Ordering::Relaxed),
             p50_us: latency.percentile_us(50.0),
             p99_us: latency.percentile_us(99.0),
             max_us: latency.max_us(),
@@ -388,6 +407,11 @@ pub struct ShardStats {
     /// (the base window unless the SLO loop adapted it; 0 when
     /// coalescing is off).
     pub window_us: f64,
+    /// Newest weight generation resident on this shard's engines at
+    /// snapshot time ([`ShardCounters::set_generation`]): 1 after a
+    /// registry load, incremented by every published hot-swap, 0 for
+    /// unversioned (hand-built) engines.
+    pub generation: u64,
     /// Median end-to-end latency (enqueue → completion) over the last
     /// [`LATENCY_RING_CAP`] requests, on every scheduled path.
     pub p50_us: f64,
@@ -424,6 +448,11 @@ pub struct PoolStats {
     /// Dead shard workers the supervisor respawned from resident
     /// blueprints since spawn.
     pub respawns: u64,
+    /// Engine restamps performed at hot-swap drain boundaries — one
+    /// per (shard, profile) that converged onto a newly published
+    /// weight generation
+    /// ([`crate::coordinator::pool::ServerPool::with_swap`]).
+    pub swaps: u64,
 }
 
 /// Pool-wide snapshot: one [`ShardStats`] per shard, plus the
@@ -596,10 +625,19 @@ impl ServerStats {
             } else {
                 String::new()
             };
+            let swaps = if self.pool.swaps > 0 {
+                format!(
+                    ", weight swaps {} (newest gen {})",
+                    self.pool.swaps,
+                    self.shards.iter().map(|s| s.generation).max().unwrap_or(0)
+                )
+            } else {
+                String::new()
+            };
             let _ = writeln!(
                 out,
                 "pool: {}/{} shards live  (scale-ups {}, scale-downs {}, stolen {}, \
-                 coalesced {}{kernels}{dop}{faults})",
+                 coalesced {}{kernels}{dop}{faults}{swaps})",
                 self.pool.active_shards,
                 self.shards.len(),
                 self.pool.scale_ups,
@@ -724,6 +762,24 @@ mod tests {
         let table = stats.render();
         assert_eq!(table.lines().count(), 4, "{table}");
         assert!(table.contains("panics 3, respawns 1"), "{table}");
+    }
+
+    #[test]
+    fn swap_gauges_render_only_when_nonzero() {
+        let c = ShardCounters::default();
+        c.served(128, 100.0, false);
+        let base = PoolStats { active_shards: 1, ..PoolStats::default() };
+        let stats = ServerStats::snapshot([&c]).with_pool(base.clone());
+        assert!(!stats.render().contains("weight swaps"), "swap-free pools stay quiet");
+        // The worker publishes the resident generation; the pool line
+        // reports the newest one next to the swap count.
+        c.set_generation(3);
+        assert_eq!(c.generation(), 3);
+        let stats = ServerStats::snapshot([&c]).with_pool(PoolStats { swaps: 2, ..base });
+        assert_eq!(stats.shards[0].generation, 3);
+        let table = stats.render();
+        assert_eq!(table.lines().count(), 4, "{table}");
+        assert!(table.contains("weight swaps 2 (newest gen 3)"), "{table}");
     }
 
     #[test]

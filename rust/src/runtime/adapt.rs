@@ -1,0 +1,229 @@
+//! Decision-directed LMS adaptation for the linear FIR profile.
+//!
+//! The paper's equalizer is static, but the companion work
+//! ("Unsupervised ANN-Based Equalizer and Its Trainable FPGA
+//! Implementation", arXiv 2304.06987 — PAPERS.md) tracks a
+//! time-varying channel by updating the weights online.  This module
+//! is the serving-side half of that loop for the FIR baseline: slice
+//! hard decisions against the PAM-2 alphabet, take the LMS gradient
+//! step on the taps, and hand the adapted snapshot to
+//! [`crate::runtime::ArtifactRegistry::publish_profile`] — which
+//! hot-swaps every live pool worker at its next drain boundary
+//! ([`crate::coordinator::pool::ServerPool::with_swap`]).  CNN and
+//! Volterra profiles accept externally retrained snapshots through the
+//! same publish path; only the linear filter is cheap enough to adapt
+//! in-process.
+//!
+//! [`LmsFir`] mirrors [`FirEqualizer::equalize`]'s geometry exactly —
+//! centered taps, zero-padded borders, outputs every `n_os`-th sample —
+//! so a tap vector adapted here serves bit-identically once published.
+//! The update is purely f32 arithmetic over deterministic inputs:
+//! equal seeds produce bit-equal taps (pinned in `tests/adaptation.rs`).
+//!
+//! `repro adapt` drives the full loop against the drifting channel
+//! ([`crate::channel::drift::DriftChannel`]); docs/ADAPTATION.md walks
+//! through it.
+
+use crate::equalizer::fir::FirEqualizer;
+use anyhow::Result;
+
+/// PAM-2 hard decision: the alphabet point nearest to `y`.
+pub fn slice_pam2(y: f32) -> f32 {
+    if y >= 0.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Bit-error rate of sliced soft outputs against the transmitted
+/// symbols (PAM-2: one bit per symbol), over the shorter of the two.
+pub fn ber(soft: &[f32], symbols: &[f32]) -> f64 {
+    let n = soft.len().min(symbols.len());
+    if n == 0 {
+        return 0.0;
+    }
+    let errors = (0..n).filter(|&i| slice_pam2(soft[i]) != symbols[i]).count();
+    errors as f64 / n as f64
+}
+
+/// LMS-adaptive FIR filter sharing [`FirEqualizer`]'s serving geometry.
+///
+/// One [`Self::adapt_block`] call equalizes a burst symbol by symbol,
+/// taking the gradient step `w[t] += mu * e * x[i + t - half]` after
+/// each output — data-aided when the caller supplies training symbols
+/// (warm-up), decision-directed against [`slice_pam2`] otherwise.
+#[derive(Debug, Clone)]
+pub struct LmsFir {
+    taps: Vec<f32>,
+    n_os: usize,
+    mu: f32,
+}
+
+impl LmsFir {
+    /// An adaptive filter starting from `taps` (centered at
+    /// `(len - 1) / 2`, like [`FirEqualizer`]) with step size `mu`.
+    pub fn new(taps: Vec<f32>, n_os: usize, mu: f32) -> Result<Self> {
+        anyhow::ensure!(!taps.is_empty(), "LMS needs at least one tap");
+        anyhow::ensure!(n_os >= 1, "oversampling factor must be >= 1");
+        anyhow::ensure!(
+            mu.is_finite() && mu > 0.0,
+            "LMS step size must be a positive finite number, got {mu}"
+        );
+        Ok(Self { taps, n_os, mu })
+    }
+
+    /// Start from a serving filter's taps (e.g. the registry's
+    /// committed `fir_imdd` weights).
+    pub fn from_fir(fir: &FirEqualizer, mu: f32) -> Result<Self> {
+        Self::new(fir.taps().to_vec(), fir.n_os(), mu)
+    }
+
+    /// Current tap vector.
+    pub fn taps(&self) -> &[f32] {
+        &self.taps
+    }
+
+    /// Step size for subsequent [`Self::adapt_block`] calls (warm-up
+    /// typically runs a larger data-aided `mu` than tracking).
+    pub fn set_mu(&mut self, mu: f32) -> Result<()> {
+        anyhow::ensure!(
+            mu.is_finite() && mu > 0.0,
+            "LMS step size must be a positive finite number, got {mu}"
+        );
+        self.mu = mu;
+        Ok(())
+    }
+
+    /// Freeze the current taps into a serving filter — the datapath a
+    /// published [`crate::runtime::ProfileBlueprint`] clones from.
+    pub fn to_fir(&self) -> FirEqualizer {
+        FirEqualizer::new(self.taps.clone(), self.n_os)
+    }
+
+    /// Equalize one burst while adapting, returning the *pre-update*
+    /// soft output per symbol (each `y_k` is computed with the taps as
+    /// they stood at symbol `k` — what a serving engine mid-adaptation
+    /// would have emitted).  With `training` the desired symbol is
+    /// data-aided (`training[k]`, falling back to the slicer past its
+    /// end); without, it is the hard decision [`slice_pam2`]`(y_k)`.
+    pub fn adapt_block(&mut self, x: &[f32], training: Option<&[f32]>) -> Vec<f32> {
+        let m = self.taps.len();
+        let half = (m - 1) / 2;
+        let n = x.len();
+        let mut out = Vec::with_capacity(n / self.n_os);
+        let mut i = 0usize;
+        let mut k = 0usize;
+        while i < n {
+            let mut y = 0.0f32;
+            for (t, &w) in self.taps.iter().enumerate() {
+                let idx = i as isize + t as isize - half as isize;
+                if idx >= 0 && (idx as usize) < n {
+                    y += x[idx as usize] * w;
+                }
+            }
+            let desired = match training {
+                Some(d) if k < d.len() => d[k],
+                _ => slice_pam2(y),
+            };
+            let step = self.mu * (desired - y);
+            for t in 0..m {
+                let idx = i as isize + t as isize - half as isize;
+                if idx >= 0 && (idx as usize) < n {
+                    self.taps[t] += step * x[idx as usize];
+                }
+            }
+            out.push(y);
+            i += self.n_os;
+            k += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 3-tap ISI channel at symbol rate: y[k] = s[k] + 0.8 s[k-1]
+    /// + 0.45 s[k-2].  The post-cursors sum past 1.0, so the raw
+    /// slicer errs on exactly the (-s[k], -s[k]) trailing pattern —
+    /// a 25% error floor — while the channel stays minimum-phase
+    /// (zeros at radius ~0.67), so a centered FIR inverse exists.
+    fn isi3(symbols: &[f32]) -> Vec<f32> {
+        (0..symbols.len())
+            .map(|k| {
+                let mut v = symbols[k];
+                if k >= 1 {
+                    v += 0.8 * symbols[k - 1];
+                }
+                if k >= 2 {
+                    v += 0.45 * symbols[k - 2];
+                }
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn zero_error_leaves_taps_untouched() {
+        // An identity filter over a clean channel slices perfectly:
+        // e = 0 for every symbol, so the gradient step is exactly 0.0
+        // and the taps stay bit-identical.
+        let symbols = crate::channel::prbs(512, 3);
+        let mut taps = vec![0.0f32; 9];
+        taps[4] = 1.0;
+        let mut lms = LmsFir::new(taps.clone(), 1, 0.05).unwrap();
+        let y = lms.adapt_block(&symbols, None);
+        assert_eq!(ber(&y, &symbols), 0.0);
+        let before: Vec<u32> = taps.iter().map(|w| w.to_bits()).collect();
+        let after: Vec<u32> = lms.taps().iter().map(|w| w.to_bits()).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn data_aided_then_decision_directed_converges_on_3tap_isi() {
+        let symbols = crate::channel::prbs(12_000, 11);
+        let rx = isi3(&symbols);
+        // Uncompensated, the slicer sits on the channel's ~25% floor…
+        let cold = ber(&rx, &symbols);
+        assert!(cold > 0.1, "fixture channel lost its error floor: {cold}");
+        // …one data-aided warm-up block plus decision-directed
+        // tracking drives it to (near) zero.
+        let mut taps = vec![0.0f32; 11];
+        taps[5] = 1.0;
+        let mut lms = LmsFir::new(taps, 1, 0.01).unwrap();
+        lms.adapt_block(&rx[..4000], Some(&symbols[..4000]));
+        lms.set_mu(0.002).unwrap();
+        lms.adapt_block(&rx[4000..8000], None);
+        let y = lms.to_fir().equalize(&rx[8000..]);
+        let warm = ber(&y, &symbols[8000..]);
+        assert!(warm < cold / 4.0, "no convergence: cold {cold} vs warm {warm}");
+        assert!(warm < 0.01, "residual BER too high: {warm}");
+    }
+
+    #[test]
+    fn adapted_taps_serve_identically_through_fir() {
+        // to_fir() must reproduce the adapted filter's output exactly:
+        // the published blueprint serves what the loop measured.
+        let symbols = crate::channel::prbs(2_000, 5);
+        let rx = isi3(&symbols);
+        let mut lms = LmsFir::new(vec![0.1f32; 7], 1, 0.005).unwrap();
+        lms.adapt_block(&rx, Some(&symbols));
+        let frozen = lms.to_fir();
+        let a = frozen.equalize(&rx);
+        let b = lms.clone().to_fir().equalize(&rx);
+        assert_eq!(a, b);
+        assert_eq!(frozen.taps(), lms.taps());
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        assert!(LmsFir::new(vec![], 1, 0.01).is_err());
+        assert!(LmsFir::new(vec![1.0], 0, 0.01).is_err());
+        assert!(LmsFir::new(vec![1.0], 1, 0.0).is_err());
+        assert!(LmsFir::new(vec![1.0], 1, f32::NAN).is_err());
+        let mut lms = LmsFir::new(vec![1.0], 1, 0.01).unwrap();
+        assert!(lms.set_mu(-1.0).is_err());
+    }
+}

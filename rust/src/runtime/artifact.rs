@@ -22,7 +22,10 @@ use crate::equalizer::weights::{CnnTopologyCfg, CnnWeights, FirWeights, Volterra
 use crate::fixedpoint::QuantSpec;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
 
 /// How an artifact entry is executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -201,6 +204,11 @@ pub struct ArtifactRegistry {
     pub models: Vec<ArtifactEntry>,
     /// Training/eval BER per model family, as exported by the build.
     pub train_ber: std::collections::BTreeMap<String, f64>,
+    /// Published profile snapshots ([`ProfileTable`]): the versioned
+    /// weight store behind hot swaps.  Shared (`Arc`) with every pool
+    /// built from this registry, so [`Self::publish_profile`] reaches
+    /// live workers without the registry outliving them.
+    pub published: Arc<ProfileTable>,
 }
 
 impl ArtifactRegistry {
@@ -261,7 +269,7 @@ impl ArtifactRegistry {
                 }
             }
         }
-        Ok(Self { dir, models, train_ber })
+        Ok(Self { dir, models, train_ber, published: Arc::new(ProfileTable::default()) })
     }
 
     /// Build a registry from the native weight JSONs alone: every
@@ -355,7 +363,7 @@ impl ArtifactRegistry {
             "no artifacts in {}: neither manifest.json (PJRT) nor weights_*.json (native)",
             dir.display()
         );
-        Ok(Self { dir, models, train_ber })
+        Ok(Self { dir, models, train_ber, published: Arc::new(ProfileTable::default()) })
     }
 
     /// All width buckets for a (model, channel, quant, batch=1) family,
@@ -448,6 +456,127 @@ impl ArtifactRegistry {
     pub fn profile_blueprint(&self, profile: &str) -> Result<ProfileBlueprint> {
         ProfileBlueprint::load(self, profile)
     }
+
+    /// The current published snapshot of `profile`, loading (and
+    /// seeding the [`ProfileTable`] with) generation 1 from the
+    /// committed artifacts on first use.  Pools stamp their engines
+    /// from this, so a pool built *after* a publish starts on the
+    /// published weights, and a pool built before converges to them at
+    /// its next drain boundary.
+    pub fn profile_snapshot(&self, profile: &str) -> Result<Arc<ProfileBlueprint>> {
+        let mut table = self.published.lock();
+        if let Some(bp) = table.get(profile) {
+            return Ok(Arc::clone(bp));
+        }
+        let bp = Arc::new(self.profile_blueprint(profile)?);
+        table.insert(profile.to_string(), Arc::clone(&bp));
+        Ok(bp)
+    }
+
+    /// Install `blueprint` as the next generation of `profile` and
+    /// return the generation number it was assigned.
+    ///
+    /// A publish may change **weights, never geometry**: `width`,
+    /// `o_act`, `n_os` and the datapath family must match the previous
+    /// snapshot (stamped engines, the steal-compatibility checks and
+    /// the LUT all assume fixed geometry), and the generation is
+    /// assigned monotonically — callers never pick their own.  A
+    /// profile name the registry cannot resolve (no committed
+    /// artifacts) is accepted as a *new* profile at generation 1, which
+    /// is how scenario code (e.g. `repro adapt`) introduces freshly
+    /// trained profiles through the same path.
+    ///
+    /// Live pools built from this registry converge at their next
+    /// drain boundary — between coalescing groups, never mid-batch —
+    /// without touching queued work or unrelated profiles.
+    pub fn publish_profile(&self, profile: &str, mut blueprint: ProfileBlueprint) -> Result<u64> {
+        let mut table = self.published.lock();
+        let previous = match table.get(profile) {
+            Some(bp) => Some(Arc::clone(bp)),
+            // First publish of a committed profile: the committed
+            // weights are generation 1, even if nobody snapshot them
+            // yet, so the geometry baseline always exists when it can.
+            None => self.profile_blueprint(profile).ok().map(Arc::new),
+        };
+        let generation = match &previous {
+            Some(prev) => {
+                anyhow::ensure!(
+                    prev.width == blueprint.width
+                        && prev.o_act == blueprint.o_act
+                        && prev.n_os == blueprint.n_os,
+                    "publish may change weights, never geometry: profile {profile:?} is \
+                     width {} / o_act {} / n_os {}, publish carries {} / {} / {}",
+                    prev.width,
+                    prev.o_act,
+                    prev.n_os,
+                    blueprint.width,
+                    blueprint.o_act,
+                    blueprint.n_os
+                );
+                anyhow::ensure!(
+                    std::mem::discriminant(&prev.datapath)
+                        == std::mem::discriminant(&blueprint.datapath),
+                    "publish may not change the datapath family of profile {profile:?}"
+                );
+                prev.generation + 1
+            }
+            None => 1,
+        };
+        blueprint.generation = generation;
+        table.insert(profile.to_string(), Arc::new(blueprint));
+        drop(table);
+        self.published.bump();
+        Ok(generation)
+    }
+}
+
+/// The versioned weight store: profile name → the latest published
+/// [`ProfileBlueprint`] snapshot, each an immutable `Arc` a worker can
+/// hold across a batch without blocking publishers.
+///
+/// `version` is a cheap global epoch counter: shard workers compare it
+/// against the last value they observed (one relaxed atomic load per
+/// drained batch) and only take the lock to walk the map when a
+/// publish actually happened — the hot path never contends with
+/// publishers.
+#[derive(Default)]
+pub struct ProfileTable {
+    inner: Mutex<BTreeMap<String, Arc<ProfileBlueprint>>>,
+    version: AtomicU64,
+}
+
+impl ProfileTable {
+    /// The publish epoch: bumped once per [`ArtifactRegistry::publish_profile`].
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// The latest published snapshot of `profile`, if any.
+    pub fn snapshot(&self, profile: &str) -> Option<Arc<ProfileBlueprint>> {
+        self.lock().get(profile).map(Arc::clone)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Arc<ProfileBlueprint>>> {
+        // The map holds plain Arc snapshots with no cross-field
+        // invariant, so recover from poisoning (a panicking publisher
+        // must not take live swaps down with it).
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn bump(&self) {
+        self.version.fetch_add(1, Ordering::Release);
+    }
+}
+
+impl std::fmt::Debug for ProfileTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let table = self.lock();
+        let mut d = f.debug_map();
+        for (name, bp) in table.iter() {
+            d.key(name).value(&bp.generation);
+        }
+        d.finish()
+    }
 }
 
 /// The datapath loaded once per serving profile; shard engines stamp
@@ -476,6 +605,12 @@ pub struct ProfileBlueprint {
     pub o_act: usize,
     /// Oversampling factor (samples per symbol).
     pub n_os: usize,
+    /// Monotonic weight generation.  Artifact loads are generation 1;
+    /// every [`ArtifactRegistry::publish_profile`] assigns the next.
+    /// Generation 0 means *unversioned*: hand-built engines that never
+    /// went through a blueprint, and replies (shed/timeout) no engine
+    /// ever served.
+    pub generation: u64,
     /// The loaded datapath instances clone from.
     pub datapath: ProfileDatapath,
 }
@@ -498,6 +633,7 @@ impl ProfileBlueprint {
                     width,
                     o_act: cfg.o_act_samples(),
                     n_os: cfg.n_os,
+                    generation: 1,
                     datapath: ProfileDatapath::Cnn(cnn),
                 }
             }
@@ -511,6 +647,7 @@ impl ProfileBlueprint {
                     width,
                     o_act: half.next_multiple_of(w.cfg.n_os),
                     n_os: w.cfg.n_os,
+                    generation: 1,
                     datapath: ProfileDatapath::Fir(FirEqualizer::from_weights(&w)),
                 }
             }
@@ -521,6 +658,7 @@ impl ProfileBlueprint {
                     width,
                     o_act: half.next_multiple_of(w.n_os),
                     n_os: w.n_os,
+                    generation: 1,
                     datapath: ProfileDatapath::Volterra(Box::new(w.to_equalizer())),
                 }
             }
@@ -531,6 +669,7 @@ impl ProfileBlueprint {
                     width,
                     o_act: cfg.o_act_samples(),
                     n_os: cfg.n_os,
+                    generation: 1,
                     datapath: ProfileDatapath::Hlo,
                 }
             }
@@ -720,5 +859,59 @@ mod tests {
         let err = entry.load_native_cnn().unwrap_err().to_string();
         assert!(err.contains("misses formats"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn profile_snapshot_seeds_generation_one_exactly_once() {
+        let Some(reg) = registry() else { return };
+        assert_eq!(reg.published.version(), 0, "fresh registry: no publishes yet");
+        assert!(reg.published.snapshot("fir_imdd").is_none(), "nothing seeded yet");
+        let a = reg.profile_snapshot("fir_imdd").unwrap();
+        assert_eq!(a.generation, 1, "artifact loads are generation 1");
+        let b = reg.profile_snapshot("fir_imdd").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second snapshot reuses the seeded Arc");
+        assert_eq!(reg.published.version(), 0, "seeding is not a publish");
+    }
+
+    #[test]
+    fn publish_profile_bumps_generation_and_rejects_geometry_changes() {
+        let Some(reg) = registry() else { return };
+        let seed = reg.profile_snapshot("fir_imdd").unwrap();
+
+        // Same geometry, new weights: generation 2.
+        let next = reg.profile_blueprint("fir_imdd").unwrap();
+        let generation = reg.publish_profile("fir_imdd", next).unwrap();
+        assert_eq!(generation, 2);
+        assert_eq!(reg.published.version(), 1, "one publish, one epoch bump");
+        let snap = reg.profile_snapshot("fir_imdd").unwrap();
+        assert_eq!(snap.generation, 2);
+        assert_eq!(seed.generation, 1, "held snapshots are immutable");
+
+        // Geometry drift is a hard error and does not bump anything.
+        let mut bad = reg.profile_blueprint("fir_imdd").unwrap();
+        bad.width /= 2;
+        let err = reg.publish_profile("fir_imdd", bad).unwrap_err().to_string();
+        assert!(err.contains("never geometry"), "{err}");
+        assert_eq!(reg.published.version(), 1);
+        assert_eq!(reg.profile_snapshot("fir_imdd").unwrap().generation, 2);
+
+        // Datapath family drift likewise.
+        let mut wrong = reg.profile_blueprint("volterra_imdd").unwrap();
+        let fir = reg.profile_snapshot("fir_imdd").unwrap();
+        wrong.width = fir.width;
+        wrong.o_act = fir.o_act;
+        wrong.n_os = fir.n_os;
+        let err = reg.publish_profile("fir_imdd", wrong).unwrap_err().to_string();
+        assert!(err.contains("datapath family"), "{err}");
+
+        // A profile the registry cannot resolve enters at generation 1.
+        let fresh = reg.profile_blueprint("fir_imdd").unwrap();
+        assert_eq!(reg.publish_profile("fir_drift_test", fresh).unwrap(), 1);
+        assert_eq!(reg.profile_snapshot("fir_drift_test").unwrap().generation, 1);
+
+        // First publish of a committed-but-unseeded profile still sits
+        // on top of the implicit generation-1 artifact load.
+        let v = reg.profile_blueprint("volterra_imdd").unwrap();
+        assert_eq!(reg.publish_profile("volterra_imdd", v).unwrap(), 2);
     }
 }

@@ -14,12 +14,16 @@
 //! runs on the request path in either mode.
 
 #[warn(missing_docs)]
+pub mod adapt;
+#[warn(missing_docs)]
 pub mod artifact;
 pub mod exec;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use artifact::{ArtifactKind, ArtifactRegistry, ProfileBlueprint, ProfileDatapath};
+pub use artifact::{
+    ArtifactKind, ArtifactRegistry, ProfileBlueprint, ProfileDatapath, ProfileTable,
+};
 pub use exec::CompiledModel;
 
 use anyhow::Result;

@@ -1,0 +1,196 @@
+//! Property tests for the adaptation loop and generation convergence
+//! (`util::prop` over the in-tree MT19937 — failures print the seed
+//! and replay exactly).
+//!
+//! The swap invariants under test:
+//!
+//! * generations are monotone per shard — a worker that has observed
+//!   generation G+1 at a drain boundary never serves G again, and a
+//!   sequential caller sees every reply on the *latest* published
+//!   generation (publish happens-before submit happens-before the
+//!   worker's next version check);
+//! * the LMS loop ([`equalizer::runtime::adapt`]) is bit-reproducible
+//!   for a fixed seed — pure f32 arithmetic, no hidden state — and
+//!   converges on a synthetic 3-tap ISI channel from a cold start.
+
+use equalizer::channel::prbs;
+use equalizer::coordinator::pool::{PoolConfig, ServerPool};
+use equalizer::equalizer::fir::FirEqualizer;
+use equalizer::runtime::adapt::{ber, LmsFir};
+use equalizer::runtime::{ArtifactRegistry, ProfileBlueprint, ProfileDatapath};
+use equalizer::util::prop::{check, Gen};
+
+fn registry() -> ArtifactRegistry {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    ArtifactRegistry::discover(dir).expect("committed native artifacts")
+}
+
+/// The committed FIR profile's blueprint with every tap scaled — same
+/// geometry, visibly different weights, valid to publish.
+fn scaled_fir_blueprint(reg: &ArtifactRegistry, scale: f32) -> ProfileBlueprint {
+    let bp = reg.profile_blueprint("fir_imdd").expect("committed fir profile");
+    let ProfileDatapath::Fir(fir) = &bp.datapath else { panic!("fir_imdd loads a FIR datapath") };
+    ProfileBlueprint {
+        width: bp.width,
+        o_act: bp.o_act,
+        n_os: bp.n_os,
+        generation: 0, // publish_profile assigns the real one
+        datapath: ProfileDatapath::Fir(FirEqualizer::new(
+            fir.taps().iter().map(|w| w * scale).collect(),
+            fir.n_os(),
+        )),
+    }
+}
+
+#[test]
+fn generations_are_monotone_and_sequential_callers_see_the_latest() {
+    // Random interleavings of publishes and serves against a live
+    // one-shard pool.  Each call fully drains before the next step, so
+    // the worker's version check runs between every pair of batches:
+    // replies must never regress, and each one must carry exactly the
+    // generation that was latest when it was submitted.
+    check(4, |g: &mut Gen| {
+        let reg = registry();
+        let cfg = PoolConfig { shards: 1, instances_per_shard: 1, ..PoolConfig::default() };
+        let pool = ServerPool::from_registry(&reg, &["fir_imdd"], &cfg).unwrap().spawn();
+        let burst: Vec<f32> = g.vec_f32(1500, -1.0, 1.0);
+        let mut latest = 1u64; // profile_snapshot seeded generation 1
+        let mut last_seen = 0u64;
+        for _ in 0..g.usize_in(4, 7) {
+            if g.bool() {
+                let scale = g.f32_in(0.8, 1.2);
+                latest = reg.publish_profile("fir_imdd", scaled_fir_blueprint(&reg, scale)).unwrap();
+            }
+            let resp = pool.call("fir_imdd", burst.clone(), None).expect("serve");
+            assert_eq!(
+                resp.generation, latest,
+                "sequential caller saw generation {} with {} published (seed {:#x})",
+                resp.generation, latest, g.seed
+            );
+            assert!(
+                resp.generation >= last_seen,
+                "generation regressed {} -> {} (seed {:#x})",
+                last_seen, resp.generation, g.seed
+            );
+            last_seen = resp.generation;
+        }
+        let stats = pool.shutdown();
+        assert_eq!(
+            stats.shards[0].generation, latest,
+            "shard gauge out of step with the table (seed {:#x})",
+            g.seed
+        );
+        if latest > 1 {
+            assert!(stats.pool.swaps >= 1, "published but never swapped (seed {:#x})", g.seed);
+        }
+    });
+}
+
+#[test]
+fn publish_rejects_geometry_changes_under_random_perturbation() {
+    // The "weights, never geometry" contract: any single geometry
+    // field drifting from the committed baseline must be rejected, at
+    // every generation.
+    check(8, |g: &mut Gen| {
+        let reg = registry();
+        reg.publish_profile("fir_imdd", scaled_fir_blueprint(&reg, 1.1)).unwrap();
+        let mut bad = scaled_fir_blueprint(&reg, g.f32_in(0.5, 1.5));
+        match g.usize_in(0, 2) {
+            0 => bad.width += g.usize_in(1, 64),
+            1 => bad.o_act += g.usize_in(1, 8),
+            _ => bad.n_os += 1,
+        }
+        assert!(
+            reg.publish_profile("fir_imdd", bad).is_err(),
+            "geometry change accepted (seed {:#x})",
+            g.seed
+        );
+        // The failed publish must not have burned a generation.
+        let next = reg.publish_profile("fir_imdd", scaled_fir_blueprint(&reg, 0.9)).unwrap();
+        assert_eq!(next, 3, "generation skipped after a rejected publish (seed {:#x})", g.seed);
+    });
+}
+
+/// 3-tap ISI channel at symbol rate: y[k] = s[k] + c1 s[k-1] + c2 s[k-2].
+fn isi3(symbols: &[f32], c1: f32, c2: f32) -> Vec<f32> {
+    (0..symbols.len())
+        .map(|k| {
+            let mut v = symbols[k];
+            if k >= 1 {
+                v += c1 * symbols[k - 1];
+            }
+            if k >= 2 {
+                v += c2 * symbols[k - 2];
+            }
+            v
+        })
+        .collect()
+}
+
+#[test]
+fn lms_is_bit_reproducible_for_a_fixed_seed() {
+    check(16, |g: &mut Gen| {
+        let n_taps = g.usize_in(5, 31) | 1;
+        let mu = g.f32_in(1e-4, 1e-2);
+        let symbols = prbs(2000, g.seed);
+        let rx = isi3(&symbols, g.f32_in(-0.5, 0.5), g.f32_in(-0.3, 0.3));
+        let data_aided = g.seed & 1 == 0;
+        let run = || {
+            let mut taps = vec![0.0f32; n_taps];
+            taps[(n_taps - 1) / 2] = 1.0;
+            let mut lms = LmsFir::new(taps, 1, mu).unwrap();
+            let y = lms.adapt_block(&rx, data_aided.then_some(symbols.as_slice()));
+            (y, lms.taps().to_vec())
+        };
+        let (y_a, taps_a) = run();
+        let (y_b, taps_b) = run();
+        let bits = |v: &[f32]| v.iter().map(|w| w.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&taps_a), bits(&taps_b), "taps diverged (seed {:#x})", g.seed);
+        assert_eq!(bits(&y_a), bits(&y_b), "outputs diverged (seed {:#x})", g.seed);
+    });
+}
+
+#[test]
+fn lms_converges_on_random_3tap_isi_channels() {
+    // Data-aided warm-up then decision-directed tracking must cut the
+    // residual error energy on every random stable channel.  (These
+    // channels keep the eye open, so *bit* errors are zero before and
+    // after — the mean-squared error against the true symbols is the
+    // discriminating metric; the cursor term is bounded away from 0 so
+    // the unequalized MSE floor `c1^2 + c2^2` is always measurable.)
+    check(8, |g: &mut Gen| {
+        let c1 = g.f32_in(0.25, 0.45) * if g.bool() { 1.0 } else { -1.0 };
+        let c2 = g.f32_in(-0.2, 0.2);
+        let symbols = prbs(10_000, g.seed ^ 0x5A5A);
+        let rx = isi3(&symbols, c1, c2);
+        let mse = |soft: &[f32], tx: &[f32]| -> f64 {
+            let n = soft.len().min(tx.len());
+            soft[..n]
+                .iter()
+                .zip(&tx[..n])
+                .map(|(&y, &d)| ((d - y) as f64).powi(2))
+                .sum::<f64>()
+                / n as f64
+        };
+        let cold = mse(&rx[7000..], &symbols[7000..]); // identity filter output IS rx
+        let mut taps = vec![0.0f32; 11];
+        taps[5] = 1.0;
+        let mut lms = LmsFir::new(taps, 1, 0.01).unwrap();
+        lms.adapt_block(&rx[..4000], Some(&symbols[..4000]));
+        lms.set_mu(0.002).unwrap();
+        lms.adapt_block(&rx[4000..7000], None);
+        let y = lms.to_fir().equalize(&rx[7000..]);
+        let warm = mse(&y, &symbols[7000..]);
+        assert!(
+            warm < 0.25 * cold,
+            "no convergence on c1={c1:.3} c2={c2:.3}: MSE {cold:.3e} -> {warm:.3e} \
+             (seed {:#x})",
+            g.seed
+        );
+        assert!(
+            ber(&y, &symbols[7000..]) < 0.02,
+            "converged filter still errs on c1={c1:.3} c2={c2:.3} (seed {:#x})",
+            g.seed
+        );
+    });
+}

@@ -18,6 +18,13 @@
 //! The suite is the acceptance gate for the group-fused serving path:
 //! fusion may only change *how many* kernel invocations run, never a
 //! single output bit or a request count.
+//!
+//! A second, generation-aware sweep
+//! ([`hot_swap_is_generation_stamped_and_bit_identical_on_every_path`])
+//! replays the pool and loopback modes across a mid-stream weight
+//! publish: every reply must bit-match the reference of the generation
+//! it is stamped with, and the post-drain probe must serve the new
+//! generation — the differential gate for live hot-swap.
 
 use equalizer::coordinator::instance::AnyInstance;
 use equalizer::coordinator::net::{NetClient, NetServer};
@@ -117,7 +124,7 @@ fn every_execution_path_is_bit_identical_with_exactly_once_accounting() {
             assert_eq!(&resp.soft_symbols, w, "{profile}: per-request pool diverged");
         }
         let stats = pool.shutdown();
-        assert_eq!(stats.total_requests(), n, "{profile}: per-request pool lost a request");
+        assert_eq!(stats.total_requests(), n as u64, "{profile}: per-request pool lost a request");
         assert_eq!(stats.total_errors(), 0);
         assert_eq!(stats.total_shed(), 0);
         let per_request_kernels = stats.total_kernel_invocations();
@@ -139,7 +146,7 @@ fn every_execution_path_is_bit_identical_with_exactly_once_accounting() {
             assert_eq!(&resp.soft_symbols, w, "{profile}: coalesced pool diverged");
         }
         let stats = pool.shutdown();
-        assert_eq!(stats.total_requests(), n, "{profile}: coalesced pool lost a request");
+        assert_eq!(stats.total_requests(), n as u64, "{profile}: coalesced pool lost a request");
         assert_eq!(stats.total_errors(), 0);
 
         // --- 6. Group-fused pool: same queueing, fused dispatch.
@@ -160,7 +167,7 @@ fn every_execution_path_is_bit_identical_with_exactly_once_accounting() {
             batched.push(resp.batched);
         }
         let stats = pool.shutdown();
-        assert_eq!(stats.total_requests(), n, "{profile}: fused pool lost a request");
+        assert_eq!(stats.total_requests(), n as u64, "{profile}: fused pool lost a request");
         assert_eq!(stats.total_errors(), 0);
         let fused_pool_kernels = stats.total_kernel_invocations();
         assert!(fused_pool_kernels >= 1, "{profile}: fused pool never reached the engine");
@@ -189,8 +196,148 @@ fn every_execution_path_is_bit_identical_with_exactly_once_accounting() {
         drop(client);
         server.shutdown();
         let stats = pool.shutdown();
-        assert_eq!(stats.total_requests(), n, "{profile}: loopback pool lost a request");
+        assert_eq!(stats.total_requests(), n as u64, "{profile}: loopback pool lost a request");
         assert_eq!(stats.total_errors(), 0);
         assert_eq!(stats.total_shed(), 0);
+    }
+}
+
+/// Generation-aware differential sweep: a weight publish lands
+/// mid-stream under queued load, and on every serving path each reply
+/// must (a) carry a generation stamp in {1, 2}, (b) be bit-identical
+/// to *that generation's* sequential reference — so a mixed or torn
+/// swap shows up as a byte diff, not a statistic — and (c) resolve
+/// exactly once.  After the queues drain, a probe must serve the new
+/// generation on a fresh batch: workers converge at drain boundaries,
+/// never lag forever.
+#[test]
+fn hot_swap_is_generation_stamped_and_bit_identical_on_every_path() {
+    use equalizer::coordinator::instance::FirInstance;
+    use equalizer::equalizer::fir::FirEqualizer;
+    use equalizer::runtime::{ProfileBlueprint, ProfileDatapath};
+
+    let profile = "fir_imdd";
+    let bursts = seeded_bursts();
+
+    // Both generations' oracles from the same committed weights: gen 1
+    // is the artifact load, gen 2 scales every tap by 1.25 — every
+    // output bit moves, so cross-generation replies cannot alias.
+    let bp = registry().profile_blueprint(profile).unwrap();
+    let ProfileDatapath::Fir(fir1) = &bp.datapath else { panic!("fir_imdd loads a FIR datapath") };
+    let fir1 = fir1.clone();
+    let fir2 = FirEqualizer::new(fir1.taps().iter().map(|w| w * 1.25).collect(), fir1.n_os());
+    let oracle = |fir: &FirEqualizer| -> Vec<Vec<f32>> {
+        let inst = AnyInstance::Fir(FirInstance::new(fir.clone(), bp.width));
+        let mut pipe = EqualizerPipeline::new(vec![inst], bp.width, bp.o_act, bp.n_os).unwrap();
+        bursts.iter().map(|x| pipe.equalize(x).expect("oracle pass")).collect()
+    };
+    let want = [oracle(&fir1), oracle(&fir2)];
+    assert_ne!(want[0], want[1], "perturbed taps must change the reference output");
+    let gen2_blueprint = || ProfileBlueprint {
+        width: bp.width,
+        o_act: bp.o_act,
+        n_os: bp.n_os,
+        generation: 0, // publish_profile assigns the real one
+        datapath: ProfileDatapath::Fir(fir2.clone()),
+    };
+    // A reply is checked against the reference of the generation it
+    // *claims*; anything else is a wrong stamp or torn weights.
+    let check = |mode: &str, b: usize, generation: u64, got: &[f32]| {
+        assert!(
+            generation == 1 || generation == 2,
+            "{mode}: reply stamped with unknown generation {generation}"
+        );
+        assert_eq!(
+            got,
+            &want[(generation - 1) as usize][b],
+            "{mode}: burst {b} does not match the generation-{generation} reference bits"
+        );
+    };
+
+    let modes: [(&str, SchedulerConfig); 3] = [
+        ("per_request", SchedulerConfig::default()),
+        ("coalesced", SchedulerConfig::default().with_coalescing(Duration::from_millis(2))),
+        (
+            "group_fused",
+            SchedulerConfig::default()
+                .with_coalescing(Duration::from_millis(2))
+                .with_group_fusion(),
+        ),
+    ];
+    for (mode, sched) in modes {
+        // Fresh registry per mode: the published table starts at the
+        // committed generation 1.
+        let reg = registry();
+        let cfg = one_shard_pool(sched);
+        let pool = ServerPool::from_registry(&reg, &[profile], &cfg).unwrap().spawn();
+        let rounds = 6usize;
+        let mut served = 0usize;
+        for round in 0..rounds {
+            let pending: Vec<_> = bursts
+                .iter()
+                .map(|x| pool.submit(profile, x.clone(), None).unwrap())
+                .collect();
+            if round == rounds / 2 {
+                // The swap lands while this round's bursts sit queued:
+                // each may legitimately be served by either generation
+                // — but must bit-match whichever it claims.
+                assert_eq!(reg.publish_profile(profile, gen2_blueprint()).unwrap(), 2);
+            }
+            for (b, rx) in pending.into_iter().enumerate() {
+                let resp = rx.recv().expect("hot-swap reply");
+                assert!(resp.error.is_none(), "{mode}: serve failed: {:?}", resp.error);
+                check(mode, b, resp.generation, &resp.soft_symbols);
+                served += 1;
+            }
+        }
+        // Deterministic post-drain probe: every queue is empty and the
+        // publish is long observed, so a fresh batch must serve gen 2.
+        let resp = pool.call(profile, bursts[0].clone(), None).expect("post-drain probe");
+        assert_eq!(resp.generation, 2, "{mode}: post-drain probe still on the old generation");
+        check(mode, 0, resp.generation, &resp.soft_symbols);
+        served += 1;
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_requests(), served as u64, "{mode}: exactly-once accounting broke");
+        assert_eq!(stats.total_errors(), 0);
+        assert_eq!(stats.total_shed(), 0);
+        assert!(stats.pool.swaps >= 1, "{mode}: publish never reached a worker");
+        assert!(
+            stats.shards.iter().any(|s| s.generation == 2),
+            "{mode}: no shard gauge reached generation 2"
+        );
+    }
+
+    // TCP loopback: one request in flight per connection, so the sweep
+    // is sequential — the publish lands between calls and the stamp
+    // travels the wire (protocol v2's generation field).
+    {
+        let reg = registry();
+        let cfg = one_shard_pool(SchedulerConfig::default());
+        let pool = ServerPool::from_registry(&reg, &[profile], &cfg).unwrap().spawn();
+        let server = NetServer::spawn(pool.client(), "127.0.0.1:0").unwrap();
+        let client = NetClient::connect(server.local_addr()).expect("loopback connect");
+        let mut served = 0usize;
+        for (b, x) in bursts.iter().enumerate() {
+            let resp = client.call(profile, x.clone(), None).expect("loopback serve");
+            assert_eq!(resp.generation, 1, "loopback: pre-publish reply not on generation 1");
+            check("loopback", b, resp.generation, &resp.soft_symbols);
+            served += 1;
+        }
+        assert_eq!(reg.publish_profile(profile, gen2_blueprint()).unwrap(), 2);
+        for (b, x) in bursts.iter().enumerate() {
+            let resp = client.call(profile, x.clone(), None).expect("loopback serve");
+            check("loopback", b, resp.generation, &resp.soft_symbols);
+            served += 1;
+        }
+        let resp = client.call(profile, bursts[0].clone(), None).expect("post-drain probe");
+        assert_eq!(resp.generation, 2, "loopback: post-drain probe still on the old generation");
+        check("loopback", 0, resp.generation, &resp.soft_symbols);
+        served += 1;
+        drop(client);
+        server.shutdown();
+        let stats = pool.shutdown();
+        assert_eq!(stats.total_requests(), served as u64, "loopback: exactly-once accounting broke");
+        assert_eq!(stats.total_errors(), 0);
+        assert!(stats.pool.swaps >= 1, "loopback: publish never reached a worker");
     }
 }

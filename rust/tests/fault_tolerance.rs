@@ -4,12 +4,17 @@
 //! admitted request exactly once, (2) keep non-faulted replies
 //! bit-identical to the sequential clean reference, (3) keep its
 //! accounting balanced (`requests = ok + errors + timeouts`, sheds
-//! counted apart), and (4) recover dead workers through supervised
-//! respawn and keep serving afterwards.
+//! counted apart), (4) recover dead workers through supervised
+//! respawn and keep serving afterwards, and (5) keep the versioned
+//! hot-swap machinery honest while faults fire: live publishes during
+//! chaos never break the ledger, and a respawned worker always comes
+//! back on the *latest* published generation, never its dead
+//! predecessor's spawn-time weights.
 
 use equalizer::coordinator::pool::{PoolConfig, ServerPool};
 use equalizer::coordinator::sched::SchedulerConfig;
-use equalizer::runtime::ArtifactRegistry;
+use equalizer::equalizer::fir::FirEqualizer;
+use equalizer::runtime::{ArtifactRegistry, ProfileBlueprint, ProfileDatapath};
 use equalizer::util::faultinject::FaultSpec;
 use std::time::Duration;
 
@@ -173,4 +178,186 @@ fn delay_faults_expire_queued_requests_at_the_deadline() {
     assert_eq!(stats.total_timeouts(), timeouts);
     assert_eq!(stats.total_errors(), 0, "timeouts are not errors — isolated counters");
     assert_eq!(stats.pool.panics, 0);
+}
+
+/// The committed FIR blueprint with its weights intact, ready to
+/// republish: same geometry, bit-identical taps, generation left for
+/// `publish_profile` to assign.  Every published generation serves the
+/// same math, so one clean reference stays valid across all swaps.
+fn republished_fir_blueprint(reg: &ArtifactRegistry) -> ProfileBlueprint {
+    let bp = reg.profile_blueprint("fir_imdd").expect("committed fir profile");
+    let ProfileDatapath::Fir(fir) = &bp.datapath else { panic!("fir_imdd loads a FIR datapath") };
+    ProfileBlueprint {
+        width: bp.width,
+        o_act: bp.o_act,
+        n_os: bp.n_os,
+        generation: 0,
+        datapath: ProfileDatapath::Fir(fir.clone()),
+    }
+}
+
+#[test]
+fn chaos_pool_under_live_publishes_keeps_the_ledger_and_converges() {
+    // The versioned-swap chaos run: seeded panics and worker deaths
+    // while a background thread republishes the profile every 50 ms
+    // (plus deterministic synchronous publishes, so generations advance
+    // even when the load outruns the timer).  Under the churn the
+    // exactly-once ledger must still balance, every reply must carry a
+    // generation stamp, and a post-chaos sequential probe must land on
+    // the latest published generation.
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let reg = registry();
+    let profile = "fir_imdd";
+    let burst: Vec<f32> = (0..2048).map(|i| (i as f32 * 0.11).cos()).collect();
+    let want = reference_reply(&reg, profile, &burst);
+
+    let seed: u32 = std::env::var("CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(7);
+    let spec: FaultSpec = format!("panic=0.02,fatal=0.01,seed={seed}").parse().unwrap();
+    let cfg = PoolConfig {
+        shards: 2,
+        instances_per_shard: 2,
+        queue_cap: 64,
+        scheduler: SchedulerConfig::default().with_coalescing(Duration::from_millis(1)),
+        fault_spec: Some(spec),
+        ..PoolConfig::default()
+    };
+    let pool = ServerPool::from_registry(&reg, &[profile], &cfg).unwrap().spawn();
+
+    let stop = AtomicBool::new(false);
+    let (ok, errors) = std::thread::scope(|s| {
+        s.spawn(|| {
+            while !stop.load(Ordering::Acquire) {
+                let _ = reg.publish_profile(profile, republished_fir_blueprint(&reg));
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        });
+        let (mut ok, mut errors) = (0u64, 0u64);
+        for wave in 0..150usize {
+            if wave % 25 == 0 {
+                reg.publish_profile(profile, republished_fir_blueprint(&reg)).unwrap();
+            }
+            let pending: Vec<_> =
+                (0..8).map(|_| pool.submit(profile, burst.clone(), None).unwrap()).collect();
+            for (i, rx) in pending.into_iter().enumerate() {
+                let resp = rx
+                    .recv()
+                    .unwrap_or_else(|_| panic!("wave {wave} request {i} never got its reply"));
+                assert!(!resp.timed_out, "no deadline configured");
+                assert!(
+                    resp.generation >= 1,
+                    "wave {wave} request {i} served unversioned (generation 0)"
+                );
+                if resp.error.is_some() {
+                    assert!(resp.soft_symbols.is_empty());
+                    errors += 1;
+                } else {
+                    // Every generation republishes the same taps, so
+                    // the single clean reference covers them all.
+                    assert_eq!(resp.soft_symbols, want, "wave {wave} request {i} diverged");
+                    ok += 1;
+                }
+            }
+        }
+        stop.store(true, Ordering::Release);
+        (ok, errors)
+    });
+
+    // Publisher joined (scope exit): one final publish, then a
+    // sequential probe.  Publish happens-before submit happens-before
+    // the worker's next version check, so the probe MUST carry exactly
+    // the latest generation — whichever worker serves it, original,
+    // swapped, or respawned.
+    let latest = reg.publish_profile(profile, republished_fir_blueprint(&reg)).unwrap();
+    let probe = pool.call(profile, burst.clone(), None).unwrap();
+    assert_eq!(probe.generation, latest, "post-chaos probe trails the published table");
+    let (ok, errors) =
+        if probe.error.is_some() { (ok, errors + 1) } else { (ok + 1, errors) };
+
+    let stats = pool.shutdown();
+    assert_eq!(
+        stats.total_requests(),
+        ok + errors,
+        "accounting must balance under live publishes: requests = ok + errors"
+    );
+    assert_eq!(stats.total_requests(), 150 * 8 + 1);
+    assert_eq!(stats.total_errors(), errors);
+    assert_eq!(stats.total_timeouts(), 0);
+    assert_eq!(stats.total_shed(), 0, "blocking submits — nothing sheds");
+    assert!(stats.pool.panics >= 1, "a 3% fault rate over 1200 requests must fire");
+    assert!(stats.pool.swaps >= 1, "live publishes must swap at least one worker");
+    assert!(
+        stats.shards.iter().any(|sh| sh.generation == latest),
+        "the probe's shard gauge must sit on the latest generation"
+    );
+}
+
+#[test]
+fn respawned_workers_come_back_on_the_latest_published_generation() {
+    // Regression for the respawn-factory snapshot: the factory re-reads
+    // the published table *at respawn time*, so a worker that dies
+    // across a publish comes back on the new generation instead of
+    // resurrecting the weights its dead predecessor was spawned with.
+    // `fatal=1.0` makes every pass worker-fatal: each call kills the
+    // worker, the supervisor respawns it, and the reply guarantee still
+    // resolves the channel with a generation-stamped error reply.
+    let reg = registry();
+    let profile = "fir_imdd";
+    let burst: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.13).sin()).collect();
+    let spec: FaultSpec = "fatal=1.0,seed=3".parse().unwrap();
+    let cfg = PoolConfig {
+        shards: 1,
+        instances_per_shard: 1,
+        queue_cap: 16,
+        fault_spec: Some(spec),
+        ..PoolConfig::default()
+    };
+    let pool = ServerPool::from_registry(&reg, &[profile], &cfg).unwrap().spawn();
+
+    let first = pool.call(profile, burst.clone(), None).unwrap();
+    assert!(first.error.is_some(), "fatal=1.0 faults every pass");
+    assert!(first.soft_symbols.is_empty());
+    assert_eq!(first.generation, 1, "pre-publish replies serve the seeded generation");
+
+    // Publish generation 2: scaled weights, same geometry.
+    let bp = reg.profile_blueprint(profile).unwrap();
+    let ProfileDatapath::Fir(fir) = &bp.datapath else { panic!("fir_imdd loads a FIR datapath") };
+    let scaled = ProfileBlueprint {
+        width: bp.width,
+        o_act: bp.o_act,
+        n_os: bp.n_os,
+        generation: 0,
+        datapath: ProfileDatapath::Fir(FirEqualizer::new(
+            fir.taps().iter().map(|w| w * 1.25).collect(),
+            fir.n_os(),
+        )),
+    };
+    let latest = reg.publish_profile(profile, scaled).unwrap();
+    assert_eq!(latest, 2);
+
+    // Every one of these is served by a respawned worker (its
+    // predecessor died on the previous call) — original spawn-time
+    // weights were generation 1, so any of them replying 1 means the
+    // factory resurrected stale weights.
+    for i in 0..3 {
+        let resp = pool.call(profile, burst.clone(), None).unwrap();
+        assert!(resp.error.is_some(), "call {i}: fatal=1.0 faults every pass");
+        assert_eq!(
+            resp.generation, latest,
+            "call {i}: a post-publish worker must serve generation {latest}"
+        );
+    }
+
+    let stats = pool.shutdown();
+    assert!(
+        stats.pool.respawns >= 1,
+        "serving after a worker-fatal pass requires a supervised respawn"
+    );
+    assert_eq!(stats.total_requests(), 4);
+    assert_eq!(stats.total_errors(), 4, "every pass faulted");
+    assert_eq!(stats.total_timeouts(), 0);
+    assert_eq!(
+        stats.shards[0].generation, latest,
+        "the shard gauge must track the respawned worker's generation"
+    );
 }
